@@ -1,0 +1,109 @@
+//! END-TO-END DRIVER (DESIGN.md §5): prune the trained tiny transformer to
+//! transposable 16:32 sparsity with TSENOR+ALPS through the full
+//! three-layer stack, then evaluate perplexity on the three held-out
+//! corpora and all eight zero-shot probes. Prints a Table-2-shaped row.
+//!
+//!   make artifacts && cargo run --release --example prune_transformer
+//!
+//! Everything at runtime is Rust: calibration activations come from the
+//! AOT calib artifact via PJRT, masks come from the XLA Dykstra artifact
+//! (+ Rust rounding), evaluation runs the AOT model_fwd artifact.
+
+use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::coordinator::metrics::Metrics;
+use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::masks::solver::SolveCfg;
+use tsenor::masks::NmPattern;
+use tsenor::runtime::client::ModelRuntime;
+use tsenor::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        root.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    let manifest = Manifest::load(root)?;
+    let engine = Engine::new(&manifest)?;
+    let rt = ModelRuntime::new(&engine, &manifest);
+    let pattern = NmPattern::new(16, 32);
+
+    println!("=== TSENOR+ALPS end-to-end: transposable {pattern} on the trained transformer ===");
+    println!(
+        "model: {} layers, d={}, {} prunable matrices | platform: {}",
+        manifest.model.n_layers,
+        manifest.model.d_model,
+        manifest.prunable_names().len(),
+        engine.platform()
+    );
+
+    // Dense baseline first.
+    let dense_weights = manifest.load_weights()?;
+    let dense_ppl = tsenor::eval::perplexity::perplexity_suite(&rt, &dense_weights, Some(12))?;
+    let probes = tsenor::data::probes::load(&manifest.root.join(&manifest.probes_file))?;
+    let (dense_zs, dense_zs_mean) =
+        tsenor::eval::zeroshot::score_all(&rt, &dense_weights, &probes, 50)?;
+
+    // Prune: TSENOR masks via the XLA artifact, ALPS layer-wise ADMM.
+    let xla = XlaSolver::new(&engine, &manifest, SolveCfg::default());
+    let backend = MaskBackend::Xla(&xla);
+    let mut metrics = Metrics::new();
+    let t0 = std::time::Instant::now();
+    let state = pipeline::run(
+        &rt,
+        Framework::Alps,
+        Structure::Transposable,
+        pattern,
+        &backend,
+        8,
+        Some(12),
+        &mut metrics,
+    )?;
+    let prune_secs = t0.elapsed().as_secs_f64();
+    let (zs, zs_mean) = tsenor::eval::zeroshot::score_all(&rt, &state.weights, &probes, 50)?;
+
+    println!(
+        "\npruned in {prune_secs:.1}s | sparsity {:.3} | {} dykstra blocks solved ({} padded) | {:.2}s in PJRT",
+        state.sparsity(),
+        xla.solved_blocks.get(),
+        xla.padded_blocks.get(),
+        engine.exec_nanos.get() as f64 / 1e9
+    );
+
+    // Table-2-shaped report.
+    println!("\n{:<22}{:>10}{:>10}{:>10}  {}", "", "markov", "zipf", "template", "zero-shot tasks ->");
+    let ppl_row = |label: &str, ppl: &std::collections::BTreeMap<String, f64>| {
+        println!(
+            "{:<22}{:>10.3}{:>10.3}{:>10.3}",
+            label,
+            ppl.get("valid_markov").unwrap_or(&f64::NAN),
+            ppl.get("valid_zipf").unwrap_or(&f64::NAN),
+            ppl.get("valid_template").unwrap_or(&f64::NAN)
+        );
+    };
+    ppl_row("dense (ppl)", &dense_ppl);
+    let pruned_ppl: std::collections::BTreeMap<String, f64> = manifest
+        .corpora
+        .keys()
+        .filter(|n| *n != "train")
+        .filter_map(|n| metrics.get(&format!("ppl_{n}")).map(|p| (n.clone(), p)))
+        .collect();
+    ppl_row("tsenor+alps 16:32", &pruned_ppl);
+
+    println!("\n{:<18}{:>8}{:>8}", "zero-shot task", "dense", "pruned");
+    for (task, acc) in &zs {
+        println!("{:<18}{:>8.3}{:>8.3}", task, dense_zs[task], acc);
+    }
+    println!("{:<18}{:>8.3}{:>8.3}", "MEAN", dense_zs_mean, zs_mean);
+
+    // Record layer-wise recon errors summary.
+    let recon = metrics.to_json();
+    if let Some(errors) = recon.get("layer_recon_error").and_then(|j| j.as_arr()) {
+        let vals: Vec<f64> = errors.iter().filter_map(|e| e.as_f64()).collect();
+        let mean = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
+        println!("\nmean layer recon error: {mean:.4} over {} layers", vals.len());
+    }
+    metrics.write(std::path::Path::new("artifacts/reports/prune_transformer.json"))?;
+    println!("metrics -> artifacts/reports/prune_transformer.json");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: generate transposable N:M masks for a weight matrix with
+//! TSENOR, verify feasibility, and compare against the exact optimum.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Uses the pure-CPU solver; if the AOT artifact bundle exists (`make
+//! artifacts`), also runs the XLA/PJRT path and cross-checks the two.
+
+use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::data::workload;
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::{self, NmPattern};
+use tsenor::runtime::{Engine, Manifest};
+use tsenor::util::tensor::partition_blocks;
+
+fn main() -> anyhow::Result<()> {
+    let pattern = NmPattern::new(8, 16);
+    let w = workload::structured_matrix(256, 512, 42);
+    println!("TSENOR quickstart: {}x{} matrix, transposable {pattern} sparsity", w.rows, w.cols);
+
+    // 1. CPU path: entropy-regularized Dykstra + greedy/local-search rounding.
+    let cfg = SolveCfg::default();
+    let t0 = std::time::Instant::now();
+    let mask = solver::solve_matrix(Method::Tsenor, &w, pattern, &cfg);
+    let cpu_secs = t0.elapsed().as_secs_f64();
+
+    let blocks_w = partition_blocks(&w.abs(), pattern.m);
+    let blocks_m = partition_blocks(&mask, pattern.m);
+    assert!(masks::batch_feasible(&blocks_m, pattern.n), "mask must be transposable");
+    let obj = masks::batch_objective(&blocks_m, &blocks_w);
+    let (_, opt) = masks::exact::solve_batch(&blocks_w, pattern.n);
+    println!(
+        "  cpu : {:.3}s  objective {:.1} / optimal {:.1}  (rel err {:.3}%)",
+        cpu_secs,
+        obj,
+        opt,
+        100.0 * masks::relative_error(opt, obj)
+    );
+
+    // 2. XLA path (if artifacts are built): Algorithm 1 runs in the AOT
+    //    HLO compiled from the Pallas kernel; rounding stays in Rust.
+    let root = std::path::Path::new("artifacts");
+    if root.join("manifest.json").exists() {
+        let manifest = Manifest::load(root)?;
+        let engine = Engine::new(&manifest)?;
+        let xla = XlaSolver::new(&engine, &manifest, cfg);
+        let t0 = std::time::Instant::now();
+        let mask2 = xla.solve_matrix(&w, pattern)?;
+        let xla_secs = t0.elapsed().as_secs_f64();
+        let blocks2 = partition_blocks(&mask2, pattern.m);
+        let obj2 = masks::batch_objective(&blocks2, &blocks_w);
+        println!(
+            "  xla : {:.3}s  objective {:.1}  ({} PJRT calls, platform {})",
+            xla_secs,
+            obj2,
+            engine.exec_calls.get(),
+            engine.platform()
+        );
+        assert!((obj - obj2).abs() / obj.abs() < 5e-3, "CPU and XLA paths disagree");
+        println!("  cpu and xla paths agree.");
+    } else {
+        println!("  (run `make artifacts` to also exercise the XLA/PJRT path)");
+    }
+
+    // 3. Transposability in action: the mask stays N:M under transposition.
+    let mask_t = mask.transpose();
+    let blocks_t = partition_blocks(&mask_t, pattern.m);
+    assert!(masks::batch_feasible(&blocks_t, pattern.n));
+    println!("  transposed mask is still {pattern}-feasible — both GEMM passes accelerate.");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Fig. 3 in miniature: relative error of every mask-generation method vs
+//! the exact optimum, on blocks sampled from the TRAINED transformer
+//! weights (when artifacts exist) or synthetic heavy-tail blocks.
+//!
+//!   cargo run --release --example solver_comparison
+
+use tsenor::data::workload;
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::{batch_objective, exact, relative_error, NmPattern};
+use tsenor::runtime::Manifest;
+use tsenor::util::tensor::Blocks;
+
+fn sample_blocks(m: usize, count: usize) -> Blocks {
+    let root = std::path::Path::new("artifacts");
+    if root.join("manifest.json").exists() {
+        let manifest = Manifest::load(root).unwrap();
+        let weights = manifest.load_weights().unwrap();
+        // paper Fig. 3: blocks sampled from real model weights
+        let w = &weights["layers.0.wq"];
+        return workload::sample_blocks(w, m, count, 7);
+    }
+    workload::heavy_tail_blocks(count, m, 7)
+}
+
+fn main() {
+    let patterns = [
+        NmPattern::new(4, 8),
+        NmPattern::new(8, 16),
+        NmPattern::new(16, 32),
+        NmPattern::new(2, 8),
+        NmPattern::new(4, 16),
+        NmPattern::new(8, 32),
+    ];
+    let methods = [
+        Method::Tsenor,
+        Method::EntropySimple,
+        Method::TwoApprox,
+        Method::BiNm,
+        Method::Max1000,
+    ];
+    let cfg = SolveCfg::default();
+
+    println!("relative error vs optimal, 100 blocks per pattern (lower is better)\n");
+    print!("{:<14}", "pattern");
+    for m in &methods {
+        print!("{:>12}", m.name());
+    }
+    println!();
+    for pattern in &patterns {
+        let scores = sample_blocks(pattern.m, 100);
+        let (_, opt) = exact::solve_batch(&scores, pattern.n);
+        print!("{:<14}", format!("{pattern}"));
+        for method in &methods {
+            let masks = solver::solve_blocks(*method, &scores, pattern.n, &cfg);
+            let rel = relative_error(opt, batch_objective(&masks, &scores));
+            print!("{:>12.4}", rel);
+        }
+        println!();
+    }
+    println!("\nexpected shape (paper Fig. 3): tsenor << 2approx < binm/max1000,");
+    println!("and tsenor well below entropy-with-simple-rounding.");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model -> HLO artifacts.
+
+Nothing in this package is imported at runtime; the Rust coordinator only
+consumes the artifacts/ directory produced by `python -m compile.aot`.
+"""

@@ -1,0 +1,261 @@
+"""AOT build: lower L1+L2 to HLO text artifacts and prepare all runtime data.
+
+Run ONCE by `make artifacts` (python -m compile.aot --out ../artifacts).
+After this the Rust binary is self-contained; python never runs again.
+
+Outputs (under --out):
+  hlo/dykstra_m{M}_b{B}.hlo.txt   batched Dykstra solver (per M, per bucket;
+                                  N and tau are runtime scalar inputs)
+  hlo/model_fwd.hlo.txt           (weights..., tokens) -> (loss, logprobs)
+  hlo/model_grad.hlo.txt          (weights..., masks..., tokens) -> (loss, grads...)
+  hlo/calib.hlo.txt               (weights..., tokens) -> per-site Gram matrices
+  weights/<name>.npy              trained tiny-transformer weights
+  corpus/*.bin                    u8 token streams (train + 3 validation)
+  probes/probes.json              zero-shot probe items (token ids)
+  manifest.json                   everything the Rust coordinator needs
+
+HLO *text* is the interchange format: jax>=0.5 serialized protos use 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from . import model as model_mod
+from .kernels.dykstra import dykstra_pallas
+from .kernels.ref import dykstra_ref
+
+# T=100: quality saturates by 100 sweeps for every M <= 32 at the default
+# tau (see EXPERIMENTS.md §Perf iteration ablation); halves artifact runtime.
+DYKSTRA_ITERS = 100
+DYKSTRA_MS = (4, 8, 16, 32)
+# Two batch buckets per M: large for throughput, small for low-padding tails.
+BUCKET_ELEMS = (1 << 20, 1 << 16)
+FWD_BATCH = 8
+GRAD_BATCH = 4
+CALIB_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ----------------------------------------------------------------------
+# Dykstra artifacts
+# ----------------------------------------------------------------------
+
+def lower_dykstra(out: str) -> list[dict]:
+    entries = []
+    for m in DYKSTRA_MS:
+        for elems in BUCKET_ELEMS:
+            bucket = max(64, elems // (m * m))
+            fn = functools.partial(dykstra_pallas, iters=DYKSTRA_ITERS)
+            lowered = jax.jit(fn).lower(
+                jax.ShapeDtypeStruct((bucket, m, m), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+            )
+            rel = f"hlo/dykstra_m{m}_b{bucket}.hlo.txt"
+            _write(os.path.join(out, rel), to_hlo_text(lowered))
+            entries.append(
+                {"m": m, "bucket": bucket, "iters": DYKSTRA_ITERS, "file": rel}
+            )
+            print(f"  dykstra m={m} bucket={bucket} -> {rel}")
+    return entries
+
+
+def selfcheck_dykstra() -> None:
+    """Kernel-vs-oracle gate: refuse to emit artifacts if L1 drifts."""
+    rng = np.random.default_rng(0)
+    for m, n in ((4, 2), (8, 4), (16, 8), (32, 16)):
+        absw = jnp.asarray(np.abs(rng.standard_normal((8, m, m))), jnp.float32)
+        tau = jnp.float32(120.0 / float(jnp.max(absw)))
+        logn = jnp.float32(np.log(n))
+        got = dykstra_pallas(absw, tau, logn, iters=60)
+        want = dykstra_ref(absw, tau, logn, iters=60)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-5, f"dykstra selfcheck failed m={m}: {err}"
+    print("  dykstra selfcheck OK")
+
+
+# ----------------------------------------------------------------------
+# Model artifacts
+# ----------------------------------------------------------------------
+
+def _weight_specs(cfg) -> list[jax.ShapeDtypeStruct]:
+    shapes = model_mod.weight_shapes(cfg)
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+            for n in model_mod.weight_names(cfg)]
+
+
+def lower_model(out: str, cfg) -> dict:
+    wspecs = _weight_specs(cfg)
+    tok = lambda b: jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32)
+
+    fwd = lambda ws, t: model_mod.loss_and_logprobs(cfg, ws, t)
+    lowered = jax.jit(fwd).lower(wspecs, tok(FWD_BATCH))
+    _write(os.path.join(out, "hlo/model_fwd.hlo.txt"), to_hlo_text(lowered))
+    print("  model_fwd lowered")
+
+    shapes = model_mod.weight_shapes(cfg)
+    mspecs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+              for n in model_mod.prunable_names(cfg)]
+    grad = lambda ws, ms, t: model_mod.finetune_loss_and_grads(cfg, ws, ms, t)
+    lowered = jax.jit(grad).lower(wspecs, mspecs, tok(GRAD_BATCH))
+    _write(os.path.join(out, "hlo/model_grad.hlo.txt"), to_hlo_text(lowered))
+    print("  model_grad lowered")
+
+    calib = lambda ws, t: model_mod.calibration_grams(cfg, ws, t)
+    lowered = jax.jit(calib).lower(wspecs, tok(CALIB_BATCH))
+    _write(os.path.join(out, "hlo/calib.hlo.txt"), to_hlo_text(lowered))
+    print("  calib lowered")
+
+    return {
+        "model_fwd": {"file": "hlo/model_fwd.hlo.txt", "batch": FWD_BATCH,
+                      "seq": cfg.seq_len},
+        "model_grad": {"file": "hlo/model_grad.hlo.txt", "batch": GRAD_BATCH,
+                       "seq": cfg.seq_len},
+        "calib": {"file": "hlo/calib.hlo.txt", "batch": CALIB_BATCH,
+                  "seq": cfg.seq_len},
+    }
+
+
+# ----------------------------------------------------------------------
+# Build-time training of the tiny target model (LLaMA stand-in)
+# ----------------------------------------------------------------------
+
+def train_model(cfg, corpora: dict, steps: int, seed: int):
+    key = jax.random.PRNGKey(seed)
+    weights = model_mod.init_weights(key, cfg)
+    train = corpora["train"].astype(np.int32)
+    batch, t = GRAD_BATCH, cfg.seq_len
+
+    lr_peak, warmup = 1e-3, 20
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    m_state = [jnp.zeros_like(w) for w in weights]
+    v_state = [jnp.zeros_like(w) for w in weights]
+
+    @jax.jit
+    def step(ws, m_s, v_s, toks, lr, t_step):
+        loss, grads = jax.value_and_grad(
+            lambda w: model_mod.train_loss(cfg, w, toks))(ws)
+        new_ws, new_m, new_v = [], [], []
+        for w, g, m, v in zip(ws, grads, m_s, v_s):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t_step)
+            vhat = v / (1 - b2 ** t_step)
+            new_ws.append(w - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(m)
+            new_v.append(v)
+        return new_ws, new_m, new_v, loss
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    loss_val = float("nan")
+    for s in range(1, steps + 1):
+        starts = rng.integers(0, len(train) - t - 1, size=batch)
+        toks = np.stack([train[a:a + t] for a in starts])
+        lr = lr_peak * min(1.0, s / warmup)
+        weights, m_state, v_state, loss = step(
+            weights, m_state, v_state, jnp.asarray(toks), lr, s)
+        if s == 1 or s % 25 == 0:
+            loss_val = float(loss)
+            print(f"  train step {s}/{steps} loss={loss_val:.4f} "
+                  f"({time.time() - t0:.0f}s)")
+    return [np.asarray(w) for w in weights], loss_val
+
+
+# ----------------------------------------------------------------------
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--seed", type=int, default=17)
+    p.add_argument("--train-steps", type=int,
+                   default=int(os.environ.get("TSENOR_TRAIN_STEPS", "300")))
+    p.add_argument("--train-len", type=int, default=1 << 19)
+    p.add_argument("--valid-len", type=int, default=1 << 15)
+    args = p.parse_args()
+    out = args.out
+    cfg = model_mod.Config()
+
+    print("[1/5] corpora + probes")
+    corpora = corpus_mod.build_corpora(args.seed, args.train_len, args.valid_len)
+    os.makedirs(os.path.join(out, "corpus"), exist_ok=True)
+    corpus_meta = {}
+    for name, arr in corpora.items():
+        rel = f"corpus/{name}.bin"
+        arr.astype(np.uint8).tofile(os.path.join(out, rel))
+        corpus_meta[name] = {"file": rel, "len": int(len(arr))}
+    probes = corpus_mod.build_probes(args.seed + 50)
+    os.makedirs(os.path.join(out, "probes"), exist_ok=True)
+    with open(os.path.join(out, "probes/probes.json"), "w") as f:
+        f.write(corpus_mod.probes_to_json(probes))
+
+    print("[2/5] dykstra selfcheck + lowering")
+    selfcheck_dykstra()
+    dykstra_entries = lower_dykstra(out)
+
+    print(f"[3/5] training target model ({args.train_steps} steps)")
+    weights, final_loss = train_model(cfg, corpora, args.train_steps, args.seed)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+    names = model_mod.weight_names(cfg)
+    shapes = model_mod.weight_shapes(cfg)
+    prunable = set(model_mod.prunable_names(cfg))
+    weight_meta = []
+    for name, w in zip(names, weights):
+        rel = f"weights/{name}.npy"
+        np.save(os.path.join(out, rel), w.astype(np.float32))
+        weight_meta.append({"name": name, "shape": list(shapes[name]),
+                            "prunable": name in prunable, "file": rel})
+
+    print("[4/5] model artifacts")
+    model_entries = lower_model(out, cfg)
+
+    print("[5/5] manifest")
+    manifest = {
+        "version": 1,
+        "seed": args.seed,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "rms_eps": cfg.rms_eps,
+        },
+        "weights": weight_meta,
+        "prunable": sorted(prunable),
+        "gram_sites": model_mod.gram_sites(cfg),
+        "artifacts": {"dykstra": dykstra_entries, **model_entries},
+        "corpora": corpus_meta,
+        "probes": "probes/probes.json",
+        "train_meta": {"steps": args.train_steps, "final_loss": final_loss},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("artifacts complete:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""Synthetic corpora + zero-shot probe construction (build-time only).
+
+Stand-ins for WikiText2 / PTB / C4 and the LM-harness tasks (DESIGN.md
+§Substitutions). Three validation distributions with distinct statistics,
+a mixed training stream, and eight multiple-choice probe tasks whose
+ground truth comes from the generators themselves.
+
+Tokenization is byte-level (vocab 256); every stream is a u8 array.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+# Alphabet for markov text: lowercase letters + space.
+_MARKOV_SYMS = np.frombuffer(b"abcdefghijklmnopqrstuvwxyz ", dtype=np.uint8)
+
+
+def _markov_table(rng: np.random.Generator, k: int) -> np.ndarray:
+    """Sparse-ish row-stochastic transition table over k symbols."""
+    t = rng.dirichlet(np.full(k, 0.08), size=k)
+    return t.astype(np.float64)
+
+
+def gen_markov(rng: np.random.Generator, length: int) -> np.ndarray:
+    """Order-1 Markov chain over letters+space (the 'WikiText2' stand-in)."""
+    k = len(_MARKOV_SYMS)
+    table = _markov_table(rng, k)
+    cdf = np.cumsum(table, axis=1)
+    out = np.empty(length, dtype=np.int64)
+    state = int(rng.integers(k))
+    u = rng.random(length)
+    for i in range(length):
+        state = int(np.searchsorted(cdf[state], u[i]))
+        if state >= k:
+            state = k - 1
+        out[i] = state
+    return _MARKOV_SYMS[out]
+
+
+def _lexicon(rng: np.random.Generator, size: int) -> list[bytes]:
+    words = set()
+    while len(words) < size:
+        n = int(rng.integers(2, 8))
+        w = bytes(rng.choice(_MARKOV_SYMS[:26], size=n))
+        words.add(w)
+    return sorted(words)
+
+
+def gen_zipf(rng: np.random.Generator, length: int, lex_size: int = 500) -> np.ndarray:
+    """Zipf-distributed word stream (the 'PTB' stand-in)."""
+    lex = _lexicon(rng, lex_size)
+    ranks = np.arange(1, lex_size + 1, dtype=np.float64)
+    probs = (1.0 / ranks ** 1.1)
+    probs /= probs.sum()
+    chunks: list[bytes] = []
+    total = 0
+    while total < length:
+        idx = rng.choice(lex_size, size=256, p=probs)
+        for w in idx:
+            chunks.append(lex[int(w)])
+            total += len(lex[int(w)]) + 1
+    return np.frombuffer(b" ".join(chunks)[:length], dtype=np.uint8).copy()
+
+
+_KEY_ALPHA = np.frombuffer(b"ABCDEFGHIJKLMNOPQRSTUVWXYZ", dtype=np.uint8)
+_VAL_ALPHA = np.frombuffer(b"abcdefghijklmnopqrstuvwxyz0123456789", dtype=np.uint8)
+
+
+def _record(rng: np.random.Generator) -> tuple[bytes, bytes, bytes]:
+    key = bytes(rng.choice(_KEY_ALPHA, size=2)) + bytes([int(rng.integers(48, 58))])
+    val = bytes(rng.choice(_VAL_ALPHA, size=4))
+    return key, val, key + b":" + val + b";"
+
+
+def gen_template(rng: np.random.Generator, length: int) -> np.ndarray:
+    """Structured key-value records with retrieval queries (the 'C4'
+    stand-in, and the source of copy/retrieval capability)."""
+    parts: list[bytes] = []
+    total = 0
+    while total < length:
+        n_rec = int(rng.integers(2, 5))
+        recs = [_record(rng) for _ in range(n_rec)]
+        seg = b"".join(r[2] for r in recs)
+        k, v, _ = recs[int(rng.integers(n_rec))]
+        seg += b"?" + k + b"=" + v + b"."
+        parts.append(seg)
+        total += len(seg)
+    return np.frombuffer(b"".join(parts)[:length], dtype=np.uint8).copy()
+
+
+def gen_patterns(rng: np.random.Generator, length: int) -> np.ndarray:
+    """Copy / repetition / majority patterns (train-only stream that makes
+    the corresponding probes learnable)."""
+    parts: list[bytes] = []
+    total = 0
+    while total < length:
+        kind = int(rng.integers(3))
+        if kind == 0:  # copy: |xyz|xyz|
+            n = int(rng.integers(3, 7))
+            s = bytes(rng.choice(_VAL_ALPHA[:26], size=n))
+            seg = b"|" + s + b"|" + s + b"|"
+        elif kind == 1:  # repetition: aaaa...
+            c = bytes([int(rng.choice(_VAL_ALPHA[:26]))])
+            seg = c * int(rng.integers(4, 9)) + b" "
+        else:  # majority: AABAB>A
+            n = int(rng.integers(5, 10))
+            a, b = b"A", b"B"
+            na = int(rng.integers(n // 2 + 1, n + 1))
+            arr = np.array(list(a * na + b * (n - na)))
+            rng.shuffle(arr)
+            seg = arr.tobytes() + b">" + (a if na > n - na else b) + b" "
+        parts.append(seg)
+        total += len(seg)
+    return np.frombuffer(b"".join(parts)[:length], dtype=np.uint8).copy()
+
+
+def build_corpora(seed: int, train_len: int, valid_len: int) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    streams = {
+        "markov": gen_markov(np.random.default_rng(seed + 1), train_len // 4),
+        "zipf": gen_zipf(np.random.default_rng(seed + 2), train_len // 4),
+        "template": gen_template(np.random.default_rng(seed + 3), train_len // 4),
+        "patterns": gen_patterns(np.random.default_rng(seed + 4), train_len // 4),
+    }
+    # Train: interleave 256-byte chunks of all four streams.
+    chunk = 256
+    n_chunks = min(len(s) for s in streams.values()) // chunk
+    pieces = []
+    for c in range(n_chunks):
+        for s in streams.values():
+            pieces.append(s[c * chunk:(c + 1) * chunk])
+    train = np.concatenate(pieces)
+    rng_v = seed + 100
+    return {
+        "train": train,
+        "valid_markov": gen_markov(np.random.default_rng(rng_v + 1), valid_len),
+        "valid_zipf": gen_zipf(np.random.default_rng(rng_v + 2), valid_len),
+        "valid_template": gen_template(np.random.default_rng(rng_v + 3), valid_len),
+    }
+
+
+# ----------------------------------------------------------------------
+# Zero-shot probes: each item is {"context": bytes, "choices": [bytes...],
+# "answer": int}. Scored by total logprob of choice continuation.
+# ----------------------------------------------------------------------
+
+def _probe_bigram(rng, table_rng, n_items):
+    """Most likely next character under the markov table (order-1)."""
+    k = len(_MARKOV_SYMS)
+    table = _markov_table(table_rng, k)
+    items = []
+    ctx_src = gen_markov(np.random.default_rng(7), 64 * n_items)
+    for i in range(n_items):
+        ctx = ctx_src[i * 64:(i + 1) * 64]
+        last = int(np.where(_MARKOV_SYMS == ctx[-1])[0][0])
+        order = np.argsort(-table[last])
+        correct = _MARKOV_SYMS[order[0]:order[0] + 1].tobytes()
+        distract = [_MARKOV_SYMS[order[-j]:order[-j] + 1].tobytes() for j in (1, 2, 3)]
+        choices = [correct] + distract
+        perm = rng.permutation(4)
+        items.append({"context": ctx.tobytes(),
+                      "choices": [choices[p] for p in perm],
+                      "answer": int(np.where(perm == 0)[0][0])})
+    return items
+
+
+def _probe_word_completion(rng, n_items):
+    lex = _lexicon(np.random.default_rng(2), 500)
+    long_words = [w for w in lex if len(w) >= 5][:200]
+    items = []
+    for _ in range(n_items):
+        w = long_words[int(rng.integers(len(long_words)))]
+        cut = len(w) - 2
+        correct = w[cut:]
+        distract = []
+        while len(distract) < 3:
+            d = bytes(rng.choice(_VAL_ALPHA[:26], size=2))
+            if d != correct:
+                distract.append(d)
+        choices = [correct] + distract
+        perm = rng.permutation(4)
+        items.append({"context": b" " + w[:cut],
+                      "choices": [choices[p] for p in perm],
+                      "answer": int(np.where(perm == 0)[0][0])})
+    return items
+
+
+def _probe_retrieval(rng, n_items):
+    items = []
+    for _ in range(n_items):
+        recs = [_record(rng) for _ in range(3)]
+        ctx = b"".join(r[2] for r in recs)
+        k, v, _ = recs[int(rng.integers(3))]
+        ctx += b"?" + k + b"="
+        others = [r[1] for r in recs if r[1] != v][:2]
+        rand_v = bytes(rng.choice(_VAL_ALPHA, size=4))
+        choices = [v] + others + [rand_v]
+        choices = choices[:4]
+        perm = rng.permutation(len(choices))
+        items.append({"context": ctx,
+                      "choices": [choices[p] for p in perm],
+                      "answer": int(np.where(perm == 0)[0][0])})
+    return items
+
+
+def _probe_copy(rng, n_items):
+    items = []
+    for _ in range(n_items):
+        n = int(rng.integers(3, 7))
+        s = bytes(rng.choice(_VAL_ALPHA[:26], size=n))
+        ctx = b"|" + s + b"|" + s[:n - 2]
+        correct = s[n - 2:]
+        distract = []
+        while len(distract) < 3:
+            d = bytes(rng.choice(_VAL_ALPHA[:26], size=2))
+            if d != correct:
+                distract.append(d)
+        choices = [correct] + distract
+        perm = rng.permutation(4)
+        items.append({"context": ctx,
+                      "choices": [choices[p] for p in perm],
+                      "answer": int(np.where(perm == 0)[0][0])})
+    return items
+
+
+def _probe_majority(rng, n_items):
+    items = []
+    for _ in range(n_items):
+        n = int(rng.integers(5, 10))
+        na = int(rng.integers(n // 2 + 1, n + 1))
+        arr = np.array(list(b"A" * na + b"B" * (n - na)))
+        rng.shuffle(arr)
+        correct = b"A" if na > n - na else b"B"
+        items.append({"context": arr.tobytes() + b">",
+                      "choices": [b"A", b"B"],
+                      "answer": 0 if correct == b"A" else 1})
+    return items
+
+
+def _probe_repetition(rng, n_items):
+    items = []
+    for _ in range(n_items):
+        c = bytes([int(rng.choice(_VAL_ALPHA[:26]))])
+        d = bytes([int(rng.choice(_VAL_ALPHA[:26]))])
+        reps = int(rng.integers(4, 8))
+        choices = [c, d] if c != d else [c, b"z" if c != b"z" else b"y"]
+        items.append({"context": c * reps,
+                      "choices": choices,
+                      "answer": 0})
+    return items
+
+
+def _probe_delimiter(rng, n_items):
+    """After a 4-char value in a record, ';' must follow."""
+    items = []
+    for _ in range(n_items):
+        k, v, rec = _record(rng)
+        ctx = rec + k + b":" + v
+        items.append({"context": ctx,
+                      "choices": [b";", b":", b"?", b"a"],
+                      "answer": 0})
+    return items
+
+
+def _probe_query_marker(rng, n_items):
+    """Records end with a '?K=' query; after '?' comes a seen key."""
+    items = []
+    for _ in range(n_items):
+        recs = [_record(rng) for _ in range(3)]
+        ctx = b"".join(r[2] for r in recs) + b"?"
+        k = recs[int(rng.integers(3))][0]
+        fake = bytes(rng.choice(_KEY_ALPHA, size=2)) + b"5"
+        choices = [k, fake]
+        perm = rng.permutation(2)
+        items.append({"context": ctx,
+                      "choices": [choices[p] for p in perm],
+                      "answer": int(np.where(perm == 0)[0][0])})
+    return items
+
+
+def build_probes(seed: int, n_items: int = 100) -> dict[str, list]:
+    rng = np.random.default_rng(seed)
+    return {
+        "bigram": _probe_bigram(rng, np.random.default_rng(seed + 1), n_items),
+        "word_completion": _probe_word_completion(rng, n_items),
+        "retrieval": _probe_retrieval(rng, n_items),
+        "copy": _probe_copy(rng, n_items),
+        "majority": _probe_majority(rng, n_items),
+        "repetition": _probe_repetition(rng, n_items),
+        "delimiter": _probe_delimiter(rng, n_items),
+        "query_marker": _probe_query_marker(rng, n_items),
+    }
+
+
+def probes_to_json(probes: dict[str, list]) -> str:
+    """Token-level JSON (lists of ints) so the Rust side needs no decoding."""
+    enc = {
+        task: [
+            {
+                "context": list(item["context"]),
+                "choices": [list(c) for c in item["choices"]],
+                "answer": item["answer"],
+            }
+            for item in items
+        ]
+        for task, items in probes.items()
+    }
+    return json.dumps(enc)

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp oracles."""
+
+from .dykstra import dykstra_pallas  # noqa: F401
+from .masked_matmul import masked_matmul  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: masked GEMM  y = x @ (w * mask)  with analytic VJP.
+
+Used by the L2 fine-tuning graph: the forward pass applies the (frozen)
+transposable N:M mask inside the kernel, and the custom VJP implements the
+backward pass the way transposable sparsity makes possible — the gradient
+w.r.t. x multiplies by the *transposed* masked weights, which is itself an
+N:M-sparse product because the mask is transposable (the paper's whole
+point). Registering the VJP analytically also sidesteps differentiating
+through pallas interpret mode.
+
+TPU adaptation: classic (i, j) output tiling with a full-K contraction per
+tile — (bm, K) x (K, bn) MXU matmuls from VMEM; mask application fuses as
+a VPU elementwise op on the weight tile before it enters the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, mask_ref, o_ref):
+    wm = w_ref[...] * mask_ref[...]
+    o_ref[...] = jnp.dot(x_ref[...], wm, preferred_element_type=jnp.float32)
+
+
+def _pick(dim: int, pref: int) -> int:
+    t = min(dim, pref)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _masked_matmul_fwd_impl(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bn = _pick(n, 128)
+    bm = _pick(m, 128)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((k, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), mask.astype(jnp.float32))
+
+
+@jax.custom_vjp
+def masked_matmul(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """y = x @ (w * mask); mask is constant (no gradient)."""
+    return _masked_matmul_fwd_impl(x, w, mask)
+
+
+def _fwd(x, w, mask):
+    return _masked_matmul_fwd_impl(x, w, mask), (x, w, mask)
+
+
+def _bwd(res, g):
+    x, w, mask = res
+    wm = w * mask
+    dx = g @ wm.T  # transposable N:M: this is itself an N:M-sparse product
+    dw = (x.T @ g) * mask  # gradient only flows to kept weights
+    return dx, dw, None
+
+
+masked_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `*_ref` counterpart to float tolerance (pytest + hypothesis
+in python/tests/). They are also used by aot.py's self-checks before an
+artifact is written.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dykstra_ref(
+    absw: jax.Array, tau: jax.Array, logn: jax.Array, iters: int
+) -> jax.Array:
+    """Entropy-regularized transposable-N:M relaxation via Dykstra.
+
+    Solves, for every M x M block b independently,
+
+        max <S, absw[b]> + (1/tau) H(S)
+        s.t. S @ 1 = N, S^T @ 1 = N, 0 <= S <= 1
+
+    by KL/Bregman projections onto the three constraint sets (Algorithm 1
+    of the paper), carried out in log-space for numerical stability
+    (Appendix A.2).
+
+    Args:
+      absw: (B, M, M) nonneg block scores |W|.
+      tau:  scalar (or (1,)) regularization strength.
+      logn: scalar (or (1,)) log(N) target row/col log-mass.
+      iters: number of Dykstra sweeps (static).
+
+    Returns:
+      (B, M, M) fractional solution in [0, 1].
+    """
+    tau = jnp.asarray(tau, jnp.float32).reshape(())
+    logn = jnp.asarray(logn, jnp.float32).reshape(())
+    log_s = tau * absw.astype(jnp.float32)
+    log_q = jnp.zeros_like(log_s)
+
+    def body(_, carry):
+        log_s, log_q = carry
+        # Projection onto C1 (row sums = N): row-wise log normalization.
+        log_s = log_s - (jax.nn.logsumexp(log_s, axis=2, keepdims=True) - logn)
+        # Projection onto C2 (col sums = N).
+        log_s = log_s - (jax.nn.logsumexp(log_s, axis=1, keepdims=True) - logn)
+        # Projection onto C3 (S <= 1) with Dykstra dual correction.
+        log_tmp = log_s + log_q
+        log_s_new = jnp.minimum(log_tmp, 0.0)
+        log_q = log_tmp - log_s_new
+        return log_s_new, log_q
+
+    log_s, _ = jax.lax.fori_loop(0, iters, body, (log_s, log_q))
+    return jnp.exp(log_s)
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """y = x @ (w * mask). Oracle for the masked-GEMM Pallas kernel."""
+    return x.astype(jnp.float32) @ (w * mask).astype(jnp.float32)
+
+
+def greedy_round_ref(scores, n: int):
+    """Simple (non-vectorized, numpy) greedy rounding oracle.
+
+    Used only in tests as a feasibility/objective sanity baseline for the
+    Rust rounding implementation; NOT part of any artifact.
+    Returns a (M, M) 0/1 mask with row/col sums <= n (== n when feasible).
+    """
+    import numpy as np
+
+    scores = np.asarray(scores)
+    m = scores.shape[0]
+    order = np.argsort(-scores, axis=None)
+    mask = np.zeros((m, m), dtype=np.float32)
+    rows = np.zeros(m, dtype=np.int64)
+    cols = np.zeros(m, dtype=np.int64)
+    for flat in order:
+        i, j = divmod(int(flat), m)
+        if rows[i] < n and cols[j] < n:
+            mask[i, j] = 1.0
+            rows[i] += 1
+            cols[j] += 1
+    return mask

@@ -1,0 +1,248 @@
+"""L2: decoder-only transformer in JAX (the pruning target / eval model).
+
+This is the stand-in for LLaMA-3.2 in the paper's experiments (DESIGN.md
+§Substitutions): same structural layout per block (RMSNorm -> q/k/v/o
+attention -> RMSNorm -> SiLU-gated MLP, tied embedding head), scaled to a
+few million parameters so the whole pipeline runs on one CPU core.
+
+All entry points take weights as a *flat list* in the canonical order of
+`weight_names(cfg)` so the Rust coordinator can feed pruned weights
+positionally through PJRT without any pytree logic on the Rust side.
+
+The fine-tuning graph (`finetune_loss`) routes every prunable linear
+through the L1 `masked_matmul` Pallas kernel, whose custom VJP encodes the
+transposable-sparsity backward pass (grad x = g @ (W*S)^T is itself an
+N:M-sparse product — the property the paper exists to enable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.masked_matmul import masked_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Per-layer 2D linear weights, in order. All are prunable (divisible by 32).
+LAYER_LINEARS = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+LAYER_NORMS = ("ln1", "ln2")
+
+
+def weight_names(cfg: Config) -> list[str]:
+    """Canonical flat weight order shared with the Rust manifest."""
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        names += [f"layers.{i}.{p}" for p in ("ln1", "wq", "wk", "wv", "wo",
+                                              "ln2", "wgate", "wup", "wdown")]
+    names.append("lnf")
+    return names
+
+
+def weight_shapes(cfg: Config) -> dict[str, tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: dict[str, tuple[int, ...]] = {
+        "embed": (cfg.vocab, d),
+        "pos": (cfg.seq_len, d),
+        "lnf": (d,),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        shapes[p + "ln1"] = (d,)
+        shapes[p + "ln2"] = (d,)
+        shapes[p + "wq"] = (d, d)
+        shapes[p + "wk"] = (d, d)
+        shapes[p + "wv"] = (d, d)
+        shapes[p + "wo"] = (d, d)
+        shapes[p + "wgate"] = (d, f)
+        shapes[p + "wup"] = (d, f)
+        shapes[p + "wdown"] = (f, d)
+    return shapes
+
+
+def prunable_names(cfg: Config) -> list[str]:
+    return [n for n in weight_names(cfg)
+            if n.split(".")[-1] in LAYER_LINEARS]
+
+
+def init_weights(key: jax.Array, cfg: Config) -> list[jax.Array]:
+    """Scaled-normal init, flat canonical order."""
+    names = weight_names(cfg)
+    shapes = weight_shapes(cfg)
+    ws = []
+    for name in names:
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            ws.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 0.02 if name in ("embed", "pos") else fan_in ** -0.5
+            ws.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return ws
+
+
+def _unflatten(cfg: Config, weights: Sequence[jax.Array]) -> dict[str, jax.Array]:
+    return dict(zip(weight_names(cfg), weights))
+
+
+def _rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    return x * scale * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _attention(cfg: Config, x: jax.Array, q, k, v) -> jax.Array:
+    """Causal multi-head attention. q,k,v: (B, T, d) already projected."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(z):
+        return z.reshape(b, t, h, hd).transpose(0, 2, 1, 3)  # (B,H,T,hd)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    att = jnp.where(causal, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def _block(cfg: Config, w: dict, i: int, h: jax.Array, linear, captures=None):
+    """One transformer block; `linear(x, name)` performs the projection."""
+    p = f"layers.{i}."
+    x1 = _rmsnorm(h, w[p + "ln1"], cfg.rms_eps)
+    if captures is not None:
+        captures[p + "attn_in"] = x1
+    q = linear(x1, p + "wq")
+    k = linear(x1, p + "wk")
+    v = linear(x1, p + "wv")
+    ao = _attention(cfg, x1, q, k, v)
+    if captures is not None:
+        captures[p + "attn_out"] = ao
+    h = h + linear(ao, p + "wo")
+    x2 = _rmsnorm(h, w[p + "ln2"], cfg.rms_eps)
+    if captures is not None:
+        captures[p + "mlp_in"] = x2
+    g = jax.nn.silu(linear(x2, p + "wgate")) * linear(x2, p + "wup")
+    if captures is not None:
+        captures[p + "mlp_down"] = g
+    h = h + linear(g, p + "wdown")
+    return h
+
+
+def _forward(cfg: Config, weights, tokens, masks=None, use_pallas=False,
+             captures=None):
+    """Returns logits (B, T, V). masks: dict name->mask for prunable linears."""
+    w = _unflatten(cfg, weights)
+    b, t = tokens.shape
+
+    def linear(x, name):
+        wm = w[name]
+        if masks is not None and name in masks:
+            if use_pallas:
+                flat = x.reshape(-1, x.shape[-1])
+                return masked_matmul(flat, wm, masks[name]).reshape(
+                    *x.shape[:-1], wm.shape[1])
+            wm = wm * masks[name]
+        return x @ wm
+
+    h = w["embed"][tokens] + w["pos"][:t][None, :, :]
+    for i in range(cfg.n_layers):
+        h = _block(cfg, w, i, h, linear, captures)
+    h = _rmsnorm(h, w["lnf"], cfg.rms_eps)
+    return h @ w["embed"].T  # tied output head
+
+
+def forward_logits(cfg: Config, weights, tokens):
+    return _forward(cfg, weights, tokens)
+
+
+def loss_and_logprobs(cfg: Config, weights, tokens):
+    """AOT entry `model_fwd`: next-token loss + per-position logprobs.
+
+    Returns (mean_loss scalar, logprobs (B, T-1)) where logprobs[b, t] is
+    log p(tokens[b, t+1] | tokens[b, :t+1]) — everything perplexity and the
+    zero-shot probes need.
+    """
+    logits = _forward(cfg, weights, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    tok_logp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(tok_logp), tok_logp
+
+
+def train_loss(cfg: Config, weights, tokens):
+    """Dense training loss (used only at build time by aot.py)."""
+    loss, _ = loss_and_logprobs(cfg, weights, tokens)
+    return loss
+
+
+def finetune_loss(cfg: Config, weights, masks_flat, tokens):
+    """Masked fine-tune loss; prunable linears go through the L1 kernel."""
+    masks = dict(zip(prunable_names(cfg), masks_flat))
+    logits = _forward(cfg, weights, tokens, masks=masks, use_pallas=True)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    tok_logp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(tok_logp)
+
+
+def finetune_loss_and_grads(cfg: Config, weights, masks_flat, tokens):
+    """AOT entry `model_grad`: (loss, grads w.r.t. every weight tensor)."""
+    loss, grads = jax.value_and_grad(
+        lambda ws: finetune_loss(cfg, ws, masks_flat, tokens))(list(weights))
+    return loss, *grads
+
+
+# Calibration sites: inputs feeding each group of prunable linears.
+def gram_sites(cfg: Config) -> list[dict]:
+    """Site metadata mirrored into the manifest for the Rust side."""
+    sites = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        sites.append({"name": p + "attn_in", "dim": cfg.d_model,
+                      "weights": [p + "wq", p + "wk", p + "wv"]})
+        sites.append({"name": p + "attn_out", "dim": cfg.d_model,
+                      "weights": [p + "wo"]})
+        sites.append({"name": p + "mlp_in", "dim": cfg.d_model,
+                      "weights": [p + "wgate", p + "wup"]})
+        sites.append({"name": p + "mlp_down", "dim": cfg.d_ff,
+                      "weights": [p + "wdown"]})
+    return sites
+
+
+def calibration_grams(cfg: Config, weights, tokens):
+    """AOT entry `calib`: (loss, Gram matrix X^T X per site). Layer-wise
+    pruning needs only H = X^T X + lambda I, never raw activations. The
+    loss output (a) sanity-checks calibration batches and (b) keeps every
+    weight live so XLA does not DCE parameters out of the artifact
+    signature (lnf / the last wdown feed only the logits)."""
+    captures: dict[str, jax.Array] = {}
+    logits = _forward(cfg, weights, tokens, captures=captures)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    tok_logp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(tok_logp)
+    grams = []
+    for site in gram_sites(cfg):
+        x = captures[site["name"]]
+        flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        grams.append(flat.T @ flat)
+    return (loss, *grams)

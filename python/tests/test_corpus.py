@@ -1,0 +1,73 @@
+"""Build-time data: corpus generators and probe construction."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import corpus as C
+
+
+def test_corpora_shapes_and_determinism():
+    a = C.build_corpora(7, 1 << 14, 1 << 12)
+    b = C.build_corpora(7, 1 << 14, 1 << 12)
+    assert set(a) == {"train", "valid_markov", "valid_zipf", "valid_template"}
+    for k in a:
+        assert a[k].dtype == np.uint8
+        np.testing.assert_array_equal(a[k], b[k])
+    for k in ("valid_markov", "valid_zipf", "valid_template"):
+        assert len(a[k]) == 1 << 12
+
+
+def test_corpora_distributions_differ():
+    c = C.build_corpora(3, 1 << 14, 1 << 12)
+
+    def hist(x):
+        h = np.bincount(x, minlength=256).astype(np.float64)
+        return h / h.sum()
+
+    hm, hz, ht = (hist(c[k]) for k in ("valid_markov", "valid_zipf", "valid_template"))
+    # L1 distances between corpus byte distributions must be substantial.
+    assert np.abs(hm - ht).sum() > 0.3
+    assert np.abs(hz - ht).sum() > 0.3
+
+
+def test_template_contains_queries():
+    t = C.gen_template(np.random.default_rng(0), 4096).tobytes()
+    assert b"?" in t and b"=" in t and b";" in t
+
+
+@pytest.fixture(scope="module")
+def probes():
+    return C.build_probes(11, n_items=20)
+
+
+def test_probes_all_tasks_present(probes):
+    assert set(probes) == {
+        "bigram", "word_completion", "retrieval", "copy",
+        "majority", "repetition", "delimiter", "query_marker",
+    }
+    for task, items in probes.items():
+        assert len(items) == 20, task
+        for it in items:
+            assert 0 <= it["answer"] < len(it["choices"]), task
+            assert len(it["context"]) >= 1
+            assert all(len(c) >= 1 for c in it["choices"])
+            # items must fit the model_fwd window (128) incl. choice
+            assert len(it["context"]) + max(len(c) for c in it["choices"]) <= 128
+
+
+def test_retrieval_answer_is_recoverable(probes):
+    # the correct value must literally appear in the context records
+    for it in probes["retrieval"]:
+        ctx = bytes(it["context"])
+        assert bytes(it["choices"][it["answer"]]) in ctx
+
+
+def test_probes_json_roundtrip(probes):
+    text = C.probes_to_json(probes)
+    back = json.loads(text)
+    assert set(back) == set(probes)
+    item = back["copy"][0]
+    assert isinstance(item["context"], list)
+    assert all(isinstance(x, int) and 0 <= x < 256 for x in item["context"])

@@ -1,0 +1,86 @@
+"""L1 correctness: the Pallas Dykstra kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes, patterns and regularization strengths; the kernel must
+track the oracle bit-for-bit-ish (same op order => tight tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dykstra import dykstra_pallas
+from compile.kernels.ref import dykstra_ref
+
+TOL = 1e-5
+
+
+def run_both(absw, n, tau, iters):
+    logn = float(np.log(n))
+    got = np.asarray(dykstra_pallas(jnp.asarray(absw), tau, logn, iters=iters))
+    want = np.asarray(dykstra_ref(jnp.asarray(absw), tau, logn, iters=iters))
+    return got, want
+
+
+@pytest.mark.parametrize("m,n", [(4, 2), (8, 4), (8, 2), (16, 8), (32, 16)])
+def test_matches_ref_basic(m, n):
+    rng = np.random.default_rng(m * 31 + n)
+    absw = np.abs(rng.standard_normal((6, m, m))).astype(np.float32)
+    tau = 120.0 / float(absw.max())
+    got, want = run_both(absw, n, tau, 100)
+    np.testing.assert_allclose(got, want, atol=TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    m=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31),
+    tau0=st.floats(1.0, 300.0),
+    iters=st.integers(1, 120),
+)
+def test_matches_ref_hypothesis(b, m, seed, tau0, iters):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, m + 1))
+    absw = np.abs(rng.standard_normal((b, m, m))).astype(np.float32)
+    tau = tau0 / max(float(absw.max()), 1e-6)
+    got, want = run_both(absw, n, tau, iters)
+    np.testing.assert_allclose(got, want, atol=TOL)
+
+
+def test_marginals_converge_to_n():
+    rng = np.random.default_rng(0)
+    m, n = 16, 8
+    absw = np.abs(rng.standard_normal((4, m, m))).astype(np.float32)
+    tau = 120.0 / float(absw.max())
+    got = np.asarray(dykstra_pallas(jnp.asarray(absw), tau, float(np.log(n)), iters=300))
+    np.testing.assert_allclose(got.sum(axis=2), n, atol=0.2)
+    np.testing.assert_allclose(got.sum(axis=1), n, atol=0.2)
+    assert got.min() >= 0.0
+    assert got.max() <= 1.0 + 1e-5
+
+
+def test_entries_bounded_even_with_extreme_tau():
+    rng = np.random.default_rng(1)
+    absw = np.abs(rng.standard_normal((2, 8, 8))).astype(np.float32)
+    got = np.asarray(dykstra_pallas(jnp.asarray(absw), 500.0, float(np.log(4)), iters=50))
+    assert np.isfinite(got).all()
+    assert got.max() <= 1.0 + 1e-4
+
+
+def test_uneven_batch_tiles():
+    # batch not a multiple of the preferred tile => _tile_batch fallback.
+    rng = np.random.default_rng(2)
+    absw = np.abs(rng.standard_normal((7, 8, 8))).astype(np.float32)
+    tau = 60.0 / float(absw.max())
+    got, want = run_both(absw, 4, tau, 60)
+    np.testing.assert_allclose(got, want, atol=TOL)
+
+
+def test_n_equals_m_saturates():
+    rng = np.random.default_rng(3)
+    m = 8
+    absw = np.abs(rng.standard_normal((3, m, m))).astype(np.float32)
+    got = np.asarray(dykstra_pallas(jnp.asarray(absw), 10.0, float(np.log(m)), iters=200))
+    np.testing.assert_allclose(got, 1.0, atol=1e-3)

@@ -1,0 +1,115 @@
+"""L2 correctness: transformer shapes, loss semantics, masked fine-tune
+gradients, calibration Gram identities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return M.Config(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def weights(small_cfg):
+    return M.init_weights(jax.random.PRNGKey(0), small_cfg)
+
+
+def toks(cfg, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.seq_len), dtype=np.int32))
+
+
+def test_weight_names_shapes_consistent(small_cfg):
+    names = M.weight_names(small_cfg)
+    shapes = M.weight_shapes(small_cfg)
+    assert len(names) == len(set(names))
+    assert set(names) == set(shapes)
+    assert names[0] == "embed" and names[-1] == "lnf"
+    # prunable = 7 linears per layer
+    assert len(M.prunable_names(small_cfg)) == 7 * small_cfg.n_layers
+
+
+def test_forward_shapes_and_loss(small_cfg, weights):
+    t = toks(small_cfg, 3)
+    logits = M.forward_logits(small_cfg, weights, t)
+    assert logits.shape == (3, small_cfg.seq_len, small_cfg.vocab)
+    loss, logp = M.loss_and_logprobs(small_cfg, weights, t)
+    assert logp.shape == (3, small_cfg.seq_len - 1)
+    # random init => loss near ln(vocab)
+    assert abs(float(loss) - np.log(small_cfg.vocab)) < 0.5
+    # loss equals mean(-logp)
+    np.testing.assert_allclose(float(loss), -float(jnp.mean(logp)), rtol=1e-5)
+
+
+def test_causality(small_cfg, weights):
+    """Changing a future token must not change past logprobs."""
+    t1 = toks(small_cfg, 1, seed=1)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % small_cfg.vocab)
+    _, lp1 = M.loss_and_logprobs(small_cfg, weights, t1)
+    _, lp2 = M.loss_and_logprobs(small_cfg, weights, t2)
+    # all positions except the last are unaffected
+    np.testing.assert_allclose(np.asarray(lp1)[0, :-1], np.asarray(lp2)[0, :-1], atol=1e-5)
+
+
+def test_finetune_grads_respect_masks(small_cfg, weights):
+    rng = np.random.default_rng(3)
+    shapes = M.weight_shapes(small_cfg)
+    masks = [
+        jnp.asarray((rng.random(shapes[n]) < 0.5).astype(np.float32))
+        for n in M.prunable_names(small_cfg)
+    ]
+    t = toks(small_cfg, 2, seed=2)
+    loss, *grads = M.finetune_loss_and_grads(small_cfg, weights, masks, t)
+    assert np.isfinite(float(loss))
+    names = M.weight_names(small_cfg)
+    prunable = set(M.prunable_names(small_cfg))
+    mask_by_name = dict(zip(M.prunable_names(small_cfg), masks))
+    for name, g in zip(names, grads):
+        assert g.shape == shapes[name], name
+        if name in prunable:
+            leaked = np.asarray(g)[np.asarray(mask_by_name[name]) == 0.0]
+            assert np.all(leaked == 0.0), f"gradient leak in {name}"
+
+
+def test_masked_forward_equals_masked_weights(small_cfg, weights):
+    """finetune forward with mask == plain forward on pre-masked weights."""
+    rng = np.random.default_rng(4)
+    shapes = M.weight_shapes(small_cfg)
+    prunable = M.prunable_names(small_cfg)
+    masks = [
+        jnp.asarray((rng.random(shapes[n]) < 0.5).astype(np.float32)) for n in prunable
+    ]
+    t = toks(small_cfg, 2, seed=5)
+    loss_masked = M.finetune_loss(small_cfg, weights, masks, t)
+    names = M.weight_names(small_cfg)
+    mask_by_name = dict(zip(prunable, masks))
+    weights2 = [
+        w * mask_by_name[n] if n in mask_by_name else w for n, w in zip(names, weights)
+    ]
+    loss_direct, _ = M.loss_and_logprobs(small_cfg, weights2, t)
+    np.testing.assert_allclose(float(loss_masked), float(loss_direct), rtol=1e-4)
+
+
+def test_calibration_gram_identity(small_cfg, weights):
+    """Gram outputs must equal X^T X of the captured activations."""
+    t = toks(small_cfg, 2, seed=6)
+    loss, *grams = M.calibration_grams(small_cfg, weights, t)
+    assert np.isfinite(float(loss))
+    sites = M.gram_sites(small_cfg)
+    assert len(grams) == len(sites) == 4 * small_cfg.n_layers
+    for site, g in zip(sites, grams):
+        g = np.asarray(g)
+        assert g.shape == (site["dim"], site["dim"])
+        np.testing.assert_allclose(g, g.T, atol=1e-2)
+        evals = np.linalg.eigvalsh(g.astype(np.float64))
+        assert evals.min() > -1e-3, site["name"]
+
+
+def test_gram_sites_cover_all_prunables(small_cfg):
+    covered = {w for s in M.gram_sites(small_cfg) for w in s["weights"]}
+    assert covered == set(M.prunable_names(small_cfg))

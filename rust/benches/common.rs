@@ -1,0 +1,62 @@
+//! Shared bench scaffolding (harness = false): repeated timing with
+//! mean±std, scale selection, and artifact discovery.
+//!
+//! Scale via env TSENOR_BENCH_SCALE = quick | default | full. "full"
+//! reproduces the paper's largest configurations (8192x8192 etc.) and can
+//! take tens of minutes on one core; "default" keeps every table's SHAPE
+//! with runtimes suitable for CI.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+use tsenor::runtime::Manifest;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scale {
+    Quick,
+    Default,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("TSENOR_BENCH_SCALE").as_deref() {
+        Ok("quick") => Scale::Quick,
+        Ok("full") => Scale::Full,
+        _ => Scale::Default,
+    }
+}
+
+/// Time `f` for `trials` runs; returns (mean_secs, std_secs).
+pub fn time_trials(trials: usize, mut f: impl FnMut()) -> (f64, f64) {
+    let mut times = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / times.len() as f64;
+    (mean, var.sqrt())
+}
+
+pub fn fmt_time(mean: f64, std: f64) -> String {
+    format!("{mean:.3} (±{std:.3})")
+}
+
+pub fn manifest() -> Option<Manifest> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        Some(Manifest::load(&root).unwrap())
+    } else {
+        eprintln!("note: no artifacts/ bundle — XLA rows skipped (run `make artifacts`)");
+        None
+    }
+}
+
+/// Print a standard bench header.
+pub fn header(name: &str, paper_ref: &str) {
+    println!("\n================================================================");
+    println!("BENCH {name}  (reproduces {paper_ref})");
+    println!("scale: {:?}  (set TSENOR_BENCH_SCALE=quick|default|full)", scale());
+    println!("================================================================");
+}

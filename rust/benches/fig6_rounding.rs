@@ -1,0 +1,90 @@
+//! Fig. 6 (Appendix B.2.1): rounding ablation. Three rounding strategies
+//! (Simple / Greedy / Optround=greedy+local-search) applied either
+//! directly to |W| or to the entropy-regularized approximate solution
+//! ("Entropy+"). Shows each component's contribution: greedy cuts error
+//! 50-90%, local search up to another 50%, entropy input < 5% error.
+
+#[path = "common.rs"]
+mod common;
+
+use tsenor::data::workload;
+use tsenor::masks::dykstra::{effective_tau, solve_batch, DykstraCfg};
+use tsenor::masks::rounding;
+use tsenor::masks::{block_objective, exact, relative_error, NmPattern};
+use tsenor::util::tensor::Blocks;
+
+fn rel_err_of(
+    scores: &Blocks,
+    opt: f64,
+    mut round_one: impl FnMut(&[f32], &[f32], usize) -> Vec<f32>,
+    frac: Option<&Blocks>,
+) -> f64 {
+    let m = scores.m;
+    let mut total = 0.0;
+    for k in 0..scores.b {
+        let base = match frac {
+            Some(f) => f.block(k),
+            None => scores.block(k),
+        };
+        let mask = round_one(base, scores.block(k), m);
+        total += block_objective(&mask, scores.block(k));
+    }
+    relative_error(opt, total)
+}
+
+fn main() {
+    common::header("fig6_rounding", "paper Figure 6 (rounding ablation)");
+    let count = match common::scale() {
+        common::Scale::Quick => 30,
+        _ => 100,
+    };
+    let dcfg = DykstraCfg::default();
+    let patterns = [
+        NmPattern::new(4, 8),
+        NmPattern::new(8, 16),
+        NmPattern::new(16, 32),
+        NmPattern::new(4, 16),
+        NmPattern::new(8, 32),
+    ];
+
+    println!(
+        "{:<10}{:>10}{:>10}{:>10}{:>12}{:>12}{:>12}",
+        "pattern", "simple", "greedy", "optround", "E+simple", "E+greedy", "E+optround"
+    );
+    for pattern in &patterns {
+        let (n, m) = (pattern.n, pattern.m);
+        let scores = workload::heavy_tail_blocks(count, m, 11 + m as u64);
+        let (_, opt) = exact::solve_batch(&scores, n);
+        let tau = effective_tau(
+            scores.data.iter().fold(0.0f32, |a, &x| a.max(x)),
+            dcfg.tau0,
+        );
+        let frac = solve_batch(&scores, n, tau, dcfg.iters);
+
+        let simple =
+            |base: &[f32], _sc: &[f32], m: usize| rounding::simple_round(base, m, n);
+        let greedy = |base: &[f32], sc: &[f32], m: usize| {
+            let mut mask = rounding::greedy_select(base, m, n);
+            rounding::repair(&mut mask, sc, m, n);
+            mask
+        };
+        let optround =
+            |base: &[f32], sc: &[f32], m: usize| rounding::round_block(base, sc, m, n, 10);
+
+        let row = [
+            rel_err_of(&scores, opt, simple, None),
+            rel_err_of(&scores, opt, greedy, None),
+            rel_err_of(&scores, opt, optround, None),
+            rel_err_of(&scores, opt, simple, Some(&frac)),
+            rel_err_of(&scores, opt, greedy, Some(&frac)),
+            rel_err_of(&scores, opt, optround, Some(&frac)),
+        ];
+        println!(
+            "{:<10}{:>10.4}{:>10.4}{:>10.4}{:>12.4}{:>12.4}{:>12.4}",
+            format!("{pattern}"),
+            row[0], row[1], row[2], row[3], row[4], row[5]
+        );
+    }
+    println!("\npaper shape: each column improves left->right within a group, and");
+    println!("Entropy+ groups beat direct rounding; E+optround < 5% everywhere.");
+}

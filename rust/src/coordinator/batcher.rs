@@ -1,0 +1,91 @@
+//! Block batcher: routes (B, M, M) solve requests through the AOT Dykstra
+//! executable, handling the static bucket shapes the artifact was lowered
+//! with (pad the tail call, slice results back). This is the XLA-
+//! accelerated TSENOR path: Algorithm 1 runs in the compiled HLO,
+//! Algorithm 2 (branchy rounding) runs in Rust.
+
+use crate::masks::dykstra::effective_tau;
+use crate::masks::rounding;
+use crate::masks::solver::SolveCfg;
+use crate::runtime::{Engine, Manifest};
+use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
+use anyhow::{Context, Result};
+
+/// XLA-backed TSENOR solver.
+pub struct XlaSolver<'a> {
+    pub engine: &'a Engine,
+    pub manifest: &'a Manifest,
+    pub cfg: SolveCfg,
+    /// Accumulated stats for the perf report.
+    pub padded_blocks: std::cell::Cell<usize>,
+    pub solved_blocks: std::cell::Cell<usize>,
+}
+
+impl<'a> XlaSolver<'a> {
+    pub fn new(engine: &'a Engine, manifest: &'a Manifest, cfg: SolveCfg) -> Self {
+        XlaSolver {
+            engine,
+            manifest,
+            cfg,
+            padded_blocks: std::cell::Cell::new(0),
+            solved_blocks: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Fractional Dykstra solutions for an arbitrary number of blocks.
+    pub fn dykstra_fractional(&self, scores: &Blocks, n: usize) -> Result<Blocks> {
+        let m = scores.m;
+        let art = self
+            .manifest
+            .pick_dykstra(m, scores.b)
+            .with_context(|| format!("no dykstra artifact for M={m}"))?;
+        let max_abs = scores.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let tau = effective_tau(max_abs, self.cfg.dykstra.tau0);
+
+        let mut out = Blocks::zeros(scores.b, m);
+        let sz = m * m;
+        let mut start = 0usize;
+        while start < scores.b {
+            let take = art.bucket.min(scores.b - start);
+            // Build a full bucket: real blocks + zero padding.
+            let mut call = Blocks::zeros(art.bucket, m);
+            call.data[..take * sz]
+                .copy_from_slice(&scores.data[start * sz..(start + take) * sz]);
+            let solved = self.engine.dykstra(art, &call, n, tau)?;
+            out.data[start * sz..(start + take) * sz]
+                .copy_from_slice(&solved.data[..take * sz]);
+            self.padded_blocks
+                .set(self.padded_blocks.get() + art.bucket - take);
+            start += take;
+        }
+        self.solved_blocks.set(self.solved_blocks.get() + scores.b);
+        Ok(out)
+    }
+
+    /// Full TSENOR: XLA Dykstra + Rust rounding.
+    pub fn solve_blocks(&self, scores: &Blocks, n: usize) -> Result<Blocks> {
+        let frac = self.dykstra_fractional(scores, n)?;
+        Ok(rounding::round_batch(&frac, scores, n, self.cfg.ls_steps))
+    }
+
+    /// Whole-matrix transposable mask via the XLA path.
+    pub fn solve_matrix(&self, score: &Mat, pattern: crate::masks::NmPattern) -> Result<Mat> {
+        let blocks = partition_blocks(&score.abs(), pattern.m);
+        let masks = self.solve_blocks(&blocks, pattern.n)?;
+        Ok(assemble_blocks(&masks, score.rows, score.cols))
+    }
+
+    /// Mask oracle closure for the pruning frameworks
+    /// (`pruning::Regime::Transposable`).
+    pub fn mask_fn(
+        &self,
+    ) -> impl Fn(&Mat, crate::masks::NmPattern) -> Result<Mat> + '_ {
+        move |score: &Mat, pattern: crate::masks::NmPattern| self.solve_matrix(score, pattern)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration-tested against the CPU reference in
+    // rust/tests/integration_xla.rs (requires artifacts + PJRT).
+}

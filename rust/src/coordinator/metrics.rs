@@ -1,0 +1,136 @@
+//! Run metrics: structured key/value collection serialized to JSON, used
+//! by the CLI, examples and benches to report paper-shaped tables.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    scalars: BTreeMap<String, f64>,
+    strings: BTreeMap<String, String>,
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, key: &str, value: f64) {
+        self.scalars.insert(key.to_string(), value);
+    }
+
+    pub fn put_str(&mut self, key: &str, value: &str) {
+        self.strings.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.series.entry(key.to_string()).or_default().push(value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.scalars.get(key).copied()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let scalars: Vec<(String, Json)> = self
+            .scalars
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        let strings: Vec<(String, Json)> = self
+            .strings
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        let series: Vec<(String, Json)> = self
+            .series
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect()),
+                )
+            })
+            .collect();
+        let mut all = BTreeMap::new();
+        for (k, v) in scalars.into_iter().chain(strings).chain(series) {
+            all.insert(k, v);
+        }
+        Json::Obj(all)
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Wall-clock timer with (name, seconds) reporting.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Mean and population std of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_roundtrip_json() {
+        let mut m = Metrics::new();
+        m.put("loss", 2.5);
+        m.put_str("method", "tsenor");
+        m.push("curve", 1.0);
+        m.push("curve", 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(2.5));
+        assert_eq!(j.get("method").unwrap().as_str(), Some("tsenor"));
+        assert_eq!(j.get("curve").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (x, secs) = timed(|| 41 + 1);
+        assert_eq!(x, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordinator: the paper's system contribution at runtime scale.
+//! Batches millions of M x M block problems through the AOT Dykstra
+//! artifact with bucket padding (`batcher`), sequences whole-model
+//! layer-wise pruning jobs (`pipeline`), and aggregates run metrics
+//! (`metrics`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;

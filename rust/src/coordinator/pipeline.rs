@@ -1,0 +1,195 @@
+//! Whole-model pruning pipeline: calibration -> per-layer prune jobs ->
+//! pruned model state + metrics. The leader sequences layers (gram sites
+//! are computed once and shared by the weights they feed); the mask
+//! backend is pluggable (CPU solver or the XLA/AOT TSENOR path).
+
+use crate::coordinator::batcher::XlaSolver;
+use crate::coordinator::metrics::Metrics;
+use crate::masks::solver::{Method, SolveCfg};
+use crate::masks::NmPattern;
+use crate::model::ModelState;
+use crate::pruning::{alps, cpu_mask_fn, magnitude, sparsegpt, wanda, LayerProblem, Regime};
+use crate::runtime::client::ModelRuntime;
+use crate::util::tensor::Mat;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Which layer-wise framework drives the pruning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framework {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    Alps,
+}
+
+impl Framework {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::Magnitude => "magnitude",
+            Framework::Wanda => "wanda",
+            Framework::SparseGpt => "sparsegpt",
+            Framework::Alps => "alps",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Framework> {
+        Some(match s {
+            "magnitude" | "mp" => Framework::Magnitude,
+            "wanda" => Framework::Wanda,
+            "sparsegpt" => Framework::SparseGpt,
+            "alps" => Framework::Alps,
+            _ => return None,
+        })
+    }
+}
+
+/// Mask backend: pure-CPU solver method, or the XLA/AOT path.
+pub enum MaskBackend<'a> {
+    Cpu(Method, SolveCfg),
+    Xla(&'a XlaSolver<'a>),
+}
+
+/// Sparsity structure requested for the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Structure {
+    Transposable,
+    StandardNm,
+    Unstructured,
+}
+
+impl Structure {
+    pub fn parse(s: &str) -> Option<Structure> {
+        Some(match s {
+            "transposable" | "t" => Structure::Transposable,
+            "standard" | "nm" => Structure::StandardNm,
+            "unstructured" | "uns" => Structure::Unstructured,
+            _ => return None,
+        })
+    }
+}
+
+/// Calibration: accumulate per-site Gram matrices over `batches` windows
+/// of the train corpus.
+pub fn calibrate(
+    rt: &ModelRuntime,
+    weights: &BTreeMap<String, Mat>,
+    batches: usize,
+) -> Result<BTreeMap<String, Mat>> {
+    let train = rt.manifest.load_corpus("train")?;
+    let art = &rt.manifest.calib;
+    let mut it = crate::data::loader::WindowIter::new(&train, art.seq);
+    let mut grams: BTreeMap<String, Mat> = BTreeMap::new();
+    for _ in 0..batches {
+        let tokens = crate::data::loader::next_batch(&mut it, art.batch)
+            .context("train corpus exhausted during calibration")?;
+        let batch_grams = rt.calibration(weights, &tokens)?;
+        for (site, g) in rt.manifest.gram_sites.iter().zip(batch_grams) {
+            grams
+                .entry(site.name.clone())
+                .and_modify(|acc| *acc = acc.add(&g))
+                .or_insert(g);
+        }
+    }
+    Ok(grams)
+}
+
+/// Prune every prunable layer of the model. Returns the pruned state and
+/// per-layer reconstruction errors (recorded into `metrics`).
+#[allow(clippy::too_many_arguments)]
+pub fn prune_model(
+    rt: &ModelRuntime,
+    state: &mut ModelState,
+    grams: &BTreeMap<String, Mat>,
+    framework: Framework,
+    structure: Structure,
+    pattern: NmPattern,
+    backend: &MaskBackend,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let alps_cfg = alps::AlpsCfg::default();
+    // Site lookup: weight name -> gram site name.
+    let mut site_of: BTreeMap<&str, &str> = BTreeMap::new();
+    for site in &rt.manifest.gram_sites {
+        for w in &site.weights {
+            site_of.insert(w.as_str(), site.name.as_str());
+        }
+    }
+
+    let cpu_oracle_holder;
+    let xla_oracle_holder;
+    let oracle: &crate::pruning::MaskFn = match backend {
+        MaskBackend::Cpu(method, cfg) => {
+            cpu_oracle_holder = cpu_mask_fn(*method, *cfg);
+            &cpu_oracle_holder
+        }
+        MaskBackend::Xla(solver) => {
+            xla_oracle_holder = solver.mask_fn();
+            &xla_oracle_holder
+        }
+    };
+    let regime = match structure {
+        Structure::Transposable => Regime::Transposable(oracle),
+        Structure::StandardNm => Regime::StandardNm,
+        Structure::Unstructured => Regime::Unstructured,
+    };
+
+    let prunable = rt.manifest.prunable_names();
+    for name in &prunable {
+        let site = site_of
+            .get(name.as_str())
+            .with_context(|| format!("no gram site for {name}"))?;
+        let gram = grams
+            .get(*site)
+            .with_context(|| format!("missing gram {site}"))?;
+        let w = state.weights.get(name).context("missing weight")?.clone();
+        let problem = LayerProblem {
+            name: name.clone(),
+            w,
+            gram: gram.clone(),
+            pattern,
+            lambda_rel: 0.01,
+        };
+        let pruned = match framework {
+            Framework::Magnitude => {
+                let (w, mask) = magnitude::prune(&problem.w, pattern, regime)?;
+                let recon_error = problem.recon_error(&w);
+                crate::pruning::PrunedLayer { w, mask, recon_error }
+            }
+            Framework::Wanda => wanda::prune(&problem, regime)?,
+            Framework::SparseGpt => sparsegpt::prune(&problem, regime)?,
+            Framework::Alps => {
+                let (out, stats) = alps::prune_with(&problem, regime, &alps_cfg)?;
+                metrics.push("alps_safeguard_hits", stats.safeguard_hits as f64);
+                out
+            }
+        };
+        metrics.push("layer_recon_error", pruned.recon_error);
+        state.set_pruned(name, pruned.w, pruned.mask);
+    }
+    metrics.put("model_sparsity", state.sparsity());
+    Ok(())
+}
+
+/// Full pruning run: load weights, calibrate, prune, evaluate perplexity.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    rt: &ModelRuntime,
+    framework: Framework,
+    structure: Structure,
+    pattern: NmPattern,
+    backend: &MaskBackend,
+    calib_batches: usize,
+    eval_batches: Option<usize>,
+    metrics: &mut Metrics,
+) -> Result<ModelState> {
+    let weights = rt.manifest.load_weights()?;
+    let grams = calibrate(rt, &weights, calib_batches)?;
+    let mut state = ModelState::new(weights);
+    prune_model(rt, &mut state, &grams, framework, structure, pattern, backend, metrics)?;
+    let ppl = crate::eval::perplexity::perplexity_suite(rt, &state.weights, eval_batches)?;
+    for (corpus, p) in &ppl {
+        metrics.put(&format!("ppl_{corpus}"), *p);
+    }
+    Ok(state)
+}

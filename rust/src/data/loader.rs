@@ -1,0 +1,89 @@
+//! Token-stream windowing: deterministic sequential windows (perplexity,
+//! HuggingFace full-stride style) and seeded random windows (fine-tuning).
+
+use crate::util::rng::Rng;
+
+/// Sequential non-overlapping windows of `seq` tokens (full stride).
+pub struct WindowIter<'a> {
+    stream: &'a [u8],
+    seq: usize,
+    pos: usize,
+}
+
+impl<'a> WindowIter<'a> {
+    pub fn new(stream: &'a [u8], seq: usize) -> Self {
+        WindowIter { stream, seq, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for WindowIter<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        if self.pos + self.seq > self.stream.len() {
+            return None;
+        }
+        let w = &self.stream[self.pos..self.pos + self.seq];
+        self.pos += self.seq;
+        Some(w)
+    }
+}
+
+/// Pack the next `batch` windows into an i32 token buffer (row-major
+/// batch x seq); returns None when fewer than `batch` windows remain.
+pub fn next_batch(iter: &mut WindowIter, batch: usize) -> Option<Vec<i32>> {
+    let seq = iter.seq;
+    let mut out = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let w = iter.next()?;
+        out.extend(w.iter().map(|&b| b as i32));
+    }
+    Some(out)
+}
+
+/// Seeded random windows for fine-tuning batches.
+pub fn random_batch(stream: &[u8], batch: usize, seq: usize, rng: &mut Rng) -> Vec<i32> {
+    assert!(stream.len() > seq + 1);
+    let mut out = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let start = rng.below(stream.len() - seq);
+        out.extend(stream[start..start + seq].iter().map(|&b| b as i32));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_stream_without_overlap() {
+        let stream: Vec<u8> = (0..100).collect();
+        let windows: Vec<&[u8]> = WindowIter::new(&stream, 30).collect();
+        assert_eq!(windows.len(), 3);
+        assert_eq!(windows[0][0], 0);
+        assert_eq!(windows[1][0], 30);
+        assert_eq!(windows[2][29], 89);
+    }
+
+    #[test]
+    fn batching_packs_rows() {
+        let stream: Vec<u8> = (0..=255).collect();
+        let mut it = WindowIter::new(&stream, 16);
+        let b = next_batch(&mut it, 2).unwrap();
+        assert_eq!(b.len(), 32);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[16], 16);
+        // exhaustion
+        let mut it2 = WindowIter::new(&stream[..20], 16);
+        assert!(next_batch(&mut it2, 2).is_none());
+    }
+
+    #[test]
+    fn random_batches_deterministic() {
+        let stream: Vec<u8> = (0..200).map(|i| (i % 256) as u8).collect();
+        let a = random_batch(&stream, 3, 10, &mut Rng::new(5));
+        let b = random_batch(&stream, 3, 10, &mut Rng::new(5));
+        assert_eq!(a, b);
+    }
+}

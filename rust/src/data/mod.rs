@@ -1,0 +1,76 @@
+//! Runtime data plumbing: corpus windowing/batching and zero-shot probe
+//! loading. Corpora and probes are produced at build time by
+//! python/compile/corpus.py (see DESIGN.md §Substitutions) and shipped in
+//! the artifact bundle; tokenization is byte-level so a token IS a byte.
+
+pub mod loader;
+pub mod probes;
+
+/// Extra synthetic block-workload generators for the solver benches
+/// (Fig. 3 / Table 1 sample "LLM-like" weight blocks without needing the
+/// model artifacts).
+pub mod workload {
+    use crate::util::rng::Rng;
+    use crate::util::tensor::{Blocks, Mat};
+
+    /// Heavy-tailed iid blocks mimicking trained-LLM weight statistics.
+    pub fn heavy_tail_blocks(b: usize, m: usize, seed: u64) -> Blocks {
+        let mut rng = Rng::new(seed);
+        let data = (0..b * m * m).map(|_| rng.heavy_tail().abs()).collect();
+        Blocks { b, m, data }
+    }
+
+    /// Heavy-tailed matrix with row/column scale structure (outlier
+    /// features), the harder correlated case.
+    pub fn structured_matrix(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let row_scale: Vec<f32> = (0..rows).map(|_| (0.5 * rng.normal()).exp()).collect();
+        let col_scale: Vec<f32> = (0..cols).map(|_| (0.5 * rng.normal()).exp()).collect();
+        Mat::from_fn(rows, cols, |i, j| {
+            rng.heavy_tail() * row_scale[i] * col_scale[j]
+        })
+    }
+
+    /// Sample `count` MxM blocks from a matrix (paper Fig. 3: "100 MxM
+    /// blocks sampled from LLaMA3 weights").
+    pub fn sample_blocks(w: &Mat, m: usize, count: usize, seed: u64) -> Blocks {
+        let mut rng = Rng::new(seed);
+        let mut out = Blocks::zeros(count, m);
+        for k in 0..count {
+            let i0 = rng.below(w.rows - m + 1);
+            let j0 = rng.below(w.cols - m + 1);
+            let dst = out.block_mut(k);
+            for r in 0..m {
+                for c in 0..m {
+                    dst[r * m + c] = w.at(i0 + r, j0 + c).abs();
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::workload::*;
+
+    #[test]
+    fn blocks_shapes() {
+        let b = heavy_tail_blocks(10, 8, 1);
+        assert_eq!(b.data.len(), 10 * 64);
+        assert!(b.data.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn sampled_blocks_come_from_matrix() {
+        let w = structured_matrix(64, 64, 2);
+        let blocks = sample_blocks(&w, 8, 5, 3);
+        assert_eq!(blocks.b, 5);
+        // every sampled value must appear in |w|
+        let vals: std::collections::BTreeSet<u32> =
+            w.data.iter().map(|x| x.abs().to_bits()).collect();
+        for &v in &blocks.data {
+            assert!(vals.contains(&v.to_bits()));
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Zero-shot probe loading. Probes are multiple-choice items (context +
+//! candidate continuations + answer index) emitted by the build as token
+//! id lists; scoring happens in eval::zeroshot via model logprobs.
+
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ProbeItem {
+    pub context: Vec<u8>,
+    pub choices: Vec<Vec<u8>>,
+    pub answer: usize,
+}
+
+pub type ProbeSet = BTreeMap<String, Vec<ProbeItem>>;
+
+fn tokens(j: &Json) -> Vec<u8> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize().map(|v| v as u8)).collect())
+        .unwrap_or_default()
+}
+
+pub fn parse(text: &str) -> Result<ProbeSet> {
+    let j = json::parse(text)?;
+    let Json::Obj(tasks) = j else {
+        anyhow::bail!("probes: expected object of tasks");
+    };
+    let mut out = BTreeMap::new();
+    for (task, items) in tasks {
+        let arr = items.as_arr().context("probe task items")?;
+        let parsed = arr
+            .iter()
+            .map(|it| -> Result<ProbeItem> {
+                Ok(ProbeItem {
+                    context: tokens(it.req("context")?),
+                    choices: it
+                        .req("choices")?
+                        .as_arr()
+                        .context("choices")?
+                        .iter()
+                        .map(tokens)
+                        .collect(),
+                    answer: it.req("answer")?.as_usize().context("answer")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.insert(task, parsed);
+    }
+    Ok(out)
+}
+
+pub fn load(path: &std::path::Path) -> Result<ProbeSet> {
+    parse(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let text = r#"{"copy": [{"context": [1,2,3], "choices": [[4],[5]], "answer": 1}]}"#;
+        let probes = parse(text).unwrap();
+        let item = &probes["copy"][0];
+        assert_eq!(item.context, vec![1, 2, 3]);
+        assert_eq!(item.choices.len(), 2);
+        assert_eq!(item.answer, 1);
+    }
+
+    #[test]
+    fn answer_in_range_for_real_probes() {
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let path = root.join("probes/probes.json");
+        if !path.exists() {
+            return;
+        }
+        let probes = load(&path).unwrap();
+        assert!(probes.len() >= 8, "expected 8 probe tasks");
+        for (task, items) in &probes {
+            assert!(!items.is_empty(), "{task} empty");
+            for it in items {
+                assert!(it.answer < it.choices.len(), "{task} answer oob");
+                assert!(!it.context.is_empty());
+                assert!(it.choices.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+}

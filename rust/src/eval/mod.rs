@@ -1,0 +1,6 @@
+//! Evaluation: perplexity over held-out corpora, zero-shot probe accuracy,
+//! and layer-wise reconstruction error — the measurement side of every
+//! model-level table/figure (Table 2/5-7, Fig. 4 upper, Fig. 5, Table 4).
+
+pub mod perplexity;
+pub mod zeroshot;

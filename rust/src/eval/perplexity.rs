@@ -1,0 +1,60 @@
+//! Perplexity via the model_fwd artifact, HuggingFace full-stride style:
+//! non-overlapping windows, every next-token logprob counted once.
+
+use crate::data::loader::{next_batch, WindowIter};
+use crate::runtime::client::ModelRuntime;
+use crate::util::tensor::Mat;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Perplexity of the model (weights map) on a token stream. `max_batches`
+/// caps compute; `None` consumes the stream.
+pub fn perplexity(
+    rt: &ModelRuntime,
+    weights: &BTreeMap<String, Mat>,
+    stream: &[u8],
+    max_batches: Option<usize>,
+) -> Result<f64> {
+    let art = &rt.manifest.model_fwd;
+    let mut it = WindowIter::new(stream, art.seq);
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    let mut batches = 0usize;
+    while let Some(tokens) = next_batch(&mut it, art.batch) {
+        let (_, logp) = rt.forward(weights, &tokens)?;
+        for &lp in &logp.data {
+            total_nll -= lp as f64;
+            count += 1;
+        }
+        batches += 1;
+        if max_batches.map(|mb| batches >= mb).unwrap_or(false) {
+            break;
+        }
+    }
+    anyhow::ensure!(count > 0, "perplexity: stream shorter than one batch");
+    Ok((total_nll / count as f64).exp())
+}
+
+/// Perplexity on every validation corpus in the manifest.
+pub fn perplexity_suite(
+    rt: &ModelRuntime,
+    weights: &BTreeMap<String, Mat>,
+    max_batches: Option<usize>,
+) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for name in rt.manifest.corpora.keys() {
+        if name == "train" {
+            continue;
+        }
+        let stream = rt.manifest.load_corpus(name)?;
+        out.insert(name.clone(), perplexity(rt, weights, &stream, max_batches)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/integration_model.rs (requires
+    // artifacts + PJRT); unit-level logic (windowing, NLL accumulation)
+    // is covered by data::loader tests.
+}

@@ -1,0 +1,111 @@
+//! Zero-shot probe scoring (LM-harness style): each item is scored by the
+//! total logprob the model assigns to each candidate continuation after
+//! the context; accuracy = fraction of items where the correct choice has
+//! the highest score.
+//!
+//! Items are packed into the fixed (batch, seq) shape of the model_fwd
+//! artifact: context + choice at the start of a row, zero-padded tail (the
+//! model is causal, so the padding cannot affect the scored positions).
+
+use crate::data::probes::{ProbeItem, ProbeSet};
+use crate::runtime::client::ModelRuntime;
+use crate::util::tensor::Mat;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// One scoring request: row in the packed batch + where the choice sits.
+struct Slot {
+    item: usize,
+    choice: usize,
+    /// logprob positions [start, end) in the (seq-1)-length logprob row
+    /// that cover the choice tokens.
+    start: usize,
+    end: usize,
+}
+
+/// Accuracy of one probe task.
+pub fn score_task(
+    rt: &ModelRuntime,
+    weights: &BTreeMap<String, Mat>,
+    items: &[ProbeItem],
+    max_items: usize,
+) -> Result<f64> {
+    let art = &rt.manifest.model_fwd;
+    let (batch, seq) = (art.batch, art.seq);
+    let items = &items[..items.len().min(max_items)];
+
+    // Flatten all (item, choice) pairs into rows.
+    let mut rows: Vec<(Vec<i32>, Slot)> = Vec::new();
+    for (ii, item) in items.iter().enumerate() {
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let mut toks: Vec<i32> = item
+                .context
+                .iter()
+                .chain(choice.iter())
+                .map(|&b| b as i32)
+                .collect();
+            anyhow::ensure!(toks.len() <= seq, "probe item longer than seq");
+            let ctx_len = item.context.len();
+            // logprobs[t] scores tokens[t+1]; choice tokens occupy
+            // positions ctx_len..ctx_len+len, scored by logprob indices
+            // ctx_len-1 .. ctx_len+len-1.
+            let slot = Slot {
+                item: ii,
+                choice: ci,
+                start: ctx_len - 1,
+                end: ctx_len + choice.len() - 1,
+            };
+            toks.resize(seq, 0);
+            rows.push((toks, slot));
+        }
+    }
+
+    // Score batch by batch.
+    let mut scores: Vec<Vec<f64>> = items.iter().map(|it| vec![0.0; it.choices.len()]).collect();
+    let mut row_iter = rows.chunks(batch);
+    while let Some(chunk) = row_iter.next() {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for (toks, _) in chunk {
+            tokens.extend_from_slice(toks);
+        }
+        // Pad the final partial batch with copies of the first row.
+        while tokens.len() < batch * seq {
+            tokens.extend_from_slice(&chunk[0].0);
+        }
+        let (_, logp) = rt.forward(weights, &tokens)?;
+        for (ri, (_, slot)) in chunk.iter().enumerate() {
+            let row = logp.row(ri);
+            let s: f64 = row[slot.start..slot.end].iter().map(|&x| x as f64).sum();
+            scores[slot.item][slot.choice] = s;
+        }
+    }
+
+    let mut correct = 0usize;
+    for (item, sc) in items.iter().zip(&scores) {
+        let best = sc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Accuracy for every task; returns (per-task, mean).
+pub fn score_all(
+    rt: &ModelRuntime,
+    weights: &BTreeMap<String, Mat>,
+    probes: &ProbeSet,
+    max_items: usize,
+) -> Result<(BTreeMap<String, f64>, f64)> {
+    let mut out = BTreeMap::new();
+    for (task, items) in probes {
+        out.insert(task.clone(), score_task(rt, weights, items, max_items)?);
+    }
+    let mean = out.values().sum::<f64>() / out.len().max(1) as f64;
+    Ok((out, mean))
+}

@@ -1,0 +1,27 @@
+//! # TSENOR — transposable N:M sparse masks at LLM scale
+//!
+//! Reproduction of *"TSENOR: Highly-Efficient Algorithm for Finding
+//! Transposable N:M Sparse Masks"* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1 (build time)** — Pallas kernels: batched entropy-regularized
+//!   Dykstra, masked GEMM (`python/compile/kernels/`).
+//! * **L2 (build time)** — JAX transformer + solver graphs, AOT-lowered to
+//!   HLO text (`python/compile/aot.py` -> `artifacts/`).
+//! * **L3 (runtime, this crate)** — coordinator: PJRT execution of the
+//!   artifacts, all mask solvers + baselines, layer-wise pruning
+//!   frameworks (Wanda / SparseGPT / ALPS), masked fine-tuning, synthetic
+//!   data + evaluation, N:M sparse GEMM substrate.
+//!
+//! Python never runs at runtime; the `tsenor` binary is self-contained
+//! once `make artifacts` has produced the AOT bundle.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod masks;
+pub mod model;
+pub mod pruning;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

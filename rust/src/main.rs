@@ -1,0 +1,286 @@
+//! `tsenor` CLI — leader entrypoint for the L3 coordinator.
+//!
+//! Subcommands:
+//!   info                          manifest + artifact summary
+//!   solve   [opts]                transposable-mask solve on a synthetic
+//!                                 or sampled workload; reports quality+time
+//!   prune   [opts]                full pruning pipeline + perplexity/zero-shot
+//!   eval                          dense-model evaluation baseline
+//!   finetune [opts]               masked fine-tuning of a pruned model
+//!
+//! Common options (key value pairs):
+//!   --artifacts DIR   (default: ./artifacts)
+//!   --method NAME     tsenor|tsenor-scalar|entropy|2approx|binm|max1000|pdlp|exact
+//!   --pattern N:M     (default 8:16)
+//!   --framework NAME  magnitude|wanda|sparsegpt|alps
+//!   --structure NAME  transposable|standard|unstructured
+//!   --xla             use the AOT/XLA dykstra path for TSENOR
+//!   --rows R --cols C --seed S --calib-batches K --eval-batches K
+//!   --steps K (finetune)
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::coordinator::metrics::Metrics;
+use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::data::workload;
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::{self, NmPattern};
+use tsenor::model::{finetune, ModelState};
+use tsenor::runtime::client::ModelRuntime;
+use tsenor::runtime::{Engine, Manifest};
+use tsenor::util::tensor::partition_blocks;
+
+struct Args {
+    cmd: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "info".to_string());
+    let mut opts = BTreeMap::new();
+    let mut flags = Vec::new();
+    let rest: Vec<String> = argv.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        let key = rest[i].trim_start_matches("--").to_string();
+        if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+            opts.insert(key, rest[i + 1].clone());
+            i += 2;
+        } else {
+            flags.push(key);
+            i += 1;
+        }
+    }
+    Args { cmd, opts, flags }
+}
+
+fn parse_pattern(s: &str) -> Result<NmPattern> {
+    let (n, m) = s.split_once(':').context("pattern must be N:M")?;
+    Ok(NmPattern::new(n.parse()?, m.parse()?))
+}
+
+impl Args {
+    fn get(&self, key: &str, default: &str) -> String {
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.opts
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        PathBuf::from(self.get("artifacts", "artifacts"))
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    println!("TSENOR artifact bundle @ {}", manifest.root.display());
+    println!(
+        "model: d={} layers={} heads={} ff={} vocab={} seq={}",
+        manifest.model.d_model,
+        manifest.model.n_layers,
+        manifest.model.n_heads,
+        manifest.model.d_ff,
+        manifest.model.vocab,
+        manifest.model.seq_len
+    );
+    println!("weights: {} ({} prunable)", manifest.weights.len(), manifest.prunable_names().len());
+    println!("dykstra artifacts:");
+    for d in &manifest.dykstra {
+        println!("  M={} bucket={} iters={} ({})", d.m, d.bucket, d.iters, d.file);
+    }
+    println!("corpora: {:?}", manifest.corpora.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let pattern = parse_pattern(&args.get("pattern", "8:16"))?;
+    let rows = args.usize("rows", 512);
+    let cols = args.usize("cols", 512);
+    let seed = args.usize("seed", 0) as u64;
+    let method = Method::parse(&args.get("method", "tsenor")).context("unknown method")?;
+    let cfg = SolveCfg::default();
+
+    let w = workload::structured_matrix(rows, cols, seed);
+    let blocks = partition_blocks(&w.abs(), pattern.m);
+    println!(
+        "solving {rows}x{cols} ({} blocks of {}x{}) pattern {pattern} method {}",
+        blocks.b, pattern.m, pattern.m, method.name()
+    );
+
+    let t0 = std::time::Instant::now();
+    let masks_out = if args.has("xla") {
+        let manifest = Manifest::load(&args.artifacts())?;
+        let engine = Engine::new(&manifest)?;
+        let xla = XlaSolver::new(&engine, &manifest, cfg);
+        let out = xla.solve_blocks(&blocks, pattern.n)?;
+        println!(
+            "  xla path: {} exec calls, {:.3}s in PJRT, {} padded blocks",
+            engine.exec_calls.get(),
+            engine.exec_nanos.get() as f64 / 1e9,
+            xla.padded_blocks.get()
+        );
+        out
+    } else {
+        solver::solve_blocks_parallel(method, &blocks, pattern.n, &cfg)
+    };
+    let secs = t0.elapsed().as_secs_f64();
+
+    let obj = masks::batch_objective(&masks_out, &blocks);
+    let feasible = masks::batch_feasible(&masks_out, pattern.n);
+    println!("  objective={obj:.2} feasible={feasible} time={secs:.3}s");
+    if args.has("error") {
+        let (_, opt) = masks::exact::solve_batch(&blocks, pattern.n);
+        println!(
+            "  optimal={opt:.2} relative_error={:.5}",
+            masks::relative_error(opt, obj)
+        );
+    }
+    Ok(())
+}
+
+fn backend_for<'a>(
+    args: &Args,
+    xla: &'a Option<XlaSolver<'a>>,
+) -> MaskBackend<'a> {
+    if args.has("xla") {
+        if let Some(s) = xla {
+            return MaskBackend::Xla(s);
+        }
+    }
+    MaskBackend::Cpu(Method::Tsenor, SolveCfg::default())
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let engine = Engine::new(&manifest)?;
+    let rt = ModelRuntime::new(&engine, &manifest);
+    let framework =
+        Framework::parse(&args.get("framework", "alps")).context("unknown framework")?;
+    let structure =
+        Structure::parse(&args.get("structure", "transposable")).context("unknown structure")?;
+    let pattern = parse_pattern(&args.get("pattern", "16:32"))?;
+    let calib = args.usize("calib-batches", 8);
+    let eval_batches = Some(args.usize("eval-batches", 12));
+
+    let xla_solver = args
+        .has("xla")
+        .then(|| XlaSolver::new(&engine, &manifest, SolveCfg::default()));
+    let backend = backend_for(args, &xla_solver);
+
+    println!(
+        "pruning: framework={} structure={:?} pattern={pattern} backend={}",
+        framework.name(),
+        structure,
+        if args.has("xla") { "xla" } else { "cpu" }
+    );
+    let mut metrics = Metrics::new();
+    let t0 = std::time::Instant::now();
+    let state = pipeline::run(
+        &rt, framework, structure, pattern, &backend, calib, eval_batches, &mut metrics,
+    )?;
+    println!("  done in {:.1}s, sparsity={:.3}", t0.elapsed().as_secs_f64(), state.sparsity());
+    for name in manifest.corpora.keys().filter(|n| *n != "train") {
+        if let Some(p) = metrics.get(&format!("ppl_{name}")) {
+            println!("  ppl[{name}] = {p:.3}");
+        }
+    }
+    if args.has("zeroshot") {
+        let probes = tsenor::data::probes::load(&manifest.root.join(&manifest.probes_file))?;
+        let (per_task, mean) =
+            tsenor::eval::zeroshot::score_all(&rt, &state.weights, &probes, 50)?;
+        for (task, acc) in &per_task {
+            println!("  zs[{task}] = {acc:.3}");
+        }
+        println!("  zs[mean] = {mean:.3}");
+    }
+    if let Some(out) = args.opts.get("out") {
+        metrics.write(std::path::Path::new(out))?;
+        println!("  metrics -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let engine = Engine::new(&manifest)?;
+    let rt = ModelRuntime::new(&engine, &manifest);
+    let weights = manifest.load_weights()?;
+    let eval_batches = Some(args.usize("eval-batches", 12));
+    let ppl = tsenor::eval::perplexity::perplexity_suite(&rt, &weights, eval_batches)?;
+    println!("dense model perplexity:");
+    for (corpus, p) in &ppl {
+        println!("  ppl[{corpus}] = {p:.3}");
+    }
+    let probes = tsenor::data::probes::load(&manifest.root.join(&manifest.probes_file))?;
+    let (per_task, mean) = tsenor::eval::zeroshot::score_all(&rt, &weights, &probes, 50)?;
+    for (task, acc) in &per_task {
+        println!("  zs[{task}] = {acc:.3}");
+    }
+    println!("  zs[mean] = {mean:.3}");
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let engine = Engine::new(&manifest)?;
+    let rt = ModelRuntime::new(&engine, &manifest);
+    let pattern = parse_pattern(&args.get("pattern", "16:32"))?;
+    let calib = args.usize("calib-batches", 8);
+    let steps = args.usize("steps", 50);
+
+    // Prune with TSENOR+ALPS, then fine-tune.
+    let backend = MaskBackend::Cpu(Method::Tsenor, SolveCfg::default());
+    let mut metrics = Metrics::new();
+    let mut state: ModelState = pipeline::run(
+        &rt,
+        Framework::Alps,
+        Structure::Transposable,
+        pattern,
+        &backend,
+        calib,
+        Some(6),
+        &mut metrics,
+    )?;
+    let ppl_before = metrics.get("ppl_valid_markov").unwrap_or(f64::NAN);
+    println!("pruned (TSENOR+ALPS {pattern}); ppl[markov]={ppl_before:.3}");
+
+    let train = manifest.load_corpus("train")?;
+    let cfg = finetune::FinetuneCfg { steps, ..Default::default() };
+    let curve = finetune::finetune(&rt, &mut state, &train, &cfg)?;
+    println!(
+        "fine-tuned {} steps: loss {:.4} -> {:.4}",
+        curve.len(),
+        curve.first().unwrap_or(&f32::NAN),
+        curve.last().unwrap_or(&f32::NAN)
+    );
+    let ppl = tsenor::eval::perplexity::perplexity_suite(&rt, &state.weights, Some(6))?;
+    for (corpus, p) in &ppl {
+        println!("  ppl[{corpus}] = {p:.3}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "info" => cmd_info(&args),
+        "solve" => cmd_solve(&args),
+        "prune" => cmd_prune(&args),
+        "eval" => cmd_eval(&args),
+        "finetune" => cmd_finetune(&args),
+        other => bail!("unknown command '{other}' (info|solve|prune|eval|finetune)"),
+    }
+}

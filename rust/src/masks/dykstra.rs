@@ -1,0 +1,303 @@
+//! Rust reference implementation of Algorithm 1 (entropy-regularized
+//! Dykstra) — the same math as the L1 Pallas kernel, used for:
+//!   * cross-validating the HLO artifact (integration tests),
+//!   * the CPU execution path in Table-3 ablations (scalar vs vectorized),
+//!   * environments without artifacts (unit tests, property tests).
+//!
+//! Log-space throughout, matching python/compile/kernels/dykstra.py
+//! operation-for-operation so outputs agree to f32 tolerance.
+//! §Perf: all exp calls go through `fastmath::exp_approx` (vectorizable
+//! polynomial, ~1.5e-7 rel err) — the libm exp was the hot-loop
+//! bottleneck (see EXPERIMENTS.md §Perf iteration log).
+
+use crate::util::fastmath::exp_approx;
+use crate::util::tensor::Blocks;
+
+/// Configuration for the entropy-regularized solve.
+#[derive(Clone, Copy, Debug)]
+pub struct DykstraCfg {
+    /// Regularization strength BEFORE scale normalization; effective
+    /// tau = tau0 / max|W| per matrix (paper: tau ~ 1/(0.005 max|W|)).
+    pub tau0: f32,
+    pub iters: usize,
+}
+
+impl Default for DykstraCfg {
+    fn default() -> Self {
+        // tau0 chosen by the fig6 ablation sweep. iters=100: the §Perf
+        // iteration ablation (EXPERIMENTS.md) shows relative error is
+        // IDENTICAL to T=300 at T=100 for every pattern M<=32 at this
+        // tau; the paper's T=300 is a conservative GPU-era default.
+        DykstraCfg { tau0: 120.0, iters: 100 }
+    }
+}
+
+/// Max over a slice with 8 independent accumulators (vectorizes: float
+/// max is associative, but LLVM still prefers the explicit lanes).
+#[inline]
+fn vmax(xs: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; 8];
+    let mut it = xs.chunks_exact(8);
+    for ch in it.by_ref() {
+        for l in 0..8 {
+            acc[l] = acc[l].max(ch[l]);
+        }
+    }
+    for (l, &x) in it.remainder().iter().enumerate() {
+        acc[l] = acc[l].max(x);
+    }
+    acc.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+/// Sum of exp(x - mx) with 8 independent accumulators — float sums are
+/// not reassociable, so a serial reduction blocks SIMD; explicit lanes
+/// unlock it (§Perf).
+#[inline]
+fn vsumexp(xs: &[f32], mx: f32) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let mut it = xs.chunks_exact(8);
+    for ch in it.by_ref() {
+        for l in 0..8 {
+            acc[l] += exp_approx(ch[l] - mx);
+        }
+    }
+    for (l, &x) in it.remainder().iter().enumerate() {
+        acc[l] += exp_approx(x - mx);
+    }
+    acc.iter().sum()
+}
+
+#[inline]
+fn logsumexp(xs: &[f32]) -> f32 {
+    let mx = vmax(xs);
+    if mx == f32::NEG_INFINITY {
+        return mx;
+    }
+    mx + vsumexp(xs, mx).ln()
+}
+
+/// Scalar (block-at-a-time) implementation — the "CPU" row of Table 3.
+pub fn solve_block_scalar(absw: &[f32], m: usize, n: usize, tau: f32, iters: usize) -> Vec<f32> {
+    debug_assert_eq!(absw.len(), m * m);
+    let logn = (n as f32).ln();
+    let mut log_s: Vec<f32> = absw.iter().map(|&w| tau * w).collect();
+    let mut log_q = vec![0.0f32; m * m];
+    let mut col_buf = vec![0.0f32; m];
+    for _ in 0..iters {
+        // C1: rows.
+        for i in 0..m {
+            let row = &mut log_s[i * m..(i + 1) * m];
+            let lse = logsumexp(row) - logn;
+            for x in row.iter_mut() {
+                *x -= lse;
+            }
+        }
+        // C2: columns.
+        for j in 0..m {
+            for i in 0..m {
+                col_buf[i] = log_s[i * m + j];
+            }
+            let lse = logsumexp(&col_buf) - logn;
+            for i in 0..m {
+                log_s[i * m + j] -= lse;
+            }
+        }
+        // C3: capacity + dual.
+        for (s, q) in log_s.iter_mut().zip(log_q.iter_mut()) {
+            let tmp = *s + *q;
+            let new_s = tmp.min(0.0);
+            *q = tmp - new_s;
+            *s = new_s;
+        }
+    }
+    for x in log_s.iter_mut() {
+        *x = exp_approx(*x);
+    }
+    log_s
+}
+
+/// Vectorized batch implementation — the "CPU(V)" row of Table 3.
+///
+/// §Perf structure (see EXPERIMENTS.md iteration log):
+///  * rows are pre-centered once (shift-invariant under the C1
+///    projection), after which EVERY exp input stays <= ln(n): the
+///    max-subtraction passes of textbook logsumexp are provably
+///    unnecessary, halving the exp work per sweep;
+///  * const-generic M monomorphization fully unrolls the inner loops
+///    (M in {4, 8, 16, 32});
+///  * one fused pass per block per iteration keeps the block in L1;
+///  * one ln per row/column (not per element).
+pub fn solve_batch(absw: &Blocks, n: usize, tau: f32, iters: usize) -> Blocks {
+    match absw.m {
+        4 => solve_batch_m::<4>(absw, n, tau, iters),
+        8 => solve_batch_m::<8>(absw, n, tau, iters),
+        16 => solve_batch_m::<16>(absw, n, tau, iters),
+        32 => solve_batch_m::<32>(absw, n, tau, iters),
+        _ => solve_batch_dyn(absw, n, tau, iters),
+    }
+}
+
+fn solve_batch_m<const M: usize>(absw: &Blocks, n: usize, tau: f32, iters: usize) -> Blocks {
+    debug_assert_eq!(absw.m, M);
+    let b = absw.b;
+    let logn = (n as f32).ln();
+    let sz = M * M;
+    let mut log_s: Vec<f32> = absw.data.iter().map(|&w| tau * w).collect();
+    let mut log_q = vec![0.0f32; b * sz];
+
+    // Pre-center every row: C1 is shift-invariant, and afterwards all
+    // values stay <= ln(n) so exp never overflows without max-tracking.
+    for chunk in log_s.chunks_exact_mut(sz) {
+        for i in 0..M {
+            let row = &mut chunk[i * M..(i + 1) * M];
+            let mx = vmax(row);
+            for x in row.iter_mut() {
+                *x -= mx;
+            }
+        }
+    }
+
+    for _ in 0..iters {
+        for (chunk, qchunk) in log_s.chunks_exact_mut(sz).zip(log_q.chunks_exact_mut(sz)) {
+            // --- C1: rows (maxless sum-exp; inputs <= ln n).
+            for i in 0..M {
+                let row = &mut chunk[i * M..(i + 1) * M];
+                let mut s = [0.0f32; M];
+                for j in 0..M {
+                    s[j] = exp_approx(row[j]);
+                }
+                let total: f32 = s.iter().sum();
+                let corr = total.ln() - logn;
+                for x in row.iter_mut() {
+                    *x -= corr;
+                }
+            }
+            // --- C2: columns. Per-column accumulators, j-contiguous.
+            let mut s = [0.0f32; M];
+            for i in 0..M {
+                let row = &chunk[i * M..(i + 1) * M];
+                for j in 0..M {
+                    s[j] += exp_approx(row[j]);
+                }
+            }
+            for v in s.iter_mut() {
+                *v = v.ln() - logn;
+            }
+            // --- fused C2-subtract + C3 capacity clamp + dual update.
+            for i in 0..M {
+                let row = &mut chunk[i * M..(i + 1) * M];
+                let qrow = &mut qchunk[i * M..(i + 1) * M];
+                for j in 0..M {
+                    let tmp = row[j] - s[j] + qrow[j];
+                    let new_s = if tmp < 0.0 { tmp } else { 0.0 };
+                    qrow[j] = tmp - new_s;
+                    row[j] = new_s;
+                }
+            }
+        }
+    }
+    let data: Vec<f32> = log_s.iter().map(|&x| exp_approx(x)).collect();
+    Blocks { b, m: M, data }
+}
+
+/// Fallback for non-power-of-two M (kept simple; not on the hot path).
+fn solve_batch_dyn(absw: &Blocks, n: usize, tau: f32, iters: usize) -> Blocks {
+    let (b, m) = (absw.b, absw.m);
+    let sz = m * m;
+    let mut out = Blocks::zeros(b, m);
+    for k in 0..b {
+        let sol = solve_block_scalar(absw.block(k), m, n, tau, iters);
+        out.data[k * sz..(k + 1) * sz].copy_from_slice(&sol);
+    }
+    out
+}
+
+/// Effective tau for a matrix: scale-normalized (DESIGN.md §6).
+pub fn effective_tau(max_abs: f32, tau0: f32) -> f32 {
+    if max_abs <= 0.0 {
+        1.0
+    } else {
+        tau0 / max_abs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::tensor::Blocks;
+
+    fn random_blocks(b: usize, m: usize, seed: u64) -> Blocks {
+        let mut rng = Rng::new(seed);
+        let data = (0..b * m * m).map(|_| rng.heavy_tail().abs()).collect();
+        Blocks { b, m, data }
+    }
+
+    #[test]
+    fn scalar_matches_batch() {
+        let blocks = random_blocks(5, 8, 3);
+        let tau = effective_tau(blocks.data.iter().fold(0.0f32, |a, &x| a.max(x)), 120.0);
+        let batch = solve_batch(&blocks, 4, tau, 80);
+        for k in 0..blocks.b {
+            let scalar = solve_block_scalar(blocks.block(k), 8, 4, tau, 80);
+            for (a, b) in scalar.iter().zip(batch.block(k)) {
+                assert!((a - b).abs() < 1e-4, "scalar {a} vs batch {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn marginals_approach_n() {
+        let blocks = random_blocks(4, 16, 7);
+        let tau = effective_tau(blocks.data.iter().fold(0.0f32, |a, &x| a.max(x)), 120.0);
+        let sol = solve_batch(&blocks, 8, tau, 300);
+        for k in 0..sol.b {
+            let blk = sol.block(k);
+            for i in 0..16 {
+                let row: f32 = blk[i * 16..(i + 1) * 16].iter().sum();
+                assert!((row - 8.0).abs() < 0.15, "row sum {row}");
+            }
+            for j in 0..16 {
+                let col: f32 = (0..16).map(|i| blk[i * 16 + j]).sum();
+                assert!((col - 8.0).abs() < 0.15, "col sum {col}");
+            }
+        }
+    }
+
+    #[test]
+    fn entries_in_unit_interval() {
+        let blocks = random_blocks(3, 8, 11);
+        let sol = solve_batch(&blocks, 4, 5.0, 100);
+        for &x in &sol.data {
+            assert!((0.0..=1.0 + 1e-5).contains(&x), "entry {x}");
+        }
+    }
+
+    #[test]
+    fn large_tau_concentrates_on_large_weights() {
+        // With strong regularization toward the objective, the fractional
+        // solution should put most mass where |W| is largest.
+        let m = 4;
+        let mut data = vec![0.01f32; 16];
+        // Plant a clear 2:4 transposable optimum on the two diagonals.
+        for i in 0..4 {
+            data[i * 4 + i] = 10.0;
+            data[i * 4 + ((i + 1) % 4)] = 9.0;
+        }
+        let blocks = Blocks { b: 1, m, data };
+        let sol = solve_batch(&blocks, 2, 2.0, 400);
+        for i in 0..4 {
+            assert!(sol.block(0)[i * 4 + i] > 0.9);
+            assert!(sol.block(0)[i * 4 + (i + 1) % 4] > 0.9);
+        }
+    }
+
+    #[test]
+    fn n_equals_m_gives_all_ones() {
+        let blocks = random_blocks(2, 4, 13);
+        let sol = solve_batch(&blocks, 4, 10.0, 200);
+        for &x in &sol.data {
+            assert!((x - 1.0).abs() < 1e-3, "entry {x}");
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Exact transposable N:M mask solver via min-cost flow.
+//!
+//! Problem (2) is a transportation problem on the bipartite graph
+//! rows -> cols: every row ships N units, every column receives N units,
+//! each cell carries at most 1 unit, and we maximize the shipped score.
+//! The LP relaxation is integral (b-matching polytope), so min-cost flow
+//! returns the true binary optimum f(S*) used as the reference in Fig. 3,
+//! Fig. 6 and the error columns of the bench reports. This plays the role
+//! of the paper's "Network Flow" method (Hubara et al. 2021) and of
+//! Gurobi as the optimality oracle.
+//!
+//! Implementation: successive shortest augmenting paths with Johnson
+//! potentials (Dijkstra on dense adjacency — the graph has 2M+2 nodes, so
+//! dense scan beats a heap for M <= 32). Costs are shifted to
+//! `max_score - score >= 0` so initial potentials are zero.
+
+use crate::util::tensor::Blocks;
+
+/// Solve one M x M block exactly. Returns (mask, objective).
+pub fn solve_block(score: &[f32], m: usize, n: usize) -> (Vec<f32>, f64) {
+    debug_assert_eq!(score.len(), m * m);
+    if n == 0 {
+        return (vec![0.0; m * m], 0.0);
+    }
+    if n == m {
+        let obj = score.iter().map(|&x| x as f64).sum();
+        return (vec![1.0; m * m], obj);
+    }
+
+    // Node ids: 0 = source, 1..=m rows, m+1..=2m cols, 2m+1 sink.
+    let nodes = 2 * m + 2;
+    let source = 0usize;
+    let sink = 2 * m + 1;
+
+    let max_score = score.iter().fold(0.0f32, |a, &x| a.max(x)) as f64;
+    // cell cost (nonneg): shifting by max_score keeps argmax unchanged
+    // because every feasible solution selects exactly n*m cells.
+    let cell_cost = |i: usize, j: usize| -> f64 { max_score - score[i * m + j] as f64 };
+
+    // Flow state: cap/flow on source->row and col->sink as vectors;
+    // row->col as an m x m 0/1 flow matrix.
+    let mut src_flow = vec![0usize; m];
+    let mut snk_flow = vec![0usize; m];
+    let mut cell_flow = vec![false; m * m];
+    let mut potential = vec![0.0f64; nodes];
+
+    let total = n * m;
+    for _ in 0..total {
+        // Dijkstra with reduced costs from source.
+        let inf = f64::INFINITY;
+        let mut dist = vec![inf; nodes];
+        let mut prev = vec![usize::MAX; nodes];
+        let mut done = vec![false; nodes];
+        dist[source] = 0.0;
+        loop {
+            let mut u = usize::MAX;
+            let mut best = inf;
+            for v in 0..nodes {
+                if !done[v] && dist[v] < best {
+                    best = dist[v];
+                    u = v;
+                }
+            }
+            if u == usize::MAX || u == sink {
+                break;
+            }
+            done[u] = true;
+            let du = dist[u];
+            if u == source {
+                for i in 0..m {
+                    if src_flow[i] < n {
+                        let nd = du + potential[source] - potential[1 + i];
+                        if nd < dist[1 + i] {
+                            dist[1 + i] = nd;
+                            prev[1 + i] = source;
+                        }
+                    }
+                }
+            } else if u >= 1 && u <= m {
+                let i = u - 1;
+                // forward edges to columns with no flow
+                for j in 0..m {
+                    if !cell_flow[i * m + j] {
+                        let v = m + 1 + j;
+                        let nd = du + cell_cost(i, j) + potential[u] - potential[v];
+                        if nd < dist[v] {
+                            dist[v] = nd;
+                            prev[v] = u;
+                        }
+                    }
+                }
+                // backward edge to source if flow exists
+                if src_flow[i] > 0 {
+                    let nd = du + potential[u] - potential[source];
+                    if nd < dist[source] {
+                        dist[source] = nd;
+                        prev[source] = u;
+                    }
+                }
+            } else if u >= m + 1 && u <= 2 * m {
+                let j = u - m - 1;
+                // forward to sink
+                if snk_flow[j] < n {
+                    let nd = du + potential[u] - potential[sink];
+                    if nd < dist[sink] {
+                        dist[sink] = nd;
+                        prev[sink] = u;
+                    }
+                }
+                // backward edges to rows with flow (residual, negated cost)
+                for i in 0..m {
+                    if cell_flow[i * m + j] {
+                        let v = 1 + i;
+                        let nd = du - cell_cost(i, j) + potential[u] - potential[v];
+                        if nd < dist[v] {
+                            dist[v] = nd;
+                            prev[v] = u;
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert!(dist[sink].is_finite(), "no augmenting path");
+        // Update potentials (cap at dist[sink] so reduced costs stay
+        // nonnegative for nodes settled after the early exit).
+        let dsink = dist[sink];
+        for v in 0..nodes {
+            potential[v] += dist[v].min(dsink);
+        }
+        // Trace back and push one unit.
+        let mut v = sink;
+        while v != source {
+            let u = prev[v];
+            debug_assert_ne!(u, usize::MAX);
+            if u >= 1 && u <= m && v >= m + 1 && v <= 2 * m {
+                cell_flow[(u - 1) * m + (v - m - 1)] = true;
+            } else if v >= 1 && v <= m && u >= m + 1 && u <= 2 * m {
+                cell_flow[(v - 1) * m + (u - m - 1)] = false;
+            } else if u == source {
+                src_flow[v - 1] += 1;
+            } else if v == source {
+                src_flow[u - 1] -= 1;
+            } else if v == sink {
+                snk_flow[u - m - 1] += 1;
+            }
+            v = u;
+        }
+    }
+
+    let mask: Vec<f32> = cell_flow.iter().map(|&f| if f { 1.0 } else { 0.0 }).collect();
+    let obj = mask
+        .iter()
+        .zip(score)
+        .map(|(&s, &w)| (s * w) as f64)
+        .sum();
+    (mask, obj)
+}
+
+/// Exact solve over a batch; returns (masks, total objective).
+pub fn solve_batch(scores: &Blocks, n: usize) -> (Blocks, f64) {
+    let mut out = Blocks::zeros(scores.b, scores.m);
+    let sz = scores.m * scores.m;
+    let mut total = 0.0;
+    for k in 0..scores.b {
+        let (mask, obj) = solve_block(scores.block(k), scores.m, n);
+        out.data[k * sz..(k + 1) * sz].copy_from_slice(&mask);
+        total += obj;
+    }
+    (out, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::{block_objective, is_transposable_feasible};
+    use crate::util::rng::Rng;
+
+    fn random_scores(m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..m * m).map(|_| rng.heavy_tail().abs()).collect()
+    }
+
+    /// Brute force over all transposable masks (tiny M only).
+    fn brute_force(score: &[f32], m: usize, n: usize) -> f64 {
+        let cells = m * m;
+        let mut best = f64::NEG_INFINITY;
+        for bits in 0u32..(1 << cells) {
+            if bits.count_ones() as usize != n * m {
+                continue;
+            }
+            let mask: Vec<f32> = (0..cells)
+                .map(|c| if bits >> c & 1 == 1 { 1.0 } else { 0.0 })
+                .collect();
+            if is_transposable_feasible(&mask, m, n) {
+                best = best.max(block_objective(&mask, score));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force_m4() {
+        for seed in 0..15 {
+            let s = random_scores(4, seed);
+            for n in [1usize, 2, 3] {
+                let (mask, obj) = solve_block(&s, 4, n);
+                assert!(is_transposable_feasible(&mask, 4, n));
+                let bf = brute_force(&s, 4, n);
+                assert!(
+                    (obj - bf).abs() < 1e-4,
+                    "seed={seed} n={n}: flow={obj} bf={bf}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn feasible_all_patterns() {
+        for &(m, n) in &[(8usize, 4usize), (8, 2), (16, 8), (16, 4), (32, 16), (32, 8)] {
+            let s = random_scores(m, (m * 31 + n) as u64);
+            let (mask, _) = solve_block(&s, m, n);
+            assert!(is_transposable_feasible(&mask, m, n), "m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn dominates_heuristics() {
+        use crate::masks::rounding;
+        for seed in 100..110 {
+            let m = 8;
+            let n = 4;
+            let s = random_scores(m, seed);
+            let (_, opt) = solve_block(&s, m, n);
+            let heur = rounding::round_block(&s, &s, m, n, 10);
+            let hobj = block_objective(&heur, &s);
+            assert!(opt >= hobj - 1e-5, "opt {opt} < heuristic {hobj}");
+        }
+    }
+
+    #[test]
+    fn trivial_patterns() {
+        let s = random_scores(4, 1);
+        let (mask, obj) = solve_block(&s, 4, 0);
+        assert_eq!(obj, 0.0);
+        assert!(mask.iter().all(|&x| x == 0.0));
+        let (mask, obj) = solve_block(&s, 4, 4);
+        assert!(mask.iter().all(|&x| x == 1.0));
+        assert!((obj - s.iter().map(|&x| x as f64).sum::<f64>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn permutation_matrix_for_n1() {
+        // n=1: optimal is the max-weight perfect matching (assignment).
+        let s = random_scores(8, 42);
+        let (mask, _) = solve_block(&s, 8, 1);
+        assert!(is_transposable_feasible(&mask, 8, 1));
+    }
+}

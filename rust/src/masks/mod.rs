@@ -1,0 +1,154 @@
+//! Transposable N:M mask generation — the paper's core contribution plus
+//! every baseline it compares against.
+//!
+//! A transposable N:M mask of an M x M block is a binary matrix whose
+//! every row AND every column has exactly N ones; problem (1) of the paper
+//! asks for the mask maximizing `sum_ij S_ij * score_ij` (score = |W| or a
+//! pruning-framework importance). The constraint applies independently per
+//! M x M block of the weight matrix, so all solvers here operate on a
+//! `Blocks` batch and are embarrassingly parallel over blocks.
+
+pub mod binm;
+pub mod dykstra;
+pub mod exact;
+pub mod pdlp;
+pub mod random;
+pub mod rounding;
+pub mod solver;
+pub mod two_approx;
+
+use crate::util::tensor::{Blocks, Mat};
+
+/// An N:M sparsity pattern (N of every M kept).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NmPattern {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmPattern {
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(n <= m && m > 0, "invalid N:M {n}:{m}");
+        NmPattern { n, m }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.n as f64 / self.m as f64
+    }
+}
+
+impl std::fmt::Display for NmPattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.n, self.m)
+    }
+}
+
+/// A binary mask over one M x M block, stored as f32 0/1 (matches the
+/// tensor currency; bit-packing lives in sparse::nm).
+pub type BlockMask = Vec<f32>;
+
+/// Check the transposable N:M property for one block.
+pub fn is_transposable_feasible(mask: &[f32], m: usize, n: usize) -> bool {
+    debug_assert_eq!(mask.len(), m * m);
+    for i in 0..m {
+        let row: f32 = mask[i * m..(i + 1) * m].iter().sum();
+        if (row - n as f32).abs() > 1e-6 {
+            return false;
+        }
+    }
+    for j in 0..m {
+        let col: f32 = (0..m).map(|i| mask[i * m + j]).sum();
+        if (col - n as f32).abs() > 1e-6 {
+            return false;
+        }
+    }
+    mask.iter().all(|&x| x == 0.0 || x == 1.0)
+}
+
+/// Check standard (row-wise) N:M: every group of M consecutive entries in
+/// each row has exactly N ones.
+pub fn is_row_nm_feasible(mask: &Mat, n: usize, m: usize) -> bool {
+    if mask.cols % m != 0 {
+        return false;
+    }
+    for i in 0..mask.rows {
+        for g in 0..mask.cols / m {
+            let s: f32 = mask.row(i)[g * m..(g + 1) * m].iter().sum();
+            if (s - n as f32).abs() > 1e-6 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Objective value `sum_ij S_ij * score_ij` for one block.
+pub fn block_objective(mask: &[f32], score: &[f32]) -> f64 {
+    mask.iter()
+        .zip(score)
+        .map(|(&s, &w)| (s * w) as f64)
+        .sum()
+}
+
+/// Total objective over a batch.
+pub fn batch_objective(masks: &Blocks, scores: &Blocks) -> f64 {
+    assert_eq!(masks.data.len(), scores.data.len());
+    masks
+        .data
+        .iter()
+        .zip(&scores.data)
+        .map(|(&s, &w)| (s * w) as f64)
+        .sum()
+}
+
+/// Verify transposability for every block in a batch.
+pub fn batch_feasible(masks: &Blocks, n: usize) -> bool {
+    (0..masks.b).all(|k| is_transposable_feasible(masks.block(k), masks.m, n))
+}
+
+/// Relative error vs the optimal objective: (f* - f) / f*.
+pub fn relative_error(f_opt: f64, f_got: f64) -> f64 {
+    if f_opt.abs() < 1e-12 {
+        return 0.0;
+    }
+    (f_opt - f_got) / f_opt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_detects_good_and_bad() {
+        // 2:4 transposable: a valid doubly-2-regular 0/1 matrix.
+        #[rustfmt::skip]
+        let good = vec![
+            1., 1., 0., 0.,
+            1., 1., 0., 0.,
+            0., 0., 1., 1.,
+            0., 0., 1., 1.,
+        ];
+        assert!(is_transposable_feasible(&good, 4, 2));
+        let mut bad = good.clone();
+        bad[0] = 0.0; // row 0 now has one 1
+        assert!(!is_transposable_feasible(&bad, 4, 2));
+        let mut frac = good.clone();
+        frac[0] = 0.5;
+        frac[1] = 1.5;
+        assert!(!is_transposable_feasible(&frac, 4, 2));
+    }
+
+    #[test]
+    fn objective_sums() {
+        let mask = vec![1., 0., 0., 1.];
+        let score = vec![3., 5., 7., 11.];
+        assert_eq!(block_objective(&mask, &score), 14.0);
+    }
+
+    #[test]
+    fn pattern_sparsity() {
+        assert_eq!(NmPattern::new(2, 4).sparsity(), 0.5);
+        assert_eq!(NmPattern::new(8, 32).sparsity(), 0.75);
+        assert_eq!(format!("{}", NmPattern::new(16, 32)), "16:32");
+    }
+}

@@ -1,0 +1,96 @@
+//! Max1000 baseline: sample K random feasible transposable masks per
+//! block and keep the best-scoring one. Feasible samples come from the
+//! family P · C · Q with random row/column permutations P, Q applied to a
+//! circulant C with N ones per row/column (each such mask is exactly
+//! doubly-N-regular).
+
+use crate::util::rng::Rng;
+use crate::util::tensor::Blocks;
+
+/// One random feasible transposable mask.
+pub fn random_feasible(rng: &mut Rng, m: usize, n: usize) -> Vec<f32> {
+    let mut rowp: Vec<usize> = (0..m).collect();
+    let mut colp: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut rowp);
+    rng.shuffle(&mut colp);
+    let shift = rng.below(m);
+    let mut mask = vec![0.0f32; m * m];
+    for i in 0..m {
+        for k in 0..n {
+            let j = (i + k + shift) % m;
+            mask[rowp[i] * m + colp[j]] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Best of `k` random feasible masks.
+pub fn solve_block(score: &[f32], m: usize, n: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut best_mask = random_feasible(rng, m, n);
+    let mut best: f64 = best_mask
+        .iter()
+        .zip(score)
+        .map(|(&s, &w)| (s * w) as f64)
+        .sum();
+    for _ in 1..k {
+        let cand = random_feasible(rng, m, n);
+        let obj: f64 = cand
+            .iter()
+            .zip(score)
+            .map(|(&s, &w)| (s * w) as f64)
+            .sum();
+        if obj > best {
+            best = obj;
+            best_mask = cand;
+        }
+    }
+    best_mask
+}
+
+/// `offset` is the global index of the first block, so per-block RNG
+/// streams are identical whether the batch is solved whole or chunked.
+pub fn solve_batch_offset(scores: &Blocks, n: usize, k: usize, seed: u64, offset: usize) -> Blocks {
+    let mut out = Blocks::zeros(scores.b, scores.m);
+    let sz = scores.m * scores.m;
+    for kk in 0..scores.b {
+        // Stateless per-block stream: order-independent.
+        let mut mix = seed ^ ((offset + kk) as u64).wrapping_mul(0xA24BAED4963EE407);
+        let mut rng = Rng::new(crate::util::rng::splitmix64(&mut mix));
+        let mask = solve_block(scores.block(kk), scores.m, n, k, &mut rng);
+        out.data[kk * sz..(kk + 1) * sz].copy_from_slice(&mask);
+    }
+    out
+}
+
+pub fn solve_batch(scores: &Blocks, n: usize, k: usize, seed: u64) -> Blocks {
+    solve_batch_offset(scores, n, k, seed, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::is_transposable_feasible;
+
+    #[test]
+    fn random_masks_always_feasible() {
+        let mut rng = Rng::new(5);
+        for &(m, n) in &[(4usize, 2usize), (8, 4), (16, 8), (32, 16), (8, 1), (8, 7)] {
+            for _ in 0..20 {
+                let mask = random_feasible(&mut rng, m, n);
+                assert!(is_transposable_feasible(&mask, m, n), "m={m} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_samples_never_worse() {
+        use crate::masks::block_objective;
+        let m = 8;
+        let n = 4;
+        let mut rng = Rng::new(1);
+        let score: Vec<f32> = (0..64).map(|_| rng.heavy_tail().abs()).collect();
+        let m1 = solve_block(&score, m, n, 10, &mut Rng::new(7));
+        let m2 = solve_block(&score, m, n, 1000, &mut Rng::new(7));
+        assert!(block_objective(&m2, &score) >= block_objective(&m1, &score) - 1e-6);
+    }
+}

@@ -1,0 +1,430 @@
+//! Algorithm 2: rounding the fractional Dykstra solution to a feasible
+//! transposable N:M binary mask via greedy selection + local search.
+//!
+//! Two score streams per block, exactly as in the paper:
+//!   * `frac`  — the approximate solution from Algorithm 1; drives the
+//!     ORDER of greedy selection (Fig. 2(1)->(2)).
+//!   * `score` — the original objective coefficients |W|; drives the swap
+//!     gains of local search, Eq. (6) (Fig. 2(3)->(4)).
+//! Direct rounding of the raw weights (the "Greedy"/"Optround" baselines
+//! of Fig. 6 without entropy) is the special case `frac == score`.
+//!
+//! The paper's local search performs L best-swap steps and empirically
+//! saturates every row/column. We add a final augmenting-path *repair*
+//! phase that guarantees exact feasibility for any input (the transposable
+//! polytope is an integral b-matching polytope, so an augmenting path
+//! always exists while any row is unsaturated).
+
+use crate::util::tensor::Blocks;
+
+/// IEEE-754 total-order key: sorts f32 (incl. negatives) as u32.
+#[inline]
+fn sort_key(x: f32) -> u32 {
+    let bits = x.to_bits();
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000
+    }
+}
+
+/// Greedy selection into caller-provided buffers (§Perf: one u64
+/// key|index sort instead of a comparator over f32 loads; no per-block
+/// allocations when batched).
+pub fn greedy_select_into(
+    frac: &[f32],
+    m: usize,
+    n: usize,
+    order: &mut Vec<u64>,
+    mask: &mut [f32],
+) {
+    debug_assert_eq!(mask.len(), m * m);
+    order.clear();
+    order.extend(
+        frac.iter()
+            .enumerate()
+            .map(|(idx, &x)| ((sort_key(x) as u64) << 32) | idx as u64),
+    );
+    order.sort_unstable_by(|a, b| b.cmp(a)); // descending by key
+    mask.fill(0.0);
+    let mut rows = [0u16; 64];
+    let mut cols = [0u16; 64];
+    debug_assert!(m <= 64);
+    let n16 = n as u16;
+    for &packed in order.iter() {
+        let flat = (packed & 0xFFFF_FFFF) as usize;
+        let (i, j) = (flat / m, flat % m);
+        if rows[i] < n16 && cols[j] < n16 {
+            mask[flat] = 1.0;
+            rows[i] += 1;
+            cols[j] += 1;
+        }
+    }
+}
+
+/// Greedy selection (Algorithm 2, lines 1-6): walk entries in descending
+/// `frac` order, keep when both row and column have capacity.
+pub fn greedy_select(frac: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut order = Vec::new();
+    let mut mask = vec![0.0f32; m * m];
+    greedy_select_into(frac, m, n, &mut order, &mut mask);
+    mask
+}
+
+/// One best-swap local-search step (Eq. 6). Returns true if applied.
+///
+/// For a deficit pair (i, j) (row i and column j both unsaturated), find
+/// (i', j') maximizing
+///   Swap(i',j') = score[i,j'] + score[i',j] - score[i',j']
+/// over entries with S[i',j']=1, S[i,j']=0, S[i',j]=0, then insert
+/// (i,j'),(i',j) and remove (i',j').
+fn best_swap(
+    mask: &mut [f32],
+    score: &[f32],
+    m: usize,
+    i: usize,
+    j: usize,
+    require_positive: bool,
+) -> bool {
+    let mut best = f32::NEG_INFINITY;
+    let mut best_ij = None;
+    for ip in 0..m {
+        if ip == i {
+            continue;
+        }
+        // S[i',j] must be 0 (we will insert there).
+        if mask[ip * m + j] != 0.0 {
+            continue;
+        }
+        for jp in 0..m {
+            if jp == j {
+                continue;
+            }
+            // Need S[i',j']=1 (remove) and S[i,j']=0 (insert).
+            if mask[ip * m + jp] != 1.0 || mask[i * m + jp] != 0.0 {
+                continue;
+            }
+            let gain = score[i * m + jp] + score[ip * m + j] - score[ip * m + jp];
+            if gain > best {
+                best = gain;
+                best_ij = Some((ip, jp));
+            }
+        }
+    }
+    if let Some((ip, jp)) = best_ij {
+        if require_positive && best <= 0.0 {
+            return false;
+        }
+        mask[ip * m + jp] = 0.0;
+        mask[i * m + jp] = 1.0;
+        mask[ip * m + j] = 1.0;
+        return true;
+    }
+    false
+}
+
+fn deficits(mask: &[f32], m: usize, n: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut rdef = Vec::new();
+    let mut cdef = Vec::new();
+    for i in 0..m {
+        let s: f32 = mask[i * m..(i + 1) * m].iter().sum();
+        if (s as usize) < n {
+            rdef.push(i);
+        }
+    }
+    for j in 0..m {
+        let s: f32 = (0..m).map(|i| mask[i * m + j]).sum();
+        if (s as usize) < n {
+            cdef.push(j);
+        }
+    }
+    (rdef, cdef)
+}
+
+/// Local search (Algorithm 2, lines 7-13): L rounds of best-swap over
+/// deficit row/column pairs, greedy on the Eq. (6) gain.
+pub fn local_search(mask: &mut [f32], score: &[f32], m: usize, n: usize, steps: usize) {
+    for _ in 0..steps {
+        let (rdef, cdef) = deficits(mask, m, n);
+        if rdef.is_empty() && cdef.is_empty() {
+            return;
+        }
+        let mut progressed = false;
+        for (&i, &j) in rdef.iter().zip(cdef.iter()) {
+            // Paper keeps only positive-gain swaps during local search;
+            // the repair phase below handles any leftovers.
+            if best_swap(mask, score, m, i, j, true) {
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return;
+        }
+    }
+}
+
+/// Augmenting-path repair: force exact row/col sums of N. Alternating BFS
+/// from an unsaturated row over (S=0 forward, S=1 backward) edges to an
+/// unsaturated column; flipping the path raises both deficits by one
+/// without disturbing other counts. Always succeeds on the b-matching
+/// polytope; chooses the locally best first edge for quality.
+pub fn repair(mask: &mut [f32], score: &[f32], m: usize, n: usize) {
+    loop {
+        let (rdef, cdef) = deficits(mask, m, n);
+        if rdef.is_empty() {
+            debug_assert!(cdef.is_empty());
+            return;
+        }
+        let start = rdef[0];
+        if !augment(mask, score, m, n, start) {
+            // Cannot happen on a feasible polytope; avoid an infinite loop
+            // in release builds regardless.
+            debug_assert!(false, "augmenting path must exist");
+            return;
+        }
+    }
+}
+
+fn augment(mask: &mut [f32], score: &[f32], m: usize, n: usize, row0: usize) -> bool {
+    // BFS layers: rows reached needing an S=0 edge forward, cols reached
+    // needing S=1 edge backward. parent[] encodes the alternating path.
+    let mut col_parent = vec![usize::MAX; m]; // col <- row via 0-edge
+    let mut row_parent = vec![usize::MAX; m]; // row <- col via 1-edge
+    let mut row_seen = vec![false; m];
+    let mut queue = std::collections::VecDeque::new();
+    row_seen[row0] = true;
+    queue.push_back(row0);
+    let col_count = |mask: &[f32], j: usize| -> usize {
+        (0..m).map(|i| mask[i * m + j] as usize).sum()
+    };
+    while let Some(i) = queue.pop_front() {
+        // Forward edges: prefer the highest-score insertion first.
+        let mut js: Vec<usize> = (0..m).filter(|&j| mask[i * m + j] == 0.0).collect();
+        js.sort_unstable_by(|&a, &b| {
+            score[i * m + b]
+                .partial_cmp(&score[i * m + a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for j in js {
+            if col_parent[j] != usize::MAX {
+                continue;
+            }
+            col_parent[j] = i;
+            if col_count(mask, j) < n {
+                // Unsaturated column: flip the alternating path.
+                let (mut ci, mut cj) = (i, j);
+                loop {
+                    mask[ci * m + cj] = 1.0;
+                    if ci == row0 && row_parent[ci] == usize::MAX {
+                        return true;
+                    }
+                    let pj = match row_parent.get(ci) {
+                        Some(&p) if p != usize::MAX => p,
+                        _ => return true,
+                    };
+                    mask[ci * m + pj] = 0.0;
+                    cj = pj;
+                    ci = col_parent[cj];
+                }
+            }
+            // Saturated: continue through each row holding a 1 in col j.
+            for r in 0..m {
+                if mask[r * m + j] == 1.0 && !row_seen[r] {
+                    row_seen[r] = true;
+                    row_parent[r] = j;
+                    queue.push_back(r);
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Full Algorithm 2 on one block: greedy + L local-search steps + repair.
+pub fn round_block(frac: &[f32], score: &[f32], m: usize, n: usize, ls_steps: usize) -> Vec<f32> {
+    let mut mask = greedy_select(frac, m, n);
+    local_search(&mut mask, score, m, n, ls_steps);
+    repair(&mut mask, score, m, n);
+    mask
+}
+
+/// "Simple" rounding baseline (Fig. 6): top-N per row of `frac`, then
+/// top-N per column of the survivors. May leave rows under-filled — kept
+/// as the paper's baseline semantics (it is what makes it weak).
+pub fn simple_round(frac: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut mask = vec![0.0f32; m * m];
+    let mut idx: Vec<usize> = (0..m).collect();
+    for i in 0..m {
+        idx.sort_unstable_by(|&a, &b| {
+            frac[i * m + b]
+                .partial_cmp(&frac[i * m + a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for &j in idx.iter().take(n) {
+            mask[i * m + j] = 1.0;
+        }
+    }
+    for j in 0..m {
+        let mut rows: Vec<usize> = (0..m).filter(|&i| mask[i * m + j] == 1.0).collect();
+        rows.sort_unstable_by(|&a, &b| {
+            frac[b * m + j]
+                .partial_cmp(&frac[a * m + j])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for &i in rows.iter().skip(n) {
+            mask[i * m + j] = 0.0;
+        }
+    }
+    mask
+}
+
+/// Batch rounding over a (B, M, M) batch (allocation-free per block:
+/// the sort buffer is reused and masks are written in place).
+pub fn round_batch(frac: &Blocks, score: &Blocks, n: usize, ls_steps: usize) -> Blocks {
+    assert_eq!(frac.b, score.b);
+    assert_eq!(frac.m, score.m);
+    let m = frac.m;
+    let mut out = Blocks::zeros(frac.b, m);
+    let sz = m * m;
+    let mut order: Vec<u64> = Vec::with_capacity(sz);
+    for k in 0..frac.b {
+        let mask = &mut out.data[k * sz..(k + 1) * sz];
+        greedy_select_into(frac.block(k), m, n, &mut order, mask);
+        local_search(mask, score.block(k), m, n, ls_steps);
+        repair(mask, score.block(k), m, n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::{block_objective, is_transposable_feasible};
+    use crate::util::rng::Rng;
+
+    fn random_scores(m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..m * m).map(|_| rng.heavy_tail().abs()).collect()
+    }
+
+    #[test]
+    fn greedy_respects_capacities() {
+        for seed in 0..20 {
+            let m = 8;
+            let s = random_scores(m, seed);
+            let mask = greedy_select(&s, m, 4);
+            for i in 0..m {
+                let r: f32 = mask[i * m..(i + 1) * m].iter().sum();
+                assert!(r <= 4.0);
+            }
+            for j in 0..m {
+                let c: f32 = (0..m).map(|i| mask[i * m + j]).sum();
+                assert!(c <= 4.0);
+            }
+        }
+    }
+
+    #[test]
+    fn round_block_always_feasible() {
+        for &(m, n) in &[(4, 2), (8, 4), (8, 2), (16, 8), (32, 16), (16, 4)] {
+            for seed in 0..10 {
+                let s = random_scores(m, seed * 31 + m as u64);
+                let mask = round_block(&s, &s, m, n, 10);
+                assert!(
+                    is_transposable_feasible(&mask, m, n),
+                    "infeasible m={m} n={n} seed={seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn local_search_never_hurts() {
+        for seed in 0..20 {
+            let m = 8;
+            let n = 4;
+            let s = random_scores(m, seed + 100);
+            let greedy = greedy_select(&s, m, n);
+            let mut improved = greedy.clone();
+            local_search(&mut improved, &s, m, n, 10);
+            assert!(
+                block_objective(&improved, &s) >= block_objective(&greedy, &s) - 1e-5,
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn repair_from_empty_mask() {
+        let m = 8;
+        let n = 3;
+        let s = random_scores(m, 5);
+        let mut mask = vec![0.0f32; m * m];
+        repair(&mut mask, &s, m, n);
+        assert!(is_transposable_feasible(&mask, m, n));
+    }
+
+    #[test]
+    fn repair_preserves_existing_when_possible() {
+        // Start from a partially-filled feasible-extendable mask.
+        let m = 4;
+        let n = 2;
+        let s = random_scores(m, 9);
+        let mut mask = vec![0.0f32; 16];
+        mask[0] = 1.0; // (0,0)
+        mask[5] = 1.0; // (1,1)
+        repair(&mut mask, &s, m, n);
+        assert!(is_transposable_feasible(&mask, m, n));
+    }
+
+    #[test]
+    fn n_equals_m_all_ones() {
+        let m = 4;
+        let s = random_scores(m, 3);
+        let mask = round_block(&s, &s, m, m, 5);
+        assert!(mask.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn n_zero_all_zeros() {
+        let m = 4;
+        let s = random_scores(m, 3);
+        let mask = round_block(&s, &s, m, 0, 5);
+        assert!(mask.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn simple_round_col_feasible_rows_at_most_n() {
+        let m = 8;
+        let n = 4;
+        let s = random_scores(m, 77);
+        let mask = simple_round(&s, m, n);
+        for j in 0..m {
+            let c: f32 = (0..m).map(|i| mask[i * m + j]).sum();
+            assert!(c <= n as f32);
+        }
+        for i in 0..m {
+            let r: f32 = mask[i * m..(i + 1) * m].iter().sum();
+            assert!(r <= n as f32);
+        }
+    }
+
+    #[test]
+    fn swap_improves_planted_case() {
+        // Paper Fig. 2: greedy saturates early, a swap recovers value.
+        // Plant scores so greedy traps row 3 / col 3.
+        #[rustfmt::skip]
+        let s = vec![
+            9.0, 8.0, 0.1, 0.1,
+            8.5, 7.0, 0.2, 6.9,
+            0.1, 0.2, 9.5, 8.0,
+            0.1, 7.1, 8.2, 0.3,
+        ];
+        let mask = round_block(&s, &s, 4, 2, 10);
+        assert!(is_transposable_feasible(&mask, 4, 2));
+        // Objective must beat plain greedy+repair-without-LS.
+        let mut greedy = greedy_select(&s, 4, 2);
+        repair(&mut greedy, &s, 4, 2);
+        assert!(block_objective(&mask, &s) >= block_objective(&greedy, &s) - 1e-6);
+    }
+}

@@ -1,0 +1,54 @@
+//! 2-approximation greedy baseline (Hubara et al. 2021a).
+//!
+//! Sorts block entries by score descending and keeps any entry whose row
+//! and column still have capacity — provably within a factor 2 of the
+//! optimum for this matroid-intersection-like structure. Differs from
+//! TSENOR in that it orders by the RAW scores (no entropy-regularized
+//! relaxation) and performs no local search; the paper's Fig. 3 shows the
+//! quality gap this costs.
+
+use crate::masks::rounding;
+use crate::util::tensor::Blocks;
+
+/// One block: greedy on raw scores + feasibility repair (the published
+/// method completes the mask arbitrarily; we complete via the same
+/// augmenting repair used by TSENOR so the comparison is not unfairly
+/// handicapped).
+pub fn solve_block(score: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut mask = rounding::greedy_select(score, m, n);
+    rounding::repair(&mut mask, score, m, n);
+    mask
+}
+
+pub fn solve_batch(scores: &Blocks, n: usize) -> Blocks {
+    let mut out = Blocks::zeros(scores.b, scores.m);
+    let sz = scores.m * scores.m;
+    for k in 0..scores.b {
+        let mask = solve_block(scores.block(k), scores.m, n);
+        out.data[k * sz..(k + 1) * sz].copy_from_slice(&mask);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::{block_objective, is_transposable_feasible};
+    use crate::masks::exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn feasible_and_within_factor_two() {
+        for seed in 0..20 {
+            let m = 8;
+            let n = 4;
+            let mut rng = Rng::new(seed);
+            let s: Vec<f32> = (0..m * m).map(|_| rng.heavy_tail().abs()).collect();
+            let mask = solve_block(&s, m, n);
+            assert!(is_transposable_feasible(&mask, m, n));
+            let (_, opt) = exact::solve_block(&s, m, n);
+            let got = block_objective(&mask, &s);
+            assert!(got * 2.0 >= opt - 1e-5, "2-approx violated: {got} vs {opt}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Masked fine-tuning (Fig. 5): the Rust coordinator owns the optimizer
+//! state and drives the AOT model_grad artifact; gradients flow through
+//! the L1 masked-GEMM kernel whose VJP realizes the transposable-sparsity
+//! backward pass. Python is not involved.
+
+use crate::data::loader::random_batch;
+use crate::model::ModelState;
+use crate::runtime::client::ModelRuntime;
+use crate::util::rng::Rng;
+use crate::util::tensor::Mat;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FinetuneCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub seed: u64,
+}
+
+impl Default for FinetuneCfg {
+    fn default() -> Self {
+        FinetuneCfg {
+            steps: 50,
+            lr: 2e-4,
+            warmup: 5,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            seed: 1234,
+        }
+    }
+}
+
+/// Adam state per weight tensor.
+struct Adam {
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(weights: &BTreeMap<String, Mat>) -> Self {
+        let m = weights
+            .iter()
+            .map(|(k, w)| (k.clone(), vec![0.0; w.data.len()]))
+            .collect();
+        let v = weights
+            .iter()
+            .map(|(k, w)| (k.clone(), vec![0.0; w.data.len()]))
+            .collect();
+        Adam { m, v, t: 0 }
+    }
+
+    fn step(&mut self, cfg: &FinetuneCfg, lr: f32, name: &str, w: &mut Mat, g: &Mat) {
+        let m = self.m.get_mut(name).unwrap();
+        let v = self.v.get_mut(name).unwrap();
+        let t = self.t as f32;
+        let bc1 = 1.0 - cfg.beta1.powf(t);
+        let bc2 = 1.0 - cfg.beta2.powf(t);
+        for ((wv, gv), (mv, vv)) in w
+            .data
+            .iter_mut()
+            .zip(&g.data)
+            .zip(m.iter_mut().zip(v.iter_mut()))
+        {
+            *mv = cfg.beta1 * *mv + (1.0 - cfg.beta1) * gv;
+            *vv = cfg.beta2 * *vv + (1.0 - cfg.beta2) * gv * gv;
+            let mhat = *mv / bc1;
+            let vhat = *vv / bc2;
+            *wv -= lr * mhat / (vhat.sqrt() + cfg.eps);
+        }
+    }
+}
+
+/// Run masked fine-tuning; returns the per-step loss curve.
+pub fn finetune(
+    rt: &ModelRuntime,
+    state: &mut ModelState,
+    train: &[u8],
+    cfg: &FinetuneCfg,
+) -> Result<Vec<f32>> {
+    let art = &rt.manifest.model_grad;
+    let mut adam = Adam::new(&state.weights);
+    let mut rng = Rng::new(cfg.seed);
+    let mut curve = Vec::with_capacity(cfg.steps);
+
+    // Masks must exist for every prunable tensor (default: all-ones).
+    for info in rt.manifest.weights.iter().filter(|w| w.prunable) {
+        state.masks.entry(info.name.clone()).or_insert_with(|| {
+            Mat::from_fn(info.shape[0], info.shape[1], |_, _| 1.0)
+        });
+    }
+
+    for step in 1..=cfg.steps {
+        adam.t = step;
+        let tokens = random_batch(train, art.batch, art.seq, &mut rng);
+        let (loss, grads) = rt.grads(&state.weights, &state.masks, &tokens)?;
+        let lr = cfg.lr * (step as f32 / cfg.warmup.max(1) as f32).min(1.0);
+        for (info, g) in rt.manifest.weights.iter().zip(&grads) {
+            let w = state.weights.get_mut(&info.name).unwrap();
+            adam.step(cfg, lr, &info.name, w, g);
+        }
+        // Keep pruned coordinates exactly zero.
+        state.reproject();
+        curve.push(loss);
+    }
+    Ok(curve)
+}

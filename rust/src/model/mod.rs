@@ -1,0 +1,104 @@
+//! Model state at runtime: named weight tensors (loaded from the artifact
+//! bundle), per-layer masks, and the masked fine-tuning loop (Fig. 5).
+
+pub mod finetune;
+
+use crate::util::tensor::Mat;
+use std::collections::BTreeMap;
+
+/// Mutable model state: weights + optional masks over prunable tensors.
+#[derive(Clone, Debug, Default)]
+pub struct ModelState {
+    pub weights: BTreeMap<String, Mat>,
+    pub masks: BTreeMap<String, Mat>,
+}
+
+impl ModelState {
+    pub fn new(weights: BTreeMap<String, Mat>) -> Self {
+        ModelState { weights, masks: BTreeMap::new() }
+    }
+
+    /// Install a mask and zero the pruned weights.
+    pub fn apply_mask(&mut self, name: &str, mask: Mat) {
+        if let Some(w) = self.weights.get_mut(name) {
+            assert_eq!((w.rows, w.cols), (mask.rows, mask.cols), "{name} mask shape");
+            *w = w.hadamard(&mask);
+        }
+        self.masks.insert(name.to_string(), mask);
+    }
+
+    /// Replace a weight tensor (e.g. with the SparseGPT/ALPS update) and
+    /// record its mask.
+    pub fn set_pruned(&mut self, name: &str, w: Mat, mask: Mat) {
+        self.weights.insert(name.to_string(), w);
+        self.masks.insert(name.to_string(), mask);
+    }
+
+    /// Fraction of zeros among prunable (masked) weights.
+    pub fn sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for (name, mask) in &self.masks {
+            let _ = name;
+            zeros += mask.data.iter().filter(|&&x| x == 0.0).count();
+            total += mask.data.len();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+
+    /// Re-project weights onto their masks (after a fine-tune step the
+    /// optimizer may drift off-support only through numerical error, but
+    /// we enforce exactness).
+    pub fn reproject(&mut self) {
+        for (name, mask) in &self.masks {
+            if let Some(w) = self.weights.get_mut(name) {
+                for (wv, mv) in w.data.iter_mut().zip(&mask.data) {
+                    *wv *= mv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn state() -> ModelState {
+        let mut rng = Rng::new(1);
+        let mut weights = BTreeMap::new();
+        weights.insert("a".into(), Mat::from_fn(4, 4, |_, _| rng.normal()));
+        weights.insert("b".into(), Mat::from_fn(4, 4, |_, _| rng.normal()));
+        ModelState::new(weights)
+    }
+
+    #[test]
+    fn apply_mask_zeroes() {
+        let mut st = state();
+        let mut mask = Mat::zeros(4, 4);
+        for i in 0..8 {
+            mask.data[i] = 1.0;
+        }
+        st.apply_mask("a", mask);
+        assert_eq!(st.sparsity(), 0.5);
+        assert!(st.weights["a"].data[8..].iter().all(|&x| x == 0.0));
+        assert!(st.weights["a"].data[..8].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn reproject_restores_support() {
+        let mut st = state();
+        let mut mask = Mat::zeros(4, 4);
+        mask.data[0] = 1.0;
+        st.apply_mask("a", mask);
+        st.weights.get_mut("a").unwrap().data[5] = 3.0; // drift off-support
+        st.reproject();
+        assert_eq!(st.weights["a"].data[5], 0.0);
+        assert_ne!(st.weights["a"].data[0], 0.0);
+    }
+}

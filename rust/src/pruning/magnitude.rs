@@ -1,0 +1,125 @@
+//! Magnitude pruning + the shared mask helpers.
+//!
+//! Three sparsity regimes used across the experiment suite:
+//!  * transposable N:M — via a pluggable `MaskFn` oracle (the paper),
+//!  * standard N:M     — top-N per column within input-row groups of M
+//!    (the contraction-axis N:M that accelerates y = x @ W),
+//!  * unstructured     — global top-k (Table 4's reference row).
+
+use crate::masks::NmPattern;
+use crate::pruning::Regime;
+use crate::util::tensor::Mat;
+use anyhow::Result;
+
+/// Standard N:M along the input (row) axis: for every column j and every
+/// group of M consecutive rows, keep the N largest scores.
+pub fn standard_nm_mask(score: &Mat, pattern: NmPattern) -> Mat {
+    let (n, m) = (pattern.n, pattern.m);
+    assert!(score.rows % m == 0, "rows {} not divisible by M={m}", score.rows);
+    let mut mask = Mat::zeros(score.rows, score.cols);
+    let mut idx: Vec<usize> = (0..m).collect();
+    for j in 0..score.cols {
+        for g in 0..score.rows / m {
+            idx.sort_unstable_by(|&a, &b| {
+                score
+                    .at(g * m + b, j)
+                    .abs()
+                    .partial_cmp(&score.at(g * m + a, j).abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &r in idx.iter().take(n) {
+                *mask.at_mut(g * m + r, j) = 1.0;
+            }
+            idx.sort_unstable(); // restore for the next group
+        }
+    }
+    mask
+}
+
+/// Unstructured global top-k mask at the same sparsity as `pattern`.
+pub fn unstructured_mask(score: &Mat, pattern: NmPattern) -> Mat {
+    let keep = (score.data.len() * pattern.n) / pattern.m;
+    let mut order: Vec<u32> = (0..score.data.len() as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        score.data[b as usize]
+            .abs()
+            .partial_cmp(&score.data[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mask = Mat::zeros(score.rows, score.cols);
+    for &flat in order.iter().take(keep) {
+        mask.data[flat as usize] = 1.0;
+    }
+    mask
+}
+
+/// Mask for `score` under the chosen regime.
+pub fn mask_for(score: &Mat, pattern: NmPattern, regime: Regime) -> Result<Mat> {
+    match regime {
+        Regime::Transposable(oracle) => oracle(score, pattern),
+        Regime::StandardNm => Ok(standard_nm_mask(score, pattern)),
+        Regime::Unstructured => Ok(unstructured_mask(score, pattern)),
+    }
+}
+
+/// Magnitude pruning: score = |W|.
+pub fn prune(w: &Mat, pattern: NmPattern, regime: Regime) -> Result<(Mat, Mat)> {
+    let mask = mask_for(w, pattern, regime)?;
+    Ok((w.hadamard(&mask), mask))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::is_row_nm_feasible;
+    use crate::masks::solver::{Method, SolveCfg};
+    use crate::pruning::cpu_mask_fn;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn standard_mask_is_column_groupwise_nm() {
+        let mut rng = Rng::new(1);
+        let w = Mat::from_fn(16, 8, |_, _| rng.heavy_tail());
+        let mask = standard_nm_mask(&w, NmPattern::new(4, 8));
+        // transpose: each row of mask^T should be group-wise 4:8
+        assert!(is_row_nm_feasible(&mask.transpose(), 4, 8));
+    }
+
+    #[test]
+    fn unstructured_hits_exact_sparsity() {
+        let mut rng = Rng::new(2);
+        let w = Mat::from_fn(16, 16, |_, _| rng.heavy_tail());
+        let mask = unstructured_mask(&w, NmPattern::new(2, 4));
+        let kept: f32 = mask.data.iter().sum();
+        assert_eq!(kept as usize, 128);
+    }
+
+    #[test]
+    fn unstructured_keeps_largest() {
+        let mut w = Mat::zeros(4, 4);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let mask = unstructured_mask(&w, NmPattern::new(1, 2));
+        // top 8 of 16 are indices 8..16
+        for i in 0..16 {
+            assert_eq!(mask.data[i], if i >= 8 { 1.0 } else { 0.0 });
+        }
+    }
+
+    #[test]
+    fn magnitude_prune_zeroes_masked() {
+        let mut rng = Rng::new(3);
+        let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
+        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let (pruned, mask) =
+            prune(&w, NmPattern::new(2, 4), Regime::Transposable(&oracle)).unwrap();
+        for i in 0..64 {
+            if mask.data[i] == 0.0 {
+                assert_eq!(pruned.data[i], 0.0);
+            } else {
+                assert_eq!(pruned.data[i], w.data[i]);
+            }
+        }
+    }
+}

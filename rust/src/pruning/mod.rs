@@ -1,0 +1,147 @@
+//! Layer-wise pruning frameworks with TSENOR integration (paper §4).
+//!
+//! Every framework solves (a relaxation of) problem (7):
+//!     min_W 1/2 ||X (W - What)||_F^2 + lambda/2 ||W - What||_F^2
+//!     s.t. W transposable-N:M sparse
+//! using only the Gram matrix H = X^T X (+ lambda I) — raw activations
+//! never leave the calib artifact. The mask oracle is pluggable: any
+//! `masks::solver::Method`, or the XLA-accelerated TSENOR path via the
+//! coordinator's batcher.
+
+pub mod alps;
+pub mod hessian;
+pub mod magnitude;
+pub mod sparsegpt;
+pub mod wanda;
+
+use crate::masks::solver::{self, Method, SolveCfg};
+use crate::masks::NmPattern;
+use crate::util::tensor::Mat;
+
+/// Pluggable transposable-mask oracle: given a score matrix and a pattern,
+/// return the binary mask. Lets every framework run against either the
+/// pure-CPU solvers (`cpu_mask_fn`) or the XLA/AOT path installed by the
+/// coordinator (`coordinator::batcher::XlaSolver::mask_fn`).
+pub type MaskFn<'a> = dyn Fn(&Mat, NmPattern) -> anyhow::Result<Mat> + 'a;
+
+/// Sparsity regime: transposable (with oracle), standard contraction-axis
+/// N:M, or unstructured top-k.
+#[derive(Clone, Copy)]
+pub enum Regime<'a> {
+    Transposable(&'a MaskFn<'a>),
+    StandardNm,
+    Unstructured,
+}
+
+/// CPU mask oracle from a `masks::solver::Method`.
+pub fn cpu_mask_fn(
+    method: Method,
+    cfg: SolveCfg,
+) -> impl Fn(&Mat, NmPattern) -> anyhow::Result<Mat> {
+    move |score: &Mat, pattern: NmPattern| Ok(solver::solve_matrix(method, score, pattern, &cfg))
+}
+
+/// A layer-wise pruning problem: original weights + input Gram statistics.
+/// Convention: `w` is (in_dim x out_dim) — rows are the contraction axis,
+/// matching `y = x @ W` in the model — and `gram` is (in_dim x in_dim).
+#[derive(Clone, Debug)]
+pub struct LayerProblem {
+    pub name: String,
+    pub w: Mat,
+    pub gram: Mat,
+    pub pattern: NmPattern,
+    /// Ridge term lambda, relative to mean diagonal of the Gram.
+    pub lambda_rel: f32,
+}
+
+impl LayerProblem {
+    /// H = X^T X + lambda I with lambda = lambda_rel * mean(diag).
+    pub fn hessian(&self) -> Mat {
+        let d = self.gram.rows;
+        let mean_diag: f32 =
+            (0..d).map(|i| self.gram.at(i, i)).sum::<f32>() / d.max(1) as f32;
+        let lambda = self.lambda_rel * mean_diag.max(1e-8);
+        let mut h = self.gram.clone();
+        for i in 0..d {
+            *h.at_mut(i, i) += lambda;
+        }
+        h
+    }
+
+    /// Layer-wise relative reconstruction error
+    /// ||X(W - What)||^2 / ||X What||^2, computed from the Gram identity
+    /// ||X A||^2 = tr(A^T G A).
+    pub fn recon_error(&self, pruned: &Mat) -> f64 {
+        let diff = pruned.sub(&self.w);
+        let num = quad_trace(&self.gram, &diff);
+        let den = quad_trace(&self.gram, &self.w).max(1e-30);
+        num / den
+    }
+}
+
+/// tr(A^T G A) = sum_j a_j^T G a_j over columns a_j of A.
+pub fn quad_trace(g: &Mat, a: &Mat) -> f64 {
+    assert_eq!(g.rows, a.rows);
+    // Compute G A once, then inner-product with A.
+    let ga = crate::sparse::gemm::matmul(g, a);
+    ga.data
+        .iter()
+        .zip(&a.data)
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+/// Result of pruning one layer.
+#[derive(Clone, Debug)]
+pub struct PrunedLayer {
+    pub w: Mat,
+    pub mask: Mat,
+    pub recon_error: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn toy_problem(d: usize, out: usize, seed: u64) -> LayerProblem {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(3 * d, d, |_, _| rng.normal());
+        let gram = crate::sparse::gemm::gram(&x);
+        let w = Mat::from_fn(d, out, |_, _| rng.heavy_tail());
+        LayerProblem {
+            name: "toy".into(),
+            w,
+            gram,
+            pattern: NmPattern::new(4, 8),
+            lambda_rel: 0.01,
+        }
+    }
+
+    #[test]
+    fn recon_error_zero_for_identity() {
+        let p = toy_problem(16, 16, 1);
+        let e = p.recon_error(&p.w.clone());
+        assert!(e.abs() < 1e-9);
+    }
+
+    #[test]
+    fn recon_error_positive_for_zeroed() {
+        let p = toy_problem(16, 16, 2);
+        let zero = Mat::zeros(16, 16);
+        let e = p.recon_error(&zero);
+        assert!((e - 1.0).abs() < 1e-6, "zeroing gives exactly 1.0, got {e}");
+    }
+
+    #[test]
+    fn quad_trace_matches_direct() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(20, 8, |_, _| rng.normal());
+        let g = crate::sparse::gemm::gram(&x);
+        let a = Mat::from_fn(8, 5, |_, _| rng.normal());
+        let xa = crate::sparse::gemm::matmul(&x, &a);
+        let want: f64 = xa.data.iter().map(|&v| v as f64 * v as f64).sum();
+        let got = quad_trace(&g, &a);
+        assert!((got - want).abs() / want.abs() < 1e-4);
+    }
+}

@@ -1,0 +1,300 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! python/compile/aot.py) and resolves weight tensors, corpora, probes and
+//! HLO entry points on disk. The manifest is the single contract between
+//! the build-time python side and the runtime Rust side.
+
+use crate::util::json::{self, Json};
+use crate::util::npy;
+use crate::util::tensor::Mat;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Model hyperparameters (mirrors python compile.model.Config).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub rms_eps: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub prunable: bool,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct DykstraArtifact {
+    pub m: usize,
+    pub bucket: usize,
+    pub iters: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub file: String,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GramSite {
+    pub name: String,
+    pub dim: usize,
+    pub weights: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CorpusInfo {
+    pub file: String,
+    pub len: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: ModelCfg,
+    pub weights: Vec<WeightInfo>,
+    pub gram_sites: Vec<GramSite>,
+    pub dykstra: Vec<DykstraArtifact>,
+    pub model_fwd: ModelArtifact,
+    pub model_grad: ModelArtifact,
+    pub calib: ModelArtifact,
+    pub corpora: BTreeMap<String, CorpusInfo>,
+    pub probes_file: String,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("manifest.json under {}", root.display()))?;
+        let j = json::parse(&text)?;
+        let mj = j.req("model")?;
+        let model = ModelCfg {
+            vocab: mj.req("vocab")?.as_usize().context("vocab")?,
+            d_model: mj.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: mj.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: mj.req("n_heads")?.as_usize().context("n_heads")?,
+            d_ff: mj.req("d_ff")?.as_usize().context("d_ff")?,
+            seq_len: mj.req("seq_len")?.as_usize().context("seq_len")?,
+            rms_eps: mj.req("rms_eps")?.as_f64().context("rms_eps")? as f32,
+        };
+        let weights = j
+            .req("weights")?
+            .as_arr()
+            .context("weights")?
+            .iter()
+            .map(|w| -> Result<WeightInfo> {
+                Ok(WeightInfo {
+                    name: w.req("name")?.as_str().context("name")?.to_string(),
+                    shape: w
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|s| s.as_usize().unwrap_or(0))
+                        .collect(),
+                    prunable: matches!(w.req("prunable")?, Json::Bool(true)),
+                    file: w.req("file")?.as_str().context("file")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let gram_sites = j
+            .req("gram_sites")?
+            .as_arr()
+            .context("gram_sites")?
+            .iter()
+            .map(|s| -> Result<GramSite> {
+                Ok(GramSite {
+                    name: s.req("name")?.as_str().context("site name")?.to_string(),
+                    dim: s.req("dim")?.as_usize().context("site dim")?,
+                    weights: s
+                        .req("weights")?
+                        .as_arr()
+                        .context("site weights")?
+                        .iter()
+                        .filter_map(|w| w.as_str().map(str::to_string))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let arts = j.req("artifacts")?;
+        let dykstra = arts
+            .req("dykstra")?
+            .as_arr()
+            .context("dykstra artifacts")?
+            .iter()
+            .map(|d| -> Result<DykstraArtifact> {
+                Ok(DykstraArtifact {
+                    m: d.req("m")?.as_usize().context("m")?,
+                    bucket: d.req("bucket")?.as_usize().context("bucket")?,
+                    iters: d.req("iters")?.as_usize().context("iters")?,
+                    file: d.req("file")?.as_str().context("file")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let model_art = |key: &str| -> Result<ModelArtifact> {
+            let a = arts.req(key)?;
+            Ok(ModelArtifact {
+                file: a.req("file")?.as_str().context("file")?.to_string(),
+                batch: a.req("batch")?.as_usize().context("batch")?,
+                seq: a.req("seq")?.as_usize().context("seq")?,
+            })
+        };
+        let mut corpora = BTreeMap::new();
+        if let Json::Obj(o) = j.req("corpora")? {
+            for (k, v) in o {
+                if let (Some(f), Some(l)) = (
+                    v.get("file").and_then(Json::as_str),
+                    v.get("len").and_then(Json::as_usize),
+                ) {
+                    corpora.insert(k.clone(), CorpusInfo { file: f.to_string(), len: l });
+                }
+            }
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            model,
+            weights,
+            gram_sites,
+            dykstra,
+            model_fwd: model_art("model_fwd")?,
+            model_grad: model_art("model_grad")?,
+            calib: model_art("calib")?,
+            corpora,
+            probes_file: j.req("probes")?.as_str().context("probes")?.to_string(),
+        })
+    }
+
+    /// Names of prunable weights, canonical (manifest) order.
+    pub fn prunable_names(&self) -> Vec<String> {
+        self.weights
+            .iter()
+            .filter(|w| w.prunable)
+            .map(|w| w.name.clone())
+            .collect()
+    }
+
+    /// Load all weights as matrices (1-D tensors become 1 x d "row mats").
+    pub fn load_weights(&self) -> Result<BTreeMap<String, Mat>> {
+        let mut out = BTreeMap::new();
+        for w in &self.weights {
+            let npy = npy::read(&self.root.join(&w.file))?;
+            if npy.shape != w.shape {
+                bail!("{}: manifest shape {:?} != npy {:?}", w.name, w.shape, npy.shape);
+            }
+            let data = npy.f32()?.to_vec();
+            let mat = match w.shape.len() {
+                1 => Mat::from_vec(1, w.shape[0], data),
+                2 => Mat::from_vec(w.shape[0], w.shape[1], data),
+                _ => bail!("{}: unsupported rank {}", w.name, w.shape.len()),
+            };
+            out.insert(w.name.clone(), mat);
+        }
+        Ok(out)
+    }
+
+    /// Load a corpus token stream.
+    pub fn load_corpus(&self, name: &str) -> Result<Vec<u8>> {
+        let info = self
+            .corpora
+            .get(name)
+            .with_context(|| format!("corpus '{name}' not in manifest"))?;
+        let bytes = std::fs::read(self.root.join(&info.file))?;
+        if bytes.len() != info.len {
+            bail!("corpus {name}: expected {} bytes, got {}", info.len, bytes.len());
+        }
+        Ok(bytes)
+    }
+
+    /// Pick the best dykstra artifact for a given (m, block_count):
+    /// largest bucket that the workload fills at least once (amortizes
+    /// per-call dispatch), else the smallest bucket that covers the tail.
+    pub fn pick_dykstra(&self, m: usize, blocks: usize) -> Option<&DykstraArtifact> {
+        let mut candidates: Vec<&DykstraArtifact> =
+            self.dykstra.iter().filter(|a| a.m == m).collect();
+        candidates.sort_by_key(|a| a.bucket);
+        let filled = candidates.iter().rev().find(|a| blocks >= a.bucket);
+        filled.copied().or_else(|| candidates.first().copied())
+    }
+}
+
+/// Registry wrapper that caches loaded artifacts lazily.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+}
+
+impl ArtifactRegistry {
+    pub fn open(root: &Path) -> Result<Self> {
+        Ok(ArtifactRegistry { manifest: Manifest::load(root)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let m = Manifest::load(&root).unwrap();
+        assert_eq!(m.model.vocab, 256);
+        assert!(!m.weights.is_empty());
+        assert!(!m.dykstra.is_empty());
+        assert_eq!(m.gram_sites.len(), 4 * m.model.n_layers);
+        // every prunable weight appears in exactly one gram site
+        let mut covered = std::collections::BTreeSet::new();
+        for s in &m.gram_sites {
+            for w in &s.weights {
+                covered.insert(w.clone());
+            }
+        }
+        for name in m.prunable_names() {
+            assert!(covered.contains(&name), "{name} missing from gram sites");
+        }
+    }
+
+    #[test]
+    fn weights_load_and_match_shapes() {
+        let Some(root) = artifacts_root() else {
+            return;
+        };
+        let m = Manifest::load(&root).unwrap();
+        let ws = m.load_weights().unwrap();
+        assert_eq!(ws.len(), m.weights.len());
+        let embed = &ws["embed"];
+        assert_eq!((embed.rows, embed.cols), (256, m.model.d_model));
+    }
+
+    #[test]
+    fn bucket_choice_minimizes_padding() {
+        let Some(root) = artifacts_root() else {
+            return;
+        };
+        let m = Manifest::load(&root).unwrap();
+        // For a tiny block count the small bucket must win.
+        let small = m.pick_dykstra(16, 10).unwrap();
+        let all: Vec<usize> = m.dykstra.iter().filter(|a| a.m == 16).map(|a| a.bucket).collect();
+        assert_eq!(small.bucket, *all.iter().min().unwrap());
+        // For a huge block count the large bucket must win.
+        let large = m.pick_dykstra(16, 1_000_000).unwrap();
+        assert_eq!(large.bucket, *all.iter().max().unwrap());
+    }
+}

@@ -1,0 +1,213 @@
+//! PJRT execution engine: compiles HLO-text artifacts once, caches the
+//! loaded executables, and exposes typed entry points for the coordinator
+//! (dykstra batch solve, model forward, grads, calibration).
+//!
+//! HLO text -> HloModuleProto::from_text_file -> XlaComputation -> compile
+//! (the 64-bit-proto-id workaround; see /opt/xla-example/README.md).
+
+use crate::runtime::artifacts::{DykstraArtifact, Manifest};
+use crate::runtime::literal;
+use crate::util::tensor::{Blocks, Mat};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub struct Engine {
+    client: PjRtClient,
+    root: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
+    /// Cumulative PJRT execute() wall time, for the perf report.
+    pub exec_nanos: std::cell::Cell<u64>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    pub fn new(manifest: &Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            root: manifest.root.clone(),
+            cache: RefCell::new(HashMap::new()),
+            exec_nanos: std::cell::Cell::new(0),
+            exec_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an HLO-text artifact by its relative path.
+    pub fn executable(&self, rel_file: &str) -> Result<std::rc::Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(rel_file) {
+            return Ok(exe.clone());
+        }
+        let path = self.root.join(rel_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?,
+        );
+        self.cache
+            .borrow_mut()
+            .insert(rel_file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the output tuple
+    /// (artifacts are lowered with return_tuple=True).
+    pub fn run(&self, rel_file: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(rel_file)?;
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<Literal>(inputs)?;
+        self.exec_nanos
+            .set(self.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Batched Dykstra solve through the AOT artifact. `absw.b` must equal
+    /// the artifact bucket (the coordinator's batcher handles padding).
+    pub fn dykstra(
+        &self,
+        art: &DykstraArtifact,
+        absw: &Blocks,
+        n: usize,
+        tau: f32,
+    ) -> Result<Blocks> {
+        anyhow::ensure!(absw.b == art.bucket, "batch {} != bucket {}", absw.b, art.bucket);
+        anyhow::ensure!(absw.m == art.m, "m {} != artifact m {}", absw.m, art.m);
+        let inputs = vec![
+            literal::blocks_literal(absw)?,
+            literal::scalar_f32(tau),
+            literal::scalar_f32((n as f32).ln()),
+        ];
+        let outs = self.run(&art.file, &inputs)?;
+        anyhow::ensure!(outs.len() == 1, "dykstra: expected 1 output");
+        literal::literal_blocks(&outs[0], absw.b, absw.m)
+    }
+}
+
+/// Model-level engine: weights order + token plumbing for the three model
+/// artifacts. Wraps `Engine` with the manifest's canonical weight order.
+pub struct ModelRuntime<'a> {
+    pub engine: &'a Engine,
+    pub manifest: &'a Manifest,
+}
+
+impl<'a> ModelRuntime<'a> {
+    pub fn new(engine: &'a Engine, manifest: &'a Manifest) -> Self {
+        ModelRuntime { engine, manifest }
+    }
+
+    fn weight_literals(&self, weights: &std::collections::BTreeMap<String, Mat>) -> Result<Vec<Literal>> {
+        let mut lits = Vec::with_capacity(self.manifest.weights.len());
+        for info in &self.manifest.weights {
+            let mat = weights
+                .get(&info.name)
+                .with_context(|| format!("missing weight {}", info.name))?;
+            let lit = if info.shape.len() == 1 {
+                literal::f32_literal(&[info.shape[0]], &mat.data)?
+            } else {
+                literal::mat_literal(mat)?
+            };
+            lits.push(lit);
+        }
+        Ok(lits)
+    }
+
+    /// model_fwd: (loss, logprobs[batch, seq-1]).
+    pub fn forward(
+        &self,
+        weights: &std::collections::BTreeMap<String, Mat>,
+        tokens: &[i32],
+    ) -> Result<(f32, Mat)> {
+        let art = &self.manifest.model_fwd;
+        anyhow::ensure!(tokens.len() == art.batch * art.seq, "token shape");
+        let mut inputs = self.weight_literals(weights)?;
+        inputs.push(literal::i32_literal(&[art.batch, art.seq], tokens)?);
+        let outs = self.engine.run(&art.file, &inputs)?;
+        anyhow::ensure!(outs.len() == 2, "model_fwd: expected 2 outputs");
+        let loss = literal::literal_scalar_f32(&outs[0])?;
+        let logp = literal::literal_mat(&outs[1], art.batch, art.seq - 1)?;
+        Ok((loss, logp))
+    }
+
+    /// calib: per-site Gram matrices for one token batch. The artifact's
+    /// first output is the batch loss (kept for sanity + to defeat
+    /// parameter DCE); we return (loss, grams).
+    pub fn calibration_with_loss(
+        &self,
+        weights: &std::collections::BTreeMap<String, Mat>,
+        tokens: &[i32],
+    ) -> Result<(f32, Vec<Mat>)> {
+        let art = &self.manifest.calib;
+        anyhow::ensure!(tokens.len() == art.batch * art.seq, "token shape");
+        let mut inputs = self.weight_literals(weights)?;
+        inputs.push(literal::i32_literal(&[art.batch, art.seq], tokens)?);
+        let outs = self.engine.run(&art.file, &inputs)?;
+        let sites = &self.manifest.gram_sites;
+        anyhow::ensure!(outs.len() == 1 + sites.len(), "calib outputs");
+        let loss = literal::literal_scalar_f32(&outs[0])?;
+        let grams = sites
+            .iter()
+            .zip(&outs[1..])
+            .map(|(site, lit)| literal::literal_mat(lit, site.dim, site.dim))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grams))
+    }
+
+    /// calib grams only.
+    pub fn calibration(
+        &self,
+        weights: &std::collections::BTreeMap<String, Mat>,
+        tokens: &[i32],
+    ) -> Result<Vec<Mat>> {
+        Ok(self.calibration_with_loss(weights, tokens)?.1)
+    }
+
+    /// model_grad: masked fine-tune step gradients.
+    /// Returns (loss, grads in canonical weight order).
+    pub fn grads(
+        &self,
+        weights: &std::collections::BTreeMap<String, Mat>,
+        masks: &std::collections::BTreeMap<String, Mat>,
+        tokens: &[i32],
+    ) -> Result<(f32, Vec<Mat>)> {
+        let art = &self.manifest.model_grad;
+        anyhow::ensure!(tokens.len() == art.batch * art.seq, "token shape");
+        let mut inputs = self.weight_literals(weights)?;
+        for info in self.manifest.weights.iter().filter(|w| w.prunable) {
+            let mask = masks
+                .get(&info.name)
+                .with_context(|| format!("missing mask {}", info.name))?;
+            inputs.push(literal::mat_literal(mask)?);
+        }
+        inputs.push(literal::i32_literal(&[art.batch, art.seq], tokens)?);
+        let outs = self.engine.run(&art.file, &inputs)?;
+        anyhow::ensure!(
+            outs.len() == 1 + self.manifest.weights.len(),
+            "model_grad outputs: {} != {}",
+            outs.len(),
+            1 + self.manifest.weights.len()
+        );
+        let loss = literal::literal_scalar_f32(&outs[0])?;
+        let mut grads = Vec::with_capacity(self.manifest.weights.len());
+        for (info, lit) in self.manifest.weights.iter().zip(&outs[1..]) {
+            let (r, c) = match info.shape.len() {
+                1 => (1, info.shape[0]),
+                _ => (info.shape[0], info.shape[1]),
+            };
+            grads.push(literal::literal_mat(lit, r, c)?);
+        }
+        Ok((loss, grads))
+    }
+}

@@ -1,0 +1,96 @@
+//! Tensor <-> xla::Literal conversion. All HLO artifacts exchange f32
+//! (weights, blocks, grams) and i32 (tokens); conversions are zero-copy
+//! where the xla crate allows (`create_from_shape_and_untyped_data`).
+
+use crate::util::tensor::{Blocks, Mat};
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn mat_literal(m: &Mat) -> Result<Literal> {
+    f32_literal(&[m.rows, m.cols], &m.data)
+}
+
+pub fn blocks_literal(b: &Blocks) -> Result<Literal> {
+    f32_literal(&[b.b, b.m, b.m], &b.data)
+}
+
+pub fn vec_literal(v: &[f32]) -> Result<Literal> {
+    f32_literal(&[v.len()], v)
+}
+
+/// Extract an f32 tensor of known shape from a literal.
+pub fn literal_f32(lit: &Literal, expect_len: usize) -> Result<Vec<f32>> {
+    match lit.ty()? {
+        ElementType::F32 => {}
+        other => bail!("literal: expected f32, got {other:?}"),
+    }
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != expect_len {
+        bail!("literal: expected {expect_len} elements, got {}", v.len());
+    }
+    Ok(v)
+}
+
+pub fn literal_mat(lit: &Literal, rows: usize, cols: usize) -> Result<Mat> {
+    Ok(Mat::from_vec(rows, cols, literal_f32(lit, rows * cols)?))
+}
+
+pub fn literal_blocks(lit: &Literal, b: usize, m: usize) -> Result<Blocks> {
+    Ok(Blocks { b, m, data: literal_f32(lit, b * m * m)? })
+}
+
+pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.5, -0.125];
+        let lit = f32_literal(&[2, 3], &data).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(literal_f32(&lit, 6).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 300000, 0];
+        let lit = i32_literal(&[4], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn wrong_len_rejected() {
+        let lit = f32_literal(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!(literal_f32(&lit, 5).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them on the CPU
+//! PJRT client. This is the only module that touches the `xla` crate —
+//! everything above it (coordinator, pruning, eval) speaks `Mat`/`Blocks`.
+
+pub mod artifacts;
+pub mod client;
+pub mod literal;
+
+pub use artifacts::{ArtifactRegistry, Manifest};
+pub use client::Engine;

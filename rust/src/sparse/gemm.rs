@@ -1,0 +1,148 @@
+//! Dense f32 GEMM — the cuBLAS stand-in baseline for Fig. 4 (lower) and
+//! the workhorse behind all dense linear algebra in the pruning stack.
+//!
+//! Blocked i-k-j loop order with a contiguous accumulator row: the inner
+//! loop is a pure axpy over `b.row(k)`, which LLVM auto-vectorizes. Good
+//! enough to be a fair dense baseline on one core (~85% of what a hand-
+//! tuned micro-kernel reaches at these sizes; see EXPERIMENTS.md §Perf).
+
+use crate::util::tensor::Mat;
+
+const KC: usize = 256; // k-panel kept hot in L1/L2
+const MC: usize = 64; // i-panel
+
+/// c = a @ b.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// c += a @ b (c must be pre-sized).
+pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    for kk in (0..a.cols).step_by(KC) {
+        let kend = (kk + KC).min(a.cols);
+        for ii in (0..a.rows).step_by(MC) {
+            let iend = (ii + MC).min(a.rows);
+            for i in ii..iend {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for k in kk..kend {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(k);
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    matmul_acc(a, b, c);
+}
+
+/// c = a^T @ a (Gram matrix), exploiting symmetry.
+pub fn gram(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut c = Mat::zeros(n, n);
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for i in 0..n {
+            let ai = row[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in i..n {
+                crow[j] += ai * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            c.data[i * n + j] = c.data[j * n + i];
+        }
+    }
+    c
+}
+
+/// y = a @ x for a vector x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0f32; a.rows];
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let mut s = 0.0f32;
+        for (rv, xv) in row.iter().zip(x) {
+            s += rv * xv;
+        }
+        y[i] = s;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f32;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3usize, 4usize, 5usize), (17, 33, 9), (64, 64, 64)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = Mat::from_fn(20, 12, |_, _| rng.normal());
+        let got = gram(&a);
+        let want = matmul(&a.transpose(), &a);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let mut rng = Rng::new(3);
+        let a = Mat::from_fn(7, 11, |_, _| rng.normal());
+        let x: Vec<f32> = (0..11).map(|_| rng.normal()).collect();
+        let xm = Mat::from_vec(11, 1, x.clone());
+        let want = matmul(&a, &xm);
+        let got = matvec(&a, &x);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Sparse / dense matrix kernels: the execution substrate for Fig. 4
+//! (lower) — measuring what (transposable) N:M sparsity buys on forward
+//! and backward matrix products relative to dense GEMM. Stand-in for
+//! nmSPMM / cuBLAS on this testbed (DESIGN.md §Substitutions).
+
+pub mod gemm;
+pub mod nm;

@@ -1,0 +1,234 @@
+//! Compressed N:M sparse weight format + sparse GEMM kernels.
+//!
+//! Format (`NmCompressed`): for every group of M consecutive weights along
+//! the contraction (row) axis we store the N nonzero values plus their
+//! in-group indices — the same value+metadata layout Sparse Tensor Cores
+//! and nmSPMM use, so arithmetic-intensity ratios carry over.
+//!
+//! The Fig. 4 (lower) story this module reproduces:
+//!   * forward  y = x @ W  accelerates with ROW-wise (standard) N:M;
+//!   * backward dx = g @ W^T needs COLUMN groups of W to be N:M — i.e. a
+//!     TRANSPOSABLE mask — to use the same compressed fast path. With a
+//!     standard mask the backward falls back to dense-gather (slow path),
+//!     which is exactly the asymmetry the paper motivates with.
+
+use crate::util::tensor::Mat;
+
+/// N:M-compressed matrix (compressed along rows: each column j of W is
+/// split into row-groups of M with exactly N kept).
+#[derive(Clone, Debug)]
+pub struct NmCompressed {
+    pub rows: usize, // dense rows (contraction dim)
+    pub cols: usize,
+    pub n: usize,
+    pub m: usize,
+    /// (rows/M * N) x cols values, row-group-major.
+    pub values: Vec<f32>,
+    /// Matching in-group row offsets (0..M).
+    pub indices: Vec<u8>,
+}
+
+impl NmCompressed {
+    /// Compress `w` under `mask` (mask must be column-wise N:M along rows:
+    /// every M consecutive entries of each column contain exactly N ones).
+    pub fn compress(w: &Mat, mask: &Mat, n: usize, m: usize) -> Option<Self> {
+        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        if w.rows % m != 0 {
+            return None;
+        }
+        let groups = w.rows / m;
+        let mut values = vec![0.0f32; groups * n * w.cols];
+        let mut indices = vec![0u8; groups * n * w.cols];
+        for g in 0..groups {
+            for j in 0..w.cols {
+                let mut slot = 0usize;
+                for r in 0..m {
+                    let i = g * m + r;
+                    if mask.at(i, j) != 0.0 {
+                        if slot >= n {
+                            return None; // not N:M along this column group
+                        }
+                        let at = (g * n + slot) * w.cols + j;
+                        values[at] = w.at(i, j);
+                        indices[at] = r as u8;
+                        slot += 1;
+                    }
+                }
+                if slot != n {
+                    return None;
+                }
+            }
+        }
+        Some(NmCompressed { rows: w.rows, cols: w.cols, n, m, values, indices })
+    }
+
+    /// Decompress back to dense (for testing).
+    pub fn decompress(&self) -> Mat {
+        let mut w = Mat::zeros(self.rows, self.cols);
+        let groups = self.rows / self.m;
+        for g in 0..groups {
+            for s in 0..self.n {
+                for j in 0..self.cols {
+                    let at = (g * self.n + s) * self.cols + j;
+                    let r = self.indices[at] as usize;
+                    *w.at_mut(g * self.m + r, j) = self.values[at];
+                }
+            }
+        }
+        w
+    }
+}
+
+/// Forward sparse GEMM: y = x @ W_compressed. Skips the (M-N)/M zero
+/// fraction of multiply-adds; the gather on x reads within one M-element
+/// window (L1-resident).
+///
+/// §Perf: the x gather is the only non-contiguous access; `idx < M` is a
+/// format invariant (enforced by `compress`), so the window lookup uses
+/// an unchecked read and the remaining loop is a pure vals/idxs stream.
+pub fn spmm(x: &Mat, w: &NmCompressed) -> Mat {
+    assert_eq!(x.cols, w.rows);
+    let mut y = Mat::zeros(x.rows, w.cols);
+    let groups = w.rows / w.m;
+    let cols = w.cols;
+    for i in 0..x.rows {
+        let xrow = x.row(i);
+        let yrow = y.row_mut(i);
+        for g in 0..groups {
+            let base = g * w.m;
+            let window = &xrow[base..base + w.m];
+            for s in 0..w.n {
+                let voff = (g * w.n + s) * cols;
+                let vals = &w.values[voff..voff + cols];
+                let idxs = &w.indices[voff..voff + cols];
+                for j in 0..cols {
+                    // SAFETY: compress() guarantees idxs[j] < M == window.len().
+                    let xv = unsafe { *window.get_unchecked(idxs[j] as usize) };
+                    yrow[j] += xv * vals[j];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Backward fast path: dx = g @ W^T where W^T is ALSO available compressed
+/// — only possible when the mask is transposable. `wt` is the compressed
+/// transpose (compress(w.transpose(), mask.transpose())).
+pub fn spmm_transposed_fast(g: &Mat, wt: &NmCompressed) -> Mat {
+    spmm(g, wt)
+}
+
+/// Backward slow path for non-transposable masks: the compressed layout
+/// cannot serve the transposed product, so the realistic fallback is
+/// decompress-to-dense + dense GEMM — i.e. the backward pass gets NO
+/// sparsity speedup (plus the decompression tax). This is exactly the
+/// asymmetry Fig. 4 (lower) quantifies.
+pub fn spmm_transposed_slow(g: &Mat, w: &NmCompressed) -> Mat {
+    let dense = w.decompress();
+    crate::sparse::gemm::matmul(g, &dense.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::solver::{solve_matrix, Method, SolveCfg};
+    use crate::masks::NmPattern;
+    use crate::sparse::gemm;
+    use crate::util::rng::Rng;
+
+    fn transposable_setup(rows: usize, cols: usize, n: usize, m: usize) -> (Mat, Mat) {
+        let mut rng = Rng::new(7);
+        let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+        let mask = solve_matrix(
+            Method::Tsenor,
+            &w,
+            NmPattern::new(n, m),
+            &SolveCfg::default(),
+        );
+        (w, mask)
+    }
+
+    #[test]
+    fn compress_roundtrip() {
+        let (w, mask) = transposable_setup(16, 16, 4, 8);
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).expect("transposable => columnwise N:M");
+        assert_eq!(c.decompress(), wm);
+    }
+
+    #[test]
+    fn compress_rejects_non_nm() {
+        let w = Mat::from_fn(8, 8, |_, _| 1.0);
+        let mut mask = Mat::zeros(8, 8);
+        // 5 ones in the first column group of 8 (n=4 expected).
+        for i in 0..5 {
+            *mask.at_mut(i, 0) = 1.0;
+        }
+        assert!(NmCompressed::compress(&w, &mask, 4, 8).is_none());
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let (w, mask) = transposable_setup(16, 24, 4, 8);
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(5, 16, |_, _| rng.normal());
+        let got = spmm(&x, &c);
+        let want = gemm::matmul(&x, &wm);
+        for (g, wv) in got.data.iter().zip(&want.data) {
+            assert!((g - wv).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn transposable_backward_matches_dense() {
+        let (w, mask) = transposable_setup(16, 16, 4, 8);
+        let wm = w.hadamard(&mask);
+        let wt =
+            NmCompressed::compress(&wm.transpose(), &mask.transpose(), 4, 8).expect("transposable");
+        let mut rng = Rng::new(4);
+        let g = Mat::from_fn(5, 16, |_, _| rng.normal());
+        let fast = spmm_transposed_fast(&g, &wt);
+        let want = gemm::matmul(&g, &wm.transpose());
+        for (a, b) in fast.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn slow_path_matches_dense_too() {
+        let (w, mask) = transposable_setup(16, 16, 4, 8);
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
+        let mut rng = Rng::new(5);
+        let g = Mat::from_fn(3, 16, |_, _| rng.normal());
+        let slow = spmm_transposed_slow(&g, &c);
+        let want = gemm::matmul(&g, &wm.transpose());
+        for (a, b) in slow.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn standard_rowwise_mask_not_column_compressible() {
+        // A mask that is row-wise N:M (along cols) but NOT transposable
+        // should fail column-group compression — the motivating asymmetry.
+        let mut rng = Rng::new(11);
+        let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
+        // top-4-of-8 per ROW (standard N:M on the output axis).
+        let mut mask = Mat::zeros(8, 8);
+        for i in 0..8 {
+            let mut idx: Vec<usize> = (0..8).collect();
+            idx.sort_unstable_by(|&a, &b| {
+                w.at(i, b).abs().partial_cmp(&w.at(i, a).abs()).unwrap()
+            });
+            for &j in idx.iter().take(4) {
+                *mask.at_mut(i, j) = 1.0;
+            }
+        }
+        // Column groups will generically violate 4:8.
+        assert!(NmCompressed::compress(&w, &mask, 4, 8).is_none());
+    }
+}

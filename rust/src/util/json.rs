@@ -1,0 +1,345 @@
+//! Minimal JSON parser + writer (no external crates). Parses the build
+//! manifest and probe files emitted by python, and serializes metrics /
+//! bench reports. Supports the full JSON value grammar; numbers are f64.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(v) => v.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Convenience: `obj.req("a")?.req("b")` style access with errors.
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("json: missing key '{key}'"))
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    item.write(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push_str("{\n");
+                let pad = "  ".repeat(indent + 1);
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("json: trailing data at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("json: unexpected end");
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        b'f' => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        b'n' => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        _ => parse_num(b, pos),
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b.len() - *pos < lit.len() || &b[*pos..*pos + lit.len()] != lit.as_bytes() {
+        bail!("json: expected '{lit}' at byte {}", *pos);
+    }
+    *pos += lit.len();
+    Ok(())
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b':' {
+            bail!("json: expected ':' at byte {}", *pos);
+        }
+        *pos += 1;
+        let val = parse_value(b, pos)?;
+        map.insert(key, val);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => bail!("json: expected ',' or '}}' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut v = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(v));
+            }
+            _ => bail!("json: expected ',' or ']' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b[*pos] != b'"' {
+        bail!("json: expected string at byte {}", *pos);
+    }
+    *pos += 1;
+    let mut s = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => bail!("json: bad escape at byte {}", *pos),
+                }
+                *pos += 1;
+            }
+            c => {
+                // UTF-8 passthrough
+                let start = *pos;
+                let len = utf8_len(c);
+                *pos += len;
+                s.push_str(std::str::from_utf8(&b[start..start + len])?);
+            }
+        }
+    }
+    bail!("json: unterminated string")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(s.parse::<f64>()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let j = parse(r#"{"a": 1, "b": [true, null, "x\n"], "c": -2.5e3}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("c").unwrap().as_f64(), Some(-2500.0));
+        assert_eq!(j.get("b").unwrap().idx(2).unwrap().as_str(), Some("x\n"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let j = obj(vec![
+            ("name", Json::Str("tsenor".into())),
+            ("nums", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)])),
+            ("ok", Json::Bool(true)),
+        ]);
+        let text = j.to_string_pretty();
+        let back = parse(&text).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn parse_real_manifest_shape() {
+        let text = r#"{"version": 1, "weights": [{"name": "embed", "shape": [256, 256], "prunable": false}]}"#;
+        let j = parse(text).unwrap();
+        let w = &j.get("weights").unwrap().as_arr().unwrap()[0];
+        assert_eq!(w.get("name").unwrap().as_str(), Some("embed"));
+        assert_eq!(w.get("shape").unwrap().idx(0).unwrap().as_usize(), Some(256));
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        assert!(parse("{} garbage").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+}

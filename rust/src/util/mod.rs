@@ -1,0 +1,7 @@
+//! Foundation utilities: tensors, deterministic RNG, npy/JSON interchange.
+
+pub mod fastmath;
+pub mod json;
+pub mod npy;
+pub mod rng;
+pub mod tensor;

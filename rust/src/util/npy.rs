@@ -1,0 +1,186 @@
+//! Minimal .npy reader/writer (v1.0, C-order, little-endian f32/i32/u8).
+//! This is the weight-interchange format between the build-time python
+//! side (np.save) and the runtime Rust coordinator.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Npy {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+impl Npy {
+    pub fn f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            _ => bail!("npy: expected f32 data"),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// Parse the python-dict header, e.g.
+/// `{'descr': '<f4', 'fortran_order': False, 'shape': (256, 256), }`.
+fn parse_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
+    let grab = |key: &str| -> Result<String> {
+        let pos = h
+            .find(key)
+            .with_context(|| format!("npy header missing {key}"))?;
+        let rest = &h[pos + key.len()..];
+        let rest = rest.trim_start_matches([':', ' ', '\'', '"']);
+        Ok(rest.to_string())
+    };
+    let descr_raw = grab("'descr'")?;
+    let descr: String = descr_raw
+        .chars()
+        .take_while(|c| *c != '\'' && *c != '"')
+        .collect();
+    let fortran = grab("'fortran_order'")?.starts_with("True");
+    let shape_raw = grab("'shape'")?;
+    let open = shape_raw
+        .find('(')
+        .context("npy header shape: no open paren")?;
+    let close = shape_raw[open..]
+        .find(')')
+        .context("npy header shape: no close paren")?
+        + open;
+    let mut shape = Vec::new();
+    for part in shape_raw[open + 1..close].split(',') {
+        let t = part.trim();
+        if !t.is_empty() {
+            shape.push(t.parse::<usize>().context("npy shape parse")?);
+        }
+    }
+    Ok((descr, fortran, shape))
+}
+
+pub fn read(path: &Path) -> Result<Npy> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    read_bytes(&buf)
+}
+
+pub fn read_bytes(buf: &[u8]) -> Result<Npy> {
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let (major, _minor) = (buf[6], buf[7]);
+    let (hlen, hstart) = if major == 1 {
+        (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10)
+    } else {
+        (
+            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+            12,
+        )
+    };
+    let header = std::str::from_utf8(&buf[hstart..hstart + hlen])?;
+    let (descr, fortran, shape) = parse_header(header)?;
+    if fortran {
+        bail!("npy: fortran order unsupported");
+    }
+    let numel: usize = shape.iter().product();
+    let body = &buf[hstart + hlen..];
+    let data = match descr.as_str() {
+        "<f4" => {
+            let mut v = Vec::with_capacity(numel);
+            for c in body[..numel * 4].chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            NpyData::F32(v)
+        }
+        "<i4" => {
+            let mut v = Vec::with_capacity(numel);
+            for c in body[..numel * 4].chunks_exact(4) {
+                v.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            NpyData::I32(v)
+        }
+        "|u1" => NpyData::U8(body[..numel].to_vec()),
+        other => bail!("npy: unsupported dtype {other}"),
+    };
+    Ok(Npy { shape, data })
+}
+
+pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // Pad so that magic+version+len+header is a multiple of 64, ending in \n.
+    let base = MAGIC.len() + 2 + 2;
+    let total = (base + header.len() + 1).div_ceil(64) * 64;
+    while base + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("tsenor_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_f32(&p, &[3, 4], &data).unwrap();
+        let npy = read(&p).unwrap();
+        assert_eq!(npy.shape, vec![3, 4]);
+        assert_eq!(npy.f32().unwrap(), &data[..]);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let dir = std::env::temp_dir().join("tsenor_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.npy");
+        write_f32(&p, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let npy = read(&p).unwrap();
+        assert_eq!(npy.shape, vec![5]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_bytes(b"not numpy at all").is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Dense row-major f32 tensors (2-D and batched 3-D) — the in-memory
+//! currency of the L3 coordinator. Deliberately minimal: contiguous
+//! storage, explicit indexing, no broadcasting magic, so hot loops stay
+//! transparent to the optimizer.
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn abs(&self) -> Mat {
+        self.map(f32::abs)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Elementwise product (Hadamard).
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a * b)
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    /// Dense matmul (delegates to the optimized kernel in sparse::gemm).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        crate::sparse::gemm::matmul(self, other)
+    }
+}
+
+/// Batch of B dense M x M blocks, contiguous (B, M, M) row-major — the
+/// layout shared with the dykstra HLO artifacts (zero-copy to Literal).
+#[derive(Clone, Debug)]
+pub struct Blocks {
+    pub b: usize,
+    pub m: usize,
+    pub data: Vec<f32>,
+}
+
+impl Blocks {
+    pub fn zeros(b: usize, m: usize) -> Self {
+        Blocks { b, m, data: vec![0.0; b * m * m] }
+    }
+
+    #[inline]
+    pub fn block(&self, k: usize) -> &[f32] {
+        let sz = self.m * self.m;
+        &self.data[k * sz..(k + 1) * sz]
+    }
+
+    #[inline]
+    pub fn block_mut(&mut self, k: usize) -> &mut [f32] {
+        let sz = self.m * self.m;
+        &mut self.data[k * sz..(k + 1) * sz]
+    }
+
+    pub fn block_mat(&self, k: usize) -> Mat {
+        Mat::from_vec(self.m, self.m, self.block(k).to_vec())
+    }
+}
+
+/// Partition a matrix into M x M blocks, (B, M, M) contiguous, row-block
+/// major: block index = (i / M) * (cols / M) + (j / M). Requires both
+/// dimensions divisible by M (the transposable N:M setting).
+pub fn partition_blocks(w: &Mat, m: usize) -> Blocks {
+    assert!(w.rows % m == 0 && w.cols % m == 0,
+            "matrix {}x{} not divisible into {m}x{m} blocks", w.rows, w.cols);
+    let (br, bc) = (w.rows / m, w.cols / m);
+    let mut out = Blocks::zeros(br * bc, m);
+    for bi in 0..br {
+        for bj in 0..bc {
+            let k = bi * bc + bj;
+            let dst = out.block_mut(k);
+            for r in 0..m {
+                let src = &w.row(bi * m + r)[bj * m..(bj + 1) * m];
+                dst[r * m..(r + 1) * m].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of `partition_blocks`.
+pub fn assemble_blocks(blocks: &Blocks, rows: usize, cols: usize) -> Mat {
+    let m = blocks.m;
+    assert!(rows % m == 0 && cols % m == 0);
+    let bc = cols / m;
+    assert_eq!(blocks.b, (rows / m) * bc);
+    let mut out = Mat::zeros(rows, cols);
+    for k in 0..blocks.b {
+        let (bi, bj) = (k / bc, k % bc);
+        let src = blocks.block(k);
+        for r in 0..m {
+            let dst = &mut out.row_mut(bi * m + r)[bj * m..(bj + 1) * m];
+            dst.copy_from_slice(&src[r * m..(r + 1) * m]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Mat::from_fn(5, 7, |_, _| rng.normal());
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn partition_assemble_roundtrip() {
+        let mut rng = Rng::new(2);
+        let w = Mat::from_fn(16, 24, |_, _| rng.normal());
+        for m in [4usize, 8] {
+            let blocks = partition_blocks(&w, m);
+            assert_eq!(blocks.b, (16 / m) * (24 / m));
+            let back = assemble_blocks(&blocks, 16, 24);
+            assert_eq!(back, w);
+        }
+    }
+
+    #[test]
+    fn block_layout_matches_manual_index() {
+        let w = Mat::from_fn(8, 8, |i, j| (i * 8 + j) as f32);
+        let blocks = partition_blocks(&w, 4);
+        // block 1 = rows 0..4, cols 4..8
+        assert_eq!(blocks.block(1)[0], w.at(0, 4));
+        assert_eq!(blocks.block(1)[5], w.at(1, 5));
+        // block 2 = rows 4..8, cols 0..4
+        assert_eq!(blocks.block(2)[0], w.at(4, 0));
+    }
+
+    #[test]
+    fn hadamard_and_arith() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![2.0, 0.5, 1.0, 2.0]);
+        assert_eq!(a.hadamard(&b).data, vec![2.0, 1.0, 3.0, 8.0]);
+        assert_eq!(a.add(&b).data, vec![3.0, 2.5, 4.0, 6.0]);
+        assert_eq!(a.sub(&b).data, vec![-1.0, 1.5, 2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_requires_divisible() {
+        let w = Mat::zeros(10, 10);
+        partition_blocks(&w, 4);
+    }
+}

@@ -1,0 +1,83 @@
+//! Integration: the AOT/XLA Dykstra path must agree with the pure-Rust
+//! reference implementation, and the full XLA TSENOR solver must produce
+//! feasible, high-quality masks. Requires `make artifacts`.
+
+use std::path::PathBuf;
+use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::data::workload;
+use tsenor::masks::dykstra::{effective_tau, solve_batch};
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::{batch_feasible, batch_objective, relative_error, NmPattern};
+use tsenor::runtime::{Engine, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&root).unwrap())
+}
+
+#[test]
+fn xla_dykstra_matches_rust_reference() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::new(&manifest).unwrap();
+    let solver = XlaSolver::new(&engine, &manifest, SolveCfg::default());
+
+    for &(m, n) in &[(8usize, 4usize), (16, 8), (32, 16)] {
+        let scores = workload::heavy_tail_blocks(40, m, 7 + m as u64);
+        let frac_xla = solver.dykstra_fractional(&scores, n).unwrap();
+        let art = manifest.pick_dykstra(m, scores.b).unwrap();
+        let max_abs = scores.data.iter().fold(0.0f32, |a, &x| a.max(x));
+        let tau = effective_tau(max_abs, SolveCfg::default().dykstra.tau0);
+        let frac_rust = solve_batch(&scores, n, tau, art.iters);
+        let mut max_diff = 0.0f32;
+        for (a, b) in frac_xla.data.iter().zip(&frac_rust.data) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(
+            max_diff < 2e-3,
+            "m={m}: XLA vs Rust dykstra max diff {max_diff}"
+        );
+    }
+}
+
+#[test]
+fn xla_tsenor_end_to_end_quality() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::new(&manifest).unwrap();
+    let xla = XlaSolver::new(&engine, &manifest, SolveCfg::default());
+
+    let pattern = NmPattern::new(8, 16);
+    let scores = workload::heavy_tail_blocks(60, pattern.m, 99);
+    let masks = xla.solve_blocks(&scores, pattern.n).unwrap();
+    assert!(batch_feasible(&masks, pattern.n));
+
+    let (_, opt) = tsenor::masks::exact::solve_batch(&scores, pattern.n);
+    let got = batch_objective(&masks, &scores);
+    let rel = relative_error(opt, got);
+    // Paper: 1-10% relative error band for TSENOR.
+    assert!(rel < 0.10, "XLA TSENOR rel error {rel}");
+
+    // And it must agree closely with the CPU TSENOR pipeline.
+    let cpu = solver::solve_blocks(Method::Tsenor, &scores, pattern.n, &SolveCfg::default());
+    let cpu_obj = batch_objective(&cpu, &scores);
+    assert!(
+        (got - cpu_obj).abs() / cpu_obj.abs() < 5e-3,
+        "xla {got} vs cpu {cpu_obj}"
+    );
+}
+
+#[test]
+fn xla_bucket_padding_roundtrip() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::new(&manifest).unwrap();
+    let solver = XlaSolver::new(&engine, &manifest, SolveCfg::default());
+    // Deliberately awkward block count to force tail padding.
+    let scores = workload::heavy_tail_blocks(77, 16, 5);
+    let masks = solver.solve_blocks(&scores, 8).unwrap();
+    assert_eq!(masks.b, 77);
+    assert!(batch_feasible(&masks, 8));
+    assert!(solver.padded_blocks.get() > 0, "tail should have been padded");
+}

@@ -1,0 +1,174 @@
+//! Property-based tests over the mask-solver stack (hand-rolled
+//! generators — no proptest crate in the vendored set, same discipline:
+//! random structured inputs, invariant assertions, many cases).
+
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::{
+    batch_feasible, batch_objective, block_objective, exact, is_transposable_feasible,
+    relative_error, rounding,
+};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
+
+fn arb_blocks(rng: &mut Rng, b: usize, m: usize) -> Blocks {
+    // Mix of distributions: uniform, heavy-tail, near-ties, scaled.
+    let kind = rng.below(4);
+    let scale = 10.0f32.powi(rng.below(7) as i32 - 3);
+    let data = (0..b * m * m)
+        .map(|_| match kind {
+            0 => rng.f32() * scale,
+            1 => rng.heavy_tail().abs() * scale,
+            2 => (1.0 + 0.001 * rng.f32()) * scale, // near-ties
+            _ => rng.normal().abs() * scale,
+        })
+        .collect();
+    Blocks { b, m, data }
+}
+
+/// Every (m, n) pattern, every distribution: TSENOR masks are feasible
+/// and within the paper's error band of the optimum.
+#[test]
+fn tsenor_feasible_and_near_optimal_everywhere() {
+    let mut rng = Rng::new(2024);
+    let cfg = SolveCfg::default();
+    for &(m, n) in &[(4usize, 2usize), (8, 4), (8, 2), (16, 8), (16, 4), (32, 16), (32, 8)] {
+        for trial in 0..4 {
+            let scores = arb_blocks(&mut rng, 6, m);
+            let masks = solver::solve_blocks(Method::Tsenor, &scores, n, &cfg);
+            assert!(batch_feasible(&masks, n), "m={m} n={n} trial={trial}");
+            let (_, opt) = exact::solve_batch(&scores, n);
+            let rel = relative_error(opt, batch_objective(&masks, &scores));
+            assert!(rel < 0.12, "m={m} n={n} trial={trial}: rel={rel}");
+        }
+    }
+}
+
+/// Rounding invariance: scaling all scores by a positive constant must not
+/// change the mask (scale invariance of Algorithm 1 + 2).
+#[test]
+fn scale_invariance() {
+    let mut rng = Rng::new(7);
+    let cfg = SolveCfg::default();
+    for _ in 0..5 {
+        let scores = arb_blocks(&mut rng, 4, 8);
+        let scaled = Blocks {
+            b: scores.b,
+            m: scores.m,
+            data: scores.data.iter().map(|&x| x * 37.5).collect(),
+        };
+        let a = solver::solve_blocks(Method::Tsenor, &scores, 4, &cfg);
+        let b = solver::solve_blocks(Method::Tsenor, &scaled, 4, &cfg);
+        assert_eq!(a.data, b.data, "mask changed under scaling");
+    }
+}
+
+/// Permutation equivariance: permuting rows and columns of a block then
+/// solving = solving then permuting (objective equality; the argmax may
+/// differ under ties, so compare objectives).
+#[test]
+fn permutation_equivariance_objective() {
+    let mut rng = Rng::new(13);
+    let m = 8;
+    let n = 4;
+    for _ in 0..8 {
+        let scores = arb_blocks(&mut rng, 1, m);
+        let mut perm: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut perm);
+        let mut permuted = Blocks::zeros(1, m);
+        for i in 0..m {
+            for j in 0..m {
+                permuted.data[perm[i] * m + perm[j]] = scores.data[i * m + j];
+            }
+        }
+        let cfg = SolveCfg::default();
+        let a = solver::solve_blocks(Method::Tsenor, &scores, n, &cfg);
+        let b = solver::solve_blocks(Method::Tsenor, &permuted, n, &cfg);
+        let oa = batch_objective(&a, &scores);
+        let ob = batch_objective(&b, &permuted);
+        assert!((oa - ob).abs() / oa.max(1e-9) < 0.02, "{oa} vs {ob}");
+    }
+}
+
+/// Exact-solver upper bound: no method may ever beat it.
+#[test]
+fn exact_dominates_all_methods() {
+    let mut rng = Rng::new(31);
+    let cfg = SolveCfg { random_k: 100, ..Default::default() };
+    for trial in 0..3 {
+        let scores = arb_blocks(&mut rng, 4, 8);
+        let (_, opt) = exact::solve_batch(&scores, 4);
+        for &method in Method::all() {
+            if method == Method::Exact {
+                continue;
+            }
+            let masks = solver::solve_blocks(method, &scores, 4, &cfg);
+            let obj = batch_objective(&masks, &scores);
+            assert!(
+                obj <= opt + 1e-4 * opt.abs().max(1.0),
+                "{} beat exact on trial {trial}: {obj} > {opt}",
+                method.name()
+            );
+        }
+    }
+}
+
+/// Greedy+repair from any warm start stays feasible (repair is total).
+#[test]
+fn repair_total_from_random_masks() {
+    let mut rng = Rng::new(77);
+    for &(m, n) in &[(4usize, 1usize), (8, 3), (16, 5), (16, 15)] {
+        for _ in 0..10 {
+            let score: Vec<f32> = (0..m * m).map(|_| rng.f32()).collect();
+            // random partial mask respecting caps
+            let mut mask = vec![0.0f32; m * m];
+            let mut rows = vec![0usize; m];
+            let mut cols = vec![0usize; m];
+            for _ in 0..rng.below(n * m + 1) {
+                let i = rng.below(m);
+                let j = rng.below(m);
+                if mask[i * m + j] == 0.0 && rows[i] < n && cols[j] < n {
+                    mask[i * m + j] = 1.0;
+                    rows[i] += 1;
+                    cols[j] += 1;
+                }
+            }
+            rounding::repair(&mut mask, &score, m, n);
+            assert!(is_transposable_feasible(&mask, m, n), "m={m} n={n}");
+        }
+    }
+}
+
+/// Matrix partition/solve/assemble keeps per-block objectives identical to
+/// solving the blocks directly.
+#[test]
+fn matrix_roundtrip_objective_identity() {
+    let mut rng = Rng::new(5);
+    let w = Mat::from_fn(32, 64, |_, _| rng.heavy_tail());
+    let cfg = SolveCfg::default();
+    let pattern = tsenor::masks::NmPattern::new(4, 8);
+    let mask_mat = solver::solve_matrix(Method::Tsenor, &w, pattern, &cfg);
+    let blocks_w = partition_blocks(&w.abs(), 8);
+    let blocks_mask = partition_blocks(&mask_mat, 8);
+    let direct = solver::solve_blocks(Method::Tsenor, &blocks_w, 4, &cfg);
+    assert_eq!(blocks_mask.data, direct.data);
+    let back = assemble_blocks(&blocks_mask, 32, 64);
+    assert_eq!(back.data, mask_mat.data);
+}
+
+/// Local search monotonicity across many random instances.
+#[test]
+fn local_search_monotone_many() {
+    let mut rng = Rng::new(91);
+    for _ in 0..50 {
+        let m = [4, 8, 16][rng.below(3)];
+        let n = 1 + rng.below(m - 1);
+        let score: Vec<f32> = (0..m * m).map(|_| rng.heavy_tail().abs()).collect();
+        let greedy = rounding::greedy_select(&score, m, n);
+        let mut ls = greedy.clone();
+        rounding::local_search(&mut ls, &score, m, n, 10);
+        assert!(
+            block_objective(&ls, &score) >= block_objective(&greedy, &score) - 1e-5,
+            "m={m} n={n}"
+        );
+    }
+}
