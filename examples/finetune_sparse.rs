@@ -8,12 +8,13 @@
 //! Bi-NM retraining row printed by the fig4_speedup bench.
 
 use tsenor::coordinator::metrics::Metrics;
-use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::coordinator::pipeline;
 use tsenor::masks::solver::{Method, SolveCfg};
-use tsenor::masks::NmPattern;
 use tsenor::model::finetune::{self, FinetuneCfg};
+use tsenor::pruning::CpuOracle;
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::{Engine, Manifest};
+use tsenor::spec::{Framework, PruneSpec, Structure};
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args()
@@ -25,27 +26,20 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(root)?;
     let engine = Engine::new(&manifest)?;
     let rt = ModelRuntime::new(&engine, &manifest);
-    let pattern = NmPattern::new(16, 32);
+
+    // One spec per arm; the oracle is shared.
+    let spec = PruneSpec::new(Framework::Alps)
+        .pattern(16, 32)
+        .calib_batches(8)
+        .eval_batches(Some(8));
+    let pattern = spec.pattern;
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
 
     println!("=== masked fine-tuning of a TSENOR+ALPS {pattern} model ({steps} steps) ===");
-    let backend = MaskBackend::Cpu(Method::Tsenor, SolveCfg::default());
     let mut metrics = Metrics::new();
-    let mut state = pipeline::run(
-        &rt,
-        Framework::Alps,
-        Structure::Transposable,
-        pattern,
-        &backend,
-        8,
-        Some(8),
-        &mut metrics,
-    )?;
-    let ppl_before: Vec<(String, f64)> = manifest
-        .corpora
-        .keys()
-        .filter(|n| *n != "train")
-        .filter_map(|n| metrics.get(&format!("ppl_{n}")).map(|p| (n.clone(), p)))
-        .collect();
+    let report = pipeline::run(&rt, &spec, &oracle, &mut metrics)?;
+    let ppl_before = report.perplexity.clone();
+    let mut state = report.state;
 
     let train = manifest.load_corpus("train")?;
     let cfg = FinetuneCfg { steps, ..Default::default() };
@@ -76,17 +70,10 @@ fn main() -> anyhow::Result<()> {
     // mask; our comparator gives it exact gradients, an upper bound —
     // see EXPERIMENTS.md §Fig5).
     println!("\n--- comparator: standard N:M (ALPS) + fine-tune ---");
+    let spec_std = spec.clone().structure(Structure::StandardNm);
     let mut metrics2 = Metrics::new();
-    let mut state_std = pipeline::run(
-        &rt,
-        Framework::Alps,
-        Structure::StandardNm,
-        pattern,
-        &backend,
-        8,
-        Some(8),
-        &mut metrics2,
-    )?;
+    let report_std = pipeline::run(&rt, &spec_std, &oracle, &mut metrics2)?;
+    let mut state_std = report_std.state;
     let curve_std = finetune::finetune(&rt, &mut state_std, &train, &cfg)?;
     println!(
         "  std-N:M fine-tune loss {:.4} -> {:.4}",

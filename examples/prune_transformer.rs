@@ -5,17 +5,18 @@
 //!
 //!   make artifacts && cargo run --release --example prune_transformer
 //!
-//! Everything at runtime is Rust: calibration activations come from the
-//! AOT calib artifact via PJRT, masks come from the XLA Dykstra artifact
-//! (+ Rust rounding), evaluation runs the AOT model_fwd artifact.
+//! Everything at runtime is Rust: the run is one `PruneSpec` + the XLA
+//! `MaskOracle` — calibration activations come from the AOT calib
+//! artifact via PJRT, masks from the XLA Dykstra artifact (+ Rust
+//! rounding), evaluation runs the AOT model_fwd artifact.
 
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::coordinator::metrics::Metrics;
-use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::coordinator::pipeline;
 use tsenor::masks::solver::SolveCfg;
-use tsenor::masks::NmPattern;
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::{Engine, Manifest};
+use tsenor::spec::{Framework, PruneSpec};
 
 fn main() -> anyhow::Result<()> {
     let root = std::path::Path::new("artifacts");
@@ -26,7 +27,12 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(root)?;
     let engine = Engine::new(&manifest)?;
     let rt = ModelRuntime::new(&engine, &manifest);
-    let pattern = NmPattern::new(16, 32);
+
+    let spec = PruneSpec::new(Framework::Alps)
+        .pattern(16, 32)
+        .calib_batches(8)
+        .eval_batches(Some(12));
+    let pattern = spec.pattern;
 
     println!("=== TSENOR+ALPS end-to-end: transposable {pattern} on the trained transformer ===");
     println!(
@@ -44,29 +50,19 @@ fn main() -> anyhow::Result<()> {
     let (dense_zs, dense_zs_mean) =
         tsenor::eval::zeroshot::score_all(&rt, &dense_weights, &probes, 50)?;
 
-    // Prune: TSENOR masks via the XLA artifact, ALPS layer-wise ADMM.
+    // Prune: TSENOR masks via the XLA oracle, ALPS layer-wise ADMM.
     let xla = XlaSolver::new(&engine, &manifest, SolveCfg::default());
-    let backend = MaskBackend::Xla(&xla);
     let mut metrics = Metrics::new();
-    let t0 = std::time::Instant::now();
-    let state = pipeline::run(
-        &rt,
-        Framework::Alps,
-        Structure::Transposable,
-        pattern,
-        &backend,
-        8,
-        Some(12),
-        &mut metrics,
-    )?;
-    let prune_secs = t0.elapsed().as_secs_f64();
-    let (zs, zs_mean) = tsenor::eval::zeroshot::score_all(&rt, &state.weights, &probes, 50)?;
+    let report = pipeline::run(&rt, &spec, &xla, &mut metrics)?;
+    let (zs, zs_mean) =
+        tsenor::eval::zeroshot::score_all(&rt, &report.state.weights, &probes, 50)?;
 
     println!(
-        "\npruned in {prune_secs:.1}s | sparsity {:.3} | {} dykstra blocks solved ({} padded) | {:.2}s in PJRT",
-        state.sparsity(),
-        xla.solved_blocks.get(),
-        xla.padded_blocks.get(),
+        "\npruned in {:.1}s | sparsity {:.3} | {} dykstra blocks solved ({} padded) | {:.2}s in PJRT",
+        report.wall_secs,
+        report.model_sparsity,
+        report.oracle_stats.blocks_solved,
+        report.oracle_stats.padded_blocks,
         engine.exec_nanos.get() as f64 / 1e9
     );
 
@@ -82,13 +78,7 @@ fn main() -> anyhow::Result<()> {
         );
     };
     ppl_row("dense (ppl)", &dense_ppl);
-    let pruned_ppl: std::collections::BTreeMap<String, f64> = manifest
-        .corpora
-        .keys()
-        .filter(|n| *n != "train")
-        .filter_map(|n| metrics.get(&format!("ppl_{n}")).map(|p| (n.clone(), p)))
-        .collect();
-    ppl_row("tsenor+alps 16:32", &pruned_ppl);
+    ppl_row("tsenor+alps 16:32", &report.perplexity);
 
     println!("\n{:<18}{:>8}{:>8}", "zero-shot task", "dense", "pruned");
     for (task, acc) in &zs {
@@ -96,14 +86,12 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{:<18}{:>8.3}{:>8.3}", "MEAN", dense_zs_mean, zs_mean);
 
-    // Record layer-wise recon errors summary.
-    let recon = metrics.to_json();
-    if let Some(errors) = recon.get("layer_recon_error").and_then(|j| j.as_arr()) {
-        let vals: Vec<f64> = errors.iter().filter_map(|e| e.as_f64()).collect();
-        let mean = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
-        println!("\nmean layer recon error: {mean:.4} over {} layers", vals.len());
-    }
-    metrics.write(std::path::Path::new("artifacts/reports/prune_transformer.json"))?;
-    println!("metrics -> artifacts/reports/prune_transformer.json");
+    println!(
+        "\nmean layer recon error: {:.4} over {} layers",
+        report.mean_recon_error(),
+        report.layers.len()
+    );
+    report.write(std::path::Path::new("artifacts/reports/prune_transformer.json"))?;
+    println!("report -> artifacts/reports/prune_transformer.json");
     Ok(())
 }

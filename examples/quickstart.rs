@@ -1,15 +1,20 @@
 //! Quickstart: generate transposable N:M masks for a weight matrix with
-//! TSENOR, verify feasibility, and compare against the exact optimum.
+//! TSENOR through the `MaskOracle` API, verify feasibility, and compare
+//! against the exact optimum.
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Uses the pure-CPU solver; if the AOT artifact bundle exists (`make
-//! artifacts`), also runs the XLA/PJRT path and cross-checks the two.
+//! The oracle trait is the one integration point every pruning framework
+//! uses: `CpuOracle` wraps any CPU solver method, and `XlaSolver` (the
+//! AOT/PJRT path, exercised below when `make artifacts` has run) plugs in
+//! behind the same call. Model-level runs build a `spec::PruneSpec` on
+//! top — see examples/spec_mixed.json and rust/README.md.
 
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::data::workload;
-use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::masks::{self, NmPattern};
+use tsenor::pruning::{CpuOracle, MaskOracle};
 use tsenor::runtime::{Engine, Manifest};
 use tsenor::util::tensor::partition_blocks;
 
@@ -18,10 +23,11 @@ fn main() -> anyhow::Result<()> {
     let w = workload::structured_matrix(256, 512, 42);
     println!("TSENOR quickstart: {}x{} matrix, transposable {pattern} sparsity", w.rows, w.cols);
 
-    // 1. CPU path: entropy-regularized Dykstra + greedy/local-search rounding.
-    let cfg = SolveCfg::default();
+    // 1. CPU oracle: entropy-regularized Dykstra + greedy/local-search
+    //    rounding behind the `MaskOracle` trait.
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
     let t0 = std::time::Instant::now();
-    let mask = solver::solve_matrix(Method::Tsenor, &w, pattern, &cfg);
+    let mask = oracle.mask(&w, pattern)?;
     let cpu_secs = t0.elapsed().as_secs_f64();
 
     let blocks_w = partition_blocks(&w.abs(), pattern.m);
@@ -30,22 +36,24 @@ fn main() -> anyhow::Result<()> {
     let obj = masks::batch_objective(&blocks_m, &blocks_w);
     let (_, opt) = masks::exact::solve_batch(&blocks_w, pattern.n);
     println!(
-        "  cpu : {:.3}s  objective {:.1} / optimal {:.1}  (rel err {:.3}%)",
+        "  cpu : {:.3}s  objective {:.1} / optimal {:.1}  (rel err {:.3}%)  [{} blocks solved]",
         cpu_secs,
         obj,
         opt,
-        100.0 * masks::relative_error(opt, obj)
+        100.0 * masks::relative_error(opt, obj),
+        oracle.stats().blocks_solved
     );
 
-    // 2. XLA path (if artifacts are built): Algorithm 1 runs in the AOT
-    //    HLO compiled from the Pallas kernel; rounding stays in Rust.
+    // 2. XLA oracle (if artifacts are built): Algorithm 1 runs in the AOT
+    //    HLO compiled from the Pallas kernel; rounding stays in Rust. Same
+    //    trait, different backend.
     let root = std::path::Path::new("artifacts");
     if root.join("manifest.json").exists() {
         let manifest = Manifest::load(root)?;
         let engine = Engine::new(&manifest)?;
-        let xla = XlaSolver::new(&engine, &manifest, cfg);
+        let xla = XlaSolver::new(&engine, &manifest, SolveCfg::default());
         let t0 = std::time::Instant::now();
-        let mask2 = xla.solve_matrix(&w, pattern)?;
+        let mask2 = xla.mask(&w, pattern)?;
         let xla_secs = t0.elapsed().as_secs_f64();
         let blocks2 = partition_blocks(&mask2, pattern.m);
         let obj2 = masks::batch_objective(&blocks2, &blocks_w);

@@ -13,11 +13,13 @@ mod common;
 
 use common::Scale;
 use tsenor::coordinator::metrics::Metrics;
-use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::coordinator::pipeline;
 use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::masks::NmPattern;
+use tsenor::pruning::CpuOracle;
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::Engine;
+use tsenor::spec::{Framework, PruneSpec, Structure};
 
 struct Row {
     pattern: String,
@@ -60,28 +62,32 @@ fn main() {
         ("TSENOR+ALPS", Framework::Alps, Structure::Transposable),
     ];
 
-    let backend = MaskBackend::Cpu(Method::Tsenor, SolveCfg::default());
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
     let corpora = ["valid_markov", "valid_zipf", "valid_template"];
     let mut rows: Vec<Row> = Vec::new();
 
     for pattern in &patterns {
         for (algo, fw, st) in &configs {
+            let spec = PruneSpec::new(*fw)
+                .structure(*st)
+                .pattern(pattern.n, pattern.m)
+                .calib_batches(6)
+                .eval_batches(Some(8));
             let mut metrics = Metrics::new();
-            let t0 = std::time::Instant::now();
-            let state = pipeline::run(&rt, *fw, *st, *pattern, &backend, 6, Some(8), &mut metrics)
-                .unwrap();
+            let report = pipeline::run(&rt, &spec, &oracle, &mut metrics).unwrap();
             let (_, zs_mean) =
-                tsenor::eval::zeroshot::score_all(&rt, &state.weights, &probes, 30).unwrap();
+                tsenor::eval::zeroshot::score_all(&rt, &report.state.weights, &probes, 30)
+                    .unwrap();
             let ppl: Vec<f64> = corpora
                 .iter()
-                .map(|c| metrics.get(&format!("ppl_{c}")).unwrap_or(f64::NAN))
+                .map(|c| report.perplexity.get(*c).copied().unwrap_or(f64::NAN))
                 .collect();
             eprintln!(
                 "  [{}] {} {} -> ppl {:.2}/{:.2}/{:.2} zs {:.3} ({:.0}s)",
                 pattern, algo,
                 if *st == Structure::Transposable { "T" } else { "std" },
                 ppl[0], ppl[1], ppl[2], zs_mean,
-                t0.elapsed().as_secs_f64()
+                report.wall_secs
             );
             rows.push(Row {
                 pattern: format!("{pattern}"),

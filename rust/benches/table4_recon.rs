@@ -13,7 +13,7 @@ use tsenor::coordinator::pipeline;
 use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::masks::NmPattern;
 use tsenor::pruning::alps::{prune_with, AlpsCfg};
-use tsenor::pruning::{cpu_mask_fn, LayerProblem, Regime};
+use tsenor::pruning::{CpuOracle, LayerProblem, Regime};
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::Engine;
 
@@ -39,7 +39,7 @@ fn main() {
         ("75.0%", &[(1, 4), (2, 8), (4, 16), (8, 32)]),
         ("87.5%", &[(1, 8), (2, 16), (4, 32)]),
     ];
-    let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
     let acfg = AlpsCfg::default();
 
     for (label, patterns) in levels {

@@ -7,6 +7,7 @@
 use crate::masks::dykstra::effective_tau;
 use crate::masks::rounding;
 use crate::masks::solver::SolveCfg;
+use crate::pruning::{MaskOracle, OracleStats};
 use crate::runtime::{Engine, Manifest};
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::{Context, Result};
@@ -19,6 +20,7 @@ pub struct XlaSolver<'a> {
     /// Accumulated stats for the perf report.
     pub padded_blocks: std::cell::Cell<usize>,
     pub solved_blocks: std::cell::Cell<usize>,
+    pub mask_calls: std::cell::Cell<usize>,
 }
 
 impl<'a> XlaSolver<'a> {
@@ -29,6 +31,7 @@ impl<'a> XlaSolver<'a> {
             cfg,
             padded_blocks: std::cell::Cell::new(0),
             solved_blocks: std::cell::Cell::new(0),
+            mask_calls: std::cell::Cell::new(0),
         }
     }
 
@@ -74,13 +77,26 @@ impl<'a> XlaSolver<'a> {
         let masks = self.solve_blocks(&blocks, pattern.n)?;
         Ok(assemble_blocks(&masks, score.rows, score.cols))
     }
+}
 
-    /// Mask oracle closure for the pruning frameworks
-    /// (`pruning::Regime::Transposable`).
-    pub fn mask_fn(
-        &self,
-    ) -> impl Fn(&Mat, crate::masks::NmPattern) -> Result<Mat> + '_ {
-        move |score: &Mat, pattern: crate::masks::NmPattern| self.solve_matrix(score, pattern)
+/// The XLA path is a first-class mask oracle: pruning frameworks accept
+/// it anywhere they accept the CPU solvers.
+impl MaskOracle for XlaSolver<'_> {
+    fn mask(&self, score: &Mat, pattern: crate::masks::NmPattern) -> Result<Mat> {
+        self.mask_calls.set(self.mask_calls.get() + 1);
+        self.solve_matrix(score, pattern)
+    }
+
+    fn name(&self) -> &str {
+        "xla-tsenor"
+    }
+
+    fn stats(&self) -> OracleStats {
+        OracleStats {
+            calls: self.mask_calls.get(),
+            blocks_solved: self.solved_blocks.get(),
+            padded_blocks: self.padded_blocks.get(),
+        }
     }
 }
 

@@ -1,73 +1,18 @@
 //! Whole-model pruning pipeline: calibration -> per-layer prune jobs ->
-//! pruned model state + metrics. The leader sequences layers (gram sites
-//! are computed once and shared by the weights they feed); the mask
-//! backend is pluggable (CPU solver or the XLA/AOT TSENOR path).
+//! pruned model state + typed `PruneReport`. The leader sequences layers
+//! (gram sites are computed once and shared by the weights they feed);
+//! what to prune comes from a `spec::PruneSpec`, how to generate masks
+//! from a `pruning::MaskOracle` (CPU solver or the XLA/AOT TSENOR path).
 
-use crate::coordinator::batcher::XlaSolver;
 use crate::coordinator::metrics::Metrics;
-use crate::masks::solver::{Method, SolveCfg};
-use crate::masks::NmPattern;
 use crate::model::ModelState;
-use crate::pruning::{alps, cpu_mask_fn, magnitude, sparsegpt, wanda, LayerProblem, Regime};
+use crate::pruning::{alps, magnitude, sparsegpt, wanda, LayerProblem, MaskOracle, Regime};
 use crate::runtime::client::ModelRuntime;
+use crate::spec::report::{LayerReport, PruneReport};
+use crate::spec::{Framework, PruneSpec, Structure};
 use crate::util::tensor::Mat;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-
-/// Which layer-wise framework drives the pruning.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Framework {
-    Magnitude,
-    Wanda,
-    SparseGpt,
-    Alps,
-}
-
-impl Framework {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Framework::Magnitude => "magnitude",
-            Framework::Wanda => "wanda",
-            Framework::SparseGpt => "sparsegpt",
-            Framework::Alps => "alps",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Framework> {
-        Some(match s {
-            "magnitude" | "mp" => Framework::Magnitude,
-            "wanda" => Framework::Wanda,
-            "sparsegpt" => Framework::SparseGpt,
-            "alps" => Framework::Alps,
-            _ => return None,
-        })
-    }
-}
-
-/// Mask backend: pure-CPU solver method, or the XLA/AOT path.
-pub enum MaskBackend<'a> {
-    Cpu(Method, SolveCfg),
-    Xla(&'a XlaSolver<'a>),
-}
-
-/// Sparsity structure requested for the run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Structure {
-    Transposable,
-    StandardNm,
-    Unstructured,
-}
-
-impl Structure {
-    pub fn parse(s: &str) -> Option<Structure> {
-        Some(match s {
-            "transposable" | "t" => Structure::Transposable,
-            "standard" | "nm" => Structure::StandardNm,
-            "unstructured" | "uns" => Structure::Unstructured,
-            _ => return None,
-        })
-    }
-}
 
 /// Calibration: accumulate per-site Gram matrices over `batches` windows
 /// of the train corpus.
@@ -94,19 +39,17 @@ pub fn calibrate(
     Ok(grams)
 }
 
-/// Prune every prunable layer of the model. Returns the pruned state and
-/// per-layer reconstruction errors (recorded into `metrics`).
-#[allow(clippy::too_many_arguments)]
+/// Prune every prunable layer of the model per the spec (with per-layer
+/// pattern overrides applied). Mutates `state` in place and returns the
+/// per-layer reports; recon errors are also recorded into `metrics`.
 pub fn prune_model(
     rt: &ModelRuntime,
     state: &mut ModelState,
     grams: &BTreeMap<String, Mat>,
-    framework: Framework,
-    structure: Structure,
-    pattern: NmPattern,
-    backend: &MaskBackend,
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
     metrics: &mut Metrics,
-) -> Result<()> {
+) -> Result<Vec<LayerReport>> {
     let alps_cfg = alps::AlpsCfg::default();
     // Site lookup: weight name -> gram site name.
     let mut site_of: BTreeMap<&str, &str> = BTreeMap::new();
@@ -116,24 +59,13 @@ pub fn prune_model(
         }
     }
 
-    let cpu_oracle_holder;
-    let xla_oracle_holder;
-    let oracle: &crate::pruning::MaskFn = match backend {
-        MaskBackend::Cpu(method, cfg) => {
-            cpu_oracle_holder = cpu_mask_fn(*method, *cfg);
-            &cpu_oracle_holder
-        }
-        MaskBackend::Xla(solver) => {
-            xla_oracle_holder = solver.mask_fn();
-            &xla_oracle_holder
-        }
-    };
-    let regime = match structure {
+    let regime = match spec.structure {
         Structure::Transposable => Regime::Transposable(oracle),
         Structure::StandardNm => Regime::StandardNm,
         Structure::Unstructured => Regime::Unstructured,
     };
 
+    let mut layers = Vec::new();
     let prunable = rt.manifest.prunable_names();
     for name in &prunable {
         let site = site_of
@@ -143,6 +75,7 @@ pub fn prune_model(
             .get(*site)
             .with_context(|| format!("missing gram {site}"))?;
         let w = state.weights.get(name).context("missing weight")?.clone();
+        let pattern = spec.pattern_for(name);
         let problem = LayerProblem {
             name: name.clone(),
             w,
@@ -150,7 +83,7 @@ pub fn prune_model(
             pattern,
             lambda_rel: 0.01,
         };
-        let pruned = match framework {
+        let pruned = match spec.framework {
             Framework::Magnitude => {
                 let (w, mask) = magnitude::prune(&problem.w, pattern, regime)?;
                 let recon_error = problem.recon_error(&w);
@@ -165,31 +98,47 @@ pub fn prune_model(
             }
         };
         metrics.push("layer_recon_error", pruned.recon_error);
+        let kept = pruned.mask.data.iter().filter(|&&x| x != 0.0).count();
+        layers.push(LayerReport {
+            name: name.clone(),
+            pattern,
+            recon_error: pruned.recon_error,
+            sparsity: 1.0 - kept as f64 / pruned.mask.data.len().max(1) as f64,
+        });
         state.set_pruned(name, pruned.w, pruned.mask);
     }
     metrics.put("model_sparsity", state.sparsity());
-    Ok(())
+    Ok(layers)
 }
 
 /// Full pruning run: load weights, calibrate, prune, evaluate perplexity.
-#[allow(clippy::too_many_arguments)]
+/// Returns the typed `PruneReport` (which carries the pruned model state
+/// for downstream fine-tuning / zero-shot evaluation).
 pub fn run(
     rt: &ModelRuntime,
-    framework: Framework,
-    structure: Structure,
-    pattern: NmPattern,
-    backend: &MaskBackend,
-    calib_batches: usize,
-    eval_batches: Option<usize>,
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
     metrics: &mut Metrics,
-) -> Result<ModelState> {
+) -> Result<PruneReport> {
+    let t0 = std::time::Instant::now();
+    let stats_before = oracle.stats();
     let weights = rt.manifest.load_weights()?;
-    let grams = calibrate(rt, &weights, calib_batches)?;
+    let grams = calibrate(rt, &weights, spec.calib_batches)?;
     let mut state = ModelState::new(weights);
-    prune_model(rt, &mut state, &grams, framework, structure, pattern, backend, metrics)?;
-    let ppl = crate::eval::perplexity::perplexity_suite(rt, &state.weights, eval_batches)?;
-    for (corpus, p) in &ppl {
+    let layers = prune_model(rt, &mut state, &grams, spec, oracle, metrics)?;
+    let perplexity =
+        crate::eval::perplexity::perplexity_suite(rt, &state.weights, spec.eval_batches)?;
+    for (corpus, p) in &perplexity {
         metrics.put(&format!("ppl_{corpus}"), *p);
     }
-    Ok(state)
+    Ok(PruneReport {
+        spec: spec.clone(),
+        oracle: oracle.name().to_string(),
+        oracle_stats: oracle.stats().since(&stats_before),
+        layers,
+        model_sparsity: state.sparsity(),
+        perplexity,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        state,
+    })
 }

@@ -13,6 +13,11 @@
 //!   frameworks (Wanda / SparseGPT / ALPS), masked fine-tuning, synthetic
 //!   data + evaluation, N:M sparse GEMM substrate.
 //!
+//! Runs are configured through the typed `spec` API: a serializable
+//! [`spec::PruneSpec`] (framework, structure, default pattern, per-layer
+//! glob overrides, solver tuning) plus a pluggable
+//! [`pruning::MaskOracle`] backend, yielding a [`spec::report::PruneReport`].
+//!
 //! Python never runs at runtime; the `tsenor` binary is self-contained
 //! once `make artifacts` has produced the AOT bundle.
 
@@ -24,4 +29,5 @@ pub mod model;
 pub mod pruning;
 pub mod runtime;
 pub mod sparse;
+pub mod spec;
 pub mod util;

@@ -2,34 +2,49 @@
 //!
 //! Subcommands:
 //!   info                          manifest + artifact summary
-//!   solve   [opts]                transposable-mask solve on a synthetic
+//!   solve    [opts]               transposable-mask solve on a synthetic
 //!                                 or sampled workload; reports quality+time
-//!   prune   [opts]                full pruning pipeline + perplexity/zero-shot
+//!   prune    [opts]               full pruning pipeline + perplexity /
+//!                                 zero-shot; emits a JSON `PruneReport`
 //!   eval                          dense-model evaluation baseline
-//!   finetune [opts]               masked fine-tuning of a pruned model
+//!   finetune [opts]               prune (TSENOR+ALPS) then masked
+//!                                 fine-tuning of the sparse model
+//!
+//! Runs are configured by typed specs (`tsenor::spec`). Every spec field
+//! can come from a JSON file and/or the command line; CLI flags override
+//! the file:
+//!
+//!   --spec FILE       load a PruneSpec / SolveSpec / FinetuneSpec JSON
+//!                     (see rust/README.md; examples/spec_mixed.json is a
+//!                     worked mixed per-layer-pattern example)
 //!
 //! Common options (key value pairs):
 //!   --artifacts DIR   (default: ./artifacts)
 //!   --method NAME     tsenor|tsenor-scalar|entropy|2approx|binm|max1000|pdlp|exact
-//!   --pattern N:M     (default 8:16)
+//!   --pattern N:M     default pattern (per-layer overrides via --spec)
 //!   --framework NAME  magnitude|wanda|sparsegpt|alps
 //!   --structure NAME  transposable|standard|unstructured
 //!   --xla             use the AOT/XLA dykstra path for TSENOR
 //!   --rows R --cols C --seed S --calib-batches K --eval-batches K
 //!   --steps K (finetune)
+//!   --report FILE     where `prune` writes the JSON PruneReport
+//!                     (default artifacts/reports/prune_report.json)
+//!   --json            also print the PruneReport JSON to stdout
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::coordinator::metrics::Metrics;
-use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::coordinator::pipeline;
 use tsenor::data::workload;
-use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::solver::{self, Method};
 use tsenor::masks::{self, NmPattern};
-use tsenor::model::{finetune, ModelState};
+use tsenor::model::finetune;
+use tsenor::pruning::{CpuOracle, MaskOracle};
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::{Engine, Manifest};
+use tsenor::spec::{FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure};
 use tsenor::util::tensor::partition_blocks;
 
 struct Args {
@@ -58,21 +73,20 @@ fn parse_args() -> Args {
     Args { cmd, opts, flags }
 }
 
-fn parse_pattern(s: &str) -> Result<NmPattern> {
-    let (n, m) = s.split_once(':').context("pattern must be N:M")?;
-    Ok(NmPattern::new(n.parse()?, m.parse()?))
-}
-
 impl Args {
     fn get(&self, key: &str, default: &str) -> String {
         self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
-    fn usize(&self, key: &str, default: usize) -> usize {
-        self.opts
-            .get(key)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// Integer option: missing -> default, present-but-unparsable -> error
+    /// (a typo must never silently become the default).
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key}: '{v}' is not a valid integer")),
+        }
     }
 
     fn has(&self, flag: &str) -> bool {
@@ -82,6 +96,30 @@ impl Args {
     fn artifacts(&self) -> PathBuf {
         PathBuf::from(self.get("artifacts", "artifacts"))
     }
+}
+
+/// Overlay CLI flags onto a (possibly file-loaded) PruneSpec.
+fn apply_prune_overrides(spec: &mut PruneSpec, args: &Args) -> Result<()> {
+    if let Some(f) = args.opts.get("framework") {
+        spec.framework = Framework::parse(f)?;
+    }
+    if let Some(s) = args.opts.get("structure") {
+        spec.structure = Structure::parse(s)?;
+    }
+    if let Some(p) = args.opts.get("pattern") {
+        spec.pattern = NmPattern::parse(p)?;
+    }
+    spec.calib_batches = args.usize("calib-batches", spec.calib_batches)?;
+    if args.opts.contains_key("eval-batches") {
+        spec.eval_batches = Some(args.usize("eval-batches", 12)?);
+    }
+    if args.opts.contains_key("seed") {
+        let s = args.usize("seed", 0)? as u64;
+        spec.seed = s;
+        spec.solve.seed = s;
+    }
+    spec.solve.threads = args.usize("threads", spec.solve.threads)?;
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -106,25 +144,39 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
-    let pattern = parse_pattern(&args.get("pattern", "8:16"))?;
-    let rows = args.usize("rows", 512);
-    let cols = args.usize("cols", 512);
-    let seed = args.usize("seed", 0) as u64;
-    let method = Method::parse(&args.get("method", "tsenor")).context("unknown method")?;
-    let cfg = SolveCfg::default();
+    let mut spec = match args.opts.get("spec") {
+        Some(path) => SolveSpec::load(Path::new(path))?,
+        None => SolveSpec::new(Method::Tsenor),
+    };
+    if let Some(m) = args.opts.get("method") {
+        spec.method = Method::parse(m)?;
+    }
+    if let Some(p) = args.opts.get("pattern") {
+        spec.pattern = NmPattern::parse(p)?;
+    }
+    spec.rows = args.usize("rows", spec.rows)?;
+    spec.cols = args.usize("cols", spec.cols)?;
+    spec.seed = args.usize("seed", spec.seed as usize)? as u64;
+    spec.solve.threads = args.usize("threads", spec.solve.threads)?;
 
-    let w = workload::structured_matrix(rows, cols, seed);
+    let pattern = spec.pattern;
+    let w = workload::structured_matrix(spec.rows, spec.cols, spec.seed);
     let blocks = partition_blocks(&w.abs(), pattern.m);
     println!(
-        "solving {rows}x{cols} ({} blocks of {}x{}) pattern {pattern} method {}",
-        blocks.b, pattern.m, pattern.m, method.name()
+        "solving {}x{} ({} blocks of {}x{}) pattern {pattern} method {}",
+        spec.rows,
+        spec.cols,
+        blocks.b,
+        pattern.m,
+        pattern.m,
+        spec.method.name()
     );
 
     let t0 = std::time::Instant::now();
     let masks_out = if args.has("xla") {
         let manifest = Manifest::load(&args.artifacts())?;
         let engine = Engine::new(&manifest)?;
-        let xla = XlaSolver::new(&engine, &manifest, cfg);
+        let xla = XlaSolver::new(&engine, &manifest, spec.solve);
         let out = xla.solve_blocks(&blocks, pattern.n)?;
         println!(
             "  xla path: {} exec calls, {:.3}s in PJRT, {} padded blocks",
@@ -134,7 +186,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         );
         out
     } else {
-        solver::solve_blocks_parallel(method, &blocks, pattern.n, &cfg)
+        solver::solve_blocks_parallel(spec.method, &blocks, pattern.n, &spec.solve)
     };
     let secs = t0.elapsed().as_secs_f64();
 
@@ -151,64 +203,69 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn backend_for<'a>(
-    args: &Args,
-    xla: &'a Option<XlaSolver<'a>>,
-) -> MaskBackend<'a> {
-    if args.has("xla") {
-        if let Some(s) = xla {
-            return MaskBackend::Xla(s);
-        }
-    }
-    MaskBackend::Cpu(Method::Tsenor, SolveCfg::default())
-}
-
 fn cmd_prune(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
     let engine = Engine::new(&manifest)?;
     let rt = ModelRuntime::new(&engine, &manifest);
-    let framework =
-        Framework::parse(&args.get("framework", "alps")).context("unknown framework")?;
-    let structure =
-        Structure::parse(&args.get("structure", "transposable")).context("unknown structure")?;
-    let pattern = parse_pattern(&args.get("pattern", "16:32"))?;
-    let calib = args.usize("calib-batches", 8);
-    let eval_batches = Some(args.usize("eval-batches", 12));
 
-    let xla_solver = args
-        .has("xla")
-        .then(|| XlaSolver::new(&engine, &manifest, SolveCfg::default()));
-    let backend = backend_for(args, &xla_solver);
+    let mut spec = match args.opts.get("spec") {
+        Some(path) => PruneSpec::load(Path::new(path))?,
+        None => PruneSpec::new(Framework::Alps),
+    };
+    apply_prune_overrides(&mut spec, args)?;
+
+    // Mask oracle: the XLA/AOT TSENOR path, or any CPU solver method.
+    // The two are mutually exclusive — the XLA artifact only runs
+    // TSENOR, so a --method request there would be silently ignored.
+    if args.has("xla") && args.opts.contains_key("method") {
+        bail!("--xla always solves with TSENOR; drop --method or drop --xla");
+    }
+    let method = match args.opts.get("method") {
+        Some(m) => Method::parse(m)?,
+        None => Method::Tsenor,
+    };
+    let xla_solver =
+        args.has("xla").then(|| XlaSolver::new(&engine, &manifest, spec.solve));
+    let cpu_oracle = CpuOracle::new(method, spec.solve);
+    let oracle: &dyn MaskOracle = match &xla_solver {
+        Some(s) => s,
+        None => &cpu_oracle,
+    };
 
     println!(
-        "pruning: framework={} structure={:?} pattern={pattern} backend={}",
-        framework.name(),
-        structure,
-        if args.has("xla") { "xla" } else { "cpu" }
+        "pruning: framework={} structure={} pattern={} oracle={}",
+        spec.framework.name(),
+        spec.structure.name(),
+        spec.pattern,
+        oracle.name()
     );
-    let mut metrics = Metrics::new();
-    let t0 = std::time::Instant::now();
-    let state = pipeline::run(
-        &rt, framework, structure, pattern, &backend, calib, eval_batches, &mut metrics,
-    )?;
-    println!("  done in {:.1}s, sparsity={:.3}", t0.elapsed().as_secs_f64(), state.sparsity());
-    for name in manifest.corpora.keys().filter(|n| *n != "train") {
-        if let Some(p) = metrics.get(&format!("ppl_{name}")) {
-            println!("  ppl[{name}] = {p:.3}");
-        }
+    for ov in &spec.overrides {
+        println!("  override: {} -> {}", ov.layers, ov.pattern);
     }
+
+    let mut metrics = Metrics::new();
+    let report = pipeline::run(&rt, &spec, oracle, &mut metrics)?;
+    print!("{}", report.render());
+
     if args.has("zeroshot") {
         let probes = tsenor::data::probes::load(&manifest.root.join(&manifest.probes_file))?;
         let (per_task, mean) =
-            tsenor::eval::zeroshot::score_all(&rt, &state.weights, &probes, 50)?;
+            tsenor::eval::zeroshot::score_all(&rt, &report.state.weights, &probes, 50)?;
         for (task, acc) in &per_task {
             println!("  zs[{task}] = {acc:.3}");
         }
         println!("  zs[mean] = {mean:.3}");
     }
     if let Some(out) = args.opts.get("out") {
-        metrics.write(std::path::Path::new(out))?;
+        metrics.write(Path::new(out))?;
         println!("  metrics -> {out}");
+    }
+
+    let report_path = args.get("report", "artifacts/reports/prune_report.json");
+    report.write(Path::new(&report_path))?;
+    println!("  report -> {report_path}");
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
     }
     Ok(())
 }
@@ -218,7 +275,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let engine = Engine::new(&manifest)?;
     let rt = ModelRuntime::new(&engine, &manifest);
     let weights = manifest.load_weights()?;
-    let eval_batches = Some(args.usize("eval-batches", 12));
+    let eval_batches = Some(args.usize("eval-batches", 12)?);
     let ppl = tsenor::eval::perplexity::perplexity_suite(&rt, &weights, eval_batches)?;
     println!("dense model perplexity:");
     for (corpus, p) in &ppl {
@@ -237,28 +294,34 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
     let engine = Engine::new(&manifest)?;
     let rt = ModelRuntime::new(&engine, &manifest);
-    let pattern = parse_pattern(&args.get("pattern", "16:32"))?;
-    let calib = args.usize("calib-batches", 8);
-    let steps = args.usize("steps", 50);
 
-    // Prune with TSENOR+ALPS, then fine-tune.
-    let backend = MaskBackend::Cpu(Method::Tsenor, SolveCfg::default());
+    let mut spec = match args.opts.get("spec") {
+        Some(path) => FinetuneSpec::load(Path::new(path))?,
+        None => FinetuneSpec::new(),
+    };
+    apply_prune_overrides(&mut spec.prune, args)?;
+    spec.steps = args.usize("steps", spec.steps)?;
+
+    // Prune (default TSENOR+ALPS), then fine-tune.
+    let oracle = CpuOracle::new(Method::Tsenor, spec.prune.solve);
     let mut metrics = Metrics::new();
-    let mut state: ModelState = pipeline::run(
-        &rt,
-        Framework::Alps,
-        Structure::Transposable,
-        pattern,
-        &backend,
-        calib,
-        Some(6),
-        &mut metrics,
-    )?;
-    let ppl_before = metrics.get("ppl_valid_markov").unwrap_or(f64::NAN);
-    println!("pruned (TSENOR+ALPS {pattern}); ppl[markov]={ppl_before:.3}");
+    let report = pipeline::run(&rt, &spec.prune, &oracle, &mut metrics)?;
+    println!(
+        "pruned ({}+{} {}); validation perplexity:",
+        oracle.name(),
+        spec.prune.framework.name(),
+        spec.prune.pattern
+    );
+    // Reporting keys come from the manifest's corpus set, not a
+    // hard-coded name, so alternative corpus bundles print real numbers.
+    let ppl_before = report.perplexity.clone();
+    for (corpus, p) in &ppl_before {
+        println!("  ppl[{corpus}] = {p:.3}");
+    }
 
+    let mut state = report.state;
     let train = manifest.load_corpus("train")?;
-    let cfg = finetune::FinetuneCfg { steps, ..Default::default() };
+    let cfg = spec.to_finetune_cfg();
     let curve = finetune::finetune(&rt, &mut state, &train, &cfg)?;
     println!(
         "fine-tuned {} steps: loss {:.4} -> {:.4}",
@@ -266,9 +329,11 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         curve.first().unwrap_or(&f32::NAN),
         curve.last().unwrap_or(&f32::NAN)
     );
-    let ppl = tsenor::eval::perplexity::perplexity_suite(&rt, &state.weights, Some(6))?;
-    for (corpus, p) in &ppl {
-        println!("  ppl[{corpus}] = {p:.3}");
+    let ppl_after =
+        tsenor::eval::perplexity::perplexity_suite(&rt, &state.weights, spec.prune.eval_batches)?;
+    for (corpus, p) in &ppl_after {
+        let before = ppl_before.get(corpus).copied().unwrap_or(f64::NAN);
+        println!("  ppl[{corpus}] = {p:.3} (was {before:.3})");
     }
     Ok(())
 }

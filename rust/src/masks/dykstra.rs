@@ -14,7 +14,7 @@ use crate::util::fastmath::exp_approx;
 use crate::util::tensor::Blocks;
 
 /// Configuration for the entropy-regularized solve.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DykstraCfg {
     /// Regularization strength BEFORE scale normalization; effective
     /// tau = tau0 / max|W| per matrix (paper: tau ~ 1/(0.005 max|W|)).

@@ -32,6 +32,24 @@ impl NmPattern {
         NmPattern { n, m }
     }
 
+    /// Parse an `"N:M"` string (e.g. `"16:32"`), with errors instead of
+    /// panics for CLI / spec-file input.
+    pub fn parse(s: &str) -> anyhow::Result<NmPattern> {
+        let (n, m) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("pattern '{s}' must be 'N:M' (e.g. 16:32)"))?;
+        let n: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("pattern '{s}': N is not an integer"))?;
+        let m: usize = m
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("pattern '{s}': M is not an integer"))?;
+        anyhow::ensure!(n <= m && m > 0, "pattern '{s}': need N <= M and M > 0");
+        Ok(NmPattern { n, m })
+    }
+
     pub fn sparsity(&self) -> f64 {
         1.0 - self.n as f64 / self.m as f64
     }
@@ -150,5 +168,15 @@ mod tests {
         assert_eq!(NmPattern::new(2, 4).sparsity(), 0.5);
         assert_eq!(NmPattern::new(8, 32).sparsity(), 0.75);
         assert_eq!(format!("{}", NmPattern::new(16, 32)), "16:32");
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(NmPattern::parse("16:32").unwrap(), NmPattern::new(16, 32));
+        assert_eq!(NmPattern::parse(" 4 : 8 ").unwrap(), NmPattern::new(4, 8));
+        assert!(NmPattern::parse("16").is_err());
+        assert!(NmPattern::parse("a:8").is_err());
+        assert!(NmPattern::parse("9:8").is_err());
+        assert!(NmPattern::parse("1:0").is_err());
     }
 }

@@ -45,18 +45,17 @@ impl Method {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Method> {
-        Some(match s {
-            "tsenor" => Method::Tsenor,
-            "tsenor-scalar" => Method::TsenorScalar,
-            "entropy" => Method::EntropySimple,
-            "2approx" => Method::TwoApprox,
-            "binm" => Method::BiNm,
-            "max1000" => Method::Max1000,
-            "pdlp" => Method::Pdlp,
-            "exact" => Method::Exact,
-            _ => return None,
-        })
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        Method::all()
+            .iter()
+            .copied()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown method '{s}' (valid: {})",
+                    Method::all().iter().map(|m| m.name()).collect::<Vec<_>>().join("|")
+                )
+            })
     }
 
     pub fn all() -> &'static [Method] {
@@ -74,7 +73,7 @@ impl Method {
 }
 
 /// Tuning knobs shared across methods.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SolveCfg {
     pub dykstra: dykstra::DykstraCfg,
     pub ls_steps: usize,
@@ -254,13 +253,27 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_serial() {
+    fn parallel_matches_serial_all_methods() {
+        // Chunked fan-out must be invisible for EVERY method: tau is
+        // normalized by the global max, and the randomized method seeds
+        // per global block index.
         let scores = random_blocks(13, 8, 44);
-        let cfg1 = SolveCfg::default();
-        let cfg4 = SolveCfg { threads: 4, ..Default::default() };
-        let a = solve_blocks(Method::Tsenor, &scores, 4, &cfg1);
-        let b = solve_blocks_parallel(Method::Tsenor, &scores, 4, &cfg4);
-        assert_eq!(a.data, b.data);
+        let cfg1 = SolveCfg { random_k: 60, ..Default::default() };
+        let cfg4 = SolveCfg { threads: 4, random_k: 60, ..Default::default() };
+        for &method in Method::all() {
+            let a = solve_blocks(method, &scores, 4, &cfg1);
+            let b = solve_blocks_parallel(method, &scores, 4, &cfg4);
+            assert_eq!(a.data, b.data, "{}: parallel != serial", method.name());
+        }
+    }
+
+    #[test]
+    fn method_parse_roundtrip_and_errors() {
+        for &m in Method::all() {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        let err = Method::parse("simplex").unwrap_err().to_string();
+        assert!(err.contains("tsenor") && err.contains("pdlp"), "{err}");
     }
 
     #[test]

@@ -150,7 +150,7 @@ mod tests {
     use super::*;
     use crate::masks::batch_feasible;
     use crate::masks::solver::{Method, SolveCfg};
-    use crate::pruning::cpu_mask_fn;
+    use crate::pruning::CpuOracle;
     use crate::pruning::tests::toy_problem;
     use crate::pruning::{sparsegpt, wanda};
     use crate::util::tensor::partition_blocks;
@@ -158,7 +158,7 @@ mod tests {
     #[test]
     fn feasible_and_converging() {
         let p = toy_problem(16, 16, 21);
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let (out, stats) =
             prune_with(&p, Regime::Transposable(&oracle), &AlpsCfg::default()).unwrap();
         let blocks = partition_blocks(&out.mask, p.pattern.m);
@@ -171,7 +171,7 @@ mod tests {
 
     #[test]
     fn beats_sparsegpt_and_wanda_on_recon() {
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let mut wins_sg = 0;
         let mut wins_wd = 0;
         let trials = 5;
@@ -195,7 +195,7 @@ mod tests {
     #[test]
     fn safeguard_rarely_triggers() {
         let p = toy_problem(16, 16, 33);
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let (_, stats) =
             prune_with(&p, Regime::Transposable(&oracle), &AlpsCfg::default()).unwrap();
         // Paper: "empirically, this safeguard never triggers".
@@ -210,7 +210,7 @@ mod tests {
     #[test]
     fn unstructured_regime_lowest_error() {
         let p = toy_problem(16, 16, 44);
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let acfg = AlpsCfg::default();
         let (t, _) = prune_with(&p, Regime::Transposable(&oracle), &acfg).unwrap();
         let (u, _) = prune_with(&p, Regime::Unstructured, &acfg).unwrap();

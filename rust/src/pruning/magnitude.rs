@@ -1,13 +1,13 @@
 //! Magnitude pruning + the shared mask helpers.
 //!
 //! Three sparsity regimes used across the experiment suite:
-//!  * transposable N:M — via a pluggable `MaskFn` oracle (the paper),
+//!  * transposable N:M — via a pluggable `MaskOracle` (the paper),
 //!  * standard N:M     — top-N per column within input-row groups of M
 //!    (the contraction-axis N:M that accelerates y = x @ W),
 //!  * unstructured     — global top-k (Table 4's reference row).
 
 use crate::masks::NmPattern;
-use crate::pruning::Regime;
+use crate::pruning::{MaskOracle, Regime};
 use crate::util::tensor::Mat;
 use anyhow::Result;
 
@@ -56,7 +56,7 @@ pub fn unstructured_mask(score: &Mat, pattern: NmPattern) -> Mat {
 /// Mask for `score` under the chosen regime.
 pub fn mask_for(score: &Mat, pattern: NmPattern, regime: Regime) -> Result<Mat> {
     match regime {
-        Regime::Transposable(oracle) => oracle(score, pattern),
+        Regime::Transposable(oracle) => oracle.mask(score, pattern),
         Regime::StandardNm => Ok(standard_nm_mask(score, pattern)),
         Regime::Unstructured => Ok(unstructured_mask(score, pattern)),
     }
@@ -73,7 +73,7 @@ mod tests {
     use super::*;
     use crate::masks::is_row_nm_feasible;
     use crate::masks::solver::{Method, SolveCfg};
-    use crate::pruning::cpu_mask_fn;
+    use crate::pruning::CpuOracle;
     use crate::util::rng::Rng;
 
     #[test]
@@ -111,7 +111,7 @@ mod tests {
     fn magnitude_prune_zeroes_masked() {
         let mut rng = Rng::new(3);
         let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let (pruned, mask) =
             prune(&w, NmPattern::new(2, 4), Regime::Transposable(&oracle)).unwrap();
         for i in 0..64 {

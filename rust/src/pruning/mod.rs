@@ -5,40 +5,29 @@
 //!     s.t. W transposable-N:M sparse
 //! using only the Gram matrix H = X^T X (+ lambda I) — raw activations
 //! never leave the calib artifact. The mask oracle is pluggable: any
-//! `masks::solver::Method`, or the XLA-accelerated TSENOR path via the
-//! coordinator's batcher.
+//! implementor of the `MaskOracle` trait (`CpuOracle` over the pure-CPU
+//! solvers, or the XLA-accelerated TSENOR path in the coordinator's
+//! batcher).
 
 pub mod alps;
 pub mod hessian;
 pub mod magnitude;
+pub mod oracle;
 pub mod sparsegpt;
 pub mod wanda;
 
-use crate::masks::solver::{self, Method, SolveCfg};
+pub use oracle::{CpuOracle, MaskOracle, OracleStats};
+
 use crate::masks::NmPattern;
 use crate::util::tensor::Mat;
-
-/// Pluggable transposable-mask oracle: given a score matrix and a pattern,
-/// return the binary mask. Lets every framework run against either the
-/// pure-CPU solvers (`cpu_mask_fn`) or the XLA/AOT path installed by the
-/// coordinator (`coordinator::batcher::XlaSolver::mask_fn`).
-pub type MaskFn<'a> = dyn Fn(&Mat, NmPattern) -> anyhow::Result<Mat> + 'a;
 
 /// Sparsity regime: transposable (with oracle), standard contraction-axis
 /// N:M, or unstructured top-k.
 #[derive(Clone, Copy)]
 pub enum Regime<'a> {
-    Transposable(&'a MaskFn<'a>),
+    Transposable(&'a dyn MaskOracle),
     StandardNm,
     Unstructured,
-}
-
-/// CPU mask oracle from a `masks::solver::Method`.
-pub fn cpu_mask_fn(
-    method: Method,
-    cfg: SolveCfg,
-) -> impl Fn(&Mat, NmPattern) -> anyhow::Result<Mat> {
-    move |score: &Mat, pattern: NmPattern| Ok(solver::solve_matrix(method, score, pattern, &cfg))
 }
 
 /// A layer-wise pruning problem: original weights + input Gram statistics.

@@ -1,0 +1,123 @@
+//! First-class mask oracle: the pluggable "give me a transposable mask
+//! for this score matrix" capability every pruning framework consumes.
+//!
+//! Implementations: `CpuOracle` (any `masks::solver::Method` + tuning)
+//! here, and the XLA/AOT TSENOR path (`coordinator::batcher::XlaSolver`)
+//! in the coordinator. Frameworks only see `&dyn MaskOracle`, so new
+//! backends (remote service, GPU, cached) drop in without touching them.
+
+use crate::masks::solver::{self, Method, SolveCfg};
+use crate::masks::NmPattern;
+use crate::util::tensor::Mat;
+use anyhow::Result;
+use std::cell::Cell;
+
+/// Cumulative solve statistics. Backends count over their lifetime;
+/// `PruneReport` stores the per-run delta (see [`OracleStats::since`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OracleStats {
+    /// Whole-matrix `mask` invocations.
+    pub calls: usize,
+    /// M x M blocks solved across all calls.
+    pub blocks_solved: usize,
+    /// Padding blocks added by bucketed backends (0 on CPU).
+    pub padded_blocks: usize,
+}
+
+impl OracleStats {
+    /// Stats accumulated since `earlier` (a snapshot of the same
+    /// oracle), so a backend shared across runs reports per-run deltas.
+    pub fn since(&self, earlier: &OracleStats) -> OracleStats {
+        OracleStats {
+            calls: self.calls.saturating_sub(earlier.calls),
+            blocks_solved: self.blocks_solved.saturating_sub(earlier.blocks_solved),
+            padded_blocks: self.padded_blocks.saturating_sub(earlier.padded_blocks),
+        }
+    }
+}
+
+/// Pluggable transposable-mask oracle: given a score matrix and an N:M
+/// pattern, return the binary mask maximizing the kept score.
+pub trait MaskOracle {
+    fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat>;
+
+    /// Short identifier for reports ("tsenor", "xla-tsenor", ...).
+    fn name(&self) -> &str;
+
+    /// Cumulative statistics; backends without counters keep the default.
+    fn stats(&self) -> OracleStats {
+        OracleStats::default()
+    }
+}
+
+/// Pure-CPU oracle over any solver method.
+pub struct CpuOracle {
+    method: Method,
+    cfg: SolveCfg,
+    calls: Cell<usize>,
+    blocks: Cell<usize>,
+}
+
+impl CpuOracle {
+    pub fn new(method: Method, cfg: SolveCfg) -> Self {
+        CpuOracle { method, cfg, calls: Cell::new(0), blocks: Cell::new(0) }
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+}
+
+impl MaskOracle for CpuOracle {
+    fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat> {
+        self.calls.set(self.calls.get() + 1);
+        self.blocks
+            .set(self.blocks.get() + (score.rows / pattern.m) * (score.cols / pattern.m));
+        Ok(solver::solve_matrix(self.method, score, pattern, &self.cfg))
+    }
+
+    fn name(&self) -> &str {
+        self.method.name()
+    }
+
+    fn stats(&self) -> OracleStats {
+        OracleStats {
+            calls: self.calls.get(),
+            blocks_solved: self.blocks.get(),
+            padded_blocks: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::{batch_feasible, NmPattern};
+    use crate::util::rng::Rng;
+    use crate::util::tensor::partition_blocks;
+
+    #[test]
+    fn cpu_oracle_masks_are_feasible_and_counted() {
+        let mut rng = Rng::new(4);
+        let w = Mat::from_fn(16, 32, |_, _| rng.heavy_tail());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let pattern = NmPattern::new(4, 8);
+        let mask = oracle.mask(&w, pattern).unwrap();
+        assert_eq!((mask.rows, mask.cols), (16, 32));
+        assert!(batch_feasible(&partition_blocks(&mask, 8), 4));
+        let stats = oracle.stats();
+        assert_eq!(stats.calls, 1);
+        assert_eq!(stats.blocks_solved, 2 * 4);
+        assert_eq!(oracle.name(), "tsenor");
+    }
+
+    #[test]
+    fn trait_object_usable() {
+        let oracle = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
+        let dynref: &dyn MaskOracle = &oracle;
+        let mut rng = Rng::new(5);
+        let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
+        let mask = dynref.mask(&w, NmPattern::new(2, 4)).unwrap();
+        assert!(batch_feasible(&partition_blocks(&mask, 4), 2));
+    }
+}

@@ -11,14 +11,14 @@
 
 use crate::masks::NmPattern;
 use crate::pruning::hessian;
-use crate::pruning::{LayerProblem, PrunedLayer, Regime};
+use crate::pruning::{LayerProblem, MaskOracle, PrunedLayer, Regime};
 use crate::util::tensor::Mat;
 use anyhow::Result;
 
 /// Group mask selection on the scored strip (M x out).
 fn strip_mask(strip_score: &Mat, pattern: NmPattern, regime: Regime) -> Result<Mat> {
     match regime {
-        Regime::Transposable(oracle) => oracle(strip_score, pattern),
+        Regime::Transposable(oracle) => oracle.mask(strip_score, pattern),
         Regime::StandardNm => {
             // top-N rows per column within this group of M rows
             let mut mask = Mat::zeros(strip_score.rows, strip_score.cols);
@@ -102,7 +102,7 @@ mod tests {
     use super::*;
     use crate::masks::batch_feasible;
     use crate::masks::solver::{Method, SolveCfg};
-    use crate::pruning::cpu_mask_fn;
+    use crate::pruning::CpuOracle;
     use crate::pruning::tests::toy_problem;
     use crate::pruning::{magnitude, wanda};
     use crate::util::tensor::partition_blocks;
@@ -110,7 +110,7 @@ mod tests {
     #[test]
     fn transposable_mask_feasible() {
         let p = toy_problem(16, 16, 11);
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let out = prune(&p, Regime::Transposable(&oracle)).unwrap();
         let blocks = partition_blocks(&out.mask, p.pattern.m);
         assert!(batch_feasible(&blocks, p.pattern.n));
@@ -126,7 +126,7 @@ mod tests {
     fn beats_magnitude_and_wanda_on_recon() {
         // The whole point of OBS updates: lower reconstruction error than
         // score-only pruning, on average.
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let mut wins_mag = 0;
         let mut wins_wanda = 0;
         let trials = 5;

@@ -34,14 +34,14 @@ mod tests {
     use super::*;
     use crate::masks::solver::{Method, SolveCfg};
     use crate::masks::{batch_feasible, NmPattern};
-    use crate::pruning::cpu_mask_fn;
+    use crate::pruning::CpuOracle;
     use crate::pruning::tests::toy_problem;
     use crate::util::tensor::partition_blocks;
 
     #[test]
     fn wanda_keeps_weights_unchanged() {
         let p = toy_problem(16, 16, 7);
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let out = prune(&p, Regime::Transposable(&oracle)).unwrap();
         // kept weights identical to originals
         for i in 0..out.w.data.len() {
@@ -72,7 +72,7 @@ mod tests {
         // Transposable is a strictly tighter constraint set; with the same
         // (magnitude) objective its recon error is >= standard N:M's
         // on average. Check over a few seeds.
-        let oracle = cpu_mask_fn(Method::Tsenor, SolveCfg::default());
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
         let mut worse = 0;
         for seed in 0..6 {
             let p = LayerProblem { pattern: NmPattern::new(4, 8), ..toy_problem(16, 16, seed) };

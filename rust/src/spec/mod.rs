@@ -1,0 +1,661 @@
+//! Typed, serializable run specifications — the single API surface for
+//! configuring a pruning / solve / fine-tune run.
+//!
+//! A spec carries everything that used to travel through positional
+//! arguments: framework, sparsity structure, default `NmPattern`,
+//! per-layer pattern overrides (glob-style `layers.*.wq` -> `8:16`),
+//! solver tuning, calibration/eval budgets and seed. Specs round-trip
+//! through JSON (`util::json`, no external crates), so a run can be
+//! saved, replayed, diffed, or served from a file:
+//!
+//! ```text
+//! PruneSpec::new(Framework::Alps)
+//!     .pattern(16, 32)
+//!     .override_layers("layers.*.wq", 8, 16)
+//! ```
+//!
+//! The mask oracle itself (CPU solver or XLA/AOT path) is NOT part of
+//! the spec — it is a capability, passed separately as a
+//! `pruning::MaskOracle` trait object — so the same spec file can run
+//! on any backend.
+
+pub mod report;
+
+use crate::masks::solver::{Method, SolveCfg};
+use crate::masks::NmPattern;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Which layer-wise framework drives the pruning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framework {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    Alps,
+}
+
+impl Framework {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::Magnitude => "magnitude",
+            Framework::Wanda => "wanda",
+            Framework::SparseGpt => "sparsegpt",
+            Framework::Alps => "alps",
+        }
+    }
+
+    pub fn all() -> &'static [Framework] {
+        &[Framework::Magnitude, Framework::Wanda, Framework::SparseGpt, Framework::Alps]
+    }
+
+    pub fn parse(s: &str) -> Result<Framework> {
+        match s {
+            "magnitude" | "mp" => Ok(Framework::Magnitude),
+            "wanda" => Ok(Framework::Wanda),
+            "sparsegpt" => Ok(Framework::SparseGpt),
+            "alps" => Ok(Framework::Alps),
+            _ => anyhow::bail!(
+                "unknown framework '{s}' (valid: {})",
+                Framework::all().iter().map(|f| f.name()).collect::<Vec<_>>().join("|")
+            ),
+        }
+    }
+}
+
+/// Sparsity structure requested for the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Structure {
+    Transposable,
+    StandardNm,
+    Unstructured,
+}
+
+impl Structure {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Structure::Transposable => "transposable",
+            Structure::StandardNm => "standard",
+            Structure::Unstructured => "unstructured",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Structure> {
+        match s {
+            "transposable" | "t" => Ok(Structure::Transposable),
+            "standard" | "nm" => Ok(Structure::StandardNm),
+            "unstructured" | "uns" => Ok(Structure::Unstructured),
+            _ => anyhow::bail!(
+                "unknown structure '{s}' (valid: transposable|standard|unstructured)"
+            ),
+        }
+    }
+}
+
+/// Per-layer pattern override: every layer whose name matches the glob
+/// gets `pattern` instead of the spec default. Later overrides win.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerOverride {
+    pub layers: String,
+    pub pattern: NmPattern,
+}
+
+/// Glob match with `*` (any substring, possibly empty, dots included)
+/// and `?` (exactly one character). `layers.*.wq` matches
+/// `layers.0.wq`, `layers.11.wq`, ...
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let n: Vec<char> = name.chars().collect();
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None;
+    while ni < n.len() {
+        // '*' first: it is a wildcard even when the name also holds '*'.
+        if pi < p.len() && p[pi] == '*' {
+            star = Some((pi, ni));
+            pi += 1;
+        } else if pi < p.len() && (p[pi] == '?' || p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if let Some((sp, sn)) = star {
+            // Backtrack: let the last '*' swallow one more character.
+            star = Some((sp, sn + 1));
+            pi = sp + 1;
+            ni = sn + 1;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// Strict integer read: missing key -> `None`; present but negative,
+/// fractional, or non-numeric -> error (a typo in a spec file must
+/// never silently become a default, same stance as the CLI).
+fn json_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .with_context(|| format!("spec: '{key}' must be a number"))?;
+            anyhow::ensure!(
+                x >= 0.0 && x.fract() == 0.0,
+                "spec: '{key}' must be a non-negative integer, got {x}"
+            );
+            Ok(Some(x as usize))
+        }
+    }
+}
+
+/// Serialize the public `SolveCfg` knobs (internal fields like
+/// `tau_override` are runtime-only and never serialized).
+pub fn solve_cfg_to_json(cfg: &SolveCfg) -> Json {
+    json::obj(vec![
+        ("tau0", Json::Num(cfg.dykstra.tau0 as f64)),
+        ("dykstra_iters", Json::Num(cfg.dykstra.iters as f64)),
+        ("ls_steps", Json::Num(cfg.ls_steps as f64)),
+        ("random_k", Json::Num(cfg.random_k as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("threads", Json::Num(cfg.threads as f64)),
+    ])
+}
+
+/// Overlay JSON-provided knobs onto `base` (missing keys keep defaults).
+pub fn solve_cfg_from_json(j: &Json, mut base: SolveCfg) -> Result<SolveCfg> {
+    if let Some(x) = j.get("tau0").and_then(Json::as_f64) {
+        base.dykstra.tau0 = x as f32;
+    }
+    if let Some(x) = json_usize(j, "dykstra_iters")? {
+        base.dykstra.iters = x;
+    }
+    if let Some(x) = json_usize(j, "ls_steps")? {
+        base.ls_steps = x;
+    }
+    if let Some(x) = json_usize(j, "random_k")? {
+        base.random_k = x;
+    }
+    if let Some(x) = json_usize(j, "seed")? {
+        base.seed = x as u64;
+    }
+    if let Some(x) = json_usize(j, "threads")? {
+        base.threads = x;
+    }
+    Ok(base)
+}
+
+fn overrides_to_json(overrides: &[LayerOverride]) -> Json {
+    Json::Arr(
+        overrides
+            .iter()
+            .map(|ov| {
+                json::obj(vec![
+                    ("layers", Json::Str(ov.layers.clone())),
+                    ("pattern", Json::Str(ov.pattern.to_string())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn overrides_from_json(j: &Json) -> Result<Vec<LayerOverride>> {
+    let mut out = Vec::new();
+    for ov in j.as_arr().context("overrides must be an array")? {
+        let layers = ov.req("layers")?.as_str().context("override 'layers'")?.to_string();
+        let pattern =
+            NmPattern::parse(ov.req("pattern")?.as_str().context("override 'pattern'")?)?;
+        out.push(LayerOverride { layers, pattern });
+    }
+    Ok(out)
+}
+
+/// Full configuration of a pruning run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruneSpec {
+    pub framework: Framework,
+    pub structure: Structure,
+    /// Default pattern for every prunable layer.
+    pub pattern: NmPattern,
+    /// Per-layer overrides; the LAST matching glob wins.
+    pub overrides: Vec<LayerOverride>,
+    pub solve: SolveCfg,
+    pub calib_batches: usize,
+    /// `None` = evaluate on the full validation streams.
+    pub eval_batches: Option<usize>,
+    /// Run seed. Mirrored into `solve.seed` (the only randomized
+    /// component of a prune run) by the builder / JSON loader; an
+    /// explicit `solve.seed` value overrides the mirror.
+    pub seed: u64,
+}
+
+impl PruneSpec {
+    pub fn new(framework: Framework) -> Self {
+        PruneSpec {
+            framework,
+            structure: Structure::Transposable,
+            pattern: NmPattern::new(16, 32),
+            overrides: Vec::new(),
+            solve: SolveCfg::default(),
+            calib_batches: 8,
+            eval_batches: Some(12),
+            seed: 0,
+        }
+    }
+
+    pub fn structure(mut self, s: Structure) -> Self {
+        self.structure = s;
+        self
+    }
+
+    pub fn pattern(mut self, n: usize, m: usize) -> Self {
+        self.pattern = NmPattern::new(n, m);
+        self
+    }
+
+    pub fn override_layers(mut self, glob: &str, n: usize, m: usize) -> Self {
+        self.overrides
+            .push(LayerOverride { layers: glob.to_string(), pattern: NmPattern::new(n, m) });
+        self
+    }
+
+    pub fn solve(mut self, cfg: SolveCfg) -> Self {
+        self.solve = cfg;
+        self
+    }
+
+    pub fn calib_batches(mut self, k: usize) -> Self {
+        self.calib_batches = k;
+        self
+    }
+
+    pub fn eval_batches(mut self, k: Option<usize>) -> Self {
+        self.eval_batches = k;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self.solve.seed = s;
+        self
+    }
+
+    /// Effective pattern for a layer: the last matching override, else
+    /// the spec default.
+    pub fn pattern_for(&self, layer: &str) -> NmPattern {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|ov| glob_match(&ov.layers, layer))
+            .map(|ov| ov.pattern)
+            .unwrap_or(self.pattern)
+    }
+
+    /// True when any override diverges from the default pattern.
+    pub fn is_mixed(&self) -> bool {
+        self.overrides.iter().any(|ov| ov.pattern != self.pattern)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("kind", Json::Str("prune".into())),
+            ("framework", Json::Str(self.framework.name().into())),
+            ("structure", Json::Str(self.structure.name().into())),
+            ("pattern", Json::Str(self.pattern.to_string())),
+            ("calib_batches", Json::Num(self.calib_batches as f64)),
+            // null = evaluate the full validation streams.
+            (
+                "eval_batches",
+                self.eval_batches.map_or(Json::Null, |e| Json::Num(e as f64)),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+            ("solve", solve_cfg_to_json(&self.solve)),
+        ];
+        if !self.overrides.is_empty() {
+            fields.push(("overrides", overrides_to_json(&self.overrides)));
+        }
+        json::obj(fields)
+    }
+
+    /// Build from JSON. Every field is optional: missing keys take the
+    /// `PruneSpec::new` defaults, so partial spec files compose with CLI
+    /// overrides.
+    pub fn from_json(j: &Json) -> Result<PruneSpec> {
+        let framework = match j.get("framework").and_then(Json::as_str) {
+            Some(s) => Framework::parse(s)?,
+            None => Framework::Alps,
+        };
+        let mut spec = PruneSpec::new(framework);
+        if let Some(s) = j.get("structure").and_then(Json::as_str) {
+            spec.structure = Structure::parse(s)?;
+        }
+        if let Some(s) = j.get("pattern").and_then(Json::as_str) {
+            spec.pattern = NmPattern::parse(s)?;
+        }
+        if let Some(k) = json_usize(j, "calib_batches")? {
+            spec.calib_batches = k;
+        }
+        match j.get("eval_batches") {
+            Some(Json::Null) => spec.eval_batches = None,
+            Some(_) => spec.eval_batches = json_usize(j, "eval_batches")?,
+            None => {}
+        }
+        if let Some(k) = json_usize(j, "seed")? {
+            spec.seed = k as u64;
+            spec.solve.seed = k as u64;
+        }
+        // After "seed" so an explicit solve.seed wins over the mirror.
+        if let Some(sj) = j.get("solve") {
+            spec.solve = solve_cfg_from_json(sj, spec.solve)?;
+        }
+        if let Some(ov) = j.get("overrides") {
+            spec.overrides = overrides_from_json(ov)?;
+        }
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> Result<PruneSpec> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<PruneSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read spec {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse spec {}", path.display()))
+    }
+}
+
+/// Configuration of a standalone mask-solve run (the `solve` command).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveSpec {
+    pub method: Method,
+    pub pattern: NmPattern,
+    pub rows: usize,
+    pub cols: usize,
+    pub seed: u64,
+    pub solve: SolveCfg,
+}
+
+impl SolveSpec {
+    pub fn new(method: Method) -> Self {
+        SolveSpec {
+            method,
+            pattern: NmPattern::new(8, 16),
+            rows: 512,
+            cols: 512,
+            seed: 0,
+            solve: SolveCfg::default(),
+        }
+    }
+
+    pub fn pattern(mut self, n: usize, m: usize) -> Self {
+        self.pattern = NmPattern::new(n, m);
+        self
+    }
+
+    pub fn shape(mut self, rows: usize, cols: usize) -> Self {
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", Json::Str("solve".into())),
+            ("method", Json::Str(self.method.name().into())),
+            ("pattern", Json::Str(self.pattern.to_string())),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("solve", solve_cfg_to_json(&self.solve)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SolveSpec> {
+        let method = match j.get("method").and_then(Json::as_str) {
+            Some(s) => Method::parse(s)?,
+            None => Method::Tsenor,
+        };
+        let mut spec = SolveSpec::new(method);
+        if let Some(s) = j.get("pattern").and_then(Json::as_str) {
+            spec.pattern = NmPattern::parse(s)?;
+        }
+        if let Some(k) = json_usize(j, "rows")? {
+            spec.rows = k;
+        }
+        if let Some(k) = json_usize(j, "cols")? {
+            spec.cols = k;
+        }
+        if let Some(k) = json_usize(j, "seed")? {
+            spec.seed = k as u64;
+        }
+        if let Some(sj) = j.get("solve") {
+            spec.solve = solve_cfg_from_json(sj, spec.solve)?;
+        }
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> Result<SolveSpec> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<SolveSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read spec {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse spec {}", path.display()))
+    }
+}
+
+/// Configuration of a prune-then-fine-tune run (the `finetune` command).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FinetuneSpec {
+    pub prune: PruneSpec,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl FinetuneSpec {
+    pub fn new() -> Self {
+        let defaults = crate::model::finetune::FinetuneCfg::default();
+        FinetuneSpec {
+            prune: PruneSpec::new(Framework::Alps).eval_batches(Some(6)),
+            steps: defaults.steps,
+            lr: defaults.lr,
+            warmup: defaults.warmup,
+            seed: defaults.seed,
+        }
+    }
+
+    pub fn steps(mut self, k: usize) -> Self {
+        self.steps = k;
+        self
+    }
+
+    /// Lower the spec into the optimizer config.
+    pub fn to_finetune_cfg(&self) -> crate::model::finetune::FinetuneCfg {
+        crate::model::finetune::FinetuneCfg {
+            steps: self.steps,
+            lr: self.lr,
+            warmup: self.warmup,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", Json::Str("finetune".into())),
+            ("prune", self.prune.to_json()),
+            ("steps", Json::Num(self.steps as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("warmup", Json::Num(self.warmup as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FinetuneSpec> {
+        let mut spec = FinetuneSpec::new();
+        if let Some(pj) = j.get("prune") {
+            spec.prune = PruneSpec::from_json(pj)?;
+        }
+        if let Some(k) = json_usize(j, "steps")? {
+            spec.steps = k;
+        }
+        if let Some(x) = j.get("lr").and_then(Json::as_f64) {
+            spec.lr = x as f32;
+        }
+        if let Some(k) = json_usize(j, "warmup")? {
+            spec.warmup = k;
+        }
+        if let Some(k) = json_usize(j, "seed")? {
+            spec.seed = k as u64;
+        }
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> Result<FinetuneSpec> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<FinetuneSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read spec {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse spec {}", path.display()))
+    }
+}
+
+impl Default for FinetuneSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("layers.*.wq", "layers.0.wq"));
+        assert!(glob_match("layers.*.wq", "layers.11.wq"));
+        assert!(!glob_match("layers.*.wq", "layers.0.wk"));
+        assert!(glob_match("*", "anything.at.all"));
+        assert!(glob_match("*.wq", "layers.0.wq"));
+        assert!(glob_match("layers.0.*", "layers.0.wq"));
+        assert!(glob_match("layers.?.wq", "layers.3.wq"));
+        assert!(!glob_match("layers.?.wq", "layers.13.wq"));
+        assert!(glob_match("exact", "exact"));
+        assert!(!glob_match("exact", "exact.more"));
+        // multiple stars + empty-match stars
+        assert!(glob_match("*wq*", "wq"));
+        assert!(glob_match("l*s.*.w*", "layers.2.wdown"));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("", ""));
+        assert!(glob_match("***", ""));
+        // '*' in the NAME is a literal; '*' in the pattern stays a
+        // wildcard even when aligned with a literal '*'.
+        assert!(glob_match("*", "*abc"));
+        assert!(glob_match("*c", "*ab*c"));
+        assert!(!glob_match("a", "*"));
+    }
+
+    #[test]
+    fn override_precedence_last_match_wins() {
+        let spec = PruneSpec::new(Framework::Alps)
+            .pattern(16, 32)
+            .override_layers("layers.*", 8, 32)
+            .override_layers("layers.*.wq", 8, 16)
+            .override_layers("layers.0.*", 4, 16);
+        // No override matches -> default.
+        assert_eq!(spec.pattern_for("embed"), NmPattern::new(16, 32));
+        // Only the broad glob matches.
+        assert_eq!(spec.pattern_for("layers.1.wup"), NmPattern::new(8, 32));
+        // Both wq glob and broad glob match -> later (wq) wins.
+        assert_eq!(spec.pattern_for("layers.1.wq"), NmPattern::new(8, 16));
+        // All three match layers.0.wq -> last one wins.
+        assert_eq!(spec.pattern_for("layers.0.wq"), NmPattern::new(4, 16));
+        assert!(spec.is_mixed());
+    }
+
+    #[test]
+    fn prune_spec_json_roundtrip() {
+        let cfg = SolveCfg { threads: 4, ls_steps: 7, ..Default::default() };
+        let spec = PruneSpec::new(Framework::Wanda)
+            .structure(Structure::Transposable)
+            .pattern(8, 32)
+            .override_layers("layers.*.wq", 8, 16)
+            .override_layers("*.wdown", 16, 32)
+            .solve(cfg)
+            .calib_batches(5)
+            .eval_batches(Some(3))
+            .seed(99);
+        let text = spec.to_json().to_string_pretty();
+        let back = PruneSpec::parse(&text).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn prune_spec_partial_json_takes_defaults() {
+        let spec = PruneSpec::parse(r#"{"framework": "sparsegpt"}"#).unwrap();
+        assert_eq!(spec.framework, Framework::SparseGpt);
+        assert_eq!(spec.structure, Structure::Transposable);
+        assert_eq!(spec.pattern, NmPattern::new(16, 32));
+        assert_eq!(spec.calib_batches, 8);
+        assert!(spec.overrides.is_empty());
+    }
+
+    #[test]
+    fn solve_and_finetune_spec_roundtrip() {
+        let s = SolveSpec::new(Method::TwoApprox).pattern(4, 8).shape(128, 256).seed(7);
+        assert_eq!(s, SolveSpec::parse(&s.to_json().to_string_pretty()).unwrap());
+
+        let mut f = FinetuneSpec::new().steps(12);
+        f.lr = 1e-3;
+        f.prune = f.prune.pattern(8, 16).override_layers("*.wv", 4, 16);
+        assert_eq!(f, FinetuneSpec::parse(&f.to_json().to_string_pretty()).unwrap());
+    }
+
+    #[test]
+    fn seed_mirrors_into_solver_unless_overridden() {
+        // Builder: run seed reaches the randomized solver knob.
+        let spec = PruneSpec::new(Framework::Alps).seed(7);
+        assert_eq!(spec.solve.seed, 7);
+        // JSON: same mirror...
+        let spec = PruneSpec::parse(r#"{"seed": 5}"#).unwrap();
+        assert_eq!((spec.seed, spec.solve.seed), (5, 5));
+        // ...but an explicit solve.seed wins.
+        let spec = PruneSpec::parse(r#"{"seed": 5, "solve": {"seed": 9}}"#).unwrap();
+        assert_eq!((spec.seed, spec.solve.seed), (5, 9));
+    }
+
+    #[test]
+    fn spec_integers_are_strict() {
+        assert!(PruneSpec::parse(r#"{"calib_batches": -1}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"calib_batches": 2.5}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"eval_batches": "many"}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"solve": {"threads": -4}}"#).is_err());
+        assert!(SolveSpec::parse(r#"{"rows": 1.5}"#).is_err());
+        assert!(FinetuneSpec::parse(r#"{"steps": -3}"#).is_err());
+        // Plain integers still load.
+        assert_eq!(PruneSpec::parse(r#"{"calib_batches": 4}"#).unwrap().calib_batches, 4);
+    }
+
+    #[test]
+    fn parse_errors_name_the_valid_options() {
+        let err = Framework::parse("resnet").unwrap_err().to_string();
+        assert!(err.contains("magnitude") && err.contains("alps"), "{err}");
+        let err = Structure::parse("diagonal").unwrap_err().to_string();
+        assert!(err.contains("transposable"), "{err}");
+        let err = PruneSpec::parse(r#"{"framework": "nope"}"#).unwrap_err().to_string();
+        assert!(err.contains("wanda"), "{err}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Typed result of a pruning run: per-layer reconstruction errors,
+//! sparsity, perplexities and oracle statistics — everything the CLI
+//! renders and dumps as JSON (replayable next to the `PruneSpec` that
+//! produced it).
+
+use crate::model::ModelState;
+use crate::pruning::OracleStats;
+use crate::spec::PruneSpec;
+use crate::util::json::{self, Json};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Outcome of pruning one layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerReport {
+    pub name: String,
+    /// Effective pattern after per-layer overrides.
+    pub pattern: crate::masks::NmPattern,
+    pub recon_error: f64,
+    pub sparsity: f64,
+}
+
+/// Outcome of a full pruning run.
+#[derive(Clone, Debug)]
+pub struct PruneReport {
+    /// The spec that produced this report (embedded for replay).
+    pub spec: PruneSpec,
+    /// Oracle identifier ("tsenor", "xla-tsenor", ...).
+    pub oracle: String,
+    pub oracle_stats: OracleStats,
+    pub layers: Vec<LayerReport>,
+    pub model_sparsity: f64,
+    /// Perplexity per validation corpus.
+    pub perplexity: BTreeMap<String, f64>,
+    pub wall_secs: f64,
+    /// Pruned model (weights + masks). Carried for downstream use
+    /// (fine-tuning, zero-shot eval); not serialized.
+    pub state: ModelState,
+}
+
+impl PruneReport {
+    /// Mean layer-wise relative reconstruction error.
+    pub fn mean_recon_error(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.recon_error).sum::<f64>() / self.layers.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers = Json::Arr(
+            self.layers
+                .iter()
+                .map(|l| {
+                    json::obj(vec![
+                        ("name", Json::Str(l.name.clone())),
+                        ("pattern", Json::Str(l.pattern.to_string())),
+                        ("recon_error", Json::Num(l.recon_error)),
+                        ("sparsity", Json::Num(l.sparsity)),
+                    ])
+                })
+                .collect(),
+        );
+        let ppl = Json::Obj(
+            self.perplexity.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect(),
+        );
+        let stats = json::obj(vec![
+            ("calls", Json::Num(self.oracle_stats.calls as f64)),
+            ("blocks_solved", Json::Num(self.oracle_stats.blocks_solved as f64)),
+            ("padded_blocks", Json::Num(self.oracle_stats.padded_blocks as f64)),
+        ]);
+        json::obj(vec![
+            ("spec", self.spec.to_json()),
+            ("oracle", Json::Str(self.oracle.clone())),
+            ("oracle_stats", stats),
+            ("layers", layers),
+            ("model_sparsity", Json::Num(self.model_sparsity)),
+            ("mean_recon_error", Json::Num(self.mean_recon_error())),
+            ("perplexity", ppl),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "  pruned in {:.1}s | framework={} structure={} oracle={}",
+            self.wall_secs,
+            self.spec.framework.name(),
+            self.spec.structure.name(),
+            self.oracle
+        );
+        let _ = writeln!(
+            s,
+            "  sparsity={:.3} mean_recon_error={:.5} ({} layers, {} oracle calls)",
+            self.model_sparsity,
+            self.mean_recon_error(),
+            self.layers.len(),
+            self.oracle_stats.calls
+        );
+        if self.spec.is_mixed() {
+            // Group layers by effective pattern so mixed runs are legible.
+            let mut by_pattern: BTreeMap<String, usize> = BTreeMap::new();
+            for l in &self.layers {
+                *by_pattern.entry(l.pattern.to_string()).or_default() += 1;
+            }
+            let groups: Vec<String> =
+                by_pattern.iter().map(|(p, c)| format!("{c}x {p}")).collect();
+            let _ = writeln!(s, "  mixed patterns: {}", groups.join(", "));
+        }
+        for (corpus, p) in &self.perplexity {
+            let _ = writeln!(s, "  ppl[{corpus}] = {p:.3}");
+        }
+        s
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::NmPattern;
+    use crate::spec::Framework;
+
+    fn toy_report() -> PruneReport {
+        PruneReport {
+            spec: PruneSpec::new(Framework::Alps).override_layers("*.wq", 8, 16),
+            oracle: "tsenor".into(),
+            oracle_stats: OracleStats { calls: 3, blocks_solved: 12, padded_blocks: 0 },
+            layers: vec![
+                LayerReport {
+                    name: "layers.0.wq".into(),
+                    pattern: NmPattern::new(8, 16),
+                    recon_error: 0.01,
+                    sparsity: 0.5,
+                },
+                LayerReport {
+                    name: "layers.0.wup".into(),
+                    pattern: NmPattern::new(16, 32),
+                    recon_error: 0.03,
+                    sparsity: 0.5,
+                },
+            ],
+            model_sparsity: 0.5,
+            perplexity: [("valid_markov".to_string(), 3.25)].into_iter().collect(),
+            wall_secs: 1.5,
+            state: ModelState::default(),
+        }
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = toy_report();
+        let j = r.to_json();
+        assert_eq!(j.get("oracle").unwrap().as_str(), Some("tsenor"));
+        assert_eq!(j.get("layers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("perplexity").unwrap().get("valid_markov").unwrap().as_f64(),
+            Some(3.25)
+        );
+        assert!((j.get("mean_recon_error").unwrap().as_f64().unwrap() - 0.02).abs() < 1e-12);
+        // The embedded spec round-trips.
+        let spec = PruneSpec::from_json(j.get("spec").unwrap()).unwrap();
+        assert_eq!(spec, r.spec);
+        // And the JSON text parses back.
+        let text = j.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn render_mentions_mixed_patterns() {
+        let r = toy_report();
+        let s = r.render();
+        assert!(s.contains("mixed patterns"), "{s}");
+        assert!(s.contains("ppl[valid_markov]"), "{s}");
+    }
+}

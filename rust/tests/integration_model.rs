@@ -4,13 +4,15 @@
 
 use std::path::PathBuf;
 use tsenor::coordinator::metrics::Metrics;
-use tsenor::coordinator::pipeline::{self, Framework, MaskBackend, Structure};
+use tsenor::coordinator::pipeline;
 use tsenor::data::loader::{next_batch, WindowIter};
 use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::masks::NmPattern;
 use tsenor::model::{finetune, ModelState};
+use tsenor::pruning::CpuOracle;
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::{Engine, Manifest};
+use tsenor::spec::{Framework, PruneSpec};
 
 fn setup() -> Option<(Manifest, Engine)> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -82,31 +84,74 @@ fn grads_match_masks_and_reduce_loss() {
 fn pruning_pipeline_wanda_fast_path() {
     let Some((manifest, engine)) = setup() else { return };
     let rt = ModelRuntime::new(&engine, &manifest);
-    let backend = MaskBackend::Cpu(Method::Tsenor, SolveCfg::default());
+    let spec = PruneSpec::new(Framework::Wanda)
+        .pattern(16, 32)
+        .calib_batches(2)
+        .eval_batches(Some(2));
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
     let mut metrics = Metrics::new();
-    let state = pipeline::run(
-        &rt,
-        Framework::Wanda,
-        Structure::Transposable,
-        NmPattern::new(16, 32),
-        &backend,
-        2,
-        Some(2),
-        &mut metrics,
-    )
-    .unwrap();
+    let report = pipeline::run(&rt, &spec, &oracle, &mut metrics).unwrap();
     // Half the prunable weights must be zero.
-    assert!((state.sparsity() - 0.5).abs() < 1e-6);
-    // Perplexity recorded for all three validation corpora.
+    assert!((report.model_sparsity - 0.5).abs() < 1e-6);
+    assert!((report.state.sparsity() - 0.5).abs() < 1e-6);
+    // Perplexity recorded for all three validation corpora, in both the
+    // typed report and the metrics sink.
     for corpus in ["valid_markov", "valid_zipf", "valid_template"] {
-        let p = metrics.get(&format!("ppl_{corpus}")).unwrap();
+        let p = report.perplexity[corpus];
         assert!(p.is_finite() && p > 1.0, "{corpus}: {p}");
+        assert_eq!(metrics.get(&format!("ppl_{corpus}")), Some(p));
     }
+    // One report entry per prunable layer, oracle stats populated.
+    assert_eq!(report.layers.len(), manifest.prunable_names().len());
+    assert!(report.oracle_stats.calls >= report.layers.len());
     // Masks transposable: spot-check one layer.
     let name = manifest.prunable_names()[0].clone();
-    let mask = &state.masks[&name];
+    let mask = &report.state.masks[&name];
     let blocks = tsenor::util::tensor::partition_blocks(mask, 32);
     assert!(tsenor::masks::batch_feasible(&blocks, 16));
+}
+
+#[test]
+fn pruning_pipeline_mixed_patterns_via_spec() {
+    let Some((manifest, engine)) = setup() else { return };
+    let rt = ModelRuntime::new(&engine, &manifest);
+    // FFN at 16:32, attention projections at 8:16 — the mixed-sparsity
+    // scenario the spec API exists for.
+    let spec = PruneSpec::new(Framework::Wanda)
+        .pattern(16, 32)
+        .override_layers("layers.*.wq", 8, 16)
+        .override_layers("layers.*.wk", 8, 16)
+        .override_layers("layers.*.wv", 8, 16)
+        .override_layers("layers.*.wo", 8, 16)
+        .calib_batches(2)
+        .eval_batches(Some(1));
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let mut metrics = Metrics::new();
+    let report = pipeline::run(&rt, &spec, &oracle, &mut metrics).unwrap();
+    // Overall sparsity still 0.5 (both patterns keep half).
+    assert!((report.model_sparsity - 0.5).abs() < 1e-6);
+    // Every attention projection got the override, FFN kept the default,
+    // and each mask is feasible for ITS pattern.
+    for l in &report.layers {
+        let want = if l.name.ends_with(".wq")
+            || l.name.ends_with(".wk")
+            || l.name.ends_with(".wv")
+            || l.name.ends_with(".wo")
+        {
+            NmPattern::new(8, 16)
+        } else {
+            NmPattern::new(16, 32)
+        };
+        assert_eq!(l.pattern, want, "{}", l.name);
+        let mask = &report.state.masks[&l.name];
+        let blocks = tsenor::util::tensor::partition_blocks(mask, want.m);
+        assert!(
+            tsenor::masks::batch_feasible(&blocks, want.n),
+            "{} not {}-feasible",
+            l.name,
+            want
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,116 @@
+//! Black-box tests of the public spec API: JSON round-trips, file
+//! loading (including the shipped examples/spec_mixed.json), glob
+//! override precedence, and oracle plumbing — none of these need the
+//! artifact bundle.
+
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::masks::NmPattern;
+use tsenor::pruning::{CpuOracle, MaskOracle};
+use tsenor::spec::{glob_match, FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+#[test]
+fn shipped_mixed_spec_parses_and_is_mixed() {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/spec_mixed.json");
+    let spec = PruneSpec::load(&path).unwrap();
+    assert_eq!(spec.framework, Framework::Alps);
+    assert_eq!(spec.structure, Structure::Transposable);
+    assert_eq!(spec.pattern, NmPattern::new(16, 32));
+    assert_eq!(spec.overrides.len(), 4);
+    assert!(spec.is_mixed());
+    // Attention projections get 8:16, FFN keeps the default.
+    assert_eq!(spec.pattern_for("layers.3.wq"), NmPattern::new(8, 16));
+    assert_eq!(spec.pattern_for("layers.0.wo"), NmPattern::new(8, 16));
+    assert_eq!(spec.pattern_for("layers.3.wup"), NmPattern::new(16, 32));
+    assert_eq!(spec.solve.threads, 4);
+    // And it round-trips.
+    let back = PruneSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+    assert_eq!(spec, back);
+}
+
+#[test]
+fn full_roundtrip_with_overrides_and_tuning() {
+    let spec = PruneSpec::new(Framework::SparseGpt)
+        .structure(Structure::StandardNm)
+        .pattern(4, 8)
+        .override_layers("layers.?.wdown", 2, 8)
+        .override_layers("*", 1, 4)
+        .solve(SolveCfg { threads: 8, random_k: 123, ..Default::default() })
+        .calib_batches(3)
+        .eval_batches(None)
+        .seed(7);
+    let text = spec.to_json().to_string_pretty();
+    let back = PruneSpec::parse(&text).unwrap();
+    assert_eq!(spec, back);
+    // eval_batches: None stays None through the round-trip.
+    assert_eq!(back.eval_batches, None);
+
+    let s = SolveSpec::new(Method::Pdlp).pattern(2, 4).shape(64, 96).seed(11);
+    assert_eq!(s, SolveSpec::parse(&s.to_json().to_string_pretty()).unwrap());
+
+    let f = FinetuneSpec::new().steps(17);
+    assert_eq!(f, FinetuneSpec::parse(&f.to_json().to_string_pretty()).unwrap());
+}
+
+#[test]
+fn override_precedence_is_last_match_wins() {
+    let spec = PruneSpec::new(Framework::Alps)
+        .pattern(16, 32)
+        .override_layers("layers.*", 8, 32)
+        .override_layers("layers.*.wq", 8, 16);
+    assert_eq!(spec.pattern_for("embed"), NmPattern::new(16, 32));
+    assert_eq!(spec.pattern_for("layers.0.wup"), NmPattern::new(8, 32));
+    assert_eq!(spec.pattern_for("layers.0.wq"), NmPattern::new(8, 16));
+    // Reversed declaration order flips the winner.
+    let spec2 = PruneSpec::new(Framework::Alps)
+        .pattern(16, 32)
+        .override_layers("layers.*.wq", 8, 16)
+        .override_layers("layers.*", 8, 32);
+    assert_eq!(spec2.pattern_for("layers.0.wq"), NmPattern::new(8, 32));
+}
+
+#[test]
+fn glob_edge_cases() {
+    assert!(glob_match("layers.*.w?", "layers.10.wq"));
+    assert!(!glob_match("layers.*.w?", "layers.10.wup"));
+    assert!(glob_match("*wdown", "layers.0.wdown"));
+    assert!(!glob_match("wdown*", "layers.0.wdown"));
+    assert!(glob_match("a*b*c", "a__b__b__c"));
+    assert!(!glob_match("a*b*c", "a__c__b"));
+}
+
+#[test]
+fn bad_specs_fail_loudly() {
+    assert!(PruneSpec::parse(r#"{"framework": "alps", "pattern": "32"}"#).is_err());
+    assert!(PruneSpec::parse(r#"{"framework": "alps", "pattern": "33:32"}"#).is_err());
+    assert!(PruneSpec::parse(r#"{"structure": "fancy"}"#).is_err());
+    assert!(
+        PruneSpec::parse(r#"{"overrides": [{"layers": "*"}]}"#).is_err(),
+        "override without pattern must be rejected"
+    );
+    let err = SolveSpec::parse(r#"{"method": "gurobi"}"#).unwrap_err().to_string();
+    assert!(err.contains("2approx"), "{err}");
+}
+
+#[test]
+fn per_layer_patterns_flow_through_the_oracle() {
+    // Drive the oracle directly with the per-layer patterns a mixed spec
+    // produces: each mask must be feasible for its own pattern.
+    let spec = PruneSpec::new(Framework::Magnitude)
+        .pattern(8, 16)
+        .override_layers("*.wq", 4, 8);
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let mut rng = Rng::new(17);
+    for (name, rows, cols) in
+        [("layers.0.wq", 16usize, 16usize), ("layers.0.wup", 16, 32)]
+    {
+        let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+        let pattern = spec.pattern_for(name);
+        let mask = oracle.mask(&w, pattern).unwrap();
+        let blocks = tsenor::util::tensor::partition_blocks(&mask, pattern.m);
+        assert!(tsenor::masks::batch_feasible(&blocks, pattern.n), "{name}");
+    }
+    assert_eq!(oracle.stats().calls, 2);
+}
