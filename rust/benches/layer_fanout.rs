@@ -1,0 +1,190 @@
+//! Layer-level fan-out bench: whole-model prune wall time at
+//! jobs ∈ {1, 2, 4, 8} over a synthetic transformer-shaped manifest,
+//! plus the padded-block reduction from cross-layer batching. Every
+//! concurrent run is verified bit-identical to the serial one before
+//! its timing is reported. When the artifact bundle is present the
+//! sweep is repeated through the real `pipeline::run` (PJRT
+//! calibration + evaluation included).
+
+#[path = "common.rs"]
+mod common;
+
+use common::Scale;
+use std::time::Instant;
+use tsenor::coordinator::executor::{self, LayerOutcome, LayerTask};
+use tsenor::coordinator::metrics::Metrics;
+use tsenor::coordinator::pipeline;
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::pruning::{CpuOracle, LayerProblem, MaskOracle};
+use tsenor::runtime::client::ModelRuntime;
+use tsenor::runtime::Engine;
+use tsenor::spec::{Framework, PruneSpec};
+use tsenor::sparse::gemm;
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+const JOBS_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Transformer-shaped synthetic model: per pseudo-layer the four
+/// attention projections (d x d) and the FFN pair (d x ff, ff x d).
+fn layer_shapes(n_layers: usize, d: usize, ff: usize) -> Vec<(String, usize, usize)> {
+    let mut shapes = Vec::new();
+    for l in 0..n_layers {
+        for proj in ["wq", "wk", "wv", "wo"] {
+            shapes.push((format!("layers.{l}.{proj}"), d, d));
+        }
+        shapes.push((format!("layers.{l}.wup"), d, ff));
+        shapes.push((format!("layers.{l}.wdown"), ff, d));
+    }
+    shapes
+}
+
+fn build_tasks(shapes: &[(String, usize, usize)], spec: &PruneSpec, seed: u64) -> Vec<LayerTask> {
+    let mut rng = Rng::new(seed);
+    shapes
+        .iter()
+        .map(|(name, d, out)| {
+            let x = Mat::from_fn(2 * d, *d, |_, _| rng.normal());
+            let gram = gemm::gram(&x);
+            let w = Mat::from_fn(*d, *out, |_, _| rng.heavy_tail());
+            LayerTask::new(LayerProblem {
+                name: name.clone(),
+                w,
+                gram,
+                pattern: spec.pattern_for(name),
+                lambda_rel: 0.01,
+            })
+        })
+        .collect()
+}
+
+fn mask_bits(outcomes: &[LayerOutcome]) -> Vec<u32> {
+    outcomes
+        .iter()
+        .flat_map(|o| o.mask.data.iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+fn main() {
+    common::header("layer_fanout", "ROADMAP: layer-level concurrency axis");
+    let (n_layers, d, ff, trials) = match common::scale() {
+        Scale::Quick => (2usize, 64usize, 128usize, 1usize),
+        Scale::Default => (4, 128, 256, 2),
+        Scale::Full => (8, 256, 512, 3),
+    };
+    let shapes = layer_shapes(n_layers, d, ff);
+    println!(
+        "synthetic model: {} layers x 6 matrices = {} prune jobs (d={d}, ff={ff})",
+        n_layers,
+        shapes.len()
+    );
+
+    // ---- jobs sweep: ALPS + TSENOR (the heaviest per-layer job) ----
+    println!("\n[prune fan-out]  framework=alps oracle=tsenor pattern=8:16");
+    println!("{:>6} {:>14} {:>9} {:>12}", "jobs", "wall (s)", "speedup", "identical");
+    let mut serial_secs = 0.0f64;
+    let mut reference: Option<Vec<u32>> = None;
+    for &jobs in &JOBS_SWEEP {
+        let spec = PruneSpec::new(Framework::Alps).pattern(8, 16).jobs(jobs);
+        let mut best = f64::INFINITY;
+        let mut outcomes = Vec::new();
+        for _ in 0..trials {
+            let tasks = build_tasks(&shapes, &spec, 42);
+            let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            let t0 = Instant::now();
+            outcomes = executor::run_layer_tasks(tasks, &spec, &oracle).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let bits = mask_bits(&outcomes);
+        let identical = match &reference {
+            None => {
+                reference = Some(bits);
+                serial_secs = best;
+                true
+            }
+            Some(r) => *r == bits,
+        };
+        assert!(identical, "jobs={jobs} diverged from the serial masks");
+        println!(
+            "{jobs:>6} {best:>14.3} {:>8.2}x {identical:>12}",
+            serial_secs / best
+        );
+        if jobs == 4 && serial_secs / best < 1.5 {
+            println!("  note: <1.5x at jobs=4 (machine may have few cores)");
+        }
+    }
+
+    // ---- cross-layer batching: padded-block reduction ----
+    // Attention projections at 8:16 are "small" next to an XLA bucket;
+    // batching them pays bucket padding once per group instead of once
+    // per layer. The padding figures are exact plan arithmetic for a
+    // bucketed backend; the CPU timing shows the grouped call path.
+    let bucket = (d / 16) * (d / 16) * 4; // 4x one attention projection
+    println!("\n[cross-layer batching]  framework=wanda bucket={bucket}");
+    let spec = PruneSpec::new(Framework::Wanda).pattern(8, 16);
+    let tasks = build_tasks(&shapes, &spec, 43);
+    let grouped_oracle =
+        CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(bucket);
+    let plan = executor::plan_batches(&tasks, &spec, &grouped_oracle);
+    let pad = plan.padding_stats(&tasks, bucket);
+    let grouped_layers: usize = plan.groups.iter().map(|g| g.members.len()).sum();
+    println!(
+        "  grouped {} of {} layers into {} batched oracle call(s)",
+        grouped_layers,
+        tasks.len(),
+        plan.groups.len()
+    );
+    println!(
+        "  padded_blocks: {} per-layer -> {} batched ({:.0}% reduction)",
+        pad.serial,
+        pad.batched,
+        100.0 * (pad.serial - pad.batched) as f64 / pad.serial.max(1) as f64
+    );
+    for grouped in [false, true] {
+        let oracle = if grouped {
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(bucket)
+        } else {
+            CpuOracle::new(Method::Tsenor, SolveCfg::default())
+        };
+        let spec = spec.clone().jobs(4);
+        let tasks = build_tasks(&shapes, &spec, 43);
+        let t0 = Instant::now();
+        let outcomes = executor::run_layer_tasks(tasks, &spec, &oracle).unwrap();
+        println!(
+            "  jobs=4 grouped={grouped}: {:.3}s ({} oracle calls, {} layers)",
+            t0.elapsed().as_secs_f64(),
+            oracle.stats().calls,
+            outcomes.len()
+        );
+    }
+
+    // ---- real pipeline (artifact bundle required) ----
+    let Some(manifest) = common::manifest() else {
+        println!("\n[pipeline::run] requires artifacts; skipped");
+        return;
+    };
+    let engine = Engine::new(&manifest).unwrap();
+    let rt = ModelRuntime::new(&engine, &manifest);
+    println!("\n[pipeline::run]  framework=wanda oracle=tsenor (calib+eval included)");
+    let mut serial = 0.0f64;
+    for &jobs in &JOBS_SWEEP {
+        let spec = PruneSpec::new(Framework::Wanda)
+            .pattern(16, 32)
+            .calib_batches(2)
+            .eval_batches(Some(1))
+            .jobs(jobs);
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let mut metrics = Metrics::new();
+        let t0 = Instant::now();
+        let report = pipeline::run(&rt, &spec, &oracle, &mut metrics).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        if jobs == 1 {
+            serial = secs;
+        }
+        let prune_secs: f64 = report.layers.iter().map(|l| l.wall_secs).sum();
+        println!(
+            "  jobs={jobs}: {secs:.3}s total ({:.2}x), {prune_secs:.3}s of layer work",
+            serial / secs
+        );
+    }
+}

@@ -3,25 +3,51 @@
 //! with (pad the tail call, slice results back). This is the XLA-
 //! accelerated TSENOR path: Algorithm 1 runs in the compiled HLO,
 //! Algorithm 2 (branchy rounding) runs in Rust.
+//!
+//! Concurrency: the solver is a `MaskOracle` and therefore `Send +
+//! Sync` — the layer executor calls it from a worker pool. All PJRT
+//! engine access is serialized behind `engine_lock` (the xla-rs wrapper
+//! types are single-threaded: `Rc`/`RefCell` inside `Engine`); rounding
+//! and padding run lock-free on owned data, and the statistics counters
+//! are atomics so concurrent calls sum exactly.
 
 use crate::masks::dykstra::effective_tau;
 use crate::masks::rounding;
 use crate::masks::solver::SolveCfg;
+use crate::pruning::oracle::{concat_score_blocks, split_group_masks};
 use crate::pruning::{MaskOracle, OracleStats};
 use crate::runtime::{Engine, Manifest};
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// XLA-backed TSENOR solver.
 pub struct XlaSolver<'a> {
-    pub engine: &'a Engine,
+    /// Private so every engine touch is forced through this module's
+    /// lock discipline (see the `Send`/`Sync` safety argument below).
+    engine: &'a Engine,
     pub manifest: &'a Manifest,
     pub cfg: SolveCfg,
+    /// Serializes every touch of `engine`: PJRT wrapper types are not
+    /// thread-safe, so at most one worker executes HLO at a time.
+    engine_lock: Mutex<()>,
     /// Accumulated stats for the perf report.
-    pub padded_blocks: std::cell::Cell<usize>,
-    pub solved_blocks: std::cell::Cell<usize>,
-    pub mask_calls: std::cell::Cell<usize>,
+    pub padded_blocks: AtomicUsize,
+    pub solved_blocks: AtomicUsize,
+    pub mask_calls: AtomicUsize,
 }
+
+// SAFETY: the only non-thread-safe state reachable from an `XlaSolver`
+// is the shared `&Engine` (xla-rs `PjRtClient` plus `Rc`/`RefCell`/
+// `Cell` internals). Every dereference of `self.engine` happens while
+// holding `self.engine_lock`, so cross-thread access is fully
+// serialized, and the engine holds no thread-local state. The pipeline
+// upholds the remaining invariant: during a concurrent prune the engine
+// is reached ONLY through this solver (calibration runs before the
+// worker pool starts, evaluation after it joins).
+unsafe impl Send for XlaSolver<'_> {}
+unsafe impl Sync for XlaSolver<'_> {}
 
 impl<'a> XlaSolver<'a> {
     pub fn new(engine: &'a Engine, manifest: &'a Manifest, cfg: SolveCfg) -> Self {
@@ -29,9 +55,10 @@ impl<'a> XlaSolver<'a> {
             engine,
             manifest,
             cfg,
-            padded_blocks: std::cell::Cell::new(0),
-            solved_blocks: std::cell::Cell::new(0),
-            mask_calls: std::cell::Cell::new(0),
+            engine_lock: Mutex::new(()),
+            padded_blocks: AtomicUsize::new(0),
+            solved_blocks: AtomicUsize::new(0),
+            mask_calls: AtomicUsize::new(0),
         }
     }
 
@@ -48,6 +75,10 @@ impl<'a> XlaSolver<'a> {
         let mut out = Blocks::zeros(scores.b, m);
         let sz = m * m;
         let mut start = 0usize;
+        // One worker in the HLO at a time; a poisoned lock only means a
+        // sibling worker panicked mid-call — the engine itself is
+        // stateless between calls, so keep going.
+        let _engine = self.engine_lock.lock().unwrap_or_else(|e| e.into_inner());
         while start < scores.b {
             let take = art.bucket.min(scores.b - start);
             // Build a full bucket: real blocks + zero padding.
@@ -58,10 +89,10 @@ impl<'a> XlaSolver<'a> {
             out.data[start * sz..(start + take) * sz]
                 .copy_from_slice(&solved.data[..take * sz]);
             self.padded_blocks
-                .set(self.padded_blocks.get() + art.bucket - take);
+                .fetch_add(art.bucket - take, Ordering::Relaxed);
             start += take;
         }
-        self.solved_blocks.set(self.solved_blocks.get() + scores.b);
+        self.solved_blocks.fetch_add(scores.b, Ordering::Relaxed);
         Ok(out)
     }
 
@@ -83,7 +114,7 @@ impl<'a> XlaSolver<'a> {
 /// it anywhere they accept the CPU solvers.
 impl MaskOracle for XlaSolver<'_> {
     fn mask(&self, score: &Mat, pattern: crate::masks::NmPattern) -> Result<Mat> {
-        self.mask_calls.set(self.mask_calls.get() + 1);
+        self.mask_calls.fetch_add(1, Ordering::Relaxed);
         self.solve_matrix(score, pattern)
     }
 
@@ -93,10 +124,33 @@ impl MaskOracle for XlaSolver<'_> {
 
     fn stats(&self) -> OracleStats {
         OracleStats {
-            calls: self.mask_calls.get(),
-            blocks_solved: self.solved_blocks.get(),
-            padded_blocks: self.padded_blocks.get(),
+            calls: self.mask_calls.load(Ordering::Relaxed),
+            blocks_solved: self.solved_blocks.load(Ordering::Relaxed),
+            padded_blocks: self.padded_blocks.load(Ordering::Relaxed),
         }
+    }
+
+    /// A layer with fewer blocks than the smallest bucket for its M
+    /// cannot fill even one HLO call alone — batch such layers.
+    fn batch_quantum(&self, m: usize) -> usize {
+        self.manifest.pick_dykstra(m, 1).map_or(0, |a| a.bucket)
+    }
+
+    /// Cross-layer batching: concatenate every member's blocks into one
+    /// solve, so bucket padding is paid once at the combined tail
+    /// instead of once per layer. Note the semantic: tau is normalized
+    /// by the max |score| of the COMBINED batch (one scalar feeds the
+    /// HLO call), so a grouped layer's mask can differ slightly from
+    /// its solo solve. The grouping plan is scheduling-independent, so
+    /// this stays bit-identical across `jobs` levels.
+    fn mask_group(&self, scores: &[&Mat], pattern: crate::masks::NmPattern) -> Result<Vec<Mat>> {
+        self.mask_calls.fetch_add(scores.len(), Ordering::Relaxed);
+        if scores.len() <= 1 {
+            return scores.iter().map(|s| self.solve_matrix(s, pattern)).collect();
+        }
+        let (combined, counts) = concat_score_blocks(scores, pattern.m);
+        let solved = self.solve_blocks(&combined, pattern.n)?;
+        Ok(split_group_masks(&solved, scores, &counts))
     }
 }
 

@@ -1,0 +1,396 @@
+//! Concurrent layer executor: turns the whole-model prune loop into a
+//! job scheduler. Layers become independent prune jobs fed from a work
+//! queue to a scoped-thread worker pool; results are collected in
+//! deterministic manifest order, and small layers' score blocks are
+//! cross-layer batched into fuller oracle calls (raising XLA bucket
+//! utilization, shrinking `padded_blocks`).
+//!
+//! # Determinism contract
+//!
+//! `jobs = N` produces **bit-identical** masks, weights and reports
+//! (modulo per-layer `wall_secs`) to `jobs = 1`:
+//!
+//! * every layer job is a pure function of its own `LayerProblem` — no
+//!   job reads another job's output;
+//! * the cross-layer batching plan is computed up front from task order
+//!   + spec + oracle quantum, never from scheduling, so every `jobs`
+//!   level issues the very same oracle calls with the very same inputs
+//!   (mirroring the tau-override discipline that already makes
+//!   block-level chunking invisible in `solver::solve_blocks_parallel`);
+//! * oracle statistics are atomic sums, which are order-independent;
+//! * outcomes are written into index-addressed slots and consumed in
+//!   task order, so metrics and reports never depend on completion
+//!   order.
+
+use crate::masks::NmPattern;
+use crate::pruning::{
+    alps, magnitude, sparsegpt, wanda, LayerProblem, MaskOracle, PrunedLayer, Regime,
+};
+use crate::spec::report::LayerReport;
+use crate::spec::{Framework, PruneSpec, Structure};
+use crate::util::tensor::Mat;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One independent layer prune job.
+pub struct LayerTask {
+    pub problem: LayerProblem,
+    /// Mask precomputed by a cross-layer batched oracle call; `None`
+    /// lets the worker drive the framework's own oracle path.
+    preset_mask: Option<Mat>,
+}
+
+impl LayerTask {
+    pub fn new(problem: LayerProblem) -> Self {
+        LayerTask { problem, preset_mask: None }
+    }
+
+    /// Number of M x M blocks this layer's score matrix partitions into.
+    pub fn block_count(&self) -> usize {
+        let m = self.problem.pattern.m;
+        (self.problem.w.rows / m) * (self.problem.w.cols / m)
+    }
+
+    /// True when the layer's shape partitions cleanly into M x M blocks
+    /// (a precondition of every transposable oracle call).
+    fn blockable(&self) -> bool {
+        let m = self.problem.pattern.m;
+        m > 0 && self.problem.w.rows % m == 0 && self.problem.w.cols % m == 0
+    }
+}
+
+/// Result of one layer job, index-aligned with the task list.
+pub struct LayerOutcome {
+    pub report: LayerReport,
+    pub w: Mat,
+    pub mask: Mat,
+    /// ALPS safeguard hits (`Some` only for `Framework::Alps`).
+    pub safeguard_hits: Option<f64>,
+}
+
+/// Cross-layer oracle batch: tasks whose blocks are solved in one
+/// combined call. Members are ascending task indices (manifest order).
+pub struct LayerGroup {
+    pub pattern: NmPattern,
+    pub members: Vec<usize>,
+}
+
+/// Deterministic batching plan. Composition depends only on task order,
+/// spec and oracle quantum — never on worker scheduling.
+#[derive(Default)]
+pub struct BatchPlan {
+    pub groups: Vec<LayerGroup>,
+}
+
+/// Bucket-padding arithmetic for a plan: blocks of padding a bucketed
+/// backend (bucket size `bucket`) would add when solving every task
+/// per-layer (`serial`) vs under this plan's grouping (`batched`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PaddingStats {
+    pub serial: usize,
+    pub batched: usize,
+}
+
+fn tail_padding(blocks: usize, bucket: usize) -> usize {
+    if bucket == 0 || blocks == 0 {
+        return 0;
+    }
+    (bucket - blocks % bucket) % bucket
+}
+
+impl BatchPlan {
+    /// True when at least one cross-layer batch was formed.
+    pub fn has_groups(&self) -> bool {
+        !self.groups.is_empty()
+    }
+
+    /// Static padding comparison for a backend with fixed `bucket`.
+    pub fn padding_stats(&self, tasks: &[LayerTask], bucket: usize) -> PaddingStats {
+        let mut grouped = vec![false; tasks.len()];
+        let mut batched = 0usize;
+        for g in &self.groups {
+            let total: usize = g.members.iter().map(|&i| tasks[i].block_count()).sum();
+            batched += tail_padding(total, bucket);
+            for &i in &g.members {
+                grouped[i] = true;
+            }
+        }
+        let mut serial = 0usize;
+        for (task, &in_group) in tasks.iter().zip(&grouped) {
+            let pad = tail_padding(task.block_count(), bucket);
+            serial += pad;
+            if !in_group {
+                batched += pad;
+            }
+        }
+        PaddingStats { serial, batched }
+    }
+}
+
+/// Frameworks whose (single) oracle call operates on a score matrix
+/// computable before pruning starts — the only ones whose calls can be
+/// hoisted into a cross-layer batch. SparseGPT and ALPS call the oracle
+/// on intermediate iterates and stay per-layer jobs.
+fn groupable(framework: Framework) -> bool {
+    matches!(framework, Framework::Magnitude | Framework::Wanda)
+}
+
+/// Score matrix the grouped oracle call solves for one member layer
+/// (identical to what the framework itself would hand to the oracle).
+fn group_score(framework: Framework, p: &LayerProblem) -> Mat {
+    match framework {
+        Framework::Magnitude => p.w.clone(),
+        Framework::Wanda => wanda::score_matrix(p),
+        Framework::SparseGpt | Framework::Alps => {
+            unreachable!("only score-precomputable frameworks are grouped")
+        }
+    }
+}
+
+/// Build the cross-layer batching plan: transposable runs of a
+/// groupable framework batch every layer whose block count is below the
+/// oracle's quantum for its M, grouped by pattern. Groups of one are
+/// dropped (nothing to share).
+pub fn plan_batches(
+    tasks: &[LayerTask],
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+) -> BatchPlan {
+    if spec.structure != Structure::Transposable || !groupable(spec.framework) {
+        return BatchPlan::default();
+    }
+    let mut by_pattern: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (i, task) in tasks.iter().enumerate() {
+        if !task.blockable() {
+            continue;
+        }
+        let quantum = oracle.batch_quantum(task.problem.pattern.m);
+        if quantum > 0 && task.block_count() < quantum {
+            by_pattern
+                .entry((task.problem.pattern.n, task.problem.pattern.m))
+                .or_default()
+                .push(i);
+        }
+    }
+    let groups = by_pattern
+        .into_iter()
+        .filter(|(_, members)| members.len() >= 2)
+        .map(|((n, m), members)| LayerGroup { pattern: NmPattern::new(n, m), members })
+        .collect();
+    BatchPlan { groups }
+}
+
+/// Resolve a spec-level job count: `0` means one worker per available
+/// core, anything else is taken literally.
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        jobs
+    }
+}
+
+type Slot = Mutex<Option<Result<LayerOutcome>>>;
+
+/// Execute every layer task and return outcomes in task order.
+///
+/// Phase 1 (serial, deterministic): cross-layer batched oracle calls
+/// fill `preset_mask` for grouped small layers. Phase 2: a
+/// `spec.jobs`-way scoped worker pool drains the remaining per-layer
+/// work queue (`jobs <= 1` runs inline on the caller thread).
+pub fn run_layer_tasks(
+    mut tasks: Vec<LayerTask>,
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+) -> Result<Vec<LayerOutcome>> {
+    let plan = plan_batches(&tasks, spec, oracle);
+    for group in &plan.groups {
+        let scores: Vec<Mat> = group
+            .members
+            .iter()
+            .map(|&i| group_score(spec.framework, &tasks[i].problem))
+            .collect();
+        let refs: Vec<&Mat> = scores.iter().collect();
+        let masks = oracle.mask_group(&refs, group.pattern)?;
+        for (&i, mask) in group.members.iter().zip(masks) {
+            tasks[i].preset_mask = Some(mask);
+        }
+    }
+
+    let alps_cfg = alps::AlpsCfg::default();
+    // Never park more workers than there are tasks.
+    let jobs = effective_jobs(spec.jobs).min(tasks.len());
+    if jobs <= 1 {
+        return tasks
+            .iter()
+            .map(|t| run_task(t, spec, oracle, &alps_cfg))
+            .collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Slot> = tasks.iter().map(|_| Mutex::new(None)).collect();
+    {
+        let (tasks, next, slots, alps_cfg) = (&tasks, &next, &slots, &alps_cfg);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks.len() {
+                        break;
+                    }
+                    let out = run_task(&tasks[i], spec, oracle, alps_cfg);
+                    *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
+                });
+            }
+        });
+    }
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("every queue index was claimed by exactly one worker")
+        })
+        .collect()
+}
+
+/// One layer job: pure function of the task (plus the shared read-only
+/// oracle/spec), so scheduling cannot change its result.
+fn run_task(
+    task: &LayerTask,
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+    alps_cfg: &alps::AlpsCfg,
+) -> Result<LayerOutcome> {
+    let t0 = Instant::now();
+    let p = &task.problem;
+    let regime = match spec.structure {
+        Structure::Transposable => Regime::Transposable(oracle),
+        Structure::StandardNm => Regime::StandardNm,
+        Structure::Unstructured => Regime::Unstructured,
+    };
+    let mut safeguard_hits = None;
+    let pruned = match (&task.preset_mask, spec.framework) {
+        (Some(mask), _) => {
+            // Mask arrived from a cross-layer batched call. Magnitude
+            // and Wanda (the only groupable frameworks) never update
+            // surviving weights, so GIVEN the mask this apply step is
+            // exactly the framework's own. The mask itself is the
+            // grouped-call solution (tau normalized over the combined
+            // batch — see `MaskOracle::mask_group`), which is the
+            // defined semantics at every `jobs` level.
+            let w = p.w.hadamard(mask);
+            let recon_error = p.recon_error(&w);
+            PrunedLayer { w, mask: mask.clone(), recon_error }
+        }
+        (None, Framework::Magnitude) => {
+            let (w, mask) = magnitude::prune(&p.w, p.pattern, regime)?;
+            let recon_error = p.recon_error(&w);
+            PrunedLayer { w, mask, recon_error }
+        }
+        (None, Framework::Wanda) => wanda::prune(p, regime)?,
+        (None, Framework::SparseGpt) => sparsegpt::prune(p, regime)?,
+        (None, Framework::Alps) => {
+            let (out, stats) = alps::prune_with(p, regime, alps_cfg)?;
+            safeguard_hits = Some(stats.safeguard_hits as f64);
+            out
+        }
+    };
+    let kept = pruned.mask.data.iter().filter(|&&x| x != 0.0).count();
+    let report = LayerReport {
+        name: p.name.clone(),
+        pattern: p.pattern,
+        recon_error: pruned.recon_error,
+        sparsity: 1.0 - kept as f64 / pruned.mask.data.len().max(1) as f64,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    };
+    Ok(LayerOutcome { report, w: pruned.w, mask: pruned.mask, safeguard_hits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::solver::{Method, SolveCfg};
+    use crate::pruning::CpuOracle;
+    use crate::sparse::gemm;
+    use crate::util::rng::Rng;
+
+    fn toy_task(d: usize, out: usize, pattern: NmPattern, seed: u64) -> LayerTask {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(2 * d, d, |_, _| rng.normal());
+        let gram = gemm::gram(&x);
+        let w = Mat::from_fn(d, out, |_, _| rng.heavy_tail());
+        LayerTask::new(LayerProblem {
+            name: format!("toy.{d}x{out}.{seed}"),
+            w,
+            gram,
+            pattern,
+            lambda_rel: 0.01,
+        })
+    }
+
+    #[test]
+    fn plan_groups_only_small_same_pattern_layers() {
+        let pattern = NmPattern::new(4, 8);
+        let tasks = vec![
+            toy_task(16, 16, pattern, 1),  // 4 blocks  -> small
+            toy_task(16, 64, pattern, 2),  // 16 blocks -> large
+            toy_task(16, 16, pattern, 3),  // 4 blocks  -> small
+            toy_task(16, 16, NmPattern::new(2, 8), 4), // small, other pattern (alone)
+        ];
+        let spec = crate::spec::PruneSpec::new(Framework::Wanda).pattern(4, 8);
+        let oracle =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+        let plan = plan_batches(&tasks, &spec, &oracle);
+        assert_eq!(plan.groups.len(), 1, "singleton pattern groups are dropped");
+        assert_eq!(plan.groups[0].members, vec![0, 2]);
+        assert_eq!(plan.groups[0].pattern, pattern);
+        // Padding arithmetic at bucket 8. Serial: tasks 0/2/3 have 4
+        // blocks (pad 4 each), task 1 fills two buckets exactly -> 12.
+        // Batched: the group's 4+4 fills one bucket (pad 0); ungrouped
+        // task 3 still pads 4.
+        let stats = plan.padding_stats(&tasks, 8);
+        assert_eq!(stats, PaddingStats { serial: 12, batched: 4 });
+    }
+
+    #[test]
+    fn no_plan_without_quantum_or_for_iterative_frameworks() {
+        let pattern = NmPattern::new(4, 8);
+        let tasks = vec![toy_task(16, 16, pattern, 1), toy_task(16, 16, pattern, 2)];
+        let spec = crate::spec::PruneSpec::new(Framework::Wanda).pattern(4, 8);
+        let plain = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        assert!(!plan_batches(&tasks, &spec, &plain).has_groups());
+        let spec = crate::spec::PruneSpec::new(Framework::Alps).pattern(4, 8);
+        let quantum =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+        assert!(!plan_batches(&tasks, &spec, &quantum).has_groups());
+    }
+
+    #[test]
+    fn outcomes_keep_task_order_at_any_job_count() {
+        let pattern = NmPattern::new(4, 8);
+        let spec = crate::spec::PruneSpec::new(Framework::Magnitude).pattern(4, 8);
+        for jobs in [1usize, 3, 8] {
+            let mut spec = spec.clone();
+            spec.jobs = jobs;
+            let tasks: Vec<LayerTask> =
+                (0..6).map(|i| toy_task(16, 16, pattern, 50 + i)).collect();
+            let names: Vec<String> =
+                tasks.iter().map(|t| t.problem.name.clone()).collect();
+            let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            let outcomes = run_layer_tasks(tasks, &spec, &oracle).unwrap();
+            let got: Vec<String> =
+                outcomes.iter().map(|o| o.report.name.clone()).collect();
+            assert_eq!(got, names, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn effective_jobs_zero_means_auto() {
+        assert!(effective_jobs(0) >= 1);
+        assert_eq!(effective_jobs(3), 3);
+    }
+}

@@ -1,9 +1,12 @@
 //! L3 coordinator: the paper's system contribution at runtime scale.
 //! Batches millions of M x M block problems through the AOT Dykstra
-//! artifact with bucket padding (`batcher`), sequences whole-model
-//! layer-wise pruning jobs (`pipeline`), and aggregates run metrics
-//! (`metrics`).
+//! artifact with bucket padding (`batcher`), schedules whole-model
+//! layer-wise pruning jobs onto a deterministic concurrent worker pool
+//! with cross-layer oracle batching (`executor`), sequences the
+//! calibrate -> prune -> evaluate run (`pipeline`), and aggregates run
+//! metrics (`metrics`).
 
 pub mod batcher;
+pub mod executor;
 pub mod metrics;
 pub mod pipeline;

@@ -1,15 +1,18 @@
 //! Whole-model pruning pipeline: calibration -> per-layer prune jobs ->
-//! pruned model state + typed `PruneReport`. The leader sequences layers
-//! (gram sites are computed once and shared by the weights they feed);
-//! what to prune comes from a `spec::PruneSpec`, how to generate masks
-//! from a `pruning::MaskOracle` (CPU solver or the XLA/AOT TSENOR path).
+//! pruned model state + typed `PruneReport`. The leader builds one
+//! `LayerTask` per prunable weight (gram sites are computed once and
+//! shared by the weights they feed) and hands the set to the concurrent
+//! layer executor (`coordinator::executor`, `spec.jobs` workers); what
+//! to prune comes from a `spec::PruneSpec`, how to generate masks from
+//! a `pruning::MaskOracle` (CPU solver or the XLA/AOT TSENOR path).
 
+use crate::coordinator::executor::{self, LayerTask};
 use crate::coordinator::metrics::Metrics;
 use crate::model::ModelState;
-use crate::pruning::{alps, magnitude, sparsegpt, wanda, LayerProblem, MaskOracle, Regime};
+use crate::pruning::{LayerProblem, MaskOracle};
 use crate::runtime::client::ModelRuntime;
 use crate::spec::report::{LayerReport, PruneReport};
-use crate::spec::{Framework, PruneSpec, Structure};
+use crate::spec::PruneSpec;
 use crate::util::tensor::Mat;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -50,7 +53,6 @@ pub fn prune_model(
     oracle: &dyn MaskOracle,
     metrics: &mut Metrics,
 ) -> Result<Vec<LayerReport>> {
-    let alps_cfg = alps::AlpsCfg::default();
     // Site lookup: weight name -> gram site name.
     let mut site_of: BTreeMap<&str, &str> = BTreeMap::new();
     for site in &rt.manifest.gram_sites {
@@ -59,14 +61,14 @@ pub fn prune_model(
         }
     }
 
-    let regime = match spec.structure {
-        Structure::Transposable => Regime::Transposable(oracle),
-        Structure::StandardNm => Regime::StandardNm,
-        Structure::Unstructured => Regime::Unstructured,
-    };
-
-    let mut layers = Vec::new();
+    // One independent job per prunable layer, manifest order. Memory
+    // trade-off: every task clones its weight + gram up front and all
+    // outcomes are held until the deterministic drain below, so peak
+    // usage is O(model) above the serial loop's single transient clone.
+    // Fine at this repo's scales; a streaming drain (bounded in-flight
+    // window) is the upgrade path if models outgrow RAM.
     let prunable = rt.manifest.prunable_names();
+    let mut tasks = Vec::with_capacity(prunable.len());
     for name in &prunable {
         let site = site_of
             .get(name.as_str())
@@ -75,37 +77,29 @@ pub fn prune_model(
             .get(*site)
             .with_context(|| format!("missing gram {site}"))?;
         let w = state.weights.get(name).context("missing weight")?.clone();
-        let pattern = spec.pattern_for(name);
-        let problem = LayerProblem {
+        tasks.push(LayerTask::new(LayerProblem {
             name: name.clone(),
             w,
             gram: gram.clone(),
-            pattern,
+            pattern: spec.pattern_for(name),
             lambda_rel: 0.01,
-        };
-        let pruned = match spec.framework {
-            Framework::Magnitude => {
-                let (w, mask) = magnitude::prune(&problem.w, pattern, regime)?;
-                let recon_error = problem.recon_error(&w);
-                crate::pruning::PrunedLayer { w, mask, recon_error }
-            }
-            Framework::Wanda => wanda::prune(&problem, regime)?,
-            Framework::SparseGpt => sparsegpt::prune(&problem, regime)?,
-            Framework::Alps => {
-                let (out, stats) = alps::prune_with(&problem, regime, &alps_cfg)?;
-                metrics.push("alps_safeguard_hits", stats.safeguard_hits as f64);
-                out
-            }
-        };
-        metrics.push("layer_recon_error", pruned.recon_error);
-        let kept = pruned.mask.data.iter().filter(|&&x| x != 0.0).count();
-        layers.push(LayerReport {
-            name: name.clone(),
-            pattern,
-            recon_error: pruned.recon_error,
-            sparsity: 1.0 - kept as f64 / pruned.mask.data.len().max(1) as f64,
-        });
-        state.set_pruned(name, pruned.w, pruned.mask);
+        }));
+    }
+
+    let outcomes = executor::run_layer_tasks(tasks, spec, oracle)?;
+
+    // State mutation and metrics recording stay out of the worker hot
+    // loop and run here in deterministic manifest order, so reports and
+    // metrics are identical at every `jobs` level (and workers never
+    // serialize on the metrics sink).
+    let mut layers = Vec::with_capacity(outcomes.len());
+    for out in outcomes {
+        if let Some(hits) = out.safeguard_hits {
+            metrics.push("alps_safeguard_hits", hits);
+        }
+        metrics.push("layer_recon_error", out.report.recon_error);
+        state.set_pruned(&out.report.name, out.w, out.mask);
+        layers.push(out.report);
     }
     metrics.put("model_sparsity", state.sparsity());
     Ok(layers)

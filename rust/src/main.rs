@@ -25,6 +25,10 @@
 //!   --framework NAME  magnitude|wanda|sparsegpt|alps
 //!   --structure NAME  transposable|standard|unstructured
 //!   --xla             use the AOT/XLA dykstra path for TSENOR
+//!   --jobs N          layer-level worker count for prune/finetune
+//!                     (1 = serial, 0 = one per core; bit-identical
+//!                     results at any N). For solve: block fan-out,
+//!                     effective workers = max(jobs, threads)
 //!   --rows R --cols C --seed S --calib-batches K --eval-batches K
 //!   --steps K (finetune)
 //!   --report FILE     where `prune` writes the JSON PruneReport
@@ -119,6 +123,7 @@ fn apply_prune_overrides(spec: &mut PruneSpec, args: &Args) -> Result<()> {
         spec.solve.seed = s;
     }
     spec.solve.threads = args.usize("threads", spec.solve.threads)?;
+    spec.jobs = args.usize("jobs", spec.jobs)?;
     Ok(())
 }
 
@@ -158,6 +163,11 @@ fn cmd_solve(args: &Args) -> Result<()> {
     spec.cols = args.usize("cols", spec.cols)?;
     spec.seed = args.usize("seed", spec.seed as usize)? as u64;
     spec.solve.threads = args.usize("threads", spec.solve.threads)?;
+    spec.jobs = args.usize("jobs", spec.jobs)?;
+    // A standalone solve has no layer jobs; `--jobs` fans out over
+    // block chunks exactly like `--threads` (bit-identical results).
+    spec.solve.threads =
+        spec.solve.threads.max(tsenor::coordinator::executor::effective_jobs(spec.jobs));
 
     let pattern = spec.pattern;
     let w = workload::structured_matrix(spec.rows, spec.cols, spec.seed);
@@ -182,7 +192,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             "  xla path: {} exec calls, {:.3}s in PJRT, {} padded blocks",
             engine.exec_calls.get(),
             engine.exec_nanos.get() as f64 / 1e9,
-            xla.padded_blocks.get()
+            xla.stats().padded_blocks
         );
         out
     } else {
@@ -233,11 +243,12 @@ fn cmd_prune(args: &Args) -> Result<()> {
     };
 
     println!(
-        "pruning: framework={} structure={} pattern={} oracle={}",
+        "pruning: framework={} structure={} pattern={} oracle={} jobs={}",
         spec.framework.name(),
         spec.structure.name(),
         spec.pattern,
-        oracle.name()
+        oracle.name(),
+        tsenor::coordinator::executor::effective_jobs(spec.jobs)
     );
     for ov in &spec.overrides {
         println!("  override: {} -> {}", ov.layers, ov.pattern);

@@ -28,9 +28,15 @@ fn sort_key(x: f32) -> u32 {
     }
 }
 
+/// Row/col capacity counters: stack arrays for the common M <= 64 case,
+/// heap fallback above it. The fixed arrays used to be the ONLY path,
+/// with the M <= 64 limit enforced by a `debug_assert!` alone — release
+/// builds indexed past the arrays for larger M. Any M now works.
+const STACK_M: usize = 64;
+
 /// Greedy selection into caller-provided buffers (§Perf: one u64
 /// key|index sort instead of a comparator over f32 loads; no per-block
-/// allocations when batched).
+/// allocations when batched, for any M <= 64).
 pub fn greedy_select_into(
     frac: &[f32],
     m: usize,
@@ -47,9 +53,14 @@ pub fn greedy_select_into(
     );
     order.sort_unstable_by(|a, b| b.cmp(a)); // descending by key
     mask.fill(0.0);
-    let mut rows = [0u16; 64];
-    let mut cols = [0u16; 64];
-    debug_assert!(m <= 64);
+    let mut stack = ([0u16; STACK_M], [0u16; STACK_M]);
+    let mut heap: (Vec<u16>, Vec<u16>);
+    let (rows, cols) = if m <= STACK_M {
+        (&mut stack.0[..m], &mut stack.1[..m])
+    } else {
+        heap = (vec![0u16; m], vec![0u16; m]);
+        (&mut heap.0[..], &mut heap.1[..])
+    };
     let n16 = n as u16;
     for &packed in order.iter() {
         let flat = (packed & 0xFFFF_FFFF) as usize;
@@ -407,6 +418,46 @@ mod tests {
             let r: f32 = mask[i * m..(i + 1) * m].iter().sum();
             assert!(r <= n as f32);
         }
+    }
+
+    #[test]
+    fn greedy_at_stack_capacity_boundary_m64() {
+        // M = 64 is the largest stack-array case; must stay exact.
+        let m = 64;
+        let n = 32;
+        let s = random_scores(m, 64);
+        let mask = greedy_select(&s, m, n);
+        for i in 0..m {
+            let r: f32 = mask[i * m..(i + 1) * m].iter().sum();
+            assert!(r <= n as f32);
+        }
+        for j in 0..m {
+            let c: f32 = (0..m).map(|i| mask[i * m + j]).sum();
+            assert!(c <= n as f32);
+        }
+        let full = round_block(&s, &s, m, n, 4);
+        assert!(is_transposable_feasible(&full, m, n));
+    }
+
+    #[test]
+    fn greedy_beyond_stack_capacity_m128() {
+        // Regression: M > 64 used to index out of the fixed counters
+        // (guarded only by a debug_assert) — the heap fallback must
+        // produce a capacity-respecting selection and a feasible block.
+        let m = 128;
+        let n = 64;
+        let s = random_scores(m, 128);
+        let mask = greedy_select(&s, m, n);
+        for i in 0..m {
+            let r: f32 = mask[i * m..(i + 1) * m].iter().sum();
+            assert!(r <= n as f32, "row {i} over capacity");
+        }
+        for j in 0..m {
+            let c: f32 = (0..m).map(|i| mask[i * m + j]).sum();
+            assert!(c <= n as f32, "col {j} over capacity");
+        }
+        let full = round_block(&s, &s, m, n, 2);
+        assert!(is_transposable_feasible(&full, m, n));
     }
 
     #[test]

@@ -5,18 +5,26 @@
 //! here, and the XLA/AOT TSENOR path (`coordinator::batcher::XlaSolver`)
 //! in the coordinator. Frameworks only see `&dyn MaskOracle`, so new
 //! backends (remote service, GPU, cached) drop in without touching them.
+//!
+//! Oracles are `Send + Sync`: the layer executor
+//! (`coordinator::executor`) shares one oracle across its worker pool,
+//! so statistics counters are atomics and implementations must be safe
+//! to call from several threads at once. Counter totals are
+//! order-independent sums, which keeps `OracleStats` identical at every
+//! `jobs` level.
 
 use crate::masks::solver::{self, Method, SolveCfg};
 use crate::masks::NmPattern;
-use crate::util::tensor::Mat;
+use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::Result;
-use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Cumulative solve statistics. Backends count over their lifetime;
 /// `PruneReport` stores the per-run delta (see [`OracleStats::since`]).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct OracleStats {
-    /// Whole-matrix `mask` invocations.
+    /// Whole-matrix `mask` invocations (grouped calls count once per
+    /// member matrix).
     pub calls: usize,
     /// M x M blocks solved across all calls.
     pub blocks_solved: usize,
@@ -27,6 +35,7 @@ pub struct OracleStats {
 impl OracleStats {
     /// Stats accumulated since `earlier` (a snapshot of the same
     /// oracle), so a backend shared across runs reports per-run deltas.
+    /// Saturating: a snapshot taken mid-call can never underflow.
     pub fn since(&self, earlier: &OracleStats) -> OracleStats {
         OracleStats {
             calls: self.calls.saturating_sub(earlier.calls),
@@ -38,7 +47,10 @@ impl OracleStats {
 
 /// Pluggable transposable-mask oracle: given a score matrix and an N:M
 /// pattern, return the binary mask maximizing the kept score.
-pub trait MaskOracle {
+///
+/// `Send + Sync` so one oracle can serve a concurrent layer-executor
+/// pool; implementations keep their counters in atomics.
+pub trait MaskOracle: Send + Sync {
     fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat>;
 
     /// Short identifier for reports ("tsenor", "xla-tsenor", ...).
@@ -48,19 +60,91 @@ pub trait MaskOracle {
     fn stats(&self) -> OracleStats {
         OracleStats::default()
     }
+
+    /// Preferred number of M x M blocks per batched call for this block
+    /// size (the XLA bucket size). Layers with fewer blocks than this
+    /// waste capacity when solved alone; the layer executor batches
+    /// them cross-layer into one [`MaskOracle::mask_group`] call.
+    /// `0` (the default) means batching gains nothing on this backend.
+    fn batch_quantum(&self, _m: usize) -> usize {
+        0
+    }
+
+    /// Solve several same-pattern score matrices in one batched call.
+    /// Backends that benefit concatenate all matrices' blocks (caller
+    /// order) into one solve; the default falls back to per-matrix
+    /// [`MaskOracle::mask`] calls. Either way the result is a
+    /// deterministic function of `(scores, pattern)` alone.
+    fn mask_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        scores.iter().map(|s| self.mask(s, pattern)).collect()
+    }
+}
+
+/// Concatenate the M x M blocks of several score matrices (caller
+/// order) into one batch; returns the combined batch plus per-matrix
+/// block counts for splitting the solved masks back.
+pub(crate) fn concat_score_blocks(scores: &[&Mat], m: usize) -> (Blocks, Vec<usize>) {
+    let mut combined = Blocks { b: 0, m, data: Vec::new() };
+    let mut counts = Vec::with_capacity(scores.len());
+    for s in scores {
+        let blocks = partition_blocks(&s.abs(), m);
+        counts.push(blocks.b);
+        combined.b += blocks.b;
+        combined.data.extend_from_slice(&blocks.data);
+    }
+    (combined, counts)
+}
+
+/// Inverse of [`concat_score_blocks`]: slice the solved batch back into
+/// per-matrix masks with the original shapes.
+pub(crate) fn split_group_masks(
+    solved: &Blocks,
+    scores: &[&Mat],
+    counts: &[usize],
+) -> Vec<Mat> {
+    let m = solved.m;
+    let sz = m * m;
+    let mut out = Vec::with_capacity(scores.len());
+    let mut start = 0usize;
+    for (s, &count) in scores.iter().zip(counts) {
+        let sub = Blocks {
+            b: count,
+            m,
+            data: solved.data[start * sz..(start + count) * sz].to_vec(),
+        };
+        out.push(assemble_blocks(&sub, s.rows, s.cols));
+        start += count;
+    }
+    out
 }
 
 /// Pure-CPU oracle over any solver method.
 pub struct CpuOracle {
     method: Method,
     cfg: SolveCfg,
-    calls: Cell<usize>,
-    blocks: Cell<usize>,
+    /// Cross-layer batching threshold (blocks); 0 disables grouping.
+    batch_quantum: usize,
+    calls: AtomicUsize,
+    blocks: AtomicUsize,
 }
 
 impl CpuOracle {
     pub fn new(method: Method, cfg: SolveCfg) -> Self {
-        CpuOracle { method, cfg, calls: Cell::new(0), blocks: Cell::new(0) }
+        CpuOracle {
+            method,
+            cfg,
+            batch_quantum: 0,
+            calls: AtomicUsize::new(0),
+            blocks: AtomicUsize::new(0),
+        }
+    }
+
+    /// Opt into cross-layer batching: layers with fewer than `quantum`
+    /// blocks are solved together in one combined batch (tau normalized
+    /// over the combined batch, mirroring the bucketed XLA semantics).
+    pub fn with_batch_quantum(mut self, quantum: usize) -> Self {
+        self.batch_quantum = quantum;
+        self
     }
 
     pub fn method(&self) -> Method {
@@ -70,9 +154,11 @@ impl CpuOracle {
 
 impl MaskOracle for CpuOracle {
     fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat> {
-        self.calls.set(self.calls.get() + 1);
-        self.blocks
-            .set(self.blocks.get() + (score.rows / pattern.m) * (score.cols / pattern.m));
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.blocks.fetch_add(
+            (score.rows / pattern.m) * (score.cols / pattern.m),
+            Ordering::Relaxed,
+        );
         Ok(solver::solve_matrix(self.method, score, pattern, &self.cfg))
     }
 
@@ -82,10 +168,26 @@ impl MaskOracle for CpuOracle {
 
     fn stats(&self) -> OracleStats {
         OracleStats {
-            calls: self.calls.get(),
-            blocks_solved: self.blocks.get(),
+            calls: self.calls.load(Ordering::Relaxed),
+            blocks_solved: self.blocks.load(Ordering::Relaxed),
             padded_blocks: 0,
         }
+    }
+
+    fn batch_quantum(&self, _m: usize) -> usize {
+        self.batch_quantum
+    }
+
+    fn mask_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        if self.batch_quantum == 0 || scores.len() <= 1 {
+            return scores.iter().map(|s| self.mask(s, pattern)).collect();
+        }
+        let (combined, counts) = concat_score_blocks(scores, pattern.m);
+        let solved =
+            solver::solve_blocks_parallel(self.method, &combined, pattern.n, &self.cfg);
+        self.calls.fetch_add(scores.len(), Ordering::Relaxed);
+        self.blocks.fetch_add(combined.b, Ordering::Relaxed);
+        Ok(split_group_masks(&solved, scores, &counts))
     }
 }
 
@@ -119,5 +221,65 @@ mod tests {
         let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
         let mask = dynref.mask(&w, NmPattern::new(2, 4)).unwrap();
         assert!(batch_feasible(&partition_blocks(&mask, 4), 2));
+    }
+
+    #[test]
+    fn oracle_is_shareable_across_threads() {
+        // The Send + Sync bound in action: concurrent mask() calls from
+        // scoped threads, counters summed exactly.
+        let oracle = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let oracle = &oracle;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(40 + t);
+                    let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
+                    oracle.mask(&w, NmPattern::new(4, 8)).unwrap();
+                });
+            }
+        });
+        let stats = oracle.stats();
+        assert_eq!(stats.calls, 4);
+        assert_eq!(stats.blocks_solved, 4);
+    }
+
+    #[test]
+    fn group_default_matches_per_matrix_calls() {
+        // batch_quantum = 0: mask_group is exactly the per-matrix loop.
+        let mut rng = Rng::new(6);
+        let a = Mat::from_fn(8, 16, |_, _| rng.heavy_tail());
+        let b = Mat::from_fn(16, 8, |_, _| rng.heavy_tail());
+        let pattern = NmPattern::new(4, 8);
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let grouped = oracle.mask_group(&[&a, &b], pattern).unwrap();
+        let singles = vec![
+            oracle.mask(&a, pattern).unwrap(),
+            oracle.mask(&b, pattern).unwrap(),
+        ];
+        assert_eq!(grouped.len(), 2);
+        for (g, s) in grouped.iter().zip(&singles) {
+            assert_eq!(g.data, s.data);
+        }
+        assert_eq!(oracle.stats().calls, 4);
+    }
+
+    #[test]
+    fn grouped_solve_is_feasible_and_shape_preserving() {
+        let mut rng = Rng::new(7);
+        let a = Mat::from_fn(8, 16, |_, _| rng.heavy_tail());
+        let b = Mat::from_fn(16, 24, |_, _| rng.heavy_tail());
+        let pattern = NmPattern::new(4, 8);
+        let oracle =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(16);
+        let masks = oracle.mask_group(&[&a, &b], pattern).unwrap();
+        assert_eq!((masks[0].rows, masks[0].cols), (8, 16));
+        assert_eq!((masks[1].rows, masks[1].cols), (16, 24));
+        for mask in &masks {
+            assert!(batch_feasible(&partition_blocks(mask, 8), 4));
+        }
+        // One logical call per member, every block counted once.
+        let stats = oracle.stats();
+        assert_eq!(stats.calls, 2);
+        assert_eq!(stats.blocks_solved, 2 + 6);
     }
 }

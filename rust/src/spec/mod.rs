@@ -229,6 +229,13 @@ pub struct PruneSpec {
     /// component of a prune run) by the builder / JSON loader; an
     /// explicit `solve.seed` value overrides the mirror.
     pub seed: u64,
+    /// Layer-level worker count for the concurrent executor: layers are
+    /// independent prune jobs drained from a work queue by this many
+    /// scoped threads. `1` = serial (default), `0` = one worker per
+    /// available core. Any value produces bit-identical masks and
+    /// reports (modulo per-layer `wall_secs`) — see
+    /// `coordinator::executor`.
+    pub jobs: usize,
 }
 
 impl PruneSpec {
@@ -242,6 +249,7 @@ impl PruneSpec {
             calib_batches: 8,
             eval_batches: Some(12),
             seed: 0,
+            jobs: 1,
         }
     }
 
@@ -282,6 +290,12 @@ impl PruneSpec {
         self
     }
 
+    /// Layer-level worker count (`0` = auto, one per core).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
     /// Effective pattern for a layer: the last matching override, else
     /// the spec default.
     pub fn pattern_for(&self, layer: &str) -> NmPattern {
@@ -311,6 +325,7 @@ impl PruneSpec {
                 self.eval_batches.map_or(Json::Null, |e| Json::Num(e as f64)),
             ),
             ("seed", Json::Num(self.seed as f64)),
+            ("jobs", Json::Num(self.jobs as f64)),
             ("solve", solve_cfg_to_json(&self.solve)),
         ];
         if !self.overrides.is_empty() {
@@ -346,6 +361,9 @@ impl PruneSpec {
             spec.seed = k as u64;
             spec.solve.seed = k as u64;
         }
+        if let Some(k) = json_usize(j, "jobs")? {
+            spec.jobs = k;
+        }
         // After "seed" so an explicit solve.seed wins over the mirror.
         if let Some(sj) = j.get("solve") {
             spec.solve = solve_cfg_from_json(sj, spec.solve)?;
@@ -376,6 +394,11 @@ pub struct SolveSpec {
     pub cols: usize,
     pub seed: u64,
     pub solve: SolveCfg,
+    /// Concurrent solve jobs. A standalone solve has no layers, so this
+    /// fans out over block chunks exactly like `solve.threads` (the CLI
+    /// uses `max(jobs, threads)` workers); the field exists so prune and
+    /// solve spec files share one schema. `0` = auto.
+    pub jobs: usize,
 }
 
 impl SolveSpec {
@@ -387,6 +410,7 @@ impl SolveSpec {
             cols: 512,
             seed: 0,
             solve: SolveCfg::default(),
+            jobs: 1,
         }
     }
 
@@ -406,6 +430,12 @@ impl SolveSpec {
         self
     }
 
+    /// Concurrent solve jobs (`0` = auto, one per core).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("kind", Json::Str("solve".into())),
@@ -414,6 +444,7 @@ impl SolveSpec {
             ("rows", Json::Num(self.rows as f64)),
             ("cols", Json::Num(self.cols as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("jobs", Json::Num(self.jobs as f64)),
             ("solve", solve_cfg_to_json(&self.solve)),
         ])
     }
@@ -435,6 +466,9 @@ impl SolveSpec {
         }
         if let Some(k) = json_usize(j, "seed")? {
             spec.seed = k as u64;
+        }
+        if let Some(k) = json_usize(j, "jobs")? {
+            spec.jobs = k;
         }
         if let Some(sj) = j.get("solve") {
             spec.solve = solve_cfg_from_json(sj, spec.solve)?;
@@ -597,10 +631,29 @@ mod tests {
             .solve(cfg)
             .calib_batches(5)
             .eval_batches(Some(3))
-            .seed(99);
+            .seed(99)
+            .jobs(6);
         let text = spec.to_json().to_string_pretty();
         let back = PruneSpec::parse(&text).unwrap();
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn jobs_default_builder_and_json() {
+        // Default is serial.
+        assert_eq!(PruneSpec::new(Framework::Alps).jobs, 1);
+        assert_eq!(SolveSpec::new(Method::Tsenor).jobs, 1);
+        // Builder and JSON plumb through; 0 (= auto) survives a trip.
+        assert_eq!(PruneSpec::new(Framework::Alps).jobs(8).jobs, 8);
+        let spec = PruneSpec::parse(r#"{"jobs": 4}"#).unwrap();
+        assert_eq!(spec.jobs, 4);
+        let spec = SolveSpec::parse(r#"{"jobs": 0}"#).unwrap();
+        assert_eq!(spec.jobs, 0);
+        let s = SolveSpec::new(Method::Pdlp).jobs(3);
+        assert_eq!(SolveSpec::parse(&s.to_json().to_string_pretty()).unwrap().jobs, 3);
+        // Strict integers, same stance as every other count field.
+        assert!(PruneSpec::parse(r#"{"jobs": -2}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"jobs": 1.5}"#).is_err());
     }
 
     #[test]

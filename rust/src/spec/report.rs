@@ -20,6 +20,17 @@ pub struct LayerReport {
     pub pattern: crate::masks::NmPattern,
     pub recon_error: f64,
     pub sparsity: f64,
+    /// Wall time of this layer's prune job (worker-side). The ONLY
+    /// field allowed to differ between runs at different `jobs` levels.
+    pub wall_secs: f64,
+}
+
+impl LayerReport {
+    /// Copy with timing zeroed — the comparable part of the report
+    /// (the differential harness checks equality modulo `wall_secs`).
+    pub fn without_timing(&self) -> LayerReport {
+        LayerReport { wall_secs: 0.0, ..self.clone() }
+    }
 }
 
 /// Outcome of a full pruning run.
@@ -50,16 +61,40 @@ impl PruneReport {
     }
 
     pub fn to_json(&self) -> Json {
+        self.json_impl(true)
+    }
+
+    /// JSON with every scheduling artifact omitted — timing fields AND
+    /// the embedded spec's `jobs` knob — so two runs that differ only
+    /// in scheduling compare byte-equal. The differential test harness
+    /// asserts this is identical for `jobs = 1` and `jobs = N`.
+    pub fn to_json_stripped(&self) -> Json {
+        self.json_impl(false)
+    }
+
+    fn json_impl(&self, with_timing: bool) -> Json {
+        let mut spec_json = self.spec.to_json();
+        if !with_timing {
+            // `jobs` is pure scheduling: neutralize it like the timing
+            // fields so the stripped report ignores worker count.
+            if let Json::Obj(fields) = &mut spec_json {
+                fields.remove("jobs");
+            }
+        }
         let layers = Json::Arr(
             self.layers
                 .iter()
                 .map(|l| {
-                    json::obj(vec![
+                    let mut fields = vec![
                         ("name", Json::Str(l.name.clone())),
                         ("pattern", Json::Str(l.pattern.to_string())),
                         ("recon_error", Json::Num(l.recon_error)),
                         ("sparsity", Json::Num(l.sparsity)),
-                    ])
+                    ];
+                    if with_timing {
+                        fields.push(("wall_secs", Json::Num(l.wall_secs)));
+                    }
+                    json::obj(fields)
                 })
                 .collect(),
         );
@@ -71,16 +106,19 @@ impl PruneReport {
             ("blocks_solved", Json::Num(self.oracle_stats.blocks_solved as f64)),
             ("padded_blocks", Json::Num(self.oracle_stats.padded_blocks as f64)),
         ]);
-        json::obj(vec![
-            ("spec", self.spec.to_json()),
+        let mut fields = vec![
+            ("spec", spec_json),
             ("oracle", Json::Str(self.oracle.clone())),
             ("oracle_stats", stats),
             ("layers", layers),
             ("model_sparsity", Json::Num(self.model_sparsity)),
             ("mean_recon_error", Json::Num(self.mean_recon_error())),
             ("perplexity", ppl),
-            ("wall_secs", Json::Num(self.wall_secs)),
-        ])
+        ];
+        if with_timing {
+            fields.push(("wall_secs", Json::Num(self.wall_secs)));
+        }
+        json::obj(fields)
     }
 
     /// Human-readable summary for the CLI.
@@ -144,12 +182,14 @@ mod tests {
                     pattern: NmPattern::new(8, 16),
                     recon_error: 0.01,
                     sparsity: 0.5,
+                    wall_secs: 0.25,
                 },
                 LayerReport {
                     name: "layers.0.wup".into(),
                     pattern: NmPattern::new(16, 32),
                     recon_error: 0.03,
                     sparsity: 0.5,
+                    wall_secs: 0.75,
                 },
             ],
             model_sparsity: 0.5,
@@ -176,6 +216,36 @@ mod tests {
         // And the JSON text parses back.
         let text = j.to_string_pretty();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn stripped_json_has_no_timing_fields() {
+        let r = toy_report();
+        let full = r.to_json();
+        assert_eq!(full.get("wall_secs").and_then(Json::as_f64), Some(1.5));
+        let layer0 = &full.get("layers").unwrap().as_arr().unwrap()[0];
+        assert_eq!(layer0.get("wall_secs").and_then(Json::as_f64), Some(0.25));
+
+        let stripped = r.to_json_stripped();
+        assert!(stripped.get("wall_secs").is_none());
+        for l in stripped.get("layers").unwrap().as_arr().unwrap() {
+            assert!(l.get("wall_secs").is_none());
+        }
+        // The embedded spec's jobs knob (pure scheduling) is neutralized
+        // too; the full JSON keeps it.
+        assert!(stripped.get("spec").unwrap().get("jobs").is_none());
+        assert!(full.get("spec").unwrap().get("jobs").is_some());
+        // Two runs differing only in timing + worker count strip to
+        // identical bytes.
+        let mut r2 = r.clone();
+        r2.wall_secs = 99.0;
+        r2.layers[0].wall_secs = 42.0;
+        r2.spec.jobs = 8;
+        assert_eq!(
+            r.to_json_stripped().to_string_pretty(),
+            r2.to_json_stripped().to_string_pretty()
+        );
+        assert_eq!(r.layers[0].without_timing(), r2.layers[0].without_timing());
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Differential harness for the concurrent layer executor: `jobs = N`
+//! must be **invisible** in every output. For every `Framework` x
+//! `Structure` combination the layer-pruning stage runs serially
+//! (`jobs = 1`) and concurrently (`jobs = 4`) over the same synthetic
+//! model, and the harness asserts byte-identical per-layer masks and
+//! weights, equal `LayerReport`s (modulo `wall_secs`), and equal
+//! `OracleStats` totals. A property test drives random job counts
+//! (1..=8) over random layer mixes and checks the timing-stripped
+//! `PruneReport` JSON never changes. The full `pipeline::run`
+//! differential (calibration + perplexity through PJRT) runs whenever
+//! the artifact bundle is present.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use tsenor::coordinator::executor::{self, LayerOutcome, LayerTask};
+use tsenor::coordinator::metrics::Metrics;
+use tsenor::coordinator::pipeline;
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::masks::NmPattern;
+use tsenor::model::ModelState;
+use tsenor::pruning::{CpuOracle, LayerProblem, MaskOracle, OracleStats};
+use tsenor::runtime::client::ModelRuntime;
+use tsenor::runtime::{Engine, Manifest};
+use tsenor::spec::report::PruneReport;
+use tsenor::spec::{Framework, PruneSpec, Structure};
+use tsenor::sparse::gemm;
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+const STRUCTURES: [Structure; 3] =
+    [Structure::Transposable, Structure::StandardNm, Structure::Unstructured];
+
+/// Synthetic prunable layers: (in_dim, out_dim) pairs, dims divisible
+/// by every pattern M used below.
+fn toy_tasks(shapes: &[(usize, usize)], spec: &PruneSpec, seed: u64) -> Vec<LayerTask> {
+    let mut rng = Rng::new(seed);
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(d, out))| {
+            let x = Mat::from_fn(2 * d, d, |_, _| rng.normal());
+            let gram = gemm::gram(&x);
+            let w = Mat::from_fn(d, out, |_, _| rng.heavy_tail());
+            let name = format!("layers.{i}.w{d}x{out}");
+            LayerTask::new(LayerProblem {
+                name: name.clone(),
+                w,
+                gram,
+                pattern: spec.pattern_for(&name),
+                lambda_rel: 0.01,
+            })
+        })
+        .collect()
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run the executor over a freshly-built task set; returns outcomes
+/// plus the oracle-stat delta of the run.
+fn run_once(
+    shapes: &[(usize, usize)],
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+    seed: u64,
+) -> (Vec<LayerOutcome>, OracleStats) {
+    let before = oracle.stats();
+    let tasks = toy_tasks(shapes, spec, seed);
+    let outcomes = executor::run_layer_tasks(tasks, spec, oracle).unwrap();
+    (outcomes, oracle.stats().since(&before))
+}
+
+fn assert_equivalent(a: &[LayerOutcome], b: &[LayerOutcome], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: layer count");
+    for (x, y) in a.iter().zip(b) {
+        let name = &x.report.name;
+        assert_eq!(bits(&x.mask), bits(&y.mask), "{ctx}: mask bits differ for {name}");
+        assert_eq!(bits(&x.w), bits(&y.w), "{ctx}: weight bits differ for {name}");
+        assert_eq!(
+            x.report.without_timing(),
+            y.report.without_timing(),
+            "{ctx}: report differs for {name}"
+        );
+        assert_eq!(x.safeguard_hits, y.safeguard_hits, "{ctx}: safeguard for {name}");
+    }
+}
+
+#[test]
+fn jobs4_matches_jobs1_for_every_framework_and_structure() {
+    let shapes = [(16, 16), (16, 32), (32, 16), (16, 24), (32, 32)];
+    for &framework in Framework::all() {
+        for structure in STRUCTURES {
+            let base = PruneSpec::new(framework)
+                .structure(structure)
+                .pattern(4, 8)
+                .override_layers("layers.2.*", 2, 8);
+            let ctx = format!("{}/{}", framework.name(), structure.name());
+
+            let serial_oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            let (serial, serial_stats) =
+                run_once(&shapes, &base.clone().jobs(1), &serial_oracle, 7);
+
+            let par_oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            let (parallel, par_stats) =
+                run_once(&shapes, &base.clone().jobs(4), &par_oracle, 7);
+
+            assert_equivalent(&serial, &parallel, &ctx);
+            assert_eq!(serial_stats, par_stats, "{ctx}: oracle stats");
+        }
+    }
+}
+
+#[test]
+fn cross_layer_batching_is_jobs_invariant_and_reduces_padding() {
+    // Small layers (< quantum blocks) are batched into one oracle call;
+    // the plan is scheduling-independent, so grouping + any job count
+    // still reproduces jobs=1 bit-for-bit.
+    let shapes = [(16, 16), (16, 64), (16, 16), (16, 16), (32, 32)];
+    let base = PruneSpec::new(Framework::Wanda).pattern(4, 8);
+    let quantum = 8;
+
+    let make_oracle = || {
+        CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(quantum)
+    };
+    let probe = make_oracle();
+    let tasks = toy_tasks(&shapes, &base, 11);
+    let plan = executor::plan_batches(&tasks, &base, &probe);
+    assert!(plan.has_groups(), "small layers must form a cross-layer batch");
+    assert_eq!(plan.groups[0].members, vec![0, 2, 3], "4-block layers group");
+    let pad = plan.padding_stats(&tasks, quantum);
+    assert!(
+        pad.batched < pad.serial,
+        "grouping must reduce bucket padding: {} !< {}",
+        pad.batched,
+        pad.serial
+    );
+
+    let o1 = make_oracle();
+    let (serial, s1) = run_once(&shapes, &base.clone().jobs(1), &o1, 11);
+    let o4 = make_oracle();
+    let (parallel, s4) = run_once(&shapes, &base.clone().jobs(4), &o4, 11);
+    assert_equivalent(&serial, &parallel, "wanda/grouped");
+    assert_eq!(s1, s4);
+    // Every layer still counted once through the grouped call.
+    assert_eq!(s1.calls, shapes.len());
+}
+
+/// Assemble the full typed report from executor outcomes (what
+/// `pipeline::run` does after the worker pool joins, minus the
+/// PJRT-only perplexity pass).
+fn report_from_outcomes(
+    spec: &PruneSpec,
+    oracle_name: &str,
+    stats: OracleStats,
+    outcomes: Vec<LayerOutcome>,
+) -> PruneReport {
+    let mut state = ModelState::new(BTreeMap::new());
+    let mut layers = Vec::with_capacity(outcomes.len());
+    for out in outcomes {
+        state.set_pruned(&out.report.name, out.w, out.mask);
+        layers.push(out.report);
+    }
+    let model_sparsity = state.sparsity();
+    PruneReport {
+        spec: spec.clone(),
+        oracle: oracle_name.to_string(),
+        oracle_stats: stats,
+        layers,
+        model_sparsity,
+        perplexity: BTreeMap::new(),
+        wall_secs: 0.0,
+        state,
+    }
+}
+
+#[test]
+fn property_random_job_counts_never_change_the_stripped_report_json() {
+    let mut rng = Rng::new(2026);
+    let dims = [16usize, 24, 32];
+    for trial in 0..6u64 {
+        // Random layer mix: 3..=7 layers with random (divisible) dims.
+        let n_layers = 3 + (rng.next_u64() % 5) as usize;
+        let shapes: Vec<(usize, usize)> = (0..n_layers)
+            .map(|_| {
+                let d = dims[(rng.next_u64() % 3) as usize];
+                let out = dims[(rng.next_u64() % 3) as usize];
+                (d, out)
+            })
+            .collect();
+        let framework = Framework::all()[(rng.next_u64() % 4) as usize];
+        let quantum = if rng.next_u64() % 2 == 0 { 0 } else { 8 };
+        let seed = 500 + trial;
+
+        // Reference: serial. The spec embedded in the report must be
+        // identical across job counts, so jobs lives outside it here.
+        let spec = PruneSpec::new(framework).pattern(4, 8);
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default())
+            .with_batch_quantum(quantum);
+        let (outcomes, stats) = run_once(&shapes, &spec.clone().jobs(1), &oracle, seed);
+        let reference = report_from_outcomes(&spec, oracle.name(), stats, outcomes)
+            .to_json_stripped()
+            .to_string_pretty();
+
+        for _ in 0..3 {
+            let jobs = 1 + (rng.next_u64() % 8) as usize;
+            let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default())
+                .with_batch_quantum(quantum);
+            let (outcomes, stats) =
+                run_once(&shapes, &spec.clone().jobs(jobs), &oracle, seed);
+            let got = report_from_outcomes(&spec, oracle.name(), stats, outcomes)
+                .to_json_stripped()
+                .to_string_pretty();
+            assert_eq!(
+                got, reference,
+                "trial {trial}: jobs={jobs} changed the report ({} layers, {})",
+                shapes.len(),
+                framework.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn intra_layer_threads_compose_with_layer_jobs() {
+    // Block-level fan-out (SolveCfg.threads) inside layer-level jobs:
+    // nested parallelism must still be bit-deterministic.
+    let shapes = [(16, 32), (32, 32), (16, 16), (32, 16)];
+    let base = PruneSpec::new(Framework::SparseGpt).pattern(4, 8);
+    let cfg = SolveCfg { threads: 2, ..Default::default() };
+    let o1 = CpuOracle::new(Method::Tsenor, cfg);
+    let (serial, s1) = run_once(&shapes, &base.clone().jobs(1), &o1, 13);
+    let o4 = CpuOracle::new(Method::Tsenor, cfg);
+    let (parallel, s4) = run_once(&shapes, &base.clone().jobs(4), &o4, 13);
+    assert_equivalent(&serial, &parallel, "sparsegpt/threads=2");
+    assert_eq!(s1, s4);
+}
+
+#[test]
+fn oracle_counters_sum_exactly_under_contention() {
+    // Interleaved mask() calls from many threads must lose no
+    // increments: totals are exact sums, not approximations.
+    let oracle = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
+    let threads = 8usize;
+    let per_thread = 12usize;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let oracle = &oracle;
+            scope.spawn(move || {
+                let mut rng = Rng::new(900 + t as u64);
+                for _ in 0..per_thread {
+                    let w = Mat::from_fn(8, 16, |_, _| rng.heavy_tail());
+                    oracle.mask(&w, NmPattern::new(4, 8)).unwrap();
+                }
+            });
+        }
+    });
+    let stats = oracle.stats();
+    assert_eq!(stats.calls, threads * per_thread);
+    // 8x16 at M=8 -> 2 blocks per call.
+    assert_eq!(stats.blocks_solved, threads * per_thread * 2);
+    assert_eq!(stats.padded_blocks, 0);
+}
+
+#[test]
+fn stats_snapshots_mid_run_never_underflow() {
+    // A reader snapshotting while writers increment must always see
+    // monotone, non-underflowing deltas — and `since` with snapshots
+    // taken in either order must never panic.
+    let oracle = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let oracle = &oracle;
+            scope.spawn(move || {
+                let mut rng = Rng::new(700 + t as u64);
+                for _ in 0..10 {
+                    let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
+                    oracle.mask(&w, NmPattern::new(4, 8)).unwrap();
+                }
+            });
+        }
+        let oracle = &oracle;
+        scope.spawn(move || {
+            for _ in 0..50 {
+                let a = oracle.stats();
+                let b = oracle.stats();
+                // Monotone counters: the later snapshot dominates.
+                assert!(b.calls >= a.calls && b.blocks_solved >= a.blocks_solved);
+                let d = b.since(&a);
+                assert!(d.calls <= b.calls && d.blocks_solved <= b.blocks_solved);
+                // Reversed order saturates to zero instead of wrapping.
+                let r = a.since(&b);
+                assert_eq!(r, OracleStats::default());
+                std::thread::yield_now();
+            }
+        });
+    });
+    let total = oracle.stats();
+    assert_eq!(total.calls, 40);
+    assert_eq!(total.blocks_solved, 40);
+}
+
+// ---------------------------------------------------------------------
+// Full pipeline::run differential — needs the artifact bundle (PJRT).
+// ---------------------------------------------------------------------
+
+fn setup() -> Option<(Manifest, Engine)> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let engine = Engine::new(&manifest).unwrap();
+    Some((manifest, engine))
+}
+
+#[test]
+fn pipeline_run_jobs4_matches_jobs1_end_to_end() {
+    let Some((manifest, engine)) = setup() else { return };
+    let rt = ModelRuntime::new(&engine, &manifest);
+    for &framework in &[Framework::Wanda, Framework::Alps] {
+        let base = PruneSpec::new(framework)
+            .pattern(16, 32)
+            .calib_batches(2)
+            .eval_batches(Some(1));
+
+        let oracle1 = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let mut metrics1 = Metrics::new();
+        let r1 =
+            pipeline::run(&rt, &base.clone().jobs(1), &oracle1, &mut metrics1).unwrap();
+
+        let oracle4 = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let mut metrics4 = Metrics::new();
+        let r4 =
+            pipeline::run(&rt, &base.clone().jobs(4), &oracle4, &mut metrics4).unwrap();
+
+        let name = framework.name();
+        assert_eq!(r1.layers.len(), r4.layers.len());
+        for (a, b) in r1.layers.iter().zip(&r4.layers) {
+            assert_eq!(a.without_timing(), b.without_timing(), "{name}: {}", a.name);
+            assert_eq!(
+                bits(&r1.state.masks[&a.name]),
+                bits(&r4.state.masks[&b.name]),
+                "{name}: mask {}",
+                a.name
+            );
+        }
+        assert_eq!(r1.oracle_stats, r4.oracle_stats, "{name}");
+        assert_eq!(r1.model_sparsity, r4.model_sparsity, "{name}");
+        assert_eq!(r1.perplexity, r4.perplexity, "{name}");
+        // Whole-report JSON: stripping removes timing AND the spec's
+        // jobs knob, so the two runs compare byte-equal directly.
+        assert_eq!(
+            r1.to_json_stripped().to_string_pretty(),
+            r4.to_json_stripped().to_string_pretty(),
+            "{name}: stripped report JSON"
+        );
+        assert_eq!(
+            metrics1.to_json().to_string_pretty(),
+            metrics4.to_json().to_string_pretty(),
+            "{name}: metrics"
+        );
+    }
+}

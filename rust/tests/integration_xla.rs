@@ -8,6 +8,7 @@ use tsenor::data::workload;
 use tsenor::masks::dykstra::{effective_tau, solve_batch};
 use tsenor::masks::solver::{self, Method, SolveCfg};
 use tsenor::masks::{batch_feasible, batch_objective, relative_error, NmPattern};
+use tsenor::pruning::MaskOracle;
 use tsenor::runtime::{Engine, Manifest};
 
 fn manifest() -> Option<Manifest> {
@@ -79,5 +80,5 @@ fn xla_bucket_padding_roundtrip() {
     let masks = solver.solve_blocks(&scores, 8).unwrap();
     assert_eq!(masks.b, 77);
     assert!(batch_feasible(&masks, 8));
-    assert!(solver.padded_blocks.get() > 0, "tail should have been padded");
+    assert!(solver.stats().padded_blocks > 0, "tail should have been padded");
 }
