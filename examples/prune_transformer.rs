@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         report.model_sparsity,
         report.oracle_stats.blocks_solved,
         report.oracle_stats.padded_blocks,
-        engine.exec_nanos.get() as f64 / 1e9
+        engine.stats().exec_secs()
     );
 
     // Table-2-shaped report.

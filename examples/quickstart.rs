@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
             "  xla : {:.3}s  objective {:.1}  ({} PJRT calls, platform {})",
             xla_secs,
             obj2,
-            engine.exec_calls.get(),
+            engine.stats().exec_calls,
             engine.platform()
         );
         assert!((obj - obj2).abs() / obj.abs() < 5e-3, "CPU and XLA paths disagree");

@@ -4,88 +4,128 @@
 //! accelerated TSENOR path: Algorithm 1 runs in the compiled HLO,
 //! Algorithm 2 (branchy rounding) runs in Rust.
 //!
-//! Concurrency: the solver is a `MaskOracle` and therefore `Send +
-//! Sync` — the layer executor calls it from a worker pool. All PJRT
-//! engine access is serialized behind `engine_lock` (the xla-rs wrapper
-//! types are single-threaded: `Rc`/`RefCell` inside `Engine`); rounding
-//! and padding run lock-free on owned data, and the statistics counters
-//! are atomics so concurrent calls sum exactly.
+//! Concurrency: `Engine` is `Send + Sync` (sharded executable cache,
+//! atomic counters, per-engine PJRT lock), so the solver needs no lock
+//! of its own — rounding and padding run lock-free and concurrent
+//! `mask` calls overlap freely. Constructed over an [`EnginePool`]
+//! (`XlaSolver::pooled`), each logical solve checks out a pool slot
+//! round-robin, so concurrent callers run their HLO calls on distinct
+//! PJRT clients instead of queueing on one global mutex (the PR 2
+//! arrangement this replaced).
+//!
+//! Tau normalization: the Dykstra temperature only ever enters the
+//! kernel as the elementwise product `tau * |w|`, so the solver folds
+//! tau into the block data on the host and always calls the HLO with
+//! `tau = 1`. `1.0 * x` is exact, making host-side folding bit-equal to
+//! in-kernel scaling — and it is what lets the coalesced service path
+//! give every matrix its own tau inside one shared bucket call.
 
 use crate::masks::dykstra::effective_tau;
 use crate::masks::rounding;
 use crate::masks::solver::SolveCfg;
-use crate::pruning::oracle::{concat_score_blocks, split_group_masks};
-use crate::pruning::{MaskOracle, OracleStats};
-use crate::runtime::{Engine, Manifest};
+use crate::pruning::oracle::{
+    concat_scaled_blocks, concat_score_blocks, split_group_masks,
+};
+use crate::pruning::{MaskService, MaskTicket, OracleStats};
+use crate::runtime::{Engine, EnginePool, Manifest};
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+/// Where the solver gets an engine for each logical solve.
+#[derive(Clone, Copy)]
+enum EngineSource<'a> {
+    Single(&'a Engine),
+    Pool(&'a EnginePool),
+}
 
 /// XLA-backed TSENOR solver.
 pub struct XlaSolver<'a> {
-    /// Private so every engine touch is forced through this module's
-    /// lock discipline (see the `Send`/`Sync` safety argument below).
-    engine: &'a Engine,
+    engines: EngineSource<'a>,
     pub manifest: &'a Manifest,
     pub cfg: SolveCfg,
-    /// Serializes every touch of `engine`: PJRT wrapper types are not
-    /// thread-safe, so at most one worker executes HLO at a time.
-    engine_lock: Mutex<()>,
     /// Accumulated stats for the perf report.
     pub padded_blocks: AtomicUsize,
     pub solved_blocks: AtomicUsize,
     pub mask_calls: AtomicUsize,
 }
 
-// SAFETY: the only non-thread-safe state reachable from an `XlaSolver`
-// is the shared `&Engine` (xla-rs `PjRtClient` plus `Rc`/`RefCell`/
-// `Cell` internals). Every dereference of `self.engine` happens while
-// holding `self.engine_lock`, so cross-thread access is fully
-// serialized, and the engine holds no thread-local state. The pipeline
-// upholds the remaining invariant: during a concurrent prune the engine
-// is reached ONLY through this solver (calibration runs before the
-// worker pool starts, evaluation after it joins).
-unsafe impl Send for XlaSolver<'_> {}
-unsafe impl Sync for XlaSolver<'_> {}
-
 impl<'a> XlaSolver<'a> {
+    /// Solver over a single engine (shared with the model runtime).
     pub fn new(engine: &'a Engine, manifest: &'a Manifest, cfg: SolveCfg) -> Self {
+        Self::with_source(EngineSource::Single(engine), manifest, cfg)
+    }
+
+    /// Solver over an engine pool: each logical solve checks out a slot
+    /// round-robin, so concurrent callers use distinct PJRT clients.
+    pub fn pooled(pool: &'a EnginePool, manifest: &'a Manifest, cfg: SolveCfg) -> Self {
+        Self::with_source(EngineSource::Pool(pool), manifest, cfg)
+    }
+
+    fn with_source(
+        engines: EngineSource<'a>,
+        manifest: &'a Manifest,
+        cfg: SolveCfg,
+    ) -> Self {
         XlaSolver {
-            engine,
+            engines,
             manifest,
             cfg,
-            engine_lock: Mutex::new(()),
             padded_blocks: AtomicUsize::new(0),
             solved_blocks: AtomicUsize::new(0),
             mask_calls: AtomicUsize::new(0),
         }
     }
 
-    /// Fractional Dykstra solutions for an arbitrary number of blocks.
+    fn engine(&self) -> &Engine {
+        match self.engines {
+            EngineSource::Single(engine) => engine,
+            EngineSource::Pool(pool) => pool.checkout(),
+        }
+    }
+
+    /// Fractional Dykstra solutions for an arbitrary number of blocks,
+    /// tau normalized over the whole batch (the solo / static-group
+    /// semantics: one matrix in = that matrix's per-matrix tau).
     pub fn dykstra_fractional(&self, scores: &Blocks, n: usize) -> Result<Blocks> {
+        let max_abs = scores.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let tau = self
+            .cfg
+            .tau_override
+            .unwrap_or_else(|| effective_tau(max_abs, self.cfg.dykstra.tau0));
+        self.dykstra_scaled(scores, n, tau)
+    }
+
+    /// Dykstra with `scale` folded into the block data on the way into
+    /// each bucket call (no intermediate full-batch copy); the HLO runs
+    /// at `tau = 1`. Callers with per-matrix tau already folded in pass
+    /// `scale = 1.0`, which is exact. Every block is solved
+    /// independently, so bucket composition and padding never perturb a
+    /// block's result.
+    fn dykstra_scaled(&self, scores: &Blocks, n: usize, scale: f32) -> Result<Blocks> {
         let m = scores.m;
         let art = self
             .manifest
             .pick_dykstra(m, scores.b)
             .with_context(|| format!("no dykstra artifact for M={m}"))?;
-        let max_abs = scores.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
-        let tau = effective_tau(max_abs, self.cfg.dykstra.tau0);
-
+        // One engine per logical solve: bucket calls of a batch stay on
+        // one client (its executable cache is already warm), while
+        // concurrent solves land on different pool slots.
+        let engine = self.engine();
         let mut out = Blocks::zeros(scores.b, m);
         let sz = m * m;
         let mut start = 0usize;
-        // One worker in the HLO at a time; a poisoned lock only means a
-        // sibling worker panicked mid-call — the engine itself is
-        // stateless between calls, so keep going.
-        let _engine = self.engine_lock.lock().unwrap_or_else(|e| e.into_inner());
         while start < scores.b {
             let take = art.bucket.min(scores.b - start);
-            // Build a full bucket: real blocks + zero padding.
+            // Build a full bucket: scaled real blocks + zero padding.
             let mut call = Blocks::zeros(art.bucket, m);
-            call.data[..take * sz]
-                .copy_from_slice(&scores.data[start * sz..(start + take) * sz]);
-            let solved = self.engine.dykstra(art, &call, n, tau)?;
+            for (dst, &src) in call.data[..take * sz]
+                .iter_mut()
+                .zip(&scores.data[start * sz..(start + take) * sz])
+            {
+                *dst = scale * src;
+            }
+            let solved = engine.dykstra(art, &call, n, 1.0)?;
             out.data[start * sz..(start + take) * sz]
                 .copy_from_slice(&solved.data[..take * sz]);
             self.padded_blocks
@@ -110,19 +150,20 @@ impl<'a> XlaSolver<'a> {
     }
 }
 
-/// The XLA path is a first-class mask oracle: pruning frameworks accept
-/// it anywhere they accept the CPU solvers.
-impl MaskOracle for XlaSolver<'_> {
-    fn mask(&self, score: &Mat, pattern: crate::masks::NmPattern) -> Result<Mat> {
+/// The XLA path is a first-class mask service (and hence, via the
+/// blanket impl, a `MaskOracle`): pruning frameworks accept it anywhere
+/// they accept the CPU solvers.
+impl MaskService for XlaSolver<'_> {
+    fn submit(&self, score: &Mat, pattern: crate::masks::NmPattern) -> MaskTicket<'_> {
         self.mask_calls.fetch_add(1, Ordering::Relaxed);
-        self.solve_matrix(score, pattern)
+        MaskTicket::ready(self.solve_matrix(score, pattern))
     }
 
-    fn name(&self) -> &str {
+    fn service_name(&self) -> &str {
         "xla-tsenor"
     }
 
-    fn stats(&self) -> OracleStats {
+    fn service_stats(&self) -> OracleStats {
         OracleStats {
             calls: self.mask_calls.load(Ordering::Relaxed),
             blocks_solved: self.solved_blocks.load(Ordering::Relaxed),
@@ -132,18 +173,22 @@ impl MaskOracle for XlaSolver<'_> {
 
     /// A layer with fewer blocks than the smallest bucket for its M
     /// cannot fill even one HLO call alone — batch such layers.
-    fn batch_quantum(&self, m: usize) -> usize {
+    fn coalesce_quantum(&self, m: usize) -> usize {
         self.manifest.pick_dykstra(m, 1).map_or(0, |a| a.bucket)
     }
 
-    /// Cross-layer batching: concatenate every member's blocks into one
-    /// solve, so bucket padding is paid once at the combined tail
-    /// instead of once per layer. Note the semantic: tau is normalized
-    /// by the max |score| of the COMBINED batch (one scalar feeds the
-    /// HLO call), so a grouped layer's mask can differ slightly from
-    /// its solo solve. The grouping plan is scheduling-independent, so
-    /// this stays bit-identical across `jobs` levels.
-    fn mask_group(&self, scores: &[&Mat], pattern: crate::masks::NmPattern) -> Result<Vec<Mat>> {
+    /// Static cross-layer batching: concatenate every member's blocks
+    /// into one solve, so bucket padding is paid once at the combined
+    /// tail instead of once per layer. Note the semantic: tau is
+    /// normalized by the max |score| of the COMBINED batch, so a
+    /// grouped layer's mask can differ slightly from its solo solve.
+    /// The grouping plan is scheduling-independent, so this stays
+    /// bit-identical across `jobs` levels.
+    fn submit_group(
+        &self,
+        scores: &[&Mat],
+        pattern: crate::masks::NmPattern,
+    ) -> Result<Vec<Mat>> {
         self.mask_calls.fetch_add(scores.len(), Ordering::Relaxed);
         if scores.len() <= 1 {
             return scores.iter().map(|s| self.solve_matrix(s, pattern)).collect();
@@ -152,10 +197,37 @@ impl MaskOracle for XlaSolver<'_> {
         let solved = self.solve_blocks(&combined, pattern.n)?;
         Ok(split_group_masks(&solved, scores, &counts))
     }
+
+    /// Dynamic coalescing: per-matrix tau folded into each member's
+    /// blocks before they share one bucket call, so every member's mask
+    /// is bit-identical to its solo solve (the service determinism
+    /// contract). The dispatcher caps coalesced batches at one bucket
+    /// (`coalesce_quantum`), which keeps the artifact choice identical
+    /// to each member's solo choice as well.
+    fn submit_coalesced(
+        &self,
+        scores: &[&Mat],
+        pattern: crate::masks::NmPattern,
+    ) -> Result<Vec<Mat>> {
+        if scores.len() <= 1 || self.cfg.tau_override.is_some() {
+            return scores
+                .iter()
+                .map(|s| self.submit(s, pattern).wait())
+                .collect();
+        }
+        self.mask_calls.fetch_add(scores.len(), Ordering::Relaxed);
+        let (scaled, raw, counts) =
+            concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0);
+        let frac = self.dykstra_scaled(&scaled, pattern.n, 1.0)?;
+        let masks = rounding::round_batch(&frac, &raw, pattern.n, self.cfg.ls_steps);
+        Ok(split_group_masks(&masks, scores, &counts))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     // Integration-tested against the CPU reference in
-    // rust/tests/integration_xla.rs (requires artifacts + PJRT).
+    // rust/tests/integration_xla.rs (requires artifacts + PJRT); the
+    // solver is additionally exercised through the service dispatcher
+    // in rust/tests/service_differential.rs when artifacts are present.
 }

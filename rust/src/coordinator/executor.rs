@@ -21,6 +21,15 @@
 //! * outcomes are written into index-addressed slots and consumed in
 //!   task order, so metrics and reports never depend on completion
 //!   order.
+//!
+//! # Static plan vs dynamic service batching
+//!
+//! The batching plan here is computed up front from the task list. When
+//! the oracle is a `pruning::service::MaskDispatcher`, it advertises
+//! `batch_quantum = 0`, so no static plan forms — workers submit plain
+//! per-layer requests and the dispatcher coalesces them dynamically
+//! (with per-matrix tau, so results stay bit-identical to solo calls at
+//! every `jobs` level).
 
 use crate::masks::NmPattern;
 use crate::pruning::{

@@ -116,6 +116,9 @@ pub fn run(
 ) -> Result<PruneReport> {
     let t0 = std::time::Instant::now();
     let stats_before = oracle.stats();
+    // Engine counters cover the runtime engine (calibration, eval, and
+    // the oracle's solves when it shares this engine / pool slot 0).
+    let engine_before = rt.engine.stats();
     let weights = rt.manifest.load_weights()?;
     let grams = calibrate(rt, &weights, spec.calib_batches)?;
     let mut state = ModelState::new(weights);
@@ -125,6 +128,7 @@ pub fn run(
     for (corpus, p) in &perplexity {
         metrics.put(&format!("ppl_{corpus}"), *p);
     }
+    let engine_stats = rt.engine.stats().since(&engine_before);
     Ok(PruneReport {
         spec: spec.clone(),
         oracle: oracle.name().to_string(),
@@ -133,6 +137,8 @@ pub fn run(
         model_sparsity: state.sparsity(),
         perplexity,
         wall_secs: t0.elapsed().as_secs_f64(),
+        engine_exec_calls: engine_stats.exec_calls,
+        engine_exec_secs: engine_stats.exec_secs(),
         state,
     })
 }

@@ -15,8 +15,13 @@
 //!
 //! Runs are configured through the typed `spec` API: a serializable
 //! [`spec::PruneSpec`] (framework, structure, default pattern, per-layer
-//! glob overrides, solver tuning) plus a pluggable
-//! [`pruning::MaskOracle`] backend, yielding a [`spec::report::PruneReport`].
+//! glob overrides, solver + service tuning) plus a pluggable mask
+//! backend, yielding a [`spec::report::PruneReport`]. Backends implement
+//! the submission-based [`pruning::MaskService`] trait (and are
+//! [`pruning::MaskOracle`]s via its blanket impl); the
+//! [`pruning::MaskDispatcher`] adds dynamic cross-caller coalescing on
+//! top of any backend, dispatching to a [`runtime::EnginePool`] of
+//! independent PJRT clients on the XLA path.
 //!
 //! Python never runs at runtime; the `tsenor` binary is self-contained
 //! once `make artifacts` has produced the AOT bundle.

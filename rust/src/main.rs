@@ -29,6 +29,12 @@
 //!                     (1 = serial, 0 = one per core; bit-identical
 //!                     results at any N). For solve: block fan-out,
 //!                     effective workers = max(jobs, threads)
+//!   --service         route prune oracle calls through the dynamic
+//!                     mask-service dispatcher (cross-caller coalescing;
+//!                     bit-identical results at any setting)
+//!   --service-window-ms W     coalescing window (default 1)
+//!   --service-max-in-flight K max concurrent dispatches (0 = unbounded)
+//!   --service-pool P          XLA engine-pool slots (0 = auto)
 //!   --rows R --cols C --seed S --calib-batches K --eval-batches K
 //!   --steps K (finetune)
 //!   --report FILE     where `prune` writes the JSON PruneReport
@@ -45,9 +51,9 @@ use tsenor::data::workload;
 use tsenor::masks::solver::{self, Method};
 use tsenor::masks::{self, NmPattern};
 use tsenor::model::finetune;
-use tsenor::pruning::{CpuOracle, MaskOracle};
+use tsenor::pruning::{CpuOracle, MaskDispatcher, MaskOracle, MaskService};
 use tsenor::runtime::client::ModelRuntime;
-use tsenor::runtime::{Engine, Manifest};
+use tsenor::runtime::{Engine, EnginePool, Manifest};
 use tsenor::spec::{FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure};
 use tsenor::util::tensor::partition_blocks;
 
@@ -124,6 +130,20 @@ fn apply_prune_overrides(spec: &mut PruneSpec, args: &Args) -> Result<()> {
     }
     spec.solve.threads = args.usize("threads", spec.solve.threads)?;
     spec.jobs = args.usize("jobs", spec.jobs)?;
+    apply_service_overrides(&mut spec.service, args)?;
+    Ok(())
+}
+
+/// Overlay `--service-*` flags onto the spec's service knobs.
+fn apply_service_overrides(
+    service: &mut tsenor::pruning::ServiceCfg,
+    args: &Args,
+) -> Result<()> {
+    service.window_ms =
+        args.usize("service-window-ms", service.window_ms as usize)? as u64;
+    service.max_in_flight =
+        args.usize("service-max-in-flight", service.max_in_flight)?;
+    service.pool = args.usize("service-pool", service.pool)?;
     Ok(())
 }
 
@@ -164,6 +184,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     spec.seed = args.usize("seed", spec.seed as usize)? as u64;
     spec.solve.threads = args.usize("threads", spec.solve.threads)?;
     spec.jobs = args.usize("jobs", spec.jobs)?;
+    apply_service_overrides(&mut spec.service, args)?;
     // A standalone solve has no layer jobs; `--jobs` fans out over
     // block chunks exactly like `--threads` (bit-identical results).
     spec.solve.threads =
@@ -184,14 +205,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let masks_out = if args.has("xla") {
+        // A standalone solve is a single caller issuing one logical
+        // solve, so a multi-client engine pool would sit idle — one
+        // engine is the right size here (the pool pays off under
+        // `prune --service`, where concurrent layer jobs overlap).
         let manifest = Manifest::load(&args.artifacts())?;
         let engine = Engine::new(&manifest)?;
         let xla = XlaSolver::new(&engine, &manifest, spec.solve);
         let out = xla.solve_blocks(&blocks, pattern.n)?;
+        let es = engine.stats();
         println!(
             "  xla path: {} exec calls, {:.3}s in PJRT, {} padded blocks",
-            engine.exec_calls.get(),
-            engine.exec_nanos.get() as f64 / 1e9,
+            es.exec_calls,
+            es.exec_secs(),
             xla.stats().padded_blocks
         );
         out
@@ -215,14 +241,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_prune(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
-    let engine = Engine::new(&manifest)?;
-    let rt = ModelRuntime::new(&engine, &manifest);
 
     let mut spec = match args.opts.get("spec") {
         Some(path) => PruneSpec::load(Path::new(path))?,
         None => PruneSpec::new(Framework::Alps),
     };
     apply_prune_overrides(&mut spec, args)?;
+
+    // Engine pool: extra slots only pay off on the XLA path (each slot
+    // is a full PJRT client); CPU runs keep one engine for the model
+    // artifacts. Slot 0 doubles as the model runtime's engine.
+    let slots = if args.has("xla") { spec.service.pool_slots() } else { 1 };
+    let pool = EnginePool::new(&manifest, slots)?;
+    let rt = ModelRuntime::new(pool.primary(), &manifest);
 
     // Mask oracle: the XLA/AOT TSENOR path, or any CPU solver method.
     // The two are mutually exclusive — the XLA artifact only runs
@@ -235,11 +266,20 @@ fn cmd_prune(args: &Args) -> Result<()> {
         None => Method::Tsenor,
     };
     let xla_solver =
-        args.has("xla").then(|| XlaSolver::new(&engine, &manifest, spec.solve));
+        args.has("xla").then(|| XlaSolver::pooled(&pool, &manifest, spec.solve));
     let cpu_oracle = CpuOracle::new(method, spec.solve);
-    let oracle: &dyn MaskOracle = match &xla_solver {
+    let backend: &dyn MaskService = match &xla_solver {
         Some(s) => s,
         None => &cpu_oracle,
+    };
+    // --service: route oracle calls through the dynamic dispatcher, so
+    // concurrent layer jobs coalesce into fuller bucket calls.
+    let dispatcher =
+        args.has("service").then(|| MaskDispatcher::new(backend, spec.service));
+    let oracle: &dyn MaskOracle = match (&dispatcher, &xla_solver) {
+        (Some(d), _) => d,
+        (None, Some(x)) => x,
+        (None, None) => &cpu_oracle,
     };
 
     println!(
@@ -250,6 +290,14 @@ fn cmd_prune(args: &Args) -> Result<()> {
         oracle.name(),
         tsenor::coordinator::executor::effective_jobs(spec.jobs)
     );
+    if dispatcher.is_some() {
+        println!(
+            "  service: window={}ms max_in_flight={} pool={} slots",
+            spec.service.window_ms,
+            spec.service.max_in_flight,
+            pool.len()
+        );
+    }
     for ov in &spec.overrides {
         println!("  override: {} -> {}", ov.layers, ov.pattern);
     }
@@ -257,6 +305,25 @@ fn cmd_prune(args: &Args) -> Result<()> {
     let mut metrics = Metrics::new();
     let report = pipeline::run(&rt, &spec, oracle, &mut metrics)?;
     print!("{}", report.render());
+    if let Some(d) = &dispatcher {
+        let s = d.dispatch_stats();
+        println!(
+            "  service: {} dispatches ({} coalesced, {} singleton), bucket fill {:.0}%",
+            s.dispatches,
+            s.coalesced_requests,
+            s.singleton_requests,
+            100.0 * s.fill_rate()
+        );
+    }
+    if pool.len() > 1 {
+        let es = pool.stats();
+        println!(
+            "  engine pool: {} slots, {} execs, {:.2}s in PJRT",
+            pool.len(),
+            es.exec_calls,
+            es.exec_secs()
+        );
+    }
 
     if args.has("zeroshot") {
         let probes = tsenor::data::probes::load(&manifest.root.join(&manifest.probes_file))?;

@@ -5,18 +5,21 @@
 //!     s.t. W transposable-N:M sparse
 //! using only the Gram matrix H = X^T X (+ lambda I) — raw activations
 //! never leave the calib artifact. The mask oracle is pluggable: any
-//! implementor of the `MaskOracle` trait (`CpuOracle` over the pure-CPU
-//! solvers, or the XLA-accelerated TSENOR path in the coordinator's
-//! batcher).
+//! implementor of the submission-based `MaskService` trait (`CpuOracle`
+//! over the pure-CPU solvers, the XLA-accelerated TSENOR path in the
+//! coordinator's batcher, or the dynamic-batching `MaskDispatcher` in
+//! `service`) is a `MaskOracle` via the blanket impl.
 
 pub mod alps;
 pub mod hessian;
 pub mod magnitude;
 pub mod oracle;
+pub mod service;
 pub mod sparsegpt;
 pub mod wanda;
 
-pub use oracle::{CpuOracle, MaskOracle, OracleStats};
+pub use oracle::{CpuOracle, MaskOracle, MaskService, MaskTicket, OracleStats};
+pub use service::{MaskDispatcher, ServiceCfg, ServiceStats};
 
 use crate::masks::NmPattern;
 use crate::util::tensor::Mat;

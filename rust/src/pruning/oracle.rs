@@ -1,23 +1,47 @@
 //! First-class mask oracle: the pluggable "give me a transposable mask
 //! for this score matrix" capability every pruning framework consumes.
 //!
-//! Implementations: `CpuOracle` (any `masks::solver::Method` + tuning)
-//! here, and the XLA/AOT TSENOR path (`coordinator::batcher::XlaSolver`)
-//! in the coordinator. Frameworks only see `&dyn MaskOracle`, so new
-//! backends (remote service, GPU, cached) drop in without touching them.
+//! Two layers:
 //!
-//! Oracles are `Send + Sync`: the layer executor
+//! * [`MaskService`] — the submission-based backend API. `submit`
+//!   enqueues a request and returns a [`MaskTicket`]; synchronous
+//!   backends ([`CpuOracle`] here, `coordinator::batcher::XlaSolver`)
+//!   resolve the ticket immediately, while `pruning::service`'s
+//!   dispatcher queues it and coalesces concurrent same-pattern
+//!   requests into fuller batched solves.
+//! * [`MaskOracle`] — the consumer-facing call API every pruning
+//!   framework takes (`&dyn MaskOracle`). It is blanket-implemented
+//!   over `MaskService`, so implementing the service trait is all a new
+//!   backend needs; `mask` is `submit(..).wait()`.
+//!
+//! Services are `Send + Sync`: the layer executor
 //! (`coordinator::executor`) shares one oracle across its worker pool,
 //! so statistics counters are atomics and implementations must be safe
 //! to call from several threads at once. Counter totals are
 //! order-independent sums, which keeps `OracleStats` identical at every
 //! `jobs` level.
+//!
+//! # Coalescing determinism contract
+//!
+//! [`MaskService::submit_coalesced`] solves several independent score
+//! matrices in one backend call with **per-matrix** tau normalization:
+//! member `i`'s mask is bit-identical to what a solo `mask(scores[i])`
+//! call returns, no matter which other requests happen to share the
+//! batch. (Contrast [`MaskService::submit_group`], the static-plan
+//! grouping entry point, which normalizes tau over the combined batch.)
+//! The trick: tau only ever enters the solve as the elementwise product
+//! `tau * |w|` on the way into log-space, so each member's tau is
+//! folded into its block data on the host and the batched solve runs at
+//! `tau = 1` — `1.0 * x` is exact in IEEE-754, and everything
+//! downstream (Dykstra sweeps, rounding) is per-block.
 
 use crate::masks::solver::{self, Method, SolveCfg};
-use crate::masks::NmPattern;
+use crate::masks::{dykstra, rounding, NmPattern};
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// Cumulative solve statistics. Backends count over their lifetime;
 /// `PruneReport` stores the per-run delta (see [`OracleStats::since`]).
@@ -45,11 +69,136 @@ impl OracleStats {
     }
 }
 
+/// Shared slot a queued request resolves into: the dispatcher fills it,
+/// any number of waiters observe it.
+pub struct TicketCell {
+    slot: Mutex<Option<Result<Mat>>>,
+    ready: Condvar,
+}
+
+impl TicketCell {
+    pub(crate) fn new() -> Arc<TicketCell> {
+        Arc::new(TicketCell { slot: Mutex::new(None), ready: Condvar::new() })
+    }
+
+    pub(crate) fn fill(&self, result: Result<Mat>) {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(result);
+        self.ready.notify_all();
+    }
+
+    pub(crate) fn try_take(&self) -> Option<Result<Mat>> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    /// Block up to `timeout` for the slot to fill; returns the result if
+    /// it did. Spurious timeouts are fine — callers loop.
+    pub(crate) fn wait_take(&self, timeout: Duration) -> Option<Result<Mat>> {
+        let guard = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        let (mut guard, _) = self
+            .ready
+            .wait_timeout_while(guard, timeout, |slot| slot.is_none())
+            .unwrap_or_else(|e| e.into_inner());
+        guard.take()
+    }
+}
+
+/// Dispatch pump a queued ticket resolves through: `wait` hands control
+/// to the service that owns the queue (see `pruning::service`).
+pub(crate) trait TicketDriver: Sync {
+    fn drive(&self, cell: &Arc<TicketCell>) -> Result<Mat>;
+}
+
+enum TicketInner<'a> {
+    Ready(Result<Mat>),
+    Queued { cell: Arc<TicketCell>, driver: &'a dyn TicketDriver },
+}
+
+/// Handle for one submitted mask request. `wait` blocks until the mask
+/// is available (for queued tickets it also pumps the owning service's
+/// dispatch loop, so waiting callers are the workers).
+pub struct MaskTicket<'a> {
+    inner: TicketInner<'a>,
+}
+
+impl<'a> MaskTicket<'a> {
+    /// An already-resolved ticket — what synchronous backends return.
+    pub fn ready(result: Result<Mat>) -> MaskTicket<'a> {
+        MaskTicket { inner: TicketInner::Ready(result) }
+    }
+
+    pub(crate) fn queued(
+        cell: Arc<TicketCell>,
+        driver: &'a dyn TicketDriver,
+    ) -> MaskTicket<'a> {
+        MaskTicket { inner: TicketInner::Queued { cell, driver } }
+    }
+
+    /// Resolve the request, blocking if necessary.
+    pub fn wait(self) -> Result<Mat> {
+        match self.inner {
+            TicketInner::Ready(result) => result,
+            TicketInner::Queued { cell, driver } => driver.drive(&cell),
+        }
+    }
+}
+
+/// Submission-based mask backend: requests enter through `submit` from
+/// any thread; how (and how batched) they are solved is the backend's
+/// business. [`MaskOracle`] is blanket-implemented over this trait.
+pub trait MaskService: Send + Sync {
+    /// Enqueue one solve request for `score` under `pattern`.
+    fn submit(&self, score: &Mat, pattern: NmPattern) -> MaskTicket<'_>;
+
+    /// Short identifier for reports ("tsenor", "xla-tsenor", ...).
+    fn service_name(&self) -> &str;
+
+    /// Cumulative statistics; backends without counters keep the default.
+    fn service_stats(&self) -> OracleStats {
+        OracleStats::default()
+    }
+
+    /// Preferred number of M x M blocks per batched call for this block
+    /// size (the XLA bucket size). Requests smaller than this waste
+    /// bucket capacity when solved alone — both the executor's static
+    /// plan and the service dispatcher's dynamic coalescing use it.
+    /// `0` (the default) means batching gains nothing on this backend.
+    fn coalesce_quantum(&self, _m: usize) -> usize {
+        0
+    }
+
+    /// Solve several same-pattern score matrices in one batched call
+    /// with **combined-batch** tau normalization (the executor's static
+    /// cross-layer plan). The default falls back to per-matrix solves.
+    /// Either way the result is a deterministic function of
+    /// `(scores, pattern)` alone.
+    fn submit_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        scores
+            .iter()
+            .map(|s| self.submit(s, pattern).wait())
+            .collect()
+    }
+
+    /// Solve several same-pattern score matrices in one batched call
+    /// with **per-matrix** tau normalization: member `i`'s mask is
+    /// bit-identical to a solo `submit(scores[i])` — batch composition
+    /// is invisible. This is the entry point the dynamic dispatcher
+    /// (`pruning::service`) drives. The default trivially satisfies the
+    /// contract by solving per-matrix.
+    fn submit_coalesced(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        scores
+            .iter()
+            .map(|s| self.submit(s, pattern).wait())
+            .collect()
+    }
+}
+
 /// Pluggable transposable-mask oracle: given a score matrix and an N:M
 /// pattern, return the binary mask maximizing the kept score.
 ///
-/// `Send + Sync` so one oracle can serve a concurrent layer-executor
-/// pool; implementations keep their counters in atomics.
+/// This is the consumer-facing call API (`&dyn MaskOracle` everywhere a
+/// framework needs masks); it is blanket-implemented over
+/// [`MaskService`], so backends implement the service trait only.
 pub trait MaskOracle: Send + Sync {
     fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat>;
 
@@ -61,22 +210,36 @@ pub trait MaskOracle: Send + Sync {
         OracleStats::default()
     }
 
-    /// Preferred number of M x M blocks per batched call for this block
-    /// size (the XLA bucket size). Layers with fewer blocks than this
-    /// waste capacity when solved alone; the layer executor batches
-    /// them cross-layer into one [`MaskOracle::mask_group`] call.
-    /// `0` (the default) means batching gains nothing on this backend.
+    /// See [`MaskService::coalesce_quantum`].
     fn batch_quantum(&self, _m: usize) -> usize {
         0
     }
 
-    /// Solve several same-pattern score matrices in one batched call.
-    /// Backends that benefit concatenate all matrices' blocks (caller
-    /// order) into one solve; the default falls back to per-matrix
-    /// [`MaskOracle::mask`] calls. Either way the result is a
-    /// deterministic function of `(scores, pattern)` alone.
+    /// See [`MaskService::submit_group`].
     fn mask_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
         scores.iter().map(|s| self.mask(s, pattern)).collect()
+    }
+}
+
+impl<S: MaskService + ?Sized> MaskOracle for S {
+    fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat> {
+        self.submit(score, pattern).wait()
+    }
+
+    fn name(&self) -> &str {
+        self.service_name()
+    }
+
+    fn stats(&self) -> OracleStats {
+        self.service_stats()
+    }
+
+    fn batch_quantum(&self, m: usize) -> usize {
+        self.coalesce_quantum(m)
+    }
+
+    fn mask_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        self.submit_group(scores, pattern)
     }
 }
 
@@ -93,6 +256,31 @@ pub(crate) fn concat_score_blocks(scores: &[&Mat], m: usize) -> (Blocks, Vec<usi
         combined.data.extend_from_slice(&blocks.data);
     }
     (combined, counts)
+}
+
+/// [`concat_score_blocks`] with each member's effective tau folded into
+/// its block data (the per-matrix normalization of the coalesced path):
+/// returns (scaled batch for Dykstra-at-tau-1, raw batch for rounding,
+/// per-matrix block counts).
+pub(crate) fn concat_scaled_blocks(
+    scores: &[&Mat],
+    m: usize,
+    tau0: f32,
+) -> (Blocks, Blocks, Vec<usize>) {
+    let mut scaled = Blocks { b: 0, m, data: Vec::new() };
+    let mut raw = Blocks { b: 0, m, data: Vec::new() };
+    let mut counts = Vec::with_capacity(scores.len());
+    for s in scores {
+        let blocks = partition_blocks(&s.abs(), m);
+        let max_abs = blocks.data.iter().fold(0.0f32, |a, &x| a.max(x));
+        let tau = dykstra::effective_tau(max_abs, tau0);
+        counts.push(blocks.b);
+        scaled.b += blocks.b;
+        scaled.data.extend(blocks.data.iter().map(|&w| tau * w));
+        raw.b += blocks.b;
+        raw.data.extend_from_slice(&blocks.data);
+    }
+    (scaled, raw, counts)
 }
 
 /// Inverse of [`concat_score_blocks`]: slice the solved batch back into
@@ -150,10 +338,9 @@ impl CpuOracle {
     pub fn method(&self) -> Method {
         self.method
     }
-}
 
-impl MaskOracle for CpuOracle {
-    fn mask(&self, score: &Mat, pattern: NmPattern) -> Result<Mat> {
+    /// One solo whole-matrix solve (the `mask` semantics).
+    fn solve_now(&self, score: &Mat, pattern: NmPattern) -> Result<Mat> {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.blocks.fetch_add(
             (score.rows / pattern.m) * (score.cols / pattern.m),
@@ -161,12 +348,18 @@ impl MaskOracle for CpuOracle {
         );
         Ok(solver::solve_matrix(self.method, score, pattern, &self.cfg))
     }
+}
 
-    fn name(&self) -> &str {
+impl MaskService for CpuOracle {
+    fn submit(&self, score: &Mat, pattern: NmPattern) -> MaskTicket<'_> {
+        MaskTicket::ready(self.solve_now(score, pattern))
+    }
+
+    fn service_name(&self) -> &str {
         self.method.name()
     }
 
-    fn stats(&self) -> OracleStats {
+    fn service_stats(&self) -> OracleStats {
         OracleStats {
             calls: self.calls.load(Ordering::Relaxed),
             blocks_solved: self.blocks.load(Ordering::Relaxed),
@@ -174,13 +367,13 @@ impl MaskOracle for CpuOracle {
         }
     }
 
-    fn batch_quantum(&self, _m: usize) -> usize {
+    fn coalesce_quantum(&self, _m: usize) -> usize {
         self.batch_quantum
     }
 
-    fn mask_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+    fn submit_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
         if self.batch_quantum == 0 || scores.len() <= 1 {
-            return scores.iter().map(|s| self.mask(s, pattern)).collect();
+            return scores.iter().map(|s| self.solve_now(s, pattern)).collect();
         }
         let (combined, counts) = concat_score_blocks(scores, pattern.m);
         let solved =
@@ -188,6 +381,25 @@ impl MaskOracle for CpuOracle {
         self.calls.fetch_add(scores.len(), Ordering::Relaxed);
         self.blocks.fetch_add(combined.b, Ordering::Relaxed);
         Ok(split_group_masks(&solved, scores, &counts))
+    }
+
+    /// Per-matrix-tau coalescing on CPU. Only TSENOR both benefits from
+    /// and supports the tau-folding trick; the entropy-free baselines
+    /// (and the block-offset-seeded `max1000`) solve per-matrix, which
+    /// satisfies the bit-identity contract trivially.
+    fn submit_coalesced(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        if scores.len() <= 1
+            || self.method != Method::Tsenor
+            || self.cfg.tau_override.is_some()
+        {
+            return scores.iter().map(|s| self.solve_now(s, pattern)).collect();
+        }
+        let (scaled, raw, counts) = concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0);
+        let frac = dykstra::solve_batch(&scaled, pattern.n, 1.0, self.cfg.dykstra.iters);
+        let masks = rounding::round_batch(&frac, &raw, pattern.n, self.cfg.ls_steps);
+        self.calls.fetch_add(scores.len(), Ordering::Relaxed);
+        self.blocks.fetch_add(raw.b, Ordering::Relaxed);
+        Ok(split_group_masks(&masks, scores, &counts))
     }
 }
 
@@ -221,6 +433,10 @@ mod tests {
         let w = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
         let mask = dynref.mask(&w, NmPattern::new(2, 4)).unwrap();
         assert!(batch_feasible(&partition_blocks(&mask, 4), 2));
+        // A service trait object works as an oracle too (blanket impl).
+        let svc: &dyn MaskService = &oracle;
+        let mask2 = svc.submit(&w, NmPattern::new(2, 4)).wait().unwrap();
+        assert_eq!(mask.data, mask2.data);
     }
 
     #[test]
@@ -281,5 +497,53 @@ mod tests {
         let stats = oracle.stats();
         assert_eq!(stats.calls, 2);
         assert_eq!(stats.blocks_solved, 2 + 6);
+    }
+
+    #[test]
+    fn coalesced_members_match_solo_masks_bitwise() {
+        // The coalescing determinism contract, at the backend level:
+        // every member of a coalesced call must reproduce its solo solve
+        // exactly, including matrices whose max |w| (hence tau) differ.
+        let mut rng = Rng::new(8);
+        let a = Mat::from_fn(8, 16, |_, _| rng.heavy_tail());
+        let b = Mat::from_fn(16, 24, |_, _| 10.0 * rng.heavy_tail());
+        let c = Mat::from_fn(8, 8, |_, _| 0.1 * rng.heavy_tail());
+        let pattern = NmPattern::new(4, 8);
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let solo: Vec<Mat> = [&a, &b, &c]
+            .iter()
+            .map(|s| oracle.mask(s, pattern).unwrap())
+            .collect();
+        let coalesced = oracle.submit_coalesced(&[&a, &b, &c], pattern).unwrap();
+        for (got, want) in coalesced.iter().zip(&solo) {
+            let gb: Vec<u32> = got.data.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "coalesced member diverged from its solo solve");
+        }
+        // And the composition is invisible: a different grouping of the
+        // same request yields the same bits.
+        let pair = oracle.submit_coalesced(&[&c, &a], pattern).unwrap();
+        assert_eq!(pair[1].data, solo[0].data);
+        assert_eq!(pair[0].data, solo[2].data);
+    }
+
+    #[test]
+    fn coalesced_fallback_methods_match_solo_too() {
+        let mut rng = Rng::new(9);
+        let a = Mat::from_fn(8, 8, |_, _| rng.heavy_tail());
+        let b = Mat::from_fn(8, 16, |_, _| rng.heavy_tail());
+        let pattern = NmPattern::new(4, 8);
+        for method in [Method::TwoApprox, Method::Max1000, Method::Exact] {
+            let cfg = SolveCfg { random_k: 40, ..Default::default() };
+            let oracle = CpuOracle::new(method, cfg);
+            let solo = [
+                oracle.mask(&a, pattern).unwrap(),
+                oracle.mask(&b, pattern).unwrap(),
+            ];
+            let coalesced = oracle.submit_coalesced(&[&a, &b], pattern).unwrap();
+            for (got, want) in coalesced.iter().zip(&solo) {
+                assert_eq!(got.data, want.data, "{}", method.name());
+            }
+        }
     }
 }

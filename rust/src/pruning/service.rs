@@ -1,0 +1,608 @@
+//! Dynamic mask-service dispatcher: continuous cross-caller batching.
+//!
+//! [`MaskDispatcher`] wraps any [`MaskService`] backend with a
+//! submission queue. Requests enter from any thread via `submit`;
+//! same-pattern sub-bucket requests that arrive within a bounded window
+//! are coalesced into one full-bucket backend call
+//! ([`MaskService::submit_coalesced`]) — the dynamic, load-driven
+//! generalization of the executor's static cross-layer batching plan.
+//! Requests that already fill a bucket on their own dispatch
+//! immediately and never wait.
+//!
+//! # Who does the work
+//!
+//! There are no background threads. A waiting caller *is* a worker: the
+//! first `MaskTicket::wait` that finds dispatchable work becomes the
+//! leader for one batch, executes it on its own thread (checking out an
+//! engine-pool slot on the XLA path), fills every member's ticket, and
+//! loops until its own request resolves. With N concurrent callers, up
+//! to N batches execute concurrently (bounded by
+//! [`ServiceCfg::max_in_flight`]); a solitary caller degenerates to a
+//! slightly-delayed solo solve. Requests whose tickets are never waited
+//! on are picked up opportunistically by other leaders' buckets.
+//!
+//! # Determinism
+//!
+//! Coalescing is **bit-invisible**: `submit_coalesced` normalizes tau
+//! per matrix (see `pruning::oracle`), so a request's mask is identical
+//! whether it dispatched alone, shared a bucket, or was grouped
+//! differently across runs. Scheduling freedom therefore never leaks
+//! into results — enforced by `tests/service_differential.rs`.
+
+use crate::masks::NmPattern;
+use crate::pruning::oracle::{
+    MaskService, MaskTicket, OracleStats, TicketCell, TicketDriver,
+};
+use crate::util::tensor::Mat;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Service tuning knobs (serialized in specs as the `"service"` object;
+/// see `spec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServiceCfg {
+    /// Coalescing window in milliseconds: how long a sub-bucket request
+    /// may wait for same-pattern stragglers before a partial bucket
+    /// dispatches anyway. `0` = dispatch at the first opportunity.
+    pub window_ms: u64,
+    /// Maximum concurrently executing coalesced dispatches
+    /// (`0` = unbounded; each dispatch occupies one caller thread and,
+    /// on the XLA path, one engine-pool slot).
+    pub max_in_flight: usize,
+    /// Engine-pool slots for the XLA path (one PJRT client each).
+    /// `0` = auto: one per available core, capped at 8.
+    pub pool: usize,
+}
+
+impl Default for ServiceCfg {
+    fn default() -> Self {
+        ServiceCfg { window_ms: 1, max_in_flight: 0, pool: 1 }
+    }
+}
+
+impl ServiceCfg {
+    pub fn window_ms(mut self, ms: u64) -> Self {
+        self.window_ms = ms;
+        self
+    }
+
+    pub fn max_in_flight(mut self, k: usize) -> Self {
+        self.max_in_flight = k;
+        self
+    }
+
+    pub fn pool(mut self, slots: usize) -> Self {
+        self.pool = slots;
+        self
+    }
+
+    /// Resolve the `pool` knob: `0` = one slot per available core,
+    /// capped at 8 (every slot is a full PJRT client).
+    pub fn pool_slots(&self) -> usize {
+        if self.pool == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
+        } else {
+            self.pool
+        }
+    }
+}
+
+/// Dispatcher-level counters (the backend's `OracleStats` are separate
+/// and unchanged — see [`MaskDispatcher::dispatch_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Coalesced backend calls issued.
+    pub dispatches: u64,
+    /// Requests that shared a dispatch with at least one other request.
+    pub coalesced_requests: u64,
+    /// Requests dispatched alone.
+    pub singleton_requests: u64,
+    /// Dispatches that left with a partial bucket because the window
+    /// expired.
+    pub window_expiries: u64,
+    /// Real score blocks dispatched.
+    pub dispatched_blocks: u64,
+    /// Bucket capacity consumed (blocks rounded up to whole buckets);
+    /// equals `dispatched_blocks` on quantum-less backends.
+    pub bucket_blocks: u64,
+}
+
+impl ServiceStats {
+    /// Fraction of dispatched bucket capacity holding real blocks.
+    pub fn fill_rate(&self) -> f64 {
+        if self.bucket_blocks == 0 {
+            1.0
+        } else {
+            self.dispatched_blocks as f64 / self.bucket_blocks as f64
+        }
+    }
+}
+
+struct Pending {
+    score: Mat,
+    pattern: NmPattern,
+    /// M x M block count. Sub-bucket by construction: requests with no
+    /// quantum, a full bucket, or a non-partitionable shape take the
+    /// `submit` fast path and never enqueue.
+    blocks: usize,
+    deadline: Instant,
+    cell: Arc<TicketCell>,
+}
+
+struct DispatchState {
+    queue: VecDeque<Pending>,
+    /// Coalesced backend calls currently executing.
+    dispatching: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    dispatches: AtomicU64,
+    coalesced: AtomicU64,
+    singleton: AtomicU64,
+    expiries: AtomicU64,
+    blocks: AtomicU64,
+    bucket: AtomicU64,
+}
+
+/// What a driving caller should do next (decided under the state lock,
+/// executed outside it).
+enum Action {
+    /// Execute this batch (same pattern throughout). The `usize` is the
+    /// backend quantum for its M, the `bool` marks a window expiry.
+    Solve(Vec<Pending>, usize, bool),
+    /// Nothing dispatchable yet; re-check after this long (wakeups on
+    /// submit/completion shorten the nap).
+    Sleep(Duration),
+    /// Another leader owns our request; wait on the ticket cell.
+    WaitCell,
+}
+
+/// Upper bound on any single nap, so missed notifications only cost
+/// milliseconds.
+const MAX_NAP: Duration = Duration::from_millis(5);
+
+/// Submission-queue dispatcher over a [`MaskService`] backend.
+pub struct MaskDispatcher<'a> {
+    backend: &'a dyn MaskService,
+    cfg: ServiceCfg,
+    label: String,
+    state: Mutex<DispatchState>,
+    wakeup: Condvar,
+    counters: Counters,
+}
+
+impl<'a> MaskDispatcher<'a> {
+    pub fn new(backend: &'a dyn MaskService, cfg: ServiceCfg) -> Self {
+        MaskDispatcher {
+            label: format!("service({})", backend.service_name()),
+            backend,
+            cfg,
+            state: Mutex::new(DispatchState { queue: VecDeque::new(), dispatching: 0 }),
+            wakeup: Condvar::new(),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> ServiceCfg {
+        self.cfg
+    }
+
+    /// Dispatcher-level statistics (batching behavior, bucket fill).
+    pub fn dispatch_stats(&self) -> ServiceStats {
+        ServiceStats {
+            dispatches: self.counters.dispatches.load(Ordering::Relaxed),
+            coalesced_requests: self.counters.coalesced.load(Ordering::Relaxed),
+            singleton_requests: self.counters.singleton.load(Ordering::Relaxed),
+            window_expiries: self.counters.expiries.load(Ordering::Relaxed),
+            dispatched_blocks: self.counters.blocks.load(Ordering::Relaxed),
+            bucket_blocks: self.counters.bucket.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Decide the next step for a driver whose request lives in `me`.
+    fn next_action(&self, me: &Arc<TicketCell>) -> Action {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if !st.queue.iter().any(|r| Arc::ptr_eq(&r.cell, me)) {
+            // Taken by another leader (or already filled).
+            return Action::WaitCell;
+        }
+        if self.cfg.max_in_flight > 0 && st.dispatching >= self.cfg.max_in_flight {
+            return Action::Sleep(MAX_NAP);
+        }
+        let now = Instant::now();
+        // First-fit scan in arrival order: every queued request is
+        // sub-bucket (`submit` fast-paths the rest), so they accumulate
+        // into at most one open group per pattern.
+        struct Group {
+            pattern: NmPattern,
+            quantum: usize,
+            idxs: Vec<usize>,
+            total: usize,
+            deadline: Instant,
+        }
+        let mut groups: Vec<Group> = Vec::new();
+        let mut chosen: Option<(Vec<usize>, usize, bool)> = None;
+        for (i, r) in st.queue.iter().enumerate() {
+            let quantum = self.backend.coalesce_quantum(r.pattern.m);
+            match groups.iter_mut().find(|g| g.pattern == r.pattern) {
+                Some(g) => {
+                    if g.total + r.blocks <= g.quantum {
+                        g.total += r.blocks;
+                        g.idxs.push(i);
+                        if g.total == g.quantum {
+                            chosen = Some((g.idxs.clone(), g.quantum, false));
+                            break;
+                        }
+                    }
+                    // else: overflows this bucket — leave for the next
+                    // round rather than padding two buckets.
+                }
+                None => groups.push(Group {
+                    pattern: r.pattern,
+                    quantum,
+                    idxs: vec![i],
+                    total: r.blocks,
+                    deadline: r.deadline,
+                }),
+            }
+        }
+        if chosen.is_none() {
+            // No full bucket: a group whose oldest member's window has
+            // expired dispatches partial; otherwise nap until the
+            // earliest deadline.
+            let mut earliest: Option<Instant> = None;
+            for g in &groups {
+                if now >= g.deadline {
+                    chosen = Some((g.idxs.clone(), g.quantum, true));
+                    break;
+                }
+                earliest = Some(earliest.map_or(g.deadline, |e| e.min(g.deadline)));
+            }
+            if chosen.is_none() {
+                let deadline =
+                    earliest.expect("driver's own request forms at least one group");
+                return Action::Sleep(
+                    deadline.saturating_duration_since(now).min(MAX_NAP),
+                );
+            }
+        }
+        let (idxs, quantum, expired) = chosen.expect("checked above");
+        let mut batch = Vec::with_capacity(idxs.len());
+        for &i in idxs.iter().rev() {
+            batch.push(st.queue.remove(i).expect("index from the scan above"));
+        }
+        batch.reverse(); // arrival order
+        st.dispatching += 1;
+        Action::Solve(batch, quantum, expired)
+    }
+
+    /// Execute one coalesced batch and resolve its tickets. Runs on the
+    /// driving caller's thread, outside the state lock.
+    fn execute(&self, batch: Vec<Pending>, quantum: usize, expired: bool) {
+        let pattern = batch[0].pattern;
+        let scores: Vec<&Mat> = batch.iter().map(|r| &r.score).collect();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.backend.submit_coalesced(&scores, pattern)
+        }));
+
+        let real_blocks: u64 = batch.iter().map(|r| r.blocks as u64).sum();
+        let c = &self.counters;
+        c.dispatches.fetch_add(1, Ordering::Relaxed);
+        if batch.len() >= 2 {
+            c.coalesced.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        } else {
+            c.singleton.fetch_add(1, Ordering::Relaxed);
+        }
+        if expired {
+            c.expiries.fetch_add(1, Ordering::Relaxed);
+        }
+        c.blocks.fetch_add(real_blocks, Ordering::Relaxed);
+        let capacity = if quantum == 0 {
+            real_blocks
+        } else {
+            real_blocks.div_ceil(quantum as u64) * quantum as u64
+        };
+        c.bucket.fetch_add(capacity, Ordering::Relaxed);
+
+        let panic_payload = match outcome {
+            Ok(Ok(masks)) if masks.len() == batch.len() => {
+                for (req, mask) in batch.iter().zip(masks) {
+                    req.cell.fill(Ok(mask));
+                }
+                None
+            }
+            Ok(Ok(masks)) => {
+                let msg = format!(
+                    "coalesced dispatch returned {} masks for {} requests",
+                    masks.len(),
+                    batch.len()
+                );
+                for req in &batch {
+                    req.cell.fill(Err(anyhow::anyhow!(msg.clone())));
+                }
+                None
+            }
+            Ok(Err(e)) => {
+                let msg = format!("coalesced dispatch failed: {e:#}");
+                for req in &batch {
+                    req.cell.fill(Err(anyhow::anyhow!(msg.clone())));
+                }
+                None
+            }
+            Err(payload) => {
+                for req in &batch {
+                    req.cell
+                        .fill(Err(anyhow::anyhow!("coalesced dispatch panicked")));
+                }
+                Some(payload)
+            }
+        };
+
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.dispatching -= 1;
+        }
+        self.wakeup.notify_all();
+        if let Some(payload) = panic_payload {
+            // Waiters got an error result; the leader re-raises so the
+            // panic surfaces on a real caller thread.
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    fn nap(&self, d: Duration) {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = self
+            .wakeup
+            .wait_timeout(st, d)
+            .unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+impl TicketDriver for MaskDispatcher<'_> {
+    fn drive(&self, cell: &Arc<TicketCell>) -> Result<Mat> {
+        loop {
+            if let Some(result) = cell.try_take() {
+                return result;
+            }
+            match self.next_action(cell) {
+                Action::Solve(batch, quantum, expired) => self.execute(batch, quantum, expired),
+                Action::Sleep(d) => self.nap(d),
+                Action::WaitCell => {
+                    if let Some(result) = cell.wait_take(MAX_NAP) {
+                        return result;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl MaskService for MaskDispatcher<'_> {
+    fn submit(&self, score: &Mat, pattern: NmPattern) -> MaskTicket<'_> {
+        let blockable =
+            pattern.m > 0 && score.rows % pattern.m == 0 && score.cols % pattern.m == 0;
+        let blocks = if blockable {
+            (score.rows / pattern.m) * (score.cols / pattern.m)
+        } else {
+            usize::MAX
+        };
+        // Fast path: a request that cannot gain from coalescing (no
+        // backend quantum, already a full bucket, or a shape that does
+        // not partition) would dispatch as an immediate singleton
+        // anyway — skip the clone, the queue and the driver round-trip
+        // and solve it straight on the caller. Still an in-flight
+        // dispatch: it respects and occupies the `max_in_flight` cap.
+        let quantum = self.backend.coalesce_quantum(pattern.m);
+        if quantum == 0 || blocks >= quantum {
+            if self.cfg.max_in_flight > 0 {
+                let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                while st.dispatching >= self.cfg.max_in_flight {
+                    let (guard, _) = self
+                        .wakeup
+                        .wait_timeout(st, MAX_NAP)
+                        .unwrap_or_else(|e| e.into_inner());
+                    st = guard;
+                }
+                st.dispatching += 1;
+            }
+            let c = &self.counters;
+            c.dispatches.fetch_add(1, Ordering::Relaxed);
+            c.singleton.fetch_add(1, Ordering::Relaxed);
+            if blocks != usize::MAX {
+                let real = blocks as u64;
+                c.blocks.fetch_add(real, Ordering::Relaxed);
+                let capacity = if quantum == 0 {
+                    real
+                } else {
+                    real.div_ceil(quantum as u64) * quantum as u64
+                };
+                c.bucket.fetch_add(capacity, Ordering::Relaxed);
+            }
+            // Synchronous backends solve inside submit, so resolve the
+            // ticket here — the in-flight slot frees before we return,
+            // and (like `execute`) a backend panic cannot leak the slot.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.backend.submit(score, pattern).wait()
+            }));
+            if self.cfg.max_in_flight > 0 {
+                let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                st.dispatching -= 1;
+            }
+            self.wakeup.notify_all();
+            return match outcome {
+                Ok(result) => MaskTicket::ready(result),
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
+        }
+        let cell = TicketCell::new();
+        let pending = Pending {
+            score: score.clone(),
+            pattern,
+            blocks,
+            deadline: Instant::now() + Duration::from_millis(self.cfg.window_ms),
+            cell: cell.clone(),
+        };
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.queue.push_back(pending);
+        }
+        self.wakeup.notify_all();
+        MaskTicket::queued(cell, self)
+    }
+
+    fn service_name(&self) -> &str {
+        &self.label
+    }
+
+    fn service_stats(&self) -> OracleStats {
+        self.backend.service_stats()
+    }
+
+    /// The dispatcher replaces static plans with dynamic coalescing, so
+    /// it advertises no quantum — the layer executor then submits plain
+    /// per-layer requests and coalescing happens here instead.
+    fn coalesce_quantum(&self, _m: usize) -> usize {
+        0
+    }
+
+    /// Grouped calls become a burst of submissions: everything is
+    /// enqueued first so the queue can coalesce across the whole group
+    /// (and across any concurrent callers), then resolved in order.
+    /// Note the semantics: through the dispatcher a group solves with
+    /// per-matrix tau (the coalesced contract), not the backend's
+    /// combined-batch `submit_group` normalization.
+    fn submit_group(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        let tickets: Vec<MaskTicket<'_>> =
+            scores.iter().map(|s| self.submit(s, pattern)).collect();
+        tickets.into_iter().map(|t| t.wait()).collect()
+    }
+
+    fn submit_coalesced(&self, scores: &[&Mat], pattern: NmPattern) -> Result<Vec<Mat>> {
+        self.submit_group(scores, pattern)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::solver::{Method, SolveCfg};
+    use crate::pruning::{CpuOracle, MaskOracle};
+    use crate::util::rng::Rng;
+
+    fn mats(count: usize, rows: usize, cols: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| Mat::from_fn(rows, cols, |_, _| rng.heavy_tail()))
+            .collect()
+    }
+
+    #[test]
+    fn queued_requests_coalesce_into_one_dispatch() {
+        // Four 4-block requests, quantum 16: all queued before the first
+        // wait, so the first driver fills exactly one bucket.
+        let backend =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(16);
+        let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(50));
+        let pattern = NmPattern::new(4, 8);
+        let ws = mats(4, 16, 16, 21);
+        let tickets: Vec<MaskTicket<'_>> =
+            ws.iter().map(|w| svc.submit(w, pattern)).collect();
+        let masks: Vec<Mat> =
+            tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+
+        let solo = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        for (w, got) in ws.iter().zip(&masks) {
+            let want = solo.mask(w, pattern).unwrap();
+            assert_eq!(got.data, want.data);
+        }
+        let stats = svc.dispatch_stats();
+        assert_eq!(stats.dispatches, 1, "{stats:?}");
+        assert_eq!(stats.coalesced_requests, 4);
+        assert_eq!(stats.dispatched_blocks, 16);
+        assert_eq!(stats.bucket_blocks, 16);
+        assert!((stats.fill_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(stats.window_expiries, 0, "a full bucket never waits");
+    }
+
+    #[test]
+    fn bucket_sized_requests_skip_the_window() {
+        // 16 blocks >= quantum 8: dispatches alone immediately even
+        // with a long window.
+        let backend =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+        let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(10_000));
+        let pattern = NmPattern::new(4, 8);
+        let w = &mats(1, 32, 32, 3)[0];
+        let t0 = Instant::now();
+        let mask = svc.submit(w, pattern).wait().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not wait the window");
+        let want = CpuOracle::new(Method::Tsenor, SolveCfg::default())
+            .mask(w, pattern)
+            .unwrap();
+        assert_eq!(mask.data, want.data);
+        assert_eq!(svc.dispatch_stats().singleton_requests, 1);
+    }
+
+    #[test]
+    fn window_expiry_dispatches_partial_buckets() {
+        let backend =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(64);
+        let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(1));
+        let pattern = NmPattern::new(4, 8);
+        let w = &mats(1, 16, 16, 5)[0]; // 4 blocks << 64
+        let mask = svc.submit(w, pattern).wait().unwrap();
+        let want = CpuOracle::new(Method::Tsenor, SolveCfg::default())
+            .mask(w, pattern)
+            .unwrap();
+        assert_eq!(mask.data, want.data);
+        let stats = svc.dispatch_stats();
+        assert_eq!(stats.window_expiries, 1);
+        assert!(stats.fill_rate() < 1.0);
+    }
+
+    #[test]
+    fn dispatcher_is_a_mask_oracle() {
+        // The blanket impl end-to-end: mask() == submit().wait(), name
+        // and stats delegate.
+        let backend = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
+        let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(0));
+        let oracle: &dyn MaskOracle = &svc;
+        let w = &mats(1, 8, 8, 9)[0];
+        let mask = oracle.mask(w, NmPattern::new(4, 8)).unwrap();
+        assert_eq!((mask.rows, mask.cols), (8, 8));
+        assert_eq!(oracle.name(), "service(2approx)");
+        assert_eq!(oracle.stats(), backend.stats());
+        assert_eq!(oracle.batch_quantum(8), 0, "static plans defer to the queue");
+    }
+
+    #[test]
+    fn mixed_patterns_group_separately() {
+        let backend =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+        let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(20));
+        let p48 = NmPattern::new(4, 8);
+        let p28 = NmPattern::new(2, 8);
+        let ws = mats(4, 16, 16, 31); // 4 blocks each, quantum 8
+        let tickets = vec![
+            svc.submit(&ws[0], p48),
+            svc.submit(&ws[1], p28),
+            svc.submit(&ws[2], p48),
+            svc.submit(&ws[3], p28),
+        ];
+        let masks: Vec<Mat> =
+            tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        let solo = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let expected = [(&ws[0], p48), (&ws[1], p28), (&ws[2], p48), (&ws[3], p28)];
+        for (i, &(w, p)) in expected.iter().enumerate() {
+            assert_eq!(masks[i].data, solo.mask(w, p).unwrap().data, "request {i}");
+        }
+        // Two patterns x one full bucket each.
+        assert_eq!(svc.dispatch_stats().dispatches, 2);
+        assert_eq!(svc.dispatch_stats().coalesced_requests, 4);
+    }
+}

@@ -4,24 +4,131 @@
 //!
 //! HLO text -> HloModuleProto::from_text_file -> XlaComputation -> compile
 //! (the 64-bit-proto-id workaround; see /opt/xla-example/README.md).
+//!
+//! # Concurrency
+//!
+//! `Engine` is `Send + Sync`: the executable cache is a sharded `RwLock`
+//! map of `Arc`-shared executables, the execution counters are atomics,
+//! and every touch of the xla-rs wrapper objects is serialized behind a
+//! per-engine `pjrt_lock` (we assume nothing about the wrappers'
+//! internals), so any number of threads may call one engine safely —
+//! one PJRT call at a time per engine. Real concurrency comes from
+//! [`EnginePool`]: one independent client per worker slot, handed out
+//! round-robin, sharing no wrapper objects — concurrent dykstra solves
+//! run on distinct clients instead of queueing on one global mutex.
 
 use crate::runtime::artifacts::{DykstraArtifact, Manifest};
 use crate::runtime::literal;
 use crate::util::tensor::{Blocks, Mat};
 use anyhow::{Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A compiled PJRT executable, shareable across threads. Execution goes
+/// through [`Engine::run`], which serializes every touch of the xla-rs
+/// wrapper objects behind the owning engine's `pjrt_lock`.
+pub struct Executable(PjRtLoadedExecutable);
+
+// SAFETY: the wrapper is only ever *used* (executed / dropped) under
+// the owning `Engine`'s `pjrt_lock` — see the safety argument on
+// `Engine`. `Send + Sync` here only permits storing the handle in the
+// `Arc`-shared cache and moving the `Arc` across threads; the lock
+// provides the mutual exclusion and happens-before edges that make
+// those cross-thread touches sound even if the xla-rs internals use
+// non-atomic reference counts.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (artifacts are lowered with return_tuple=True). Caller must hold
+    /// the owning engine's `pjrt_lock`.
+    fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.0.execute::<Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Number of independent lock shards in the executable cache. Artifacts
+/// are few (a handful of dykstra buckets + three model graphs), so this
+/// only needs to keep unrelated compilations from contending.
+const CACHE_SHARDS: usize = 8;
+
+struct ShardedCache {
+    shards: [RwLock<HashMap<String, Arc<Executable>>>; CACHE_SHARDS],
+}
+
+impl ShardedCache {
+    fn new() -> Self {
+        ShardedCache { shards: std::array::from_fn(|_| RwLock::new(HashMap::new())) }
+    }
+
+    fn shard(&self, key: &str) -> &RwLock<HashMap<String, Arc<Executable>>> {
+        // FNV-1a; stable across runs so shard assignment is deterministic.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        &self.shards[(h % CACHE_SHARDS as u64) as usize]
+    }
+}
+
+/// Cumulative PJRT execution counters (see [`Engine::stats`]).
+/// `since` yields per-run deltas, mirroring `OracleStats::since`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    pub exec_calls: u64,
+    /// Total wall time inside PJRT `execute`, in nanoseconds.
+    pub exec_nanos: u64,
+}
+
+impl EngineStats {
+    /// Stats accumulated since `earlier` (a snapshot of the same engine
+    /// or pool). Saturating: a snapshot taken mid-call never underflows.
+    pub fn since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            exec_calls: self.exec_calls.saturating_sub(earlier.exec_calls),
+            exec_nanos: self.exec_nanos.saturating_sub(earlier.exec_nanos),
+        }
+    }
+
+    pub fn exec_secs(&self) -> f64 {
+        self.exec_nanos as f64 / 1e9
+    }
+}
 
 pub struct Engine {
     client: PjRtClient,
     root: PathBuf,
-    cache: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
-    /// Cumulative PJRT execute() wall time, for the perf report.
-    pub exec_nanos: std::cell::Cell<u64>,
-    pub exec_calls: std::cell::Cell<u64>,
+    cache: ShardedCache,
+    /// Serializes every touch of the xla-rs wrapper objects (client
+    /// compilation, executable execution, result-buffer teardown). One
+    /// engine therefore admits one PJRT call at a time; concurrency
+    /// comes from [`EnginePool`] — independent clients sharing nothing.
+    pjrt_lock: Mutex<()>,
+    exec_nanos: AtomicU64,
+    exec_calls: AtomicU64,
 }
+
+// SAFETY: the non-`Send`/`Sync` fields are the xla-rs wrapper types
+// (`PjRtClient` and, inside the cache, `PjRtLoadedExecutable` via
+// `Executable`). We make no assumption about their internals (they may
+// hold non-atomic `Rc` handles): every operation that touches them —
+// `compile` in `executable()`, `execute` + buffer teardown in `run()` —
+// happens while holding this engine's `pjrt_lock`, so all wrapper
+// access is fully serialized with proper happens-before edges, exactly
+// the discipline the old global engine mutex enforced, now per engine.
+// The engine's own mutable state (executable cache, timing counters)
+// is behind `RwLock`s/atomics. Distinct `Engine`s never share wrapper
+// objects (each owns its client and compiles its own executables), so
+// pool-level concurrency across engines is unaffected.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     pub fn new(manifest: &Manifest) -> Result<Self> {
@@ -29,9 +136,10 @@ impl Engine {
         Ok(Engine {
             client,
             root: manifest.root.clone(),
-            cache: RefCell::new(HashMap::new()),
-            exec_nanos: std::cell::Cell::new(0),
-            exec_calls: std::cell::Cell::new(0),
+            cache: ShardedCache::new(),
+            pjrt_lock: Mutex::new(()),
+            exec_nanos: AtomicU64::new(0),
+            exec_calls: AtomicU64::new(0),
         })
     }
 
@@ -39,9 +147,27 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// Compile (or fetch cached) an HLO-text artifact by its relative path.
-    pub fn executable(&self, rel_file: &str) -> Result<std::rc::Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(rel_file) {
+    /// Snapshot of the cumulative execution counters.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            exec_calls: self.exec_calls.load(Ordering::Relaxed),
+            exec_nanos: self.exec_nanos.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Compile (or fetch cached) an HLO-text artifact by its relative
+    /// path. Cache hits are lock-free apart from the shard read-lock;
+    /// misses parse the HLO outside every lock, then compile under
+    /// `pjrt_lock`. Concurrent misses on the same artifact may compile
+    /// twice; the first insertion wins and the duplicate is dropped
+    /// (under the same lock) — wasteful but correct.
+    pub fn executable(&self, rel_file: &str) -> Result<Arc<Executable>> {
+        let shard = self.cache.shard(rel_file);
+        if let Some(exe) = shard
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(rel_file)
+        {
             return Ok(exe.clone());
         }
         let path = self.root.join(rel_file);
@@ -50,28 +176,38 @@ impl Engine {
         )
         .with_context(|| format!("parse HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compile {}", path.display()))?,
-        );
-        self.cache
-            .borrow_mut()
-            .insert(rel_file.to_string(), exe.clone());
+        let exe = {
+            let _pjrt = self.pjrt_lock.lock().unwrap_or_else(|e| e.into_inner());
+            let compiled = Arc::new(Executable(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {}", path.display()))?,
+            ));
+            let mut cache = shard.write().unwrap_or_else(|e| e.into_inner());
+            // A racing duplicate (same artifact compiled by a sibling
+            // thread) is dropped here, still under `pjrt_lock`.
+            cache.entry(rel_file.to_string()).or_insert(compiled).clone()
+        };
         Ok(exe)
     }
 
-    /// Execute an artifact with literal inputs; returns the output tuple
-    /// (artifacts are lowered with return_tuple=True).
+    /// Execute an artifact with literal inputs; returns the output tuple.
     pub fn run(&self, rel_file: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let exe = self.executable(rel_file)?;
-        let t0 = std::time::Instant::now();
-        let result = exe.execute::<Literal>(inputs)?;
+        // A poisoned lock only means a sibling caller panicked mid-call;
+        // the engine holds no state between calls, so keep going.
+        let (outs, elapsed) = {
+            let _pjrt = self.pjrt_lock.lock().unwrap_or_else(|e| e.into_inner());
+            // Timed under the lock so exec_nanos measures PJRT execution
+            // alone, not time spent queueing behind sibling callers.
+            let t0 = std::time::Instant::now();
+            let outs = exe.run(inputs)?;
+            (outs, t0.elapsed())
+        };
         self.exec_nanos
-            .set(self.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
-        self.exec_calls.set(self.exec_calls.get() + 1);
-        let tuple = result[0][0].to_literal_sync()?;
-        Ok(tuple.to_tuple()?)
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.exec_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(outs)
     }
 
     /// Batched Dykstra solve through the AOT artifact. `absw.b` must equal
@@ -93,6 +229,57 @@ impl Engine {
         let outs = self.run(&art.file, &inputs)?;
         anyhow::ensure!(outs.len() == 1, "dykstra: expected 1 output");
         literal::literal_blocks(&outs[0], absw.b, absw.m)
+    }
+}
+
+/// Pool of independent PJRT clients, one per worker slot. Checked out
+/// round-robin so concurrent solvers spread across clients instead of
+/// serializing on one; every engine compiles its own executables (the
+/// executable cache is per-client).
+pub struct EnginePool {
+    engines: Vec<Engine>,
+    next: AtomicUsize,
+}
+
+impl EnginePool {
+    /// `slots` clients (`0` is clamped to 1).
+    pub fn new(manifest: &Manifest, slots: usize) -> Result<Self> {
+        let engines = (0..slots.max(1))
+            .map(|_| Engine::new(manifest))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EnginePool { engines, next: AtomicUsize::new(0) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Slot 0 — the engine to share with single-threaded consumers
+    /// (model forward/calibration via `ModelRuntime`).
+    pub fn primary(&self) -> &Engine {
+        &self.engines[0]
+    }
+
+    /// Round-robin checkout. Engines are never exclusively owned — the
+    /// pool only spreads load, all engines stay usable concurrently.
+    pub fn checkout(&self) -> &Engine {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.engines.len();
+        &self.engines[i]
+    }
+
+    /// Counters summed over every slot.
+    pub fn stats(&self) -> EngineStats {
+        let mut total = EngineStats::default();
+        for e in &self.engines {
+            let s = e.stats();
+            total.exec_calls += s.exec_calls;
+            total.exec_nanos += s.exec_nanos;
+        }
+        total
     }
 }
 
@@ -209,5 +396,39 @@ impl<'a> ModelRuntime<'a> {
             grads.push(literal::literal_mat(lit, r, c)?);
         }
         Ok((loss, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_stats_since_is_saturating() {
+        let a = EngineStats { exec_calls: 5, exec_nanos: 1_500_000_000 };
+        let b = EngineStats { exec_calls: 2, exec_nanos: 500_000_000 };
+        let d = a.since(&b);
+        assert_eq!(d, EngineStats { exec_calls: 3, exec_nanos: 1_000_000_000 });
+        assert!((d.exec_secs() - 1.0).abs() < 1e-12);
+        // Reversed snapshots saturate to zero instead of wrapping.
+        assert_eq!(b.since(&a), EngineStats::default());
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<EnginePool>();
+        assert_send_sync::<Executable>();
+    }
+
+    #[test]
+    fn cache_shard_is_deterministic_and_in_range() {
+        let c = ShardedCache::new();
+        for key in ["dykstra_m16_b64.hlo", "model_fwd.hlo", "", "x"] {
+            let a = c.shard(key) as *const _;
+            let b = c.shard(key) as *const _;
+            assert_eq!(a, b, "same key must map to the same shard");
+        }
     }
 }

@@ -7,4 +7,4 @@ pub mod client;
 pub mod literal;
 
 pub use artifacts::{ArtifactRegistry, Manifest};
-pub use client::Engine;
+pub use client::{Engine, EnginePool, EngineStats};

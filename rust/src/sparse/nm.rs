@@ -13,6 +13,7 @@
 //!     which is exactly the asymmetry the paper motivates with.
 
 use crate::util::tensor::Mat;
+use anyhow::{bail, ensure, Result};
 
 /// N:M-compressed matrix (compressed along rows: each column j of W is
 /// split into row-groups of M with exactly N kept).
@@ -31,35 +32,56 @@ pub struct NmCompressed {
 impl NmCompressed {
     /// Compress `w` under `mask` (mask must be column-wise N:M along rows:
     /// every M consecutive entries of each column contain exactly N ones).
-    pub fn compress(w: &Mat, mask: &Mat, n: usize, m: usize) -> Option<Self> {
-        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
-        if w.rows % m != 0 {
-            return None;
-        }
+    /// A constraint violation reports the offending column, row group and
+    /// kept count, so a bad mask upstream is diagnosable from the error.
+    pub fn compress(w: &Mat, mask: &Mat, n: usize, m: usize) -> Result<Self> {
+        ensure!(
+            (w.rows, w.cols) == (mask.rows, mask.cols),
+            "compress: weight shape {}x{} != mask shape {}x{}",
+            w.rows,
+            w.cols,
+            mask.rows,
+            mask.cols
+        );
+        ensure!(
+            m > 0 && w.rows % m == 0,
+            "compress: {} rows not divisible into groups of M={m}",
+            w.rows
+        );
         let groups = w.rows / m;
         let mut values = vec![0.0f32; groups * n * w.cols];
         let mut indices = vec![0u8; groups * n * w.cols];
         for g in 0..groups {
             for j in 0..w.cols {
-                let mut slot = 0usize;
+                let mut kept = 0usize;
                 for r in 0..m {
                     let i = g * m + r;
                     if mask.at(i, j) != 0.0 {
-                        if slot >= n {
-                            return None; // not N:M along this column group
+                        if kept >= n {
+                            // Count the full violation before reporting.
+                            let count = (0..m)
+                                .filter(|&r| mask.at(g * m + r, j) != 0.0)
+                                .count();
+                            bail!(
+                                "compress: column {j}, row group {g}: {count} kept \
+                                 entries violate {n}:{m}"
+                            );
                         }
-                        let at = (g * n + slot) * w.cols + j;
+                        let at = (g * n + kept) * w.cols + j;
                         values[at] = w.at(i, j);
                         indices[at] = r as u8;
-                        slot += 1;
+                        kept += 1;
                     }
                 }
-                if slot != n {
-                    return None;
+                if kept != n {
+                    bail!(
+                        "compress: column {j}, row group {g}: {kept} kept entries \
+                         violate {n}:{m}"
+                    );
                 }
             }
         }
-        Some(NmCompressed { rows: w.rows, cols: w.cols, n, m, values, indices })
+        Ok(NmCompressed { rows: w.rows, cols: w.cols, n, m, values, indices })
     }
 
     /// Decompress back to dense (for testing).
@@ -158,14 +180,30 @@ mod tests {
     }
 
     #[test]
-    fn compress_rejects_non_nm() {
+    fn compress_rejects_non_nm_naming_the_violation() {
         let w = Mat::from_fn(8, 8, |_, _| 1.0);
         let mut mask = Mat::zeros(8, 8);
         // 5 ones in the first column group of 8 (n=4 expected).
         for i in 0..5 {
             *mask.at_mut(i, 0) = 1.0;
         }
-        assert!(NmCompressed::compress(&w, &mask, 4, 8).is_none());
+        let err = NmCompressed::compress(&w, &mask, 4, 8).unwrap_err().to_string();
+        assert!(err.contains("column 0"), "{err}");
+        assert!(err.contains("group 0"), "{err}");
+        assert!(err.contains("5 kept"), "{err}");
+        assert!(err.contains("4:8"), "{err}");
+        // Underfull groups are named too (column 1 has zero kept).
+        let mut under = Mat::zeros(8, 8);
+        for i in 0..4 {
+            *under.at_mut(i, 0) = 1.0;
+        }
+        let err = NmCompressed::compress(&w, &under, 4, 8).unwrap_err().to_string();
+        assert!(err.contains("column 1") && err.contains("0 kept"), "{err}");
+        // Indivisible row count is a shape error, not a silent None.
+        let w9 = Mat::zeros(9, 8);
+        let m9 = Mat::zeros(9, 8);
+        let err = NmCompressed::compress(&w9, &m9, 4, 8).unwrap_err().to_string();
+        assert!(err.contains("9 rows"), "{err}");
     }
 
     #[test]
@@ -229,6 +267,6 @@ mod tests {
             }
         }
         // Column groups will generically violate 4:8.
-        assert!(NmCompressed::compress(&w, &mask, 4, 8).is_none());
+        assert!(NmCompressed::compress(&w, &mask, 4, 8).is_err());
     }
 }

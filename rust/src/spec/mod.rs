@@ -23,6 +23,7 @@ pub mod report;
 
 use crate::masks::solver::{Method, SolveCfg};
 use crate::masks::NmPattern;
+use crate::pruning::ServiceCfg;
 use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -187,6 +188,30 @@ pub fn solve_cfg_from_json(j: &Json, mut base: SolveCfg) -> Result<SolveCfg> {
     Ok(base)
 }
 
+/// Serialize the mask-service knobs (the `"service"` spec object).
+pub fn service_cfg_to_json(cfg: &ServiceCfg) -> Json {
+    json::obj(vec![
+        ("window_ms", Json::Num(cfg.window_ms as f64)),
+        ("max_in_flight", Json::Num(cfg.max_in_flight as f64)),
+        ("pool", Json::Num(cfg.pool as f64)),
+    ])
+}
+
+/// Overlay JSON-provided service knobs onto `base` (missing keys keep
+/// defaults; integers are strict, same stance as every count field).
+pub fn service_cfg_from_json(j: &Json, mut base: ServiceCfg) -> Result<ServiceCfg> {
+    if let Some(x) = json_usize(j, "window_ms")? {
+        base.window_ms = x as u64;
+    }
+    if let Some(x) = json_usize(j, "max_in_flight")? {
+        base.max_in_flight = x;
+    }
+    if let Some(x) = json_usize(j, "pool")? {
+        base.pool = x;
+    }
+    Ok(base)
+}
+
 fn overrides_to_json(overrides: &[LayerOverride]) -> Json {
     Json::Arr(
         overrides
@@ -236,6 +261,10 @@ pub struct PruneSpec {
     /// reports (modulo per-layer `wall_secs`) — see
     /// `coordinator::executor`.
     pub jobs: usize,
+    /// Mask-service dispatcher knobs (coalescing window, in-flight cap,
+    /// engine-pool size). Pure scheduling: any setting produces
+    /// bit-identical masks — see `pruning::service`.
+    pub service: ServiceCfg,
 }
 
 impl PruneSpec {
@@ -250,6 +279,7 @@ impl PruneSpec {
             eval_batches: Some(12),
             seed: 0,
             jobs: 1,
+            service: ServiceCfg::default(),
         }
     }
 
@@ -296,6 +326,12 @@ impl PruneSpec {
         self
     }
 
+    /// Mask-service dispatcher knobs.
+    pub fn service(mut self, cfg: ServiceCfg) -> Self {
+        self.service = cfg;
+        self
+    }
+
     /// Effective pattern for a layer: the last matching override, else
     /// the spec default.
     pub fn pattern_for(&self, layer: &str) -> NmPattern {
@@ -327,6 +363,7 @@ impl PruneSpec {
             ("seed", Json::Num(self.seed as f64)),
             ("jobs", Json::Num(self.jobs as f64)),
             ("solve", solve_cfg_to_json(&self.solve)),
+            ("service", service_cfg_to_json(&self.service)),
         ];
         if !self.overrides.is_empty() {
             fields.push(("overrides", overrides_to_json(&self.overrides)));
@@ -368,6 +405,9 @@ impl PruneSpec {
         if let Some(sj) = j.get("solve") {
             spec.solve = solve_cfg_from_json(sj, spec.solve)?;
         }
+        if let Some(sj) = j.get("service") {
+            spec.service = service_cfg_from_json(sj, spec.service)?;
+        }
         if let Some(ov) = j.get("overrides") {
             spec.overrides = overrides_from_json(ov)?;
         }
@@ -399,6 +439,10 @@ pub struct SolveSpec {
     /// uses `max(jobs, threads)` workers); the field exists so prune and
     /// solve spec files share one schema. `0` = auto.
     pub jobs: usize,
+    /// Mask-service knobs; a standalone solve is single-caller so these
+    /// have no effect — they ride along for schema parity with
+    /// `PruneSpec` (one spec file can drive both commands).
+    pub service: ServiceCfg,
 }
 
 impl SolveSpec {
@@ -411,6 +455,7 @@ impl SolveSpec {
             seed: 0,
             solve: SolveCfg::default(),
             jobs: 1,
+            service: ServiceCfg::default(),
         }
     }
 
@@ -436,6 +481,12 @@ impl SolveSpec {
         self
     }
 
+    /// Mask-service knobs.
+    pub fn service(mut self, cfg: ServiceCfg) -> Self {
+        self.service = cfg;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("kind", Json::Str("solve".into())),
@@ -446,6 +497,7 @@ impl SolveSpec {
             ("seed", Json::Num(self.seed as f64)),
             ("jobs", Json::Num(self.jobs as f64)),
             ("solve", solve_cfg_to_json(&self.solve)),
+            ("service", service_cfg_to_json(&self.service)),
         ])
     }
 
@@ -472,6 +524,9 @@ impl SolveSpec {
         }
         if let Some(sj) = j.get("solve") {
             spec.solve = solve_cfg_from_json(sj, spec.solve)?;
+        }
+        if let Some(sj) = j.get("service") {
+            spec.service = service_cfg_from_json(sj, spec.service)?;
         }
         Ok(spec)
     }
@@ -654,6 +709,32 @@ mod tests {
         // Strict integers, same stance as every other count field.
         assert!(PruneSpec::parse(r#"{"jobs": -2}"#).is_err());
         assert!(PruneSpec::parse(r#"{"jobs": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn service_knobs_default_builder_and_json() {
+        // Defaults: 1ms window, unbounded in-flight, single-slot pool.
+        let spec = PruneSpec::new(Framework::Alps);
+        assert_eq!(spec.service, ServiceCfg::default());
+        assert_eq!(spec.service.window_ms, 1);
+        assert_eq!(spec.service.max_in_flight, 0);
+        assert_eq!(spec.service.pool, 1);
+        // Builder + JSON round-trip, on both spec kinds.
+        let cfg = ServiceCfg::default().window_ms(5).max_in_flight(4).pool(2);
+        let spec = PruneSpec::new(Framework::Wanda).service(cfg);
+        let back = PruneSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.service, cfg);
+        let s = SolveSpec::new(Method::Tsenor).service(cfg);
+        let back = SolveSpec::parse(&s.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.service, cfg);
+        // Partial objects overlay onto defaults; integers are strict.
+        let spec = PruneSpec::parse(r#"{"service": {"pool": 3}}"#).unwrap();
+        assert_eq!(spec.service, ServiceCfg::default().pool(3));
+        assert!(PruneSpec::parse(r#"{"service": {"pool": -1}}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"service": {"window_ms": 1.5}}"#).is_err());
+        // pool = 0 (auto) resolves to at least one slot.
+        assert!(ServiceCfg::default().pool(0).pool_slots() >= 1);
+        assert_eq!(ServiceCfg::default().pool(6).pool_slots(), 6);
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub struct PruneReport {
     /// Perplexity per validation corpus.
     pub perplexity: BTreeMap<String, f64>,
     pub wall_secs: f64,
+    /// PJRT executions on the runtime engine during this run (per-run
+    /// delta via snapshot, like `OracleStats::since`). Timing-class
+    /// fields: omitted by `to_json_stripped()`.
+    pub engine_exec_calls: u64,
+    /// Wall time inside PJRT `execute` during this run, seconds.
+    pub engine_exec_secs: f64,
     /// Pruned model (weights + masks). Carried for downstream use
     /// (fine-tuning, zero-shot eval); not serialized.
     pub state: ModelState,
@@ -64,10 +70,11 @@ impl PruneReport {
         self.json_impl(true)
     }
 
-    /// JSON with every scheduling artifact omitted — timing fields AND
-    /// the embedded spec's `jobs` knob — so two runs that differ only
-    /// in scheduling compare byte-equal. The differential test harness
-    /// asserts this is identical for `jobs = 1` and `jobs = N`.
+    /// JSON with every scheduling artifact omitted — timing fields,
+    /// engine counters, AND the embedded spec's `jobs`/`service` knobs —
+    /// so two runs that differ only in scheduling compare byte-equal.
+    /// The differential harnesses assert this is identical for
+    /// `jobs = 1` vs `jobs = N` and across service coalescing settings.
     pub fn to_json_stripped(&self) -> Json {
         self.json_impl(false)
     }
@@ -75,10 +82,12 @@ impl PruneReport {
     fn json_impl(&self, with_timing: bool) -> Json {
         let mut spec_json = self.spec.to_json();
         if !with_timing {
-            // `jobs` is pure scheduling: neutralize it like the timing
-            // fields so the stripped report ignores worker count.
+            // `jobs` and the service knobs are pure scheduling:
+            // neutralize them like the timing fields so the stripped
+            // report ignores worker count and coalescing settings.
             if let Json::Obj(fields) = &mut spec_json {
                 fields.remove("jobs");
+                fields.remove("service");
             }
         }
         let layers = Json::Arr(
@@ -117,6 +126,11 @@ impl PruneReport {
         ];
         if with_timing {
             fields.push(("wall_secs", Json::Num(self.wall_secs)));
+            fields.push((
+                "engine_exec_calls",
+                Json::Num(self.engine_exec_calls as f64),
+            ));
+            fields.push(("engine_exec_secs", Json::Num(self.engine_exec_secs)));
         }
         json::obj(fields)
     }
@@ -140,6 +154,13 @@ impl PruneReport {
             self.layers.len(),
             self.oracle_stats.calls
         );
+        if self.engine_exec_calls > 0 {
+            let _ = writeln!(
+                s,
+                "  engine: {} PJRT execs, {:.2}s in execute",
+                self.engine_exec_calls, self.engine_exec_secs
+            );
+        }
         if self.spec.is_mixed() {
             // Group layers by effective pattern so mixed runs are legible.
             let mut by_pattern: BTreeMap<String, usize> = BTreeMap::new();
@@ -195,6 +216,8 @@ mod tests {
             model_sparsity: 0.5,
             perplexity: [("valid_markov".to_string(), 3.25)].into_iter().collect(),
             wall_secs: 1.5,
+            engine_exec_calls: 7,
+            engine_exec_secs: 0.5,
             state: ModelState::default(),
         }
     }
@@ -226,21 +249,31 @@ mod tests {
         let layer0 = &full.get("layers").unwrap().as_arr().unwrap()[0];
         assert_eq!(layer0.get("wall_secs").and_then(Json::as_f64), Some(0.25));
 
+        assert_eq!(full.get("engine_exec_calls").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(full.get("engine_exec_secs").and_then(Json::as_f64), Some(0.5));
+
         let stripped = r.to_json_stripped();
         assert!(stripped.get("wall_secs").is_none());
+        assert!(stripped.get("engine_exec_calls").is_none());
+        assert!(stripped.get("engine_exec_secs").is_none());
         for l in stripped.get("layers").unwrap().as_arr().unwrap() {
             assert!(l.get("wall_secs").is_none());
         }
-        // The embedded spec's jobs knob (pure scheduling) is neutralized
-        // too; the full JSON keeps it.
+        // The embedded spec's jobs + service knobs (pure scheduling) are
+        // neutralized too; the full JSON keeps them.
         assert!(stripped.get("spec").unwrap().get("jobs").is_none());
+        assert!(stripped.get("spec").unwrap().get("service").is_none());
         assert!(full.get("spec").unwrap().get("jobs").is_some());
+        assert!(full.get("spec").unwrap().get("service").is_some());
         // Two runs differing only in timing + worker count strip to
         // identical bytes.
         let mut r2 = r.clone();
         r2.wall_secs = 99.0;
         r2.layers[0].wall_secs = 42.0;
         r2.spec.jobs = 8;
+        r2.engine_exec_calls = 999;
+        r2.engine_exec_secs = 123.0;
+        r2.spec.service = crate::pruning::ServiceCfg::default().window_ms(9).pool(4);
         assert_eq!(
             r.to_json_stripped().to_string_pretty(),
             r2.to_json_stripped().to_string_pretty()

@@ -170,6 +170,8 @@ fn report_from_outcomes(
         model_sparsity,
         perplexity: BTreeMap::new(),
         wall_secs: 0.0,
+        engine_exec_calls: 0,
+        engine_exec_secs: 0.0,
         state,
     }
 }

@@ -1,0 +1,208 @@
+//! Differential harness for the submission-based mask service:
+//! dynamic cross-caller coalescing must be **bit-invisible**. Requests
+//! submitted concurrently from many threads — in mixed patterns, under
+//! any window / in-flight / pool setting — must produce masks
+//! byte-identical to solo `MaskOracle::mask` calls on the bare backend,
+//! for every solver method. A property test drives random service
+//! settings and request mixes; an artifact-gated test repeats the
+//! differential through the XLA path on a real engine pool.
+
+use std::path::PathBuf;
+use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::masks::NmPattern;
+use tsenor::pruning::{
+    CpuOracle, MaskDispatcher, MaskOracle, MaskService, MaskTicket, ServiceCfg,
+};
+use tsenor::runtime::{EnginePool, Manifest};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A mixed-pattern request workload: (score, pattern) pairs whose block
+/// counts sit below the coalescing quantum, so buckets really coalesce.
+fn workload(count: usize, seed: u64) -> Vec<(Mat, NmPattern)> {
+    let mut rng = Rng::new(seed);
+    let patterns = [NmPattern::new(4, 8), NmPattern::new(2, 8)];
+    let dims = [8usize, 16, 24];
+    (0..count)
+        .map(|i| {
+            let rows = dims[(rng.next_u64() % 3) as usize];
+            let cols = dims[(rng.next_u64() % 3) as usize];
+            let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+            (w, patterns[i % patterns.len()])
+        })
+        .collect()
+}
+
+fn solve_cfg() -> SolveCfg {
+    // Small random_k keeps max1000 affordable across the whole matrix.
+    SolveCfg { random_k: 40, ..Default::default() }
+}
+
+/// Submit every request from `threads` concurrent callers through the
+/// dispatcher (each caller enqueues its whole slice before waiting, so
+/// cross-caller batches actually form), and return the masks in
+/// request order.
+fn run_concurrent(
+    svc: &MaskDispatcher<'_>,
+    requests: &[(Mat, NmPattern)],
+    threads: usize,
+) -> Vec<Mat> {
+    let mut out: Vec<Option<Mat>> = Vec::new();
+    out.resize_with(requests.len(), || None);
+    let chunk = requests.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<Mat>] = &mut out;
+        for reqs in requests.chunks(chunk) {
+            let (head, tail) = rest.split_at_mut(reqs.len());
+            rest = tail;
+            scope.spawn(move || {
+                let tickets: Vec<MaskTicket<'_>> =
+                    reqs.iter().map(|(w, p)| svc.submit(w, *p)).collect();
+                for (slot, ticket) in head.iter_mut().zip(tickets) {
+                    *slot = Some(ticket.wait().unwrap());
+                }
+            });
+        }
+    });
+    out.into_iter().map(|m| m.expect("every request resolved")).collect()
+}
+
+#[test]
+fn concurrent_submissions_match_solo_masks_for_every_method() {
+    let requests = workload(12, 77);
+    for &method in Method::all() {
+        let reference = CpuOracle::new(method, solve_cfg());
+        let solo: Vec<Mat> = requests
+            .iter()
+            .map(|(w, p)| reference.mask(w, *p).unwrap())
+            .collect();
+
+        let backend = CpuOracle::new(method, solve_cfg()).with_batch_quantum(8);
+        let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(2));
+        let got = run_concurrent(&svc, &requests, 4);
+        for (i, (g, s)) in got.iter().zip(&solo).enumerate() {
+            assert_eq!(
+                bits(g),
+                bits(s),
+                "{}: request {i} diverged from its solo solve",
+                method.name()
+            );
+        }
+        // Totals are composition-independent: one logical call and one
+        // block count per request, no matter how batches formed.
+        let stats = backend.stats();
+        assert_eq!(stats.calls, requests.len(), "{}", method.name());
+        let total_blocks: usize = requests
+            .iter()
+            .map(|(w, p)| (w.rows / p.m) * (w.cols / p.m))
+            .sum();
+        assert_eq!(stats.blocks_solved, total_blocks, "{}", method.name());
+    }
+}
+
+#[test]
+fn property_random_service_settings_never_change_masks() {
+    let mut rng = Rng::new(2027);
+    for trial in 0..8u64 {
+        let requests = workload(6 + (rng.next_u64() % 8) as usize, 1000 + trial);
+        let quantum = [0usize, 8, 16][(rng.next_u64() % 3) as usize];
+        let cfg = ServiceCfg::default()
+            .window_ms(rng.next_u64() % 3)
+            .max_in_flight((rng.next_u64() % 4) as usize)
+            .pool(1 + (rng.next_u64() % 4) as usize);
+        let threads = 1 + (rng.next_u64() % 4) as usize;
+
+        let reference = CpuOracle::new(Method::Tsenor, solve_cfg());
+        let solo: Vec<Mat> = requests
+            .iter()
+            .map(|(w, p)| reference.mask(w, *p).unwrap())
+            .collect();
+
+        let backend =
+            CpuOracle::new(Method::Tsenor, solve_cfg()).with_batch_quantum(quantum);
+        let svc = MaskDispatcher::new(&backend, cfg);
+        let got = run_concurrent(&svc, &requests, threads);
+        for (i, (g, s)) in got.iter().zip(&solo).enumerate() {
+            assert_eq!(
+                bits(g),
+                bits(s),
+                "trial {trial} ({cfg:?}, quantum {quantum}, threads {threads}): \
+                 request {i} depends on service settings"
+            );
+        }
+    }
+}
+
+#[test]
+fn ticket_burst_from_one_caller_coalesces_and_matches() {
+    // A single caller that batches its own submissions gets the same
+    // masks as solo calls, and uniform sub-bucket requests (4 blocks
+    // each, quantum 16) are guaranteed to coalesce four-to-a-bucket.
+    let mut rng = Rng::new(99);
+    let pattern = NmPattern::new(4, 8);
+    let requests: Vec<(Mat, NmPattern)> = (0..8)
+        .map(|_| (Mat::from_fn(16, 16, |_, _| rng.heavy_tail()), pattern))
+        .collect();
+    let reference = CpuOracle::new(Method::Tsenor, solve_cfg());
+    let backend =
+        CpuOracle::new(Method::Tsenor, solve_cfg()).with_batch_quantum(16);
+    let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(0));
+    let tickets: Vec<MaskTicket<'_>> =
+        requests.iter().map(|(w, p)| svc.submit(w, *p)).collect();
+    for ((w, p), ticket) in requests.iter().zip(tickets) {
+        let got = ticket.wait().unwrap();
+        let want = reference.mask(w, *p).unwrap();
+        assert_eq!(bits(&got), bits(&want));
+    }
+    let stats = svc.dispatch_stats();
+    assert_eq!(stats.dispatches, 2, "8 x 4 blocks fill two 16-block buckets");
+    assert_eq!(stats.coalesced_requests, 8);
+    assert!((stats.fill_rate() - 1.0).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------
+// XLA path — needs the artifact bundle (PJRT).
+// ---------------------------------------------------------------------
+
+fn manifest() -> Option<Manifest> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&root).unwrap())
+}
+
+#[test]
+fn xla_service_differential_on_engine_pool() {
+    let Some(manifest) = manifest() else { return };
+    let pool = EnginePool::new(&manifest, 2).unwrap();
+    let solver = XlaSolver::pooled(&pool, &manifest, SolveCfg::default());
+
+    // Small matrices (below the smallest M=16 bucket) in two patterns.
+    let mut rng = Rng::new(5);
+    let requests: Vec<(Mat, NmPattern)> = (0..8)
+        .map(|i| {
+            let w = Mat::from_fn(16, 16, |_, _| rng.heavy_tail());
+            let p = if i % 2 == 0 { NmPattern::new(8, 16) } else { NmPattern::new(4, 16) };
+            (w, p)
+        })
+        .collect();
+    let solo: Vec<Mat> = requests
+        .iter()
+        .map(|(w, p)| solver.mask(w, *p).unwrap())
+        .collect();
+
+    let svc = MaskDispatcher::new(&solver, ServiceCfg::default().window_ms(2).pool(2));
+    let got = run_concurrent(&svc, &requests, 4);
+    for (i, (g, s)) in got.iter().zip(&solo).enumerate() {
+        assert_eq!(bits(g), bits(s), "xla request {i} diverged under coalescing");
+    }
+    // The pool spread executions across both slots.
+    assert!(pool.stats().exec_calls > 0);
+}

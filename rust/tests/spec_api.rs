@@ -26,6 +26,10 @@ fn shipped_mixed_spec_parses_and_is_mixed() {
     assert_eq!(spec.pattern_for("layers.3.wup"), NmPattern::new(16, 32));
     assert_eq!(spec.solve.threads, 4);
     assert_eq!(spec.jobs, 2);
+    // The service knobs ride in the same file.
+    assert_eq!(spec.service.window_ms, 2);
+    assert_eq!(spec.service.max_in_flight, 4);
+    assert_eq!(spec.service.pool, 2);
     // And it round-trips.
     let back = PruneSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
     assert_eq!(spec, back);
