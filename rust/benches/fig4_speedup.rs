@@ -37,13 +37,14 @@ fn main() {
     let x = workload::structured_matrix(batch, d, 6);
     let g = workload::structured_matrix(batch, d, 7);
 
-    // Dense baselines.
+    // Dense baselines — the truly dense kernel (no zero-skip), so the
+    // baseline pays full dense cost even if the workload has zeros.
     let (dense_fwd, _) = time_trials(trials, || {
-        let _ = gemm::matmul(&x, &rng_w);
+        let _ = gemm::matmul_dense_baseline(&x, &rng_w);
     });
     let wt = rng_w.transpose();
     let (dense_bwd, _) = time_trials(trials, || {
-        let _ = gemm::matmul(&g, &wt);
+        let _ = gemm::matmul_dense_baseline(&g, &wt);
     });
     println!("dense {d}x{d}: fwd {dense_fwd:.4}s  bwd {dense_bwd:.4}s (batch {batch})\n");
 

@@ -56,17 +56,50 @@ impl LayerTask {
         LayerTask { problem, preset_mask: None }
     }
 
+    /// Attach a mask precomputed by a cross-layer batched oracle call
+    /// (the streaming driver's grouped pre-pass uses this; the
+    /// in-memory path sets presets inside `run_layer_tasks`).
+    pub fn preset(mut self, mask: Mat) -> Self {
+        self.preset_mask = Some(mask);
+        self
+    }
+
+    fn shape(&self) -> TaskShape {
+        TaskShape {
+            pattern: self.problem.pattern,
+            rows: self.problem.w.rows,
+            cols: self.problem.w.cols,
+        }
+    }
+
     /// Number of M x M blocks this layer's score matrix partitions into.
     pub fn block_count(&self) -> usize {
-        let m = self.problem.pattern.m;
-        (self.problem.w.rows / m) * (self.problem.w.cols / m)
+        self.shape().block_count()
+    }
+}
+
+/// Shape-level view of a layer task: everything the batching plan
+/// needs, WITHOUT the weights — so the streaming pipeline can compute
+/// the very same plan from the checkpoint index before any layer is
+/// resident.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskShape {
+    pub pattern: NmPattern,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TaskShape {
+    pub fn block_count(&self) -> usize {
+        let m = self.pattern.m;
+        (self.rows / m) * (self.cols / m)
     }
 
     /// True when the layer's shape partitions cleanly into M x M blocks
     /// (a precondition of every transposable oracle call).
     fn blockable(&self) -> bool {
-        let m = self.problem.pattern.m;
-        m > 0 && self.problem.w.rows % m == 0 && self.problem.w.cols % m == 0
+        let m = self.pattern.m;
+        m > 0 && self.rows % m == 0 && self.cols % m == 0
     }
 }
 
@@ -167,19 +200,32 @@ pub fn plan_batches(
     spec: &PruneSpec,
     oracle: &dyn MaskOracle,
 ) -> BatchPlan {
+    let shapes: Vec<TaskShape> = tasks.iter().map(LayerTask::shape).collect();
+    plan_batches_shapes(&shapes, spec, oracle)
+}
+
+/// Shape-only variant of [`plan_batches`]: the plan depends only on
+/// task order, patterns, shapes and the oracle quantum — never on the
+/// weight values — so both the in-memory and streaming pipelines form
+/// the IDENTICAL plan (and therefore issue identical oracle calls).
+pub fn plan_batches_shapes(
+    shapes: &[TaskShape],
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+) -> BatchPlan {
     if spec.structure != Structure::Transposable || !groupable(spec.framework) {
         return BatchPlan::default();
     }
     let mut by_pattern: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
         std::collections::BTreeMap::new();
-    for (i, task) in tasks.iter().enumerate() {
-        if !task.blockable() {
+    for (i, shape) in shapes.iter().enumerate() {
+        if !shape.blockable() {
             continue;
         }
-        let quantum = oracle.batch_quantum(task.problem.pattern.m);
-        if quantum > 0 && task.block_count() < quantum {
+        let quantum = oracle.batch_quantum(shape.pattern.m);
+        if quantum > 0 && shape.block_count() < quantum {
             by_pattern
-                .entry((task.problem.pattern.n, task.problem.pattern.m))
+                .entry((shape.pattern.n, shape.pattern.m))
                 .or_default()
                 .push(i);
         }
@@ -190,6 +236,13 @@ pub fn plan_batches(
         .map(|((n, m), members)| LayerGroup { pattern: NmPattern::new(n, m), members })
         .collect();
     BatchPlan { groups }
+}
+
+/// Compute the score matrix a grouped oracle call uses for one member
+/// (exactly what the framework itself would hand to the oracle).
+/// Public for the streaming driver's grouped pre-pass.
+pub fn member_score(framework: Framework, p: &LayerProblem) -> Mat {
+    group_score(framework, p)
 }
 
 /// Resolve a spec-level job count: `0` means one worker per available
@@ -266,6 +319,88 @@ pub fn run_layer_tasks(
         .collect()
 }
 
+/// One unit of work pulled from a streaming task feed: the task plus
+/// its position in the run's layer order and (optionally) the
+/// prefetch-pool reservation covering its weight bytes. The guard is
+/// dropped — returning the bytes to the budget — only after the job
+/// AND its sink hand-off complete, so "resident" accounting covers
+/// in-flight compute, not just queued reads.
+pub struct FeedItem {
+    pub index: usize,
+    pub task: LayerTask,
+    pub guard: Option<crate::stream::prefetch::PoolGuard>,
+}
+
+/// Pull-based variant of [`run_layer_tasks`] for the streaming
+/// pipeline: `spec.jobs` workers claim items from `feed` (which blocks
+/// on prefetch I/O) and hand each finished [`LayerOutcome`] to `sink`
+/// in COMPLETION order — the sink (write-back shards + resume journal)
+/// serializes internally and retains only report-sized residue, so
+/// pruned weights never accumulate. The first error (from the feed, a
+/// job, or the sink) stops all workers and is returned; `on_fail`
+/// fires once, immediately, so the caller can unpark workers blocked
+/// inside `feed` (the streaming driver aborts its prefetcher there)
+/// instead of letting each finish one more stale layer.
+///
+/// Determinism: each job is the same pure function of its task as in
+/// `run_layer_tasks`; only the sink's ARRIVAL order is
+/// scheduling-dependent, and everything order-sensitive downstream
+/// (reports, state, metrics) is re-assembled in task order by the
+/// caller — so any `jobs` level yields bit-identical results.
+pub fn run_layer_feed(
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+    feed: &(dyn Fn() -> Option<Result<FeedItem>> + Sync),
+    sink: &(dyn Fn(usize, LayerOutcome) -> Result<()> + Sync),
+    on_fail: &(dyn Fn() + Sync),
+) -> Result<()> {
+    let alps_cfg = alps::AlpsCfg::default();
+    let jobs = effective_jobs(spec.jobs);
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let fail = |e: anyhow::Error| {
+        let mut slot = failure.lock().unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+        failed.store(true, Ordering::Relaxed);
+        drop(slot);
+        on_fail();
+    };
+    let work = || {
+        while !failed.load(Ordering::Relaxed) {
+            let item = match feed() {
+                None => break,
+                Some(Err(e)) => {
+                    fail(e);
+                    break;
+                }
+                Some(Ok(item)) => item,
+            };
+            let done = run_task(&item.task, spec, oracle, &alps_cfg)
+                .and_then(|out| sink(item.index, out));
+            drop(item.guard); // release budget AFTER the sink hand-off
+            if let Err(e) = done {
+                fail(e);
+                break;
+            }
+        }
+    };
+    if jobs <= 1 {
+        work();
+    } else {
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(work);
+            }
+        });
+    }
+    match failure.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
 /// One layer job: pure function of the task (plus the shared read-only
 /// oracle/spec), so scheduling cannot change its result.
 fn run_task(
@@ -308,6 +443,18 @@ fn run_task(
             out
         }
     };
+    // Canonicalize masked slots to +0.0: `w.hadamard(mask)` leaves
+    // -0.0 wherever a NEGATIVE weight was pruned, and the NmCompressed
+    // write-back cannot represent a pruned zero's sign — canonical
+    // zeros keep dense and nm shard reloads (and therefore streamed vs
+    // in-memory model states) bit-identical. Values are untouched
+    // (-0.0 == 0.0 numerically); kept slots keep their exact bits.
+    let mut pruned = pruned;
+    for (wv, mv) in pruned.w.data.iter_mut().zip(&pruned.mask.data) {
+        if *mv == 0.0 {
+            *wv = 0.0;
+        }
+    }
     let kept = pruned.mask.data.iter().filter(|&&x| x != 0.0).count();
     let report = LayerReport {
         name: p.name.clone(),

@@ -82,7 +82,7 @@ pub fn prune_model(
             w,
             gram: gram.clone(),
             pattern: spec.pattern_for(name),
-            lambda_rel: 0.01,
+            lambda_rel: crate::pruning::DEFAULT_LAMBDA_REL,
         }));
     }
 
@@ -108,6 +108,16 @@ pub fn prune_model(
 /// Full pruning run: load weights, calibrate, prune, evaluate perplexity.
 /// Returns the typed `PruneReport` (which carries the pruned model state
 /// for downstream fine-tuning / zero-shot evaluation).
+///
+/// When the spec carries a `stream` configuration, the prune stage runs
+/// out-of-core instead: layer weights are prefetched from the artifact
+/// bundle (viewed as a sharded checkpoint) under the configured memory
+/// budget and pruned layers stream to write-back shards with a resume
+/// journal — see `tsenor::stream`. Calibration and perplexity still see
+/// the whole model (a forward pass is inherently whole-model at this
+/// repo's scale); the budget bounds the prune stage, which is where the
+/// in-memory path's O(model) task clones lived. Reports are
+/// bit-identical between the two paths (modulo timing-class fields).
 pub fn run(
     rt: &ModelRuntime,
     spec: &PruneSpec,
@@ -121,8 +131,21 @@ pub fn run(
     let engine_before = rt.engine.stats();
     let weights = rt.manifest.load_weights()?;
     let grams = calibrate(rt, &weights, spec.calib_batches)?;
-    let mut state = ModelState::new(weights);
-    let layers = prune_model(rt, &mut state, &grams, spec, oracle, metrics)?;
+
+    let (state, layers, stream_peak_bytes) = if spec.stream.is_some() {
+        // Streamed prune: drop the preloaded weights before the prune
+        // stage so peak usage there is (grams + budgeted pool), then
+        // reconstruct the pruned model from the write-back shards for
+        // evaluation.
+        drop(weights);
+        let (state, layers, peak) = prune_model_streamed(rt, &grams, spec, oracle, metrics)?;
+        (state, layers, peak)
+    } else {
+        let mut state = ModelState::new(weights);
+        let layers = prune_model(rt, &mut state, &grams, spec, oracle, metrics)?;
+        (state, layers, 0)
+    };
+
     let perplexity =
         crate::eval::perplexity::perplexity_suite(rt, &state.weights, spec.eval_batches)?;
     for (corpus, p) in &perplexity {
@@ -139,6 +162,67 @@ pub fn run(
         wall_secs: t0.elapsed().as_secs_f64(),
         engine_exec_calls: engine_stats.exec_calls,
         engine_exec_secs: engine_stats.exec_secs(),
+        stream_peak_bytes,
         state,
     })
+}
+
+/// Out-of-core prune stage: stream layer weights from the manifest's
+/// npy files through the budgeted prefetcher, write pruned layers to
+/// shards, then reload them (checksum-verified) over the original
+/// weights for evaluation. Metrics are recorded in manifest order with
+/// exactly the in-memory path's keys and values.
+fn prune_model_streamed(
+    rt: &ModelRuntime,
+    grams: &BTreeMap<String, Mat>,
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+    metrics: &mut Metrics,
+) -> Result<(ModelState, Vec<LayerReport>, u64)> {
+    let mut site_of: BTreeMap<String, String> = BTreeMap::new();
+    for site in &rt.manifest.gram_sites {
+        for w in &site.weights {
+            site_of.insert(w.clone(), site.name.clone());
+        }
+    }
+    let info_of: BTreeMap<&str, &crate::runtime::artifacts::WeightInfo> =
+        rt.manifest.weights.iter().map(|w| (w.name.as_str(), w)).collect();
+    let mut layers = Vec::new();
+    for name in rt.manifest.prunable_names() {
+        let info = info_of
+            .get(name.as_str())
+            .with_context(|| format!("manifest weight {name}"))?;
+        anyhow::ensure!(info.shape.len() == 2, "{name}: streamed prune needs 2-D weights");
+        layers.push(crate::stream::StreamLayer {
+            name: name.clone(),
+            rows: info.shape[0],
+            cols: info.shape[1],
+        });
+    }
+    let store = crate::stream::store::StoreReader::from_manifest(&rt.manifest);
+    let gram_for = |layer: &crate::stream::StreamLayer| -> Result<Mat> {
+        let site = site_of
+            .get(&layer.name)
+            .with_context(|| format!("no gram site for {}", layer.name))?;
+        Ok(grams
+            .get(site)
+            .with_context(|| format!("missing gram {site}"))?
+            .clone())
+    };
+    let run = crate::stream::run_prune_stream(&store, &layers, &gram_for, spec, oracle)?;
+
+    for (report, safeguard) in run.layers.iter().zip(&run.safeguards) {
+        if let Some(hits) = safeguard {
+            metrics.push("alps_safeguard_hits", *hits);
+        }
+        metrics.push("layer_recon_error", report.recon_error);
+    }
+    metrics.put("model_sparsity", run.model_sparsity);
+
+    // Reconstruct the pruned model for evaluation: original weights
+    // with every pruned layer overlaid from the write-back shards
+    // (masks included, verified against the journaled checksums).
+    let mut state = ModelState::new(rt.manifest.load_weights()?);
+    crate::stream::writeback::overlay_state(&run.out_dir, &mut state, &run.checksums)?;
+    Ok((state, run.layers, run.peak_bytes))
 }

@@ -23,6 +23,12 @@
 //! top of any backend, dispatching to a [`runtime::EnginePool`] of
 //! independent PJRT clients on the XLA path.
 //!
+//! Models larger than memory prune through the out-of-core [`stream`]
+//! subsystem: sharded checkpoints, a byte-budgeted prefetcher feeding
+//! the layer executor, streaming write-back (dense or `NmCompressed`
+//! shards) and an append-only resume journal — bit-identical stripped
+//! reports vs the in-memory path at any budget ≥ the largest layer.
+//!
 //! Python never runs at runtime; the `tsenor` binary is self-contained
 //! once `make artifacts` has produced the AOT bundle.
 
@@ -35,4 +41,5 @@ pub mod pruning;
 pub mod runtime;
 pub mod sparse;
 pub mod spec;
+pub mod stream;
 pub mod util;

@@ -9,6 +9,13 @@
 //!   eval                          dense-model evaluation baseline
 //!   finetune [opts]               prune (TSENOR+ALPS) then masked
 //!                                 fine-tuning of the sparse model
+//!   shard    --out DIR [opts]     write a sharded checkpoint (synthetic
+//!                                 layers, or --from-artifacts to split
+//!                                 the manifest weights)
+//!   prune-ckpt --checkpoint DIR   prune a standalone sharded checkpoint
+//!                                 (no artifact bundle needed; identity
+//!                                 Gram statistics) — in-memory, or
+//!                                 out-of-core with --stream
 //!
 //! Runs are configured by typed specs (`tsenor::spec`). Every spec field
 //! can come from a JSON file and/or the command line; CLI flags override
@@ -40,22 +47,40 @@
 //!   --report FILE     where `prune` writes the JSON PruneReport
 //!                     (default artifacts/reports/prune_report.json)
 //!   --json            also print the PruneReport JSON to stdout
+//!
+//! Streaming options (prune / prune-ckpt — see rust/README.md
+//! "Streaming & memory budgets"):
+//!   --stream            prune out-of-core: prefetch layers from the
+//!                       checkpoint under a byte budget, stream pruned
+//!                       layers to write-back shards + resume journal
+//!   --memory-budget B   peak resident streamed weight bytes
+//!                       (suffixes k/m/g; 0 = whole model, the default)
+//!   --io-threads N      prefetch reader threads (default 2)
+//!   --writeback MODE    dense | nm (NmCompressed values + u8 indices)
+//!   --stream-dir DIR    journal + write-back output directory
+//!   --resume            skip layers already journaled by an
+//!                       interrupted run (bit-identical final report)
+//!   --stop-after K      crash-injection hook: die after K layers
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::coordinator::executor::{self, LayerTask};
 use tsenor::coordinator::metrics::Metrics;
 use tsenor::coordinator::pipeline;
 use tsenor::data::workload;
 use tsenor::masks::solver::{self, Method};
 use tsenor::masks::{self, NmPattern};
-use tsenor::model::finetune;
-use tsenor::pruning::{CpuOracle, MaskDispatcher, MaskOracle, MaskService};
+use tsenor::model::{finetune, ModelState};
+use tsenor::pruning::{CpuOracle, LayerProblem, MaskDispatcher, MaskOracle, MaskService};
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::{Engine, EnginePool, Manifest};
+use tsenor::spec::report::PruneReport;
 use tsenor::spec::{FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure};
-use tsenor::util::tensor::partition_blocks;
+use tsenor::stream::store::StoreReader;
+use tsenor::stream::StreamLayer;
+use tsenor::util::tensor::{partition_blocks, Mat};
 
 struct Args {
     cmd: String,
@@ -144,6 +169,88 @@ fn apply_service_overrides(
     service.max_in_flight =
         args.usize("service-max-in-flight", service.max_in_flight)?;
     service.pool = args.usize("service-pool", service.pool)?;
+    Ok(())
+}
+
+/// Byte count with optional k/m/g suffix ("64k", "2m", "1g", "4096").
+fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = match t.strip_suffix(['k', 'm', 'g']) {
+        Some(d) => {
+            let mult = match t.as_bytes()[t.len() - 1] {
+                b'k' => 1u64 << 10,
+                b'm' => 1 << 20,
+                _ => 1 << 30,
+            };
+            (d, mult)
+        }
+        None => (t.as_str(), 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("'{s}' is not a byte count (use e.g. 65536, 64k, 2m, 1g)"))?;
+    n.checked_mul(mult)
+        .with_context(|| format!("'{s}' overflows a 64-bit byte count"))
+}
+
+/// Boolean flag that tolerates an explicit value: `--x`, `--x true`,
+/// `--x false`. The parser pairs `--x true` into an OPTION, so a bare
+/// `has()` check would silently drop the user's intent — fatal for
+/// `--resume`, where "silently off" deletes the journal being resumed.
+fn bool_flag(args: &Args, name: &str) -> Result<Option<bool>> {
+    if args.has(name) {
+        return Ok(Some(true));
+    }
+    match args.opts.get(name).map(String::as_str) {
+        None => Ok(None),
+        Some("true") => Ok(Some(true)),
+        Some("false") => Ok(Some(false)),
+        Some(other) => {
+            bail!("--{name} takes no value (or true|false), got '{other}'")
+        }
+    }
+}
+
+/// Overlay `--stream*` flags onto the spec. Streaming turns on when
+/// any stream flag appears (or the spec file already had a `stream`
+/// block); plain runs stay on the in-memory path.
+fn apply_stream_overrides(spec: &mut PruneSpec, args: &Args) -> Result<()> {
+    let stream_flag = bool_flag(args, "stream")?;
+    let resume_flag = bool_flag(args, "resume")?;
+    let wants = stream_flag == Some(true)
+        || resume_flag.is_some()
+        || args.opts.contains_key("memory-budget")
+        || args.opts.contains_key("io-threads")
+        || args.opts.contains_key("writeback")
+        || args.opts.contains_key("stream-dir")
+        || args.opts.contains_key("stop-after");
+    if stream_flag == Some(false) {
+        // Explicit opt-out beats a spec-file stream block.
+        spec.stream = None;
+        return Ok(());
+    }
+    if !wants && spec.stream.is_none() {
+        return Ok(());
+    }
+    let mut cfg = spec.stream.clone().unwrap_or_default();
+    if let Some(v) = args.opts.get("memory-budget") {
+        cfg.memory_budget = parse_bytes(v).context("--memory-budget")?;
+    }
+    cfg.io_threads = args.usize("io-threads", cfg.io_threads)?;
+    if let Some(v) = args.opts.get("writeback") {
+        cfg.writeback = tsenor::stream::writeback::WritebackMode::parse(v)?;
+    }
+    if let Some(resume) = resume_flag {
+        cfg.resume = resume;
+    }
+    if let Some(v) = args.opts.get("stream-dir") {
+        cfg.dir = v.clone();
+    }
+    if args.opts.contains_key("stop-after") {
+        cfg.fail_after = Some(args.usize("stop-after", 0)? as u64);
+    }
+    spec.stream = Some(cfg);
     Ok(())
 }
 
@@ -247,6 +354,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
         None => PruneSpec::new(Framework::Alps),
     };
     apply_prune_overrides(&mut spec, args)?;
+    apply_stream_overrides(&mut spec, args)?;
 
     // Engine pool: extra slots only pay off on the XLA path (each slot
     // is a full PJRT client); CPU runs keep one engine for the model
@@ -274,8 +382,8 @@ fn cmd_prune(args: &Args) -> Result<()> {
     };
     // --service: route oracle calls through the dynamic dispatcher, so
     // concurrent layer jobs coalesce into fuller bucket calls.
-    let dispatcher =
-        args.has("service").then(|| MaskDispatcher::new(backend, spec.service));
+    let dispatcher = (bool_flag(args, "service")? == Some(true))
+        .then(|| MaskDispatcher::new(backend, spec.service));
     let oracle: &dyn MaskOracle = match (&dispatcher, &xla_solver) {
         (Some(d), _) => d,
         (None, Some(x)) => x,
@@ -296,6 +404,17 @@ fn cmd_prune(args: &Args) -> Result<()> {
             spec.service.window_ms,
             spec.service.max_in_flight,
             pool.len()
+        );
+    }
+    if let Some(stream) = &spec.stream {
+        println!(
+            "  stream: budget={} bytes (0=whole model) io_threads={} writeback={} \
+             dir={}{}",
+            stream.memory_budget,
+            stream.io_threads,
+            stream.writeback.name(),
+            stream.dir,
+            if stream.resume { " (resume)" } else { "" }
         );
     }
     for ov in &spec.overrides {
@@ -416,6 +535,175 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Write a sharded checkpoint: synthetic layers by default (the CI
+/// smoke workload), or `--from-artifacts` to split the real manifest
+/// weights into capped shards.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let out = args
+        .opts
+        .get("out")
+        .context("shard: --out DIR is required")?;
+    let out = Path::new(out);
+    let shard_bytes = parse_bytes(&args.get("shard-bytes", "4m")).context("--shard-bytes")?;
+    let index = if args.has("from-artifacts") {
+        let manifest = Manifest::load(&args.artifacts())?;
+        let weights = manifest.load_weights()?;
+        // Manifest order, not BTreeMap order: the checkpoint must
+        // preserve the canonical layer order.
+        let ordered: Vec<(&str, &Mat)> = manifest
+            .weights
+            .iter()
+            .map(|w| (w.name.as_str(), &weights[&w.name]))
+            .collect();
+        tsenor::stream::store::write_checkpoint(out, ordered, shard_bytes)?
+    } else {
+        let k = args.usize("layers", 12)?;
+        let rows = args.usize("rows", 64)?;
+        let cols = args.usize("cols", 64)?;
+        let seed = args.usize("seed", 0)? as u64;
+        let weights: Vec<(String, Mat)> = (0..k)
+            .map(|i| {
+                let name = format!("layers.{i:02}.w");
+                (name, workload::structured_matrix(rows, cols, seed + i as u64))
+            })
+            .collect();
+        tsenor::stream::store::write_checkpoint(
+            out,
+            weights.iter().map(|(n, w)| (n.as_str(), w)),
+            shard_bytes,
+        )?
+    };
+    let tensors = index.order.len();
+    let bytes: usize = index.order.iter().map(|e| e.numel() * 4).sum();
+    println!(
+        "checkpoint: {tensors} tensors, {} shards, {bytes} weight bytes -> {}",
+        index.shards.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+/// Prune a standalone sharded checkpoint — no artifact bundle, no
+/// PJRT: Gram statistics are identity (data-free pruning), so every
+/// framework's full math still runs. In-memory by default; `--stream`
+/// switches to the out-of-core path (same report, byte-for-byte after
+/// `--report-stripped`).
+fn cmd_prune_ckpt(args: &Args) -> Result<()> {
+    let ckpt = args
+        .opts
+        .get("checkpoint")
+        .context("prune-ckpt: --checkpoint DIR is required")?;
+    let store = StoreReader::open(Path::new(ckpt))?;
+
+    let mut spec = match args.opts.get("spec") {
+        Some(path) => PruneSpec::load(Path::new(path))?,
+        None => PruneSpec::new(Framework::Alps),
+    };
+    apply_prune_overrides(&mut spec, args)?;
+    apply_stream_overrides(&mut spec, args)?;
+    let method = match args.opts.get("method") {
+        Some(m) => Method::parse(m)?,
+        None => Method::Tsenor,
+    };
+    let cpu_oracle = CpuOracle::new(method, spec.solve);
+    // --service works here exactly as on `prune`: oracle calls route
+    // through the dynamic dispatcher (the tight-budget alternative to
+    // static cross-layer groups the streaming docs point at).
+    let dispatcher = (bool_flag(args, "service")? == Some(true))
+        .then(|| MaskDispatcher::new(&cpu_oracle, spec.service));
+    let oracle: &dyn MaskOracle = match &dispatcher {
+        Some(d) => d,
+        None => &cpu_oracle,
+    };
+
+    let layers: Vec<StreamLayer> = store
+        .index
+        .order
+        .iter()
+        .map(|e| StreamLayer { name: e.name.clone(), rows: e.rows, cols: e.cols })
+        .collect();
+    println!(
+        "pruning checkpoint {} ({} layers): framework={} structure={} pattern={} \
+         oracle={} jobs={}{}",
+        ckpt,
+        layers.len(),
+        spec.framework.name(),
+        spec.structure.name(),
+        spec.pattern,
+        oracle.name(),
+        executor::effective_jobs(spec.jobs),
+        if spec.stream.is_some() { " [streamed]" } else { "" }
+    );
+
+    let t0 = std::time::Instant::now();
+    let stats_before = oracle.stats();
+    // Identity Gram: data-free pruning (no calibration corpus exists
+    // for a bare checkpoint). Deterministic, so the streamed and
+    // in-memory paths stay bit-comparable.
+    let gram_for =
+        |l: &StreamLayer| -> Result<Mat> { Ok(Mat::eye(l.rows)) };
+    let (reports, model_sparsity, peak) = if spec.stream.is_some() {
+        let run =
+            tsenor::stream::run_prune_stream(&store, &layers, &gram_for, &spec, oracle)?;
+        if run.resumed_layers > 0 {
+            println!("  resumed: {} layers replayed from the journal", run.resumed_layers);
+        }
+        println!("  write-back -> {}", run.out_dir.display());
+        (run.layers, run.model_sparsity, run.peak_bytes)
+    } else {
+        let weights = store.load_all()?;
+        let mut tasks = Vec::with_capacity(layers.len());
+        for l in &layers {
+            tasks.push(LayerTask::new(LayerProblem {
+                name: l.name.clone(),
+                w: weights[&l.name].clone(),
+                gram: gram_for(l)?,
+                pattern: spec.pattern_for(&l.name),
+                lambda_rel: tsenor::stream::LAMBDA_REL,
+            }));
+        }
+        let outcomes = executor::run_layer_tasks(tasks, &spec, oracle)?;
+        let mut state = ModelState::new(BTreeMap::new());
+        let mut reports = Vec::with_capacity(outcomes.len());
+        for out in outcomes {
+            state.set_pruned(&out.report.name, out.w, out.mask);
+            reports.push(out.report);
+        }
+        let sparsity = state.sparsity();
+        (reports, sparsity, 0)
+    };
+
+    let report = PruneReport {
+        spec,
+        oracle: oracle.name().to_string(),
+        oracle_stats: oracle.stats().since(&stats_before),
+        layers: reports,
+        model_sparsity,
+        perplexity: BTreeMap::new(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        engine_exec_calls: 0,
+        engine_exec_secs: 0.0,
+        stream_peak_bytes: peak,
+        state: ModelState::default(),
+    };
+    print!("{}", report.render());
+    if let Some(path) = args.opts.get("report") {
+        report.write(Path::new(path))?;
+        println!("  report -> {path}");
+    }
+    if let Some(path) = args.opts.get("report-stripped") {
+        if let Some(parent) = Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, report.to_json_stripped().to_string_pretty())?;
+        println!("  stripped report -> {path}");
+    }
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.cmd.as_str() {
@@ -424,6 +712,10 @@ fn main() -> Result<()> {
         "prune" => cmd_prune(&args),
         "eval" => cmd_eval(&args),
         "finetune" => cmd_finetune(&args),
-        other => bail!("unknown command '{other}' (info|solve|prune|eval|finetune)"),
+        "shard" => cmd_shard(&args),
+        "prune-ckpt" => cmd_prune_ckpt(&args),
+        other => bail!(
+            "unknown command '{other}' (info|solve|prune|eval|finetune|shard|prune-ckpt)"
+        ),
     }
 }

@@ -24,6 +24,12 @@ pub use service::{MaskDispatcher, ServiceCfg, ServiceStats};
 use crate::masks::NmPattern;
 use crate::util::tensor::Mat;
 
+/// Default ridge term (relative to the mean Gram diagonal) used by the
+/// whole-model pipelines. The in-memory and streaming paths MUST share
+/// this value: it enters every Hessian, so diverging copies would
+/// silently break their bit-identical-report guarantee.
+pub const DEFAULT_LAMBDA_REL: f32 = 0.01;
+
 /// Sparsity regime: transposable (with oracle), standard contraction-axis
 /// N:M, or unstructured top-k.
 #[derive(Clone, Copy)]

@@ -69,11 +69,7 @@ impl ShardedCache {
 
     fn shard(&self, key: &str) -> &RwLock<HashMap<String, Arc<Executable>>> {
         // FNV-1a; stable across runs so shard assignment is deterministic.
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for b in key.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
+        let h = crate::util::fnv1a(key.as_bytes());
         &self.shards[(h % CACHE_SHARDS as u64) as usize]
     }
 }

@@ -49,6 +49,38 @@ fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     matmul_acc(a, b, c);
 }
 
+/// c = a @ b with NO zero-skip: every multiply-add is issued whatever
+/// the operands hold. `matmul_acc`'s `aik == 0.0` skip (on the LEFT
+/// operand) is right for the pruning stack — Gram/Hessian products
+/// where masked weights sit on the left — but a dense *baseline* timed
+/// against sparse kernels must be guaranteed to pay full dense cost
+/// for ANY operand pattern, or a future call site with a sparse left
+/// operand silently skews the comparison. Benches time this; values
+/// match `matmul` (same loop order; `c + 0.0` only ever changes a
+/// zero's sign bit).
+pub fn matmul_dense_baseline(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for kk in (0..a.cols).step_by(KC) {
+        let kend = (kk + KC).min(a.cols);
+        for ii in (0..a.rows).step_by(MC) {
+            let iend = (ii + MC).min(a.rows);
+            for i in ii..iend {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for k in kk..kend {
+                    let aik = arow[k];
+                    let brow = b.row(k);
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
 /// c = a^T @ a (Gram matrix), exploiting symmetry.
 pub fn gram(a: &Mat) -> Mat {
     let n = a.cols;
@@ -119,6 +151,22 @@ mod tests {
             for (g, w) in got.data.iter().zip(&want.data) {
                 assert!((g - w).abs() < 1e-3, "{g} vs {w}");
             }
+        }
+    }
+
+    #[test]
+    fn dense_baseline_matches_matmul_on_sparse_input() {
+        let mut rng = Rng::new(7);
+        // Half the entries zeroed: the skip path and the baseline must
+        // still agree on values.
+        let a = Mat::from_fn(24, 32, |i, j| {
+            if (i + j) % 2 == 0 { 0.0 } else { rng.normal() }
+        });
+        let b = Mat::from_fn(32, 16, |_, _| rng.normal());
+        let got = matmul_dense_baseline(&a, &b);
+        let want = matmul(&a, &b);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
         }
     }
 

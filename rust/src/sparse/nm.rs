@@ -84,6 +84,31 @@ impl NmCompressed {
         Ok(NmCompressed { rows: w.rows, cols: w.cols, n, m, values, indices })
     }
 
+    /// Reconstruct the exact binary mask from the index bytes. Errors
+    /// on duplicate in-group indices (a corrupt record would silently
+    /// drop a kept value in `decompress`), naming the flat position.
+    pub fn mask(&self) -> Result<Mat> {
+        let mut mask = Mat::zeros(self.rows, self.cols);
+        let groups = self.rows / self.m;
+        for g in 0..groups {
+            for s in 0..self.n {
+                for j in 0..self.cols {
+                    let at = (g * self.n + s) * self.cols + j;
+                    let r = self.indices[at] as usize;
+                    ensure!(r < self.m, "nm record: index {r} >= M={} at position {at}", self.m);
+                    let cell = mask.at_mut(g * self.m + r, j);
+                    ensure!(
+                        *cell == 0.0,
+                        "nm record: duplicate index {r} in column {j}, row group {g} \
+                         (position {at})"
+                    );
+                    *cell = 1.0;
+                }
+            }
+        }
+        Ok(mask)
+    }
+
     /// Decompress back to dense (for testing).
     pub fn decompress(&self) -> Mat {
         let mut w = Mat::zeros(self.rows, self.cols);
@@ -145,10 +170,14 @@ pub fn spmm_transposed_fast(g: &Mat, wt: &NmCompressed) -> Mat {
 /// cannot serve the transposed product, so the realistic fallback is
 /// decompress-to-dense + dense GEMM — i.e. the backward pass gets NO
 /// sparsity speedup (plus the decompression tax). This is exactly the
-/// asymmetry Fig. 4 (lower) quantifies.
+/// asymmetry Fig. 4 (lower) quantifies. The GEMM is the guaranteed
+/// dense-cost kernel: the decompressed matrix is (M-N)/M zeros, and
+/// while `matmul_acc`'s skip only fires on the LEFT operand (the dense
+/// gradient here), the fallback's cost model must not depend on which
+/// side the zeros happen to land.
 pub fn spmm_transposed_slow(g: &Mat, w: &NmCompressed) -> Mat {
     let dense = w.decompress();
-    crate::sparse::gemm::matmul(g, &dense.transpose())
+    crate::sparse::gemm::matmul_dense_baseline(g, &dense.transpose())
 }
 
 #[cfg(test)]

@@ -24,6 +24,7 @@ pub mod report;
 use crate::masks::solver::{Method, SolveCfg};
 use crate::masks::NmPattern;
 use crate::pruning::ServiceCfg;
+use crate::stream::writeback::WritebackMode;
 use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -212,6 +213,114 @@ pub fn service_cfg_from_json(j: &Json, mut base: ServiceCfg) -> Result<ServiceCf
     Ok(base)
 }
 
+/// Out-of-core streaming configuration (the `"stream"` spec object).
+/// Present on a `PruneSpec` = the pipeline prunes layer-by-layer from
+/// the checkpoint under a byte budget instead of preloading the model
+/// (see `tsenor::stream`). Pure scheduling: any setting produces the
+/// same masks/weights/report as the in-memory path (modulo
+/// timing-class fields), so `to_json_stripped()` neutralizes it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamCfg {
+    /// Peak resident weight bytes the prefetch pool may hold
+    /// (read-ahead + in-flight jobs). `0` = whole model (no bound —
+    /// the in-memory behavior, just streamed). Must cover the largest
+    /// single layer; validated up front.
+    pub memory_budget: u64,
+    /// Background I/O reader threads (min 1).
+    pub io_threads: usize,
+    /// On-disk form of streamed-out pruned layers.
+    pub writeback: WritebackMode,
+    /// Resume from this run's journal, skipping completed layers.
+    pub resume: bool,
+    /// Directory for the journal + write-back shards.
+    pub dir: String,
+    /// Crash-injection test hook (`--stop-after`): abort after this
+    /// many journaled layers. Runtime-only — never serialized, like
+    /// `SolveCfg::tau_override`.
+    pub fail_after: Option<u64>,
+}
+
+impl Default for StreamCfg {
+    fn default() -> Self {
+        StreamCfg {
+            memory_budget: 0,
+            io_threads: 2,
+            writeback: WritebackMode::Dense,
+            resume: false,
+            dir: "artifacts/stream".into(),
+            fail_after: None,
+        }
+    }
+}
+
+impl StreamCfg {
+    pub fn memory_budget(mut self, bytes: u64) -> Self {
+        self.memory_budget = bytes;
+        self
+    }
+
+    pub fn io_threads(mut self, k: usize) -> Self {
+        self.io_threads = k;
+        self
+    }
+
+    pub fn writeback(mut self, mode: WritebackMode) -> Self {
+        self.writeback = mode;
+        self
+    }
+
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
+        self
+    }
+
+    pub fn dir(mut self, dir: &str) -> Self {
+        self.dir = dir.to_string();
+        self
+    }
+}
+
+/// Serialize the streaming knobs (the `"stream"` spec object).
+pub fn stream_cfg_to_json(cfg: &StreamCfg) -> Json {
+    json::obj(vec![
+        ("memory_budget", Json::Num(cfg.memory_budget as f64)),
+        ("io_threads", Json::Num(cfg.io_threads as f64)),
+        ("writeback", Json::Str(cfg.writeback.name().into())),
+        ("resume", Json::Bool(cfg.resume)),
+        ("dir", Json::Str(cfg.dir.clone())),
+    ])
+}
+
+/// Overlay JSON-provided streaming knobs onto `base` (missing keys
+/// keep defaults; integers are strict, same stance as every count
+/// field).
+pub fn stream_cfg_from_json(j: &Json, mut base: StreamCfg) -> Result<StreamCfg> {
+    if let Some(x) = json_usize(j, "memory_budget")? {
+        base.memory_budget = x as u64;
+    }
+    if let Some(x) = json_usize(j, "io_threads")? {
+        base.io_threads = x;
+    }
+    if let Some(s) = j.get("writeback").and_then(Json::as_str) {
+        base.writeback = WritebackMode::parse(s)?;
+    }
+    // Strict bool: a typo'd "resume" ("true", 1, ...) must never
+    // silently become false — the non-resume branch DELETES the
+    // interrupted run's journal and shards.
+    match j.get("resume") {
+        None => {}
+        Some(Json::Bool(b)) => base.resume = *b,
+        Some(other) => anyhow::bail!(
+            "spec: stream 'resume' must be true or false, got {}",
+            other.to_string_pretty()
+        ),
+    }
+    if let Some(s) = j.get("dir").and_then(Json::as_str) {
+        base.dir = s.to_string();
+    }
+    Ok(base)
+}
+
 fn overrides_to_json(overrides: &[LayerOverride]) -> Json {
     Json::Arr(
         overrides
@@ -265,6 +374,12 @@ pub struct PruneSpec {
     /// engine-pool size). Pure scheduling: any setting produces
     /// bit-identical masks — see `pruning::service`.
     pub service: ServiceCfg,
+    /// Out-of-core streaming: `Some` = prune layer-by-layer from the
+    /// checkpoint under `StreamCfg`'s byte budget, streaming pruned
+    /// layers to write-back shards with a resume journal; `None`
+    /// (default) = the in-memory path. Bit-identical results either
+    /// way — see `tsenor::stream`.
+    pub stream: Option<StreamCfg>,
 }
 
 impl PruneSpec {
@@ -280,6 +395,7 @@ impl PruneSpec {
             seed: 0,
             jobs: 1,
             service: ServiceCfg::default(),
+            stream: None,
         }
     }
 
@@ -332,6 +448,12 @@ impl PruneSpec {
         self
     }
 
+    /// Enable out-of-core streaming with the given configuration.
+    pub fn stream(mut self, cfg: StreamCfg) -> Self {
+        self.stream = Some(cfg);
+        self
+    }
+
     /// Effective pattern for a layer: the last matching override, else
     /// the spec default.
     pub fn pattern_for(&self, layer: &str) -> NmPattern {
@@ -365,10 +487,31 @@ impl PruneSpec {
             ("solve", solve_cfg_to_json(&self.solve)),
             ("service", service_cfg_to_json(&self.service)),
         ];
+        if let Some(stream) = &self.stream {
+            fields.push(("stream", stream_cfg_to_json(stream)));
+        }
         if !self.overrides.is_empty() {
             fields.push(("overrides", overrides_to_json(&self.overrides)));
         }
         json::obj(fields)
+    }
+
+    /// Spec JSON with every pure-scheduling knob (`jobs`, `service`,
+    /// `stream`, and `solve.threads` — block-level chunking is proven
+    /// bit-invisible) removed: the canonical form embedded in stripped
+    /// reports and fingerprinted by the streaming resume journal —
+    /// two runs that differ only in scheduling compare equal here.
+    pub fn scheduling_free_json(&self) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.remove("jobs");
+            fields.remove("service");
+            fields.remove("stream");
+            if let Some(Json::Obj(solve)) = fields.get_mut("solve") {
+                solve.remove("threads");
+            }
+        }
+        j
     }
 
     /// Build from JSON. Every field is optional: missing keys take the
@@ -407,6 +550,9 @@ impl PruneSpec {
         }
         if let Some(sj) = j.get("service") {
             spec.service = service_cfg_from_json(sj, spec.service)?;
+        }
+        if let Some(sj) = j.get("stream") {
+            spec.stream = Some(stream_cfg_from_json(sj, StreamCfg::default())?);
         }
         if let Some(ov) = j.get("overrides") {
             spec.overrides = overrides_from_json(ov)?;
@@ -735,6 +881,70 @@ mod tests {
         // pool = 0 (auto) resolves to at least one slot.
         assert!(ServiceCfg::default().pool(0).pool_slots() >= 1);
         assert_eq!(ServiceCfg::default().pool(6).pool_slots(), 6);
+    }
+
+    #[test]
+    fn stream_knobs_default_builder_and_json() {
+        // Default: no streaming (in-memory path).
+        assert!(PruneSpec::new(Framework::Alps).stream.is_none());
+        // Builder + JSON round-trip.
+        let cfg = StreamCfg::default()
+            .memory_budget(64 << 20)
+            .io_threads(3)
+            .writeback(WritebackMode::Compressed)
+            .resume(true)
+            .dir("/tmp/stream");
+        let spec = PruneSpec::new(Framework::Wanda).stream(cfg.clone());
+        let back = PruneSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.stream, Some(cfg));
+        // Partial stream objects overlay onto defaults; integers strict.
+        let spec = PruneSpec::parse(r#"{"stream": {"memory_budget": 1024}}"#).unwrap();
+        let stream = spec.stream.unwrap();
+        assert_eq!(stream.memory_budget, 1024);
+        assert_eq!(stream.io_threads, StreamCfg::default().io_threads);
+        assert_eq!(stream.writeback, WritebackMode::Dense);
+        assert!(!stream.resume);
+        assert!(PruneSpec::parse(r#"{"stream": {"memory_budget": -1}}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"stream": {"io_threads": 1.5}}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"stream": {"writeback": "tar"}}"#).is_err());
+        // resume is strict too: silently dropping it would make the
+        // run delete the very journal the user meant to resume from.
+        assert!(PruneSpec::parse(r#"{"stream": {"resume": "true"}}"#).is_err());
+        assert!(PruneSpec::parse(r#"{"stream": {"resume": 1}}"#).is_err());
+        let spec = PruneSpec::parse(r#"{"stream": {"resume": true}}"#).unwrap();
+        assert!(spec.stream.unwrap().resume);
+        // The fail-after crash hook is runtime-only: never serialized.
+        let cfg = StreamCfg { fail_after: Some(3), ..Default::default() };
+        let spec = PruneSpec::new(Framework::Alps).stream(cfg);
+        let back = PruneSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.stream.unwrap().fail_after, None);
+    }
+
+    #[test]
+    fn scheduling_free_json_drops_jobs_service_stream() {
+        let spec = PruneSpec::new(Framework::Wanda)
+            .jobs(8)
+            .stream(StreamCfg::default().memory_budget(1 << 20));
+        let full = spec.to_json();
+        assert!(full.get("jobs").is_some());
+        assert!(full.get("service").is_some());
+        assert!(full.get("stream").is_some());
+        let free = spec.scheduling_free_json();
+        assert!(free.get("jobs").is_none());
+        assert!(free.get("service").is_none());
+        assert!(free.get("stream").is_none());
+        assert!(
+            free.get("solve").unwrap().get("threads").is_none(),
+            "solve.threads is block-level chunking: pure scheduling"
+        );
+        // Two specs differing only in scheduling knobs agree —
+        // including the solver thread count.
+        let mut other = PruneSpec::new(Framework::Wanda).jobs(1);
+        other.solve.threads = 16;
+        assert_eq!(
+            free.to_string_pretty(),
+            other.scheduling_free_json().to_string_pretty()
+        );
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct PruneReport {
     pub engine_exec_calls: u64,
     /// Wall time inside PJRT `execute` during this run, seconds.
     pub engine_exec_secs: f64,
+    /// Peak resident weight bytes in the streaming prefetch pool
+    /// (0 for in-memory runs). Timing-class: omitted by
+    /// `to_json_stripped()`.
+    pub stream_peak_bytes: u64,
     /// Pruned model (weights + masks). Carried for downstream use
     /// (fine-tuning, zero-shot eval); not serialized.
     pub state: ModelState,
@@ -71,25 +75,28 @@ impl PruneReport {
     }
 
     /// JSON with every scheduling artifact omitted — timing fields,
-    /// engine counters, AND the embedded spec's `jobs`/`service` knobs —
-    /// so two runs that differ only in scheduling compare byte-equal.
-    /// The differential harnesses assert this is identical for
-    /// `jobs = 1` vs `jobs = N` and across service coalescing settings.
+    /// engine counters, oracle call statistics, AND the embedded spec's
+    /// `jobs`/`service`/`stream` knobs — so two runs that differ only
+    /// in scheduling compare byte-equal. The differential harnesses
+    /// assert this is identical for `jobs = 1` vs `jobs = N`, across
+    /// service coalescing settings, for streamed vs in-memory runs at
+    /// any memory budget, and for interrupted-then-resumed vs
+    /// uninterrupted streamed runs (a resume re-issues only the
+    /// incomplete layers' oracle calls, which is why `oracle_stats` —
+    /// batching/telemetry, not mathematics — is stripped too).
     pub fn to_json_stripped(&self) -> Json {
         self.json_impl(false)
     }
 
     fn json_impl(&self, with_timing: bool) -> Json {
-        let mut spec_json = self.spec.to_json();
-        if !with_timing {
-            // `jobs` and the service knobs are pure scheduling:
-            // neutralize them like the timing fields so the stripped
-            // report ignores worker count and coalescing settings.
-            if let Json::Obj(fields) = &mut spec_json {
-                fields.remove("jobs");
-                fields.remove("service");
-            }
-        }
+        let spec_json = if with_timing {
+            self.spec.to_json()
+        } else {
+            // Pure-scheduling knobs are neutralized like the timing
+            // fields so the stripped report ignores worker count,
+            // coalescing settings and streaming configuration.
+            self.spec.scheduling_free_json()
+        };
         let layers = Json::Arr(
             self.layers
                 .iter()
@@ -110,27 +117,37 @@ impl PruneReport {
         let ppl = Json::Obj(
             self.perplexity.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect(),
         );
-        let stats = json::obj(vec![
-            ("calls", Json::Num(self.oracle_stats.calls as f64)),
-            ("blocks_solved", Json::Num(self.oracle_stats.blocks_solved as f64)),
-            ("padded_blocks", Json::Num(self.oracle_stats.padded_blocks as f64)),
-        ]);
         let mut fields = vec![
             ("spec", spec_json),
             ("oracle", Json::Str(self.oracle.clone())),
-            ("oracle_stats", stats),
             ("layers", layers),
             ("model_sparsity", Json::Num(self.model_sparsity)),
             ("mean_recon_error", Json::Num(self.mean_recon_error())),
             ("perplexity", ppl),
         ];
         if with_timing {
+            // Oracle statistics are batching/telemetry: a resumed
+            // streamed run legitimately issues fewer calls than an
+            // uninterrupted one, so they live with the timing-class
+            // fields rather than in the comparable core.
+            let stats = json::obj(vec![
+                ("calls", Json::Num(self.oracle_stats.calls as f64)),
+                ("blocks_solved", Json::Num(self.oracle_stats.blocks_solved as f64)),
+                ("padded_blocks", Json::Num(self.oracle_stats.padded_blocks as f64)),
+            ]);
+            fields.push(("oracle_stats", stats));
             fields.push(("wall_secs", Json::Num(self.wall_secs)));
             fields.push((
                 "engine_exec_calls",
                 Json::Num(self.engine_exec_calls as f64),
             ));
             fields.push(("engine_exec_secs", Json::Num(self.engine_exec_secs)));
+            if self.stream_peak_bytes > 0 {
+                fields.push((
+                    "stream_peak_bytes",
+                    Json::Num(self.stream_peak_bytes as f64),
+                ));
+            }
         }
         json::obj(fields)
     }
@@ -159,6 +176,13 @@ impl PruneReport {
                 s,
                 "  engine: {} PJRT execs, {:.2}s in execute",
                 self.engine_exec_calls, self.engine_exec_secs
+            );
+        }
+        if self.stream_peak_bytes > 0 {
+            let _ = writeln!(
+                s,
+                "  stream: peak resident weight bytes {}",
+                self.stream_peak_bytes
             );
         }
         if self.spec.is_mixed() {
@@ -218,6 +242,7 @@ mod tests {
             wall_secs: 1.5,
             engine_exec_calls: 7,
             engine_exec_secs: 0.5,
+            stream_peak_bytes: 0,
             state: ModelState::default(),
         }
     }
@@ -259,21 +284,32 @@ mod tests {
         for l in stripped.get("layers").unwrap().as_arr().unwrap() {
             assert!(l.get("wall_secs").is_none());
         }
-        // The embedded spec's jobs + service knobs (pure scheduling) are
-        // neutralized too; the full JSON keeps them.
+        // Oracle statistics are telemetry (a resumed streamed run
+        // issues fewer calls): full JSON only.
+        assert!(stripped.get("oracle_stats").is_none());
+        assert!(full.get("oracle_stats").is_some());
+        // The embedded spec's jobs + service + stream knobs (pure
+        // scheduling) are neutralized too; the full JSON keeps them.
         assert!(stripped.get("spec").unwrap().get("jobs").is_none());
         assert!(stripped.get("spec").unwrap().get("service").is_none());
+        assert!(stripped.get("spec").unwrap().get("stream").is_none());
         assert!(full.get("spec").unwrap().get("jobs").is_some());
         assert!(full.get("spec").unwrap().get("service").is_some());
-        // Two runs differing only in timing + worker count strip to
-        // identical bytes.
+        // Two runs differing only in timing + worker count + streaming
+        // config strip to identical bytes.
         let mut r2 = r.clone();
         r2.wall_secs = 99.0;
         r2.layers[0].wall_secs = 42.0;
         r2.spec.jobs = 8;
         r2.engine_exec_calls = 999;
         r2.engine_exec_secs = 123.0;
+        r2.stream_peak_bytes = 1 << 20;
+        r2.oracle_stats = OracleStats { calls: 1, blocks_solved: 2, padded_blocks: 3 };
         r2.spec.service = crate::pruning::ServiceCfg::default().window_ms(9).pool(4);
+        r2.spec.stream =
+            Some(crate::spec::StreamCfg::default().memory_budget(1 << 20).resume(true));
+        assert!(r2.to_json().get("spec").unwrap().get("stream").is_some());
+        assert!(r2.to_json().get("stream_peak_bytes").is_some());
         assert_eq!(
             r.to_json_stripped().to_string_pretty(),
             r2.to_json_stripped().to_string_pretty()

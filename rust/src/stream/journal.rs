@@ -1,0 +1,476 @@
+//! Resume journal: an append-only, line-oriented completion log the
+//! streaming pipeline writes one entry to *after* each layer's pruned
+//! data is durably in the write-back shards. An interrupted run
+//! restarts with `--resume`, replays the journal, skips completed
+//! layers, and reproduces a bit-identical final report:
+//!
+//! * `recon_error` / `safeguard` round-trip exactly (Rust prints f64
+//!   with shortest-round-trip formatting, and the JSON parser is
+//!   correctly rounded);
+//! * `kept`/`numel` are integers, so per-layer and model sparsity are
+//!   recomputed from the same exact ratios;
+//! * the mask checksum (FNV-1a 64 over mask f32 bits) lets the reload
+//!   path verify that the shard bytes still decode to the very mask
+//!   that was journaled.
+//!
+//! The header line carries a fingerprint of the *scheduling-free* spec
+//! (`PruneSpec::scheduling_free_json`), so a resume under a different
+//! framework / pattern / solver is refused loudly while resuming with
+//! a different `jobs` / budget / service setting — pure scheduling —
+//! is allowed.
+
+use crate::masks::NmPattern;
+use crate::stream::writeback::NamedLoc;
+use crate::util::json::{self, Json};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+pub const JOURNAL_FORMAT: &str = "tsenor-stream-journal-v1";
+
+/// FNV-1a 64 over arbitrary bytes (checksums + spec fingerprints) —
+/// the shared `util` implementation, re-exported for journal callers.
+pub use crate::util::fnv1a;
+
+/// FNV-1a 64 over a mask's f32 bit patterns (row-major), streamed —
+/// no layer-sized byte buffer is materialized (this runs inside the
+/// serialized sink, once per completing layer).
+pub fn mask_checksum(mask: &crate::util::tensor::Mat) -> u64 {
+    let mut h = crate::util::Fnv1a::new();
+    for x in &mask.data {
+        h.update(&x.to_bits().to_le_bytes());
+    }
+    h.finish()
+}
+
+/// One completed layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalEntry {
+    pub name: String,
+    pub pattern: NmPattern,
+    pub recon_error: f64,
+    pub kept: u64,
+    pub numel: u64,
+    /// ALPS safeguard hits (present only for ALPS runs).
+    pub safeguard: Option<f64>,
+    pub mask_fnv: u64,
+    /// Where the pruned data landed in the write-back shards (by file
+    /// name — self-contained across run attempts).
+    pub loc: NamedLoc,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Serialize an f64 that must survive the journal bit-exactly even
+/// when non-finite: `Json::Num` would write a literal `NaN`/`inf`,
+/// which is invalid JSON — the resume replay would stop at that line
+/// and truncate away every later valid entry. Finite values stay plain
+/// numbers (shortest-round-trip print); non-finite ones become a
+/// `"bits:0x…"` string.
+fn f64_to_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Str(format!("bits:{:#018x}", x.to_bits()))
+    }
+}
+
+fn f64_from_json(j: &Json, key: &str) -> Result<f64> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => {
+            let hex = s
+                .strip_prefix("bits:0x")
+                .with_context(|| format!("journal field '{key}': '{s}'"))?;
+            Ok(f64::from_bits(u64::from_str_radix(hex, 16)?))
+        }
+        _ => bail!("journal field '{key}' must be a number"),
+    }
+}
+
+impl JournalEntry {
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.kept as f64 / (self.numel as f64).max(1.0)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("layer", Json::Str(self.name.clone())),
+            ("pattern", Json::Str(self.pattern.to_string())),
+            ("recon_error", f64_to_json(self.recon_error)),
+            ("kept", Json::Num(self.kept as f64)),
+            ("numel", Json::Num(self.numel as f64)),
+            ("mask_fnv", Json::Str(format!("{:#018x}", self.mask_fnv))),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+        ];
+        if let Some(h) = self.safeguard {
+            fields.push(("safeguard", f64_to_json(h)));
+        }
+        let wb = match &self.loc {
+            NamedLoc::Dense { file, offset, mask_file, mask_offset } => json::obj(vec![
+                ("kind", Json::Str("dense".into())),
+                ("file", Json::Str(file.clone())),
+                ("offset", Json::Num(*offset as f64)),
+                ("mask_file", Json::Str(mask_file.clone())),
+                ("mask_offset", Json::Num(*mask_offset as f64)),
+            ]),
+            NamedLoc::Compressed { n, m, val_file, val_offset, idx_file, idx_offset } => {
+                json::obj(vec![
+                    ("kind", Json::Str("nm".into())),
+                    ("n", Json::Num(*n as f64)),
+                    ("m", Json::Num(*m as f64)),
+                    ("val_file", Json::Str(val_file.clone())),
+                    ("val_offset", Json::Num(*val_offset as f64)),
+                    ("idx_file", Json::Str(idx_file.clone())),
+                    ("idx_offset", Json::Num(*idx_offset as f64)),
+                ])
+            }
+        };
+        fields.push(("wb", wb));
+        json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<JournalEntry> {
+        let req_usize = |e: &Json, key: &str| -> Result<usize> {
+            e.req(key)?.as_usize().with_context(|| format!("journal field '{key}'"))
+        };
+        let wb = j.req("wb")?;
+        let req_str = |e: &Json, key: &str| -> Result<String> {
+            Ok(e.req(key)?
+                .as_str()
+                .with_context(|| format!("journal field '{key}'"))?
+                .to_string())
+        };
+        let loc = match wb.req("kind")?.as_str().context("wb kind")? {
+            "dense" => NamedLoc::Dense {
+                file: req_str(wb, "file")?,
+                offset: req_usize(wb, "offset")?,
+                mask_file: req_str(wb, "mask_file")?,
+                mask_offset: req_usize(wb, "mask_offset")?,
+            },
+            "nm" => NamedLoc::Compressed {
+                n: req_usize(wb, "n")?,
+                m: req_usize(wb, "m")?,
+                val_file: req_str(wb, "val_file")?,
+                val_offset: req_usize(wb, "val_offset")?,
+                idx_file: req_str(wb, "idx_file")?,
+                idx_offset: req_usize(wb, "idx_offset")?,
+            },
+            other => bail!("journal wb kind '{other}'"),
+        };
+        let fnv_str = j.req("mask_fnv")?.as_str().context("mask_fnv")?;
+        let mask_fnv = u64::from_str_radix(fnv_str.trim_start_matches("0x"), 16)
+            .with_context(|| format!("journal mask_fnv '{fnv_str}'"))?;
+        Ok(JournalEntry {
+            name: j.req("layer")?.as_str().context("layer")?.to_string(),
+            pattern: NmPattern::parse(j.req("pattern")?.as_str().context("pattern")?)?,
+            recon_error: f64_from_json(j.req("recon_error")?, "recon_error")?,
+            kept: req_usize(j, "kept")? as u64,
+            numel: req_usize(j, "numel")? as u64,
+            safeguard: match j.get("safeguard") {
+                None => None,
+                Some(v) => Some(f64_from_json(v, "safeguard")?),
+            },
+            mask_fnv,
+            loc,
+            rows: req_usize(j, "rows")?,
+            cols: req_usize(j, "cols")?,
+        })
+    }
+}
+
+/// The append side. Entries become durable (shard flush happens before
+/// `append` is called; the journal line is flushed before `append`
+/// returns), so after a crash the journal names exactly the layers
+/// whose pruned bytes are readable.
+pub struct Journal {
+    path: PathBuf,
+    file: std::fs::File,
+    appended: u64,
+    /// Crash-injection test hook: error out (as an abrupt death would)
+    /// after this many successful appends.
+    fail_after: Option<u64>,
+}
+
+/// Error marker for the `fail_after` hook; the CLI maps it to a
+/// non-zero exit, tests match on it.
+pub const INTERRUPTED: &str = "stream interrupted by fail-after hook";
+
+impl Journal {
+    /// Start a fresh journal (truncating any previous one).
+    pub fn create(path: &Path, fingerprint: u64, writeback: &str) -> Result<Journal> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("create journal {}", path.display()))?;
+        let header = json::obj(vec![
+            ("format", Json::Str(JOURNAL_FORMAT.into())),
+            ("spec_fp", Json::Str(format!("{fingerprint:#018x}"))),
+            ("writeback", Json::Str(writeback.into())),
+        ]);
+        writeln!(file, "{}", compact(&header))?;
+        file.flush()?;
+        Ok(Journal { path: path.to_path_buf(), file, appended: 0, fail_after: None })
+    }
+
+    /// Reopen an interrupted journal for appending; returns the entries
+    /// of every completed layer (last write wins on duplicates). The
+    /// header must match this run's spec fingerprint and write-back
+    /// mode. A truncated trailing line (torn final write) is discarded.
+    pub fn resume(
+        path: &Path,
+        fingerprint: u64,
+        writeback: &str,
+    ) -> Result<(Journal, BTreeMap<String, JournalEntry>)> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("--resume: journal {} not readable (no interrupted run here?)", path.display())
+        })?;
+        let mut lines = text.lines();
+        let header_line = lines.next().context("journal is empty")?;
+        let header = json::parse(header_line).context("journal header")?;
+        let format = header.req("format")?.as_str().context("format")?;
+        ensure!(format == JOURNAL_FORMAT, "journal format '{format}' != '{JOURNAL_FORMAT}'");
+        let fp_str = header.req("spec_fp")?.as_str().context("spec_fp")?;
+        let fp = u64::from_str_radix(fp_str.trim_start_matches("0x"), 16)?;
+        ensure!(
+            fp == fingerprint,
+            "--resume: journal {} was written by a different run configuration \
+             (spec fingerprint {fp_str} != {:#018x}); pruning parameters must not \
+             change across a resume",
+            path.display(),
+            fingerprint
+        );
+        let wb = header.req("writeback")?.as_str().context("writeback")?;
+        ensure!(
+            wb == writeback,
+            "--resume: journal write-back mode '{wb}' != requested '{writeback}'"
+        );
+        let mut entries = BTreeMap::new();
+        // Track the byte length of the valid prefix so a torn trailing
+        // line can be truncated away before appending: without the
+        // truncation, the first post-resume write would concatenate
+        // onto the partial line and corrupt the journal for every
+        // later resume.
+        let mut valid_end = header_line.len() + 1;
+        for line in lines {
+            if line.trim().is_empty() {
+                valid_end += line.len() + 1;
+                continue;
+            }
+            // A torn final line (crash mid-write) is not an error: the
+            // layer it would have named simply reruns.
+            let Ok(j) = json::parse(line) else { break };
+            let Ok(entry) = JournalEntry::from_json(&j) else { break };
+            valid_end += line.len() + 1;
+            entries.insert(entry.name.clone(), entry);
+        }
+        // A final line that is complete JSON but lost only its '\n'
+        // counts as valid, yet its +1 would point past EOF — clamp so
+        // set_len never *extends* the file with a NUL.
+        let valid_end = valid_end.min(text.len());
+        let mut file = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopen journal {}", path.display()))?;
+        file.set_len(valid_end as u64)
+            .with_context(|| format!("truncate torn tail of {}", path.display()))?;
+        file.seek(SeekFrom::End(0))?;
+        if !text.as_bytes()[..valid_end].ends_with(b"\n") {
+            // Restore the missing terminator before anything appends.
+            file.write_all(b"\n")?;
+            file.flush()?;
+        }
+        Ok((
+            Journal { path: path.to_path_buf(), file, appended: 0, fail_after: None },
+            entries,
+        ))
+    }
+
+    /// Install the crash-injection hook (CLI `--stop-after`).
+    pub fn fail_after(&mut self, appends: Option<u64>) {
+        self.fail_after = appends;
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Durably record one completed layer. Call only after the layer's
+    /// shard bytes are flushed.
+    pub fn append(&mut self, entry: &JournalEntry) -> Result<()> {
+        if let Some(limit) = self.fail_after {
+            // Simulated crash: exactly `limit` layers made it into the
+            // journal, nothing after (checked BEFORE writing so no
+            // extra line sneaks in from a concurrently-failing worker).
+            if self.appended >= limit {
+                bail!("{INTERRUPTED} after {limit} layers");
+            }
+        }
+        writeln!(self.file, "{}", compact(&entry.to_json()))?;
+        self.file.flush()?;
+        self.file.sync_data().ok();
+        self.appended += 1;
+        Ok(())
+    }
+}
+
+/// One-line JSON (the journal is line-oriented; pretty printing would
+/// break line = entry).
+fn compact(j: &Json) -> String {
+    j.to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Mat;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tsenor_journal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn entry(name: &str, recon: f64) -> JournalEntry {
+        JournalEntry {
+            name: name.into(),
+            pattern: NmPattern::new(4, 8),
+            recon_error: recon,
+            kept: 128,
+            numel: 256,
+            safeguard: Some(3.0),
+            mask_fnv: 0xdead_beef_cafe_f00d,
+            loc: NamedLoc::Dense {
+                file: "wb-a0-val-000.npy".into(),
+                offset: 77,
+                mask_file: "wb-a0-aux-000.npy".into(),
+                mask_offset: 9,
+            },
+            rows: 16,
+            cols: 16,
+        }
+    }
+
+    #[test]
+    fn append_then_resume_replays_entries_exactly() {
+        let p = tmp("a.journal");
+        let mut j = Journal::create(&p, 42, "dense").unwrap();
+        // An awkward f64 that must survive the text round-trip bitwise.
+        let recon = 0.123456789012345678f64 / 3.0;
+        j.append(&entry("layers.0.w", recon)).unwrap();
+        j.append(&entry("layers.1.w", 1.0e-17)).unwrap();
+        drop(j);
+        let (_, entries) = Journal::resume(&p, 42, "dense").unwrap();
+        assert_eq!(entries.len(), 2);
+        let e = &entries["layers.0.w"];
+        assert_eq!(e.recon_error.to_bits(), recon.to_bits(), "f64 must round-trip bitwise");
+        assert_eq!(e, &entry("layers.0.w", recon));
+        assert_eq!(entries["layers.1.w"].recon_error, 1.0e-17);
+    }
+
+    #[test]
+    fn resume_rejects_wrong_fingerprint_and_mode() {
+        let p = tmp("b.journal");
+        Journal::create(&p, 7, "dense").unwrap();
+        let err = Journal::resume(&p, 8, "dense").unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        let err = Journal::resume(&p, 7, "nm").unwrap_err().to_string();
+        assert!(err.contains("write-back mode"), "{err}");
+    }
+
+    #[test]
+    fn torn_final_line_is_discarded_and_truncated() {
+        let p = tmp("c.journal");
+        let mut j = Journal::create(&p, 1, "nm").unwrap();
+        j.append(&entry("ok", 0.5)).unwrap();
+        drop(j);
+        // Simulate a crash mid-append of the next line.
+        let mut text = std::fs::read_to_string(&p).unwrap();
+        text.push_str("{\"layer\": \"half-writ");
+        std::fs::write(&p, text).unwrap();
+        let (mut j, entries) = Journal::resume(&p, 1, "nm").unwrap();
+        assert_eq!(entries.len(), 1);
+        assert!(entries.contains_key("ok"));
+        // The torn tail was truncated away, so appending after the
+        // resume must NOT concatenate onto the partial line: a second
+        // resume sees both the old and the new entry.
+        j.append(&entry("after-resume", 0.25)).unwrap();
+        drop(j);
+        let (_, entries) = Journal::resume(&p, 1, "nm").unwrap();
+        assert_eq!(entries.len(), 2, "torn tail must not eat post-resume entries");
+        assert!(entries.contains_key("ok") && entries.contains_key("after-resume"));
+    }
+
+    #[test]
+    fn complete_final_line_missing_only_its_newline_survives_resume() {
+        // The torn write ended exactly at '}': the line is valid JSON,
+        // just unterminated. It must be kept, not extended past EOF,
+        // and appends after the resume must start on a fresh line.
+        let p = tmp("e.journal");
+        let mut j = Journal::create(&p, 1, "dense").unwrap();
+        j.append(&entry("first", 0.5)).unwrap();
+        drop(j);
+        let mut text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.ends_with('\n'));
+        text.pop(); // drop the final newline only
+        std::fs::write(&p, &text).unwrap();
+        let (mut j, entries) = Journal::resume(&p, 1, "dense").unwrap();
+        assert_eq!(entries.len(), 1);
+        j.append(&entry("second", 0.25)).unwrap();
+        drop(j);
+        let raw = std::fs::read(&p).unwrap();
+        assert!(!raw.contains(&0u8), "resume must never pad NUL bytes");
+        let (_, entries) = Journal::resume(&p, 1, "dense").unwrap();
+        assert_eq!(entries.len(), 2);
+        assert!(entries.contains_key("first") && entries.contains_key("second"));
+    }
+
+    #[test]
+    fn fail_after_hook_interrupts() {
+        let p = tmp("d.journal");
+        let mut j = Journal::create(&p, 1, "dense").unwrap();
+        j.fail_after(Some(2));
+        j.append(&entry("l0", 0.1)).unwrap();
+        j.append(&entry("l1", 0.2)).unwrap();
+        let err = j.append(&entry("l2", 0.3)).unwrap_err().to_string();
+        assert!(err.contains(INTERRUPTED), "{err}");
+        // Exactly the first two layers were journaled.
+        drop(j);
+        let (_, entries) = Journal::resume(&p, 1, "dense").unwrap();
+        assert_eq!(entries.len(), 2);
+        assert!(entries.contains_key("l0") && entries.contains_key("l1"));
+    }
+
+    #[test]
+    fn non_finite_recon_errors_round_trip_without_corrupting_the_journal() {
+        // NaN/inf must not become invalid-JSON lines (which would make
+        // resume truncate every later entry).
+        let p = tmp("f.journal");
+        let mut j = Journal::create(&p, 9, "dense").unwrap();
+        j.append(&entry("nan-layer", f64::NAN)).unwrap();
+        j.append(&entry("inf-layer", f64::INFINITY)).unwrap();
+        j.append(&entry("fine-layer", 0.5)).unwrap();
+        drop(j);
+        let (_, entries) = Journal::resume(&p, 9, "dense").unwrap();
+        assert_eq!(entries.len(), 3, "entries after a NaN line must survive");
+        assert!(entries["nan-layer"].recon_error.is_nan());
+        assert_eq!(
+            entries["nan-layer"].recon_error.to_bits(),
+            f64::NAN.to_bits(),
+            "non-finite values round-trip bitwise"
+        );
+        assert_eq!(entries["inf-layer"].recon_error, f64::INFINITY);
+        assert_eq!(entries["fine-layer"].recon_error, 0.5);
+    }
+
+    #[test]
+    fn mask_checksum_is_bit_sensitive() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_ne!(mask_checksum(&a), mask_checksum(&b));
+        assert_eq!(mask_checksum(&a), mask_checksum(&a.clone()));
+    }
+}

@@ -1,0 +1,529 @@
+//! # Out-of-core streaming checkpoint subsystem
+//!
+//! Prunes models too large to hold in memory: layer weights stream
+//! from a sharded checkpoint ([`store`]) through a byte-budgeted
+//! prefetcher ([`prefetch`]) into the concurrent layer executor, and
+//! pruned layers stream straight back out through the write-back sink
+//! ([`writeback`]) with an append-only resume journal ([`journal`]).
+//!
+//! ```text
+//!  checkpoint shards          prefetcher (io_threads,         executor
+//!  (npy + index.json)         ≤ memory_budget bytes)          (spec.jobs workers)
+//!  ┌──────────────┐  reads  ┌──────────────────────┐  feed  ┌──────────────┐
+//!  │ shard-000.npy│ ───────▶│ ordered byte pool     │ ──────▶│ prune jobs   │
+//!  │ shard-001.npy│         │ (admission = manifest │        │ (oracle)     │
+//!  │ …            │         │  order, peak tracked) │        └──────┬───────┘
+//!  └──────────────┘         └──────────────────────┘   completion   │
+//!                                                         order     ▼
+//!                           ┌───────────────────────────────────────────────┐
+//!                           │ write-back sink: wb-*.npy shards (dense | nm) │
+//!                           │ + prune.journal (layer, checksum, report row) │
+//!                           └───────────────────────────────────────────────┘
+//! ```
+//!
+//! # Guarantees
+//!
+//! * **Bit-identity.** For every framework, a streamed run at any
+//!   `memory_budget` ≥ the largest single layer produces a
+//!   `PruneReport::to_json_stripped()` byte-identical to the in-memory
+//!   path: jobs pull the same `LayerProblem`s in the same manifest
+//!   order, grouped oracle calls are re-formed from the SAME
+//!   shape-only plan (`executor::plan_batches_shapes`), and reports
+//!   are re-assembled in manifest order.
+//! * **Bounded memory.** Peak resident streamed weight bytes
+//!   (read-ahead + in-flight jobs + grouped pre-pass scores, tracked
+//!   by the prefetch pool) never exceed the budget; `0` = unbounded
+//!   (whole model). The bound covers the *streamed weights*; each
+//!   in-flight item additionally carries transient compute scratch on
+//!   top of its reservation (the pruned copy and mask of a running
+//!   job, a pre-pass member's score during `member_score`, a group's
+//!   solved masks during `mask_group`) — bounded by ~2x the reserved
+//!   bytes per item, so size budgets to at most half of spare RAM.
+//!   The one persistent residue outside the pool: preset masks for
+//!   statically-grouped small layers, kept bit-PACKED (1/32 of weight
+//!   bytes) until consumed — tight budgets should use `--service`
+//!   coalescing, which forms no groups.
+//! * **Resumability.** A layer is journaled only after its pruned
+//!   bytes are durably in the write-back shards; an interrupted run
+//!   restarted with `resume` skips journaled layers (re-running only
+//!   grouped calls with incomplete members, with their full original
+//!   composition) and ends with the same stripped report as an
+//!   uninterrupted run.
+
+pub mod journal;
+pub mod prefetch;
+pub mod store;
+pub mod writeback;
+
+use crate::coordinator::executor::{self, FeedItem, LayerTask, TaskShape};
+use crate::pruning::{LayerProblem, MaskOracle};
+use crate::spec::report::LayerReport;
+use crate::spec::{PruneSpec, StreamCfg};
+use crate::util::tensor::Mat;
+use anyhow::{bail, ensure, Context, Result};
+use journal::{Journal, JournalEntry};
+use prefetch::{BytePool, Prefetcher};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use store::StoreReader;
+use writeback::{NamedLoc, WriteBack};
+
+/// Ridge term shared with the in-memory pipeline (one constant, so the
+/// two paths cannot drift apart and break bit-identical Hessians).
+pub use crate::pruning::DEFAULT_LAMBDA_REL as LAMBDA_REL;
+
+/// Default write-back shard payload cap.
+const WB_SHARD_BYTES: u64 = 32 << 20;
+
+/// One prunable layer of the run, manifest order.
+#[derive(Clone, Debug)]
+pub struct StreamLayer {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl StreamLayer {
+    fn bytes(&self) -> u64 {
+        (self.rows * self.cols * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// Result of a streamed prune: report-sized residue only — the pruned
+/// weights live in the write-back shards under `out_dir`.
+pub struct StreamRun {
+    /// Per-layer reports, manifest order (resumed layers replayed from
+    /// the journal with `wall_secs = 0`).
+    pub layers: Vec<LayerReport>,
+    /// ALPS safeguard hits per layer, manifest order.
+    pub safeguards: Vec<Option<f64>>,
+    /// Zeros / total over all masks — exactly `ModelState::sparsity()`
+    /// of the equivalent in-memory run.
+    pub model_sparsity: f64,
+    /// Peak resident streamed weight bytes (prefetch pool high-water).
+    pub peak_bytes: u64,
+    /// Layers skipped because the journal already had them.
+    pub resumed_layers: usize,
+    /// Journaled mask checksums (verification on reload).
+    pub checksums: BTreeMap<String, u64>,
+    /// Directory holding the write-back shards + index + journal.
+    pub out_dir: PathBuf,
+}
+
+/// Fingerprint tying a journal to (spec mathematics, oracle, layer
+/// set): a resume under different pruning parameters, a different
+/// solver/oracle, or a different checkpoint is refused; different
+/// `jobs`/budget/service settings are fine. Two subtleties:
+///
+/// * the oracle name is normalized past the `MaskDispatcher`'s
+///   `service(...)` wrapper — *coalescing* is bit-invisible, so only
+///   the inner backend is mathematics;
+/// * BUT the oracle's per-M batch quantum IS folded in: it decides
+///   whether static cross-layer groups form (combined-batch tau), so a
+///   resume under a different quantum — e.g. toggling `--service` on a
+///   bucketed XLA backend, which advertises quantum 0 and dissolves
+///   the static plan — would mix grouped and solo masks and is
+///   refused.
+pub fn run_fingerprint(
+    spec: &PruneSpec,
+    layers: &[StreamLayer],
+    oracle: &dyn MaskOracle,
+) -> u64 {
+    let name = oracle.name();
+    let math_oracle = name
+        .strip_prefix("service(")
+        .and_then(|s| s.strip_suffix(')'))
+        .unwrap_or(name);
+    let mut text = spec.scheduling_free_json().to_string_pretty();
+    text.push_str(&format!("\noracle {math_oracle}"));
+    let ms: std::collections::BTreeSet<usize> =
+        layers.iter().map(|l| spec.pattern_for(&l.name).m).collect();
+    for m in ms {
+        text.push_str(&format!("\nquantum M={m} {}", oracle.batch_quantum(m)));
+    }
+    for l in layers {
+        let pattern = spec.pattern_for(&l.name);
+        text.push_str(&format!("\n{} {} {} {pattern}", l.name, l.rows, l.cols));
+    }
+    journal::fnv1a(text.as_bytes())
+}
+
+/// Next write-back attempt id for `dir` (resume never reuses a
+/// previous attempt's shard files).
+fn next_attempt(dir: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut max: Option<u64> = None;
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if let Some(rest) = name.strip_prefix("wb-a") {
+            if let Some(num) = rest.split('-').next() {
+                if let Ok(n) = num.parse::<u64>() {
+                    max = Some(max.map_or(n, |m| m.max(n)));
+                }
+            }
+        }
+    }
+    max.map_or(0, |m| m + 1)
+}
+
+/// Remove artifacts of previous runs on a fresh (non-resume) start so
+/// stale shards can't leak into the new index.
+fn clean_output_dir(dir: &Path) -> Result<()> {
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy().to_string();
+            if name.starts_with("wb-a") && name.ends_with(".npy")
+                || name == store::INDEX_FILE
+                || name == "prune.journal"
+            {
+                std::fs::remove_file(e.path())
+                    .with_context(|| format!("clean stale {}", e.path().display()))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+struct SinkState {
+    wb: WriteBack,
+    journal: Journal,
+    /// Per-layer residue, index-aligned with the run's layer list.
+    slots: Vec<Option<JournalEntry>>,
+    wall: Vec<f64>,
+}
+
+/// Stream-prune every layer of `layers` (manifest order) from `store`
+/// under `spec` (whose `stream` config must be set). `gram_for`
+/// produces each layer's Gram matrix (clone of the calibration gram,
+/// or a synthetic one for checkpoint-only runs); it may be called from
+/// several worker threads.
+pub fn run_prune_stream(
+    input: &StoreReader,
+    layers: &[StreamLayer],
+    gram_for: &(dyn Fn(&StreamLayer) -> Result<Mat> + Sync),
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+) -> Result<StreamRun> {
+    let scfg: &StreamCfg = spec
+        .stream
+        .as_ref()
+        .context("run_prune_stream: spec has no stream configuration")?;
+    let dir = PathBuf::from(&scfg.dir);
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("create stream dir {}", dir.display()))?;
+    // The output dir must not be the input checkpoint: a fresh run
+    // cleans stale write-back files INCLUDING index.json, which would
+    // destroy the input's tensor index.
+    let same_dir = match (dir.canonicalize(), input.root().canonicalize()) {
+        (Ok(a), Ok(b)) => a == b,
+        _ => dir == input.root(),
+    };
+    ensure!(
+        !same_dir,
+        "stream dir {} is the input checkpoint directory — the write-back \
+         index would overwrite the checkpoint's; pick a different --stream-dir",
+        dir.display()
+    );
+
+    // Fail fast: the budget must cover every single layer or the
+    // in-order admission could never admit it.
+    if scfg.memory_budget > 0 {
+        for l in layers {
+            ensure!(
+                l.bytes() <= scfg.memory_budget,
+                "memory budget {} bytes cannot hold layer '{}' ({}x{} = {} bytes); \
+                 raise --memory-budget to at least the largest layer",
+                scfg.memory_budget,
+                l.name,
+                l.rows,
+                l.cols,
+                l.bytes()
+            );
+        }
+    }
+    // Every layer must exist in the checkpoint with the right shape.
+    for l in layers {
+        let e = input
+            .entry(&l.name)
+            .with_context(|| format!("layer '{}' missing from checkpoint", l.name))?;
+        ensure!(
+            (e.rows, e.cols) == (l.rows, l.cols),
+            "layer '{}': checkpoint shape {}x{} != expected {}x{}",
+            l.name,
+            e.rows,
+            e.cols,
+            l.rows,
+            l.cols
+        );
+    }
+
+    // The run fingerprint (spec math + oracle + layer set) is combined
+    // with a sampled fingerprint of the input shards' CONTENT, so a
+    // checkpoint regenerated between resume attempts — same names and
+    // shapes, different weights — is refused instead of silently
+    // mixing two models' layers.
+    let fingerprint = {
+        let mut h = crate::util::Fnv1a::new();
+        h.update(&run_fingerprint(spec, layers, oracle).to_le_bytes());
+        h.update(&input.content_fingerprint()?.to_le_bytes());
+        h.finish()
+    };
+    let journal_path = dir.join("prune.journal");
+    let (mut jour, completed) = if scfg.resume {
+        let (jour, entries) = Journal::resume(&journal_path, fingerprint, scfg.writeback.name())?;
+        (jour, entries)
+    } else {
+        clean_output_dir(&dir)?;
+        (Journal::create(&journal_path, fingerprint, scfg.writeback.name())?, BTreeMap::new())
+    };
+    jour.fail_after(scfg.fail_after);
+
+    // ---- Grouped pre-pass -------------------------------------------------
+    // The static cross-layer batching plan depends only on shapes +
+    // spec + oracle quantum, so it is re-formed here EXACTLY as the
+    // in-memory executor forms it. A group re-solves with its full
+    // original composition whenever ANY member is incomplete, so
+    // resumed masks are bit-identical to an uninterrupted run's.
+    //
+    // Budget accounting: each member's reservation is held until the
+    // grouped solve resolves — the derived score matrix is the same
+    // size as the weight, so the combined group (validated to fit the
+    // budget below) is tracked by the pool like any other resident
+    // bytes. The solved preset MASKS for incomplete members do stay
+    // resident outside the pool (bit-packed, 1/32 of weight bytes)
+    // until their layers stream through; at tight budgets prefer
+    // `--service` dynamic coalescing, which advertises
+    // `batch_quantum = 0` and forms no static groups.
+    let shapes: Vec<TaskShape> = layers
+        .iter()
+        .map(|l| TaskShape { pattern: spec.pattern_for(&l.name), rows: l.rows, cols: l.cols })
+        .collect();
+    let plan = executor::plan_batches_shapes(&shapes, spec, oracle);
+    let pool = BytePool::new(scfg.memory_budget);
+    // Preset masks are retained PACKED (1 bit/element) until their
+    // layers stream through, so the out-of-pool residue is 32x smaller
+    // than the masks themselves; unpacking reproduces the exact 0/1
+    // f32 mask the grouped call solved.
+    let mut preset: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+    let mut ticket: u64 = 0;
+    for group in &plan.groups {
+        if group.members.iter().all(|&i| completed.contains_key(&layers[i].name)) {
+            continue;
+        }
+        if scfg.memory_budget > 0 {
+            let combined: u64 = group.members.iter().map(|&i| layers[i].bytes()).sum();
+            ensure!(
+                combined <= scfg.memory_budget,
+                "memory budget {} bytes cannot hold the {} cross-layer batch of {} \
+                 small layers ({combined} bytes combined — their scores must coexist \
+                 for one grouped oracle call); raise --memory-budget, or use \
+                 --service dynamic coalescing which needs no static groups",
+                scfg.memory_budget,
+                group.pattern,
+                group.members.len(),
+            );
+        }
+        let mut scores = Vec::with_capacity(group.members.len());
+        let mut guards = Vec::with_capacity(group.members.len());
+        for &i in &group.members {
+            let layer = &layers[i];
+            let entry = input.entry(&layer.name).expect("validated above");
+            let guard = pool
+                .acquire(ticket, layer.bytes())
+                .context("stream aborted during grouped pre-pass")?;
+            ticket += 1;
+            let w = input.read_dense(entry)?;
+            let problem = LayerProblem {
+                name: layer.name.clone(),
+                w,
+                gram: gram_for(layer)?,
+                pattern: spec.pattern_for(&layer.name),
+                lambda_rel: LAMBDA_REL,
+            };
+            scores.push(executor::member_score(spec.framework, &problem));
+            drop(problem);
+            // Reservation now covers the score (same bytes as w).
+            guards.push(guard);
+        }
+        let refs: Vec<&Mat> = scores.iter().collect();
+        let masks = oracle.mask_group(&refs, group.pattern)?;
+        drop(refs);
+        drop(scores);
+        drop(guards);
+        for (&i, mask) in group.members.iter().zip(masks) {
+            if !completed.contains_key(&layers[i].name) {
+                preset.insert(i, store::pack_mask(&mask));
+            }
+        }
+    }
+
+    // ---- Main stream ------------------------------------------------------
+    let todo: Vec<usize> = (0..layers.len())
+        .filter(|&i| !completed.contains_key(&layers[i].name))
+        .collect();
+    let resumed_layers = layers.len() - todo.len();
+    let fetch_entries: Vec<store::TensorEntry> = todo
+        .iter()
+        .map(|&i| input.entry(&layers[i].name).expect("validated above").clone())
+        .collect();
+
+    let wb = WriteBack::create(&dir, scfg.writeback, WB_SHARD_BYTES, next_attempt(&dir))?;
+    let sink_state = Mutex::new(SinkState {
+        wb,
+        journal: jour,
+        slots: (0..layers.len()).map(|_| None).collect(),
+        wall: vec![0.0; layers.len()],
+    });
+    let preset = &preset;
+    let todo_ref = &todo;
+
+    let stream_result = Prefetcher::run(
+        input,
+        fetch_entries,
+        std::sync::Arc::clone(&pool),
+        scfg.io_threads,
+        ticket,
+        |pf| -> Result<()> {
+            let feed = || -> Option<Result<FeedItem>> {
+                let fetched = pf.next()?;
+                Some(fetched.and_then(|f| {
+                    let index = todo_ref[f.seq];
+                    let layer = &layers[index];
+                    let problem = LayerProblem {
+                        name: layer.name.clone(),
+                        w: f.w,
+                        gram: gram_for(layer)?,
+                        pattern: spec.pattern_for(&layer.name),
+                        lambda_rel: LAMBDA_REL,
+                    };
+                    let mut task = LayerTask::new(problem);
+                    if let Some(packed) = preset.get(&index) {
+                        task = task.preset(store::unpack_mask(packed, layer.rows, layer.cols));
+                    }
+                    Ok(FeedItem { index, task, guard: Some(f.guard) })
+                }))
+            };
+            let sink = |index: usize, out: executor::LayerOutcome| -> Result<()> {
+                let name = layers[index].name.clone();
+                let kept = out.mask.data.iter().filter(|&&x| x != 0.0).count() as u64;
+                let mut st = sink_state.lock().unwrap_or_else(|e| e.into_inner());
+                // Sink errors propagate to run_layer_feed, whose
+                // on_fail hook aborts the prefetcher — unblocking
+                // workers parked in `feed` right away.
+                let loc: NamedLoc = st.wb.put(&name, out.report.pattern, &out.w, &out.mask)?;
+                let entry = JournalEntry {
+                    name,
+                    pattern: out.report.pattern,
+                    recon_error: out.report.recon_error,
+                    kept,
+                    numel: out.mask.data.len() as u64,
+                    safeguard: out.safeguard_hits,
+                    mask_fnv: journal::mask_checksum(&out.mask),
+                    loc,
+                    rows: out.w.rows,
+                    cols: out.w.cols,
+                };
+                let wall = out.report.wall_secs;
+                // Weights + mask die here: the shards hold them now.
+                drop(out);
+                st.journal.append(&entry)?;
+                st.wall[index] = wall;
+                st.slots[index] = Some(entry);
+                Ok(())
+            };
+            let on_fail = || pf.abort();
+            let result = executor::run_layer_feed(spec, oracle, &feed, &sink, &on_fail);
+            if result.is_err() {
+                pf.abort();
+            }
+            result
+        },
+    );
+    stream_result?;
+
+    // ---- Assemble manifest-order residue ---------------------------------
+    let st = sink_state.into_inner().unwrap_or_else(|e| e.into_inner());
+    let mut reports = Vec::with_capacity(layers.len());
+    let mut safeguards = Vec::with_capacity(layers.len());
+    let mut checksums = BTreeMap::new();
+    let mut index_layers: BTreeMap<String, (usize, usize, NamedLoc)> = BTreeMap::new();
+    let (mut zeros, mut total) = (0u64, 0u64);
+    for (i, layer) in layers.iter().enumerate() {
+        let (entry, wall) = match &st.slots[i] {
+            Some(e) => (e.clone(), st.wall[i]),
+            None => match completed.get(&layer.name) {
+                Some(e) => (e.clone(), 0.0),
+                None => bail!("layer '{}' never completed (internal)", layer.name),
+            },
+        };
+        reports.push(LayerReport {
+            name: entry.name.clone(),
+            pattern: entry.pattern,
+            recon_error: entry.recon_error,
+            sparsity: entry.sparsity(),
+            wall_secs: wall,
+        });
+        safeguards.push(entry.safeguard);
+        checksums.insert(entry.name.clone(), entry.mask_fnv);
+        zeros += entry.numel - entry.kept;
+        total += entry.numel;
+        index_layers.insert(entry.name.clone(), (entry.rows, entry.cols, entry.loc));
+    }
+    let order: Vec<String> = layers.iter().map(|l| l.name.clone()).collect();
+    writeback::save_index(&dir, &order, &index_layers)?;
+
+    Ok(StreamRun {
+        layers: reports,
+        safeguards,
+        model_sparsity: if total == 0 { 0.0 } else { zeros as f64 / total as f64 },
+        peak_bytes: pool.peak(),
+        resumed_layers,
+        checksums,
+        out_dir: dir,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attempt_numbering_scans_existing_files() {
+        let dir = std::env::temp_dir().join("tsenor_stream_attempt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(next_attempt(&dir), 0);
+        std::fs::write(dir.join("wb-a0-val-000.npy"), b"x").unwrap();
+        std::fs::write(dir.join("wb-a3-aux-001.npy"), b"x").unwrap();
+        assert_eq!(next_attempt(&dir), 4);
+    }
+
+    #[test]
+    fn fingerprint_tracks_math_not_scheduling() {
+        use crate::masks::solver::{Method, SolveCfg};
+        use crate::pruning::CpuOracle;
+        use crate::spec::{Framework, StreamCfg};
+        let layers = vec![StreamLayer { name: "a".into(), rows: 16, cols: 16 }];
+        let base = crate::spec::PruneSpec::new(Framework::Alps).pattern(4, 8);
+        let tsenor = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let fp = run_fingerprint(&base, &layers, &tsenor);
+        // jobs / service / stream changes keep the fingerprint.
+        let sched = base.clone().jobs(7).stream(StreamCfg::default().memory_budget(123));
+        assert_eq!(run_fingerprint(&sched, &layers, &tsenor), fp);
+        // Framework / pattern / solver / layer-set changes break it.
+        assert_ne!(run_fingerprint(&base.clone().pattern(2, 8), &layers, &tsenor), fp);
+        let other_method = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
+        assert_ne!(run_fingerprint(&base, &layers, &other_method), fp);
+        let other = vec![StreamLayer { name: "b".into(), rows: 16, cols: 16 }];
+        assert_ne!(run_fingerprint(&base, &other, &tsenor), fp);
+        // The batch quantum is mathematics (it decides whether static
+        // combined-tau groups form): same backend, different quantum,
+        // different fingerprint.
+        let quantum =
+            CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+        assert_ne!(run_fingerprint(&base, &layers, &quantum), fp);
+    }
+}

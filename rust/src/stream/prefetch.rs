@@ -1,0 +1,415 @@
+//! Bounded-memory layer prefetcher: background I/O threads read
+//! upcoming layer weights from a [`store::StoreReader`] into a byte-
+//! budgeted pool, handing decoded `Mat`s to the executor in list
+//! order so disk reads overlap solve compute while peak resident
+//! weight bytes never exceed the budget.
+//!
+//! # Accounting and deadlock freedom
+//!
+//! Every decoded weight is covered by a [`PoolGuard`] that reserves
+//! its bytes *before* the read and releases them on drop — the guard
+//! travels with the `Mat` through the executor, so "resident" covers
+//! read-ahead *and* in-flight jobs, and [`BytePool::peak`] is a true
+//! high-water mark of streamed weight bytes.
+//!
+//! Admission is strictly in list order (a reservation for layer `i+1`
+//! cannot jump ahead of layer `i`): combined with consumers draining
+//! in the same order and guards being released as jobs finish, the
+//! stream always makes progress as long as the budget covers the
+//! largest single layer (validated up front by the driver).
+
+use super::store::{StoreReader, TensorEntry};
+use crate::util::tensor::Mat;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Byte-budgeted admission pool with in-order tickets.
+pub struct BytePool {
+    budget: u64, // 0 = unbounded
+    state: Mutex<PoolState>,
+    changed: Condvar,
+    peak: AtomicU64,
+    closed: AtomicBool,
+}
+
+struct PoolState {
+    used: u64,
+    /// Next admission ticket allowed to reserve (in-order admission).
+    turn: u64,
+}
+
+impl BytePool {
+    pub fn new(budget: u64) -> Arc<BytePool> {
+        Arc::new(BytePool {
+            budget,
+            state: Mutex::new(PoolState { used: 0, turn: 0 }),
+            changed: Condvar::new(),
+            peak: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Reserve `bytes` under ticket `ticket` (tickets are admitted in
+    /// ascending order). Blocks until it is this ticket's turn AND the
+    /// budget fits; returns a guard releasing the bytes on drop, or
+    /// `None` if the pool was closed (run aborting).
+    pub fn acquire(self: &Arc<Self>, ticket: u64, bytes: u64) -> Option<PoolGuard> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if self.closed.load(Ordering::Relaxed) {
+                return None;
+            }
+            let fits = self.budget == 0 || st.used + bytes <= self.budget || st.used == 0;
+            if st.turn == ticket && fits {
+                st.used += bytes;
+                st.turn += 1;
+                self.peak.fetch_max(st.used, Ordering::Relaxed);
+                self.changed.notify_all();
+                return Some(PoolGuard { pool: Arc::clone(self), bytes });
+            }
+            st = self.changed.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn release(&self, bytes: u64) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.used = st.used.saturating_sub(bytes);
+        self.changed.notify_all();
+    }
+
+    /// Unblock every waiter (abort path). The flag is flipped under
+    /// the state lock so a waiter can never check-then-sleep past it.
+    pub fn close(&self) {
+        let _st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        self.closed.store(true, Ordering::Relaxed);
+        self.changed.notify_all();
+    }
+
+    /// High-water mark of reserved bytes over the pool's lifetime.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+}
+
+/// Reservation for one tensor's bytes; dropping it returns the bytes
+/// to the pool. Travels with the decoded `Mat` through the executor.
+pub struct PoolGuard {
+    pool: Arc<BytePool>,
+    bytes: u64,
+}
+
+impl PoolGuard {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        self.pool.release(self.bytes);
+    }
+}
+
+/// One prefetched layer, delivered in list order.
+pub struct Fetched {
+    /// Position in the prefetcher's layer list.
+    pub seq: usize,
+    pub w: Mat,
+    pub guard: PoolGuard,
+}
+
+struct Shared {
+    entries: Vec<TensorEntry>,
+    /// First pool ticket this prefetcher uses (the driver's grouped
+    /// pre-pass may have consumed earlier tickets on the same pool).
+    ticket_base: u64,
+    next_fetch: AtomicUsize,
+    ready: Mutex<ReadyState>,
+    delivered: Condvar,
+    abort: AtomicBool,
+}
+
+struct ReadyState {
+    loaded: BTreeMap<usize, Result<(Mat, PoolGuard)>>,
+    next_emit: usize,
+}
+
+/// Background reader pool over an ordered layer list.
+pub struct Prefetcher<'a> {
+    shared: Arc<Shared>,
+    pool: Arc<BytePool>,
+    // Scoped threads borrow `store`; the lifetime ties the prefetcher
+    // to the scope it was spawned in (see `Prefetcher::run`).
+    _marker: std::marker::PhantomData<&'a ()>,
+}
+
+impl<'a> Prefetcher<'a> {
+    /// Run `body` with a prefetcher streaming `entries` from `store`
+    /// on `io_threads` background threads under `pool`'s byte budget.
+    /// Threads are joined before `run` returns.
+    pub fn run<R>(
+        store: &'a StoreReader,
+        entries: Vec<TensorEntry>,
+        pool: Arc<BytePool>,
+        io_threads: usize,
+        ticket_base: u64,
+        body: impl FnOnce(&Prefetcher<'a>) -> R,
+    ) -> R {
+        let shared = Arc::new(Shared {
+            entries,
+            ticket_base,
+            next_fetch: AtomicUsize::new(0),
+            ready: Mutex::new(ReadyState { loaded: BTreeMap::new(), next_emit: 0 }),
+            delivered: Condvar::new(),
+            abort: AtomicBool::new(false),
+        });
+        let pf = Prefetcher {
+            shared: Arc::clone(&shared),
+            pool: Arc::clone(&pool),
+            _marker: std::marker::PhantomData,
+        };
+        let io_threads = io_threads.max(1).min(shared.entries.len().max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..io_threads {
+                let shared = Arc::clone(&shared);
+                let pool = Arc::clone(&pool);
+                scope.spawn(move || io_loop(store, &shared, &pool));
+            }
+            // Drop-guard, not a plain call: if `body` PANICS (a worker
+            // assert, say), the scope still joins the I/O threads — and
+            // without an abort they'd be parked in `pool.acquire`
+            // forever, turning the panic into a silent deadlock.
+            let abort_guard = AbortOnDrop(&pf);
+            let out = body(&pf);
+            drop(abort_guard);
+            out
+        })
+    }
+
+    /// Next layer in list order. Blocks until its read completes;
+    /// `None` when the list is exhausted (or the run aborted). After
+    /// an abort, a landed read *error* is still surfaced (possibly out
+    /// of list order — consumers index by `seq`), but loaded Ok items
+    /// are discarded (guards released): the run is dying, and handing
+    /// workers stale layers would burn a full solve each on work whose
+    /// results can no longer be used.
+    pub fn next(&self) -> Option<Result<Fetched>> {
+        let mut st = self.shared.ready.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if st.next_emit >= self.shared.entries.len() {
+                return None;
+            }
+            let seq = st.next_emit;
+            if let Some(res) = st.loaded.remove(&seq) {
+                st.next_emit += 1;
+                self.shared.delivered.notify_all();
+                return Some(res.map(|(w, guard)| Fetched { seq, w, guard }));
+            }
+            if self.shared.abort.load(Ordering::Relaxed) {
+                let err_seq =
+                    st.loaded.iter().find(|(_, r)| r.is_err()).map(|(&k, _)| k);
+                return match err_seq {
+                    Some(seq) => {
+                        let res = st.loaded.remove(&seq).expect("key just observed");
+                        Some(res.map(|(w, guard)| Fetched { seq, w, guard }))
+                    }
+                    None => {
+                        st.loaded.clear();
+                        None
+                    }
+                };
+            }
+            st = self.shared.delivered.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Abort the stream: wakes IO threads and any blocked `next`. The
+    /// flag is flipped under the ready lock (and the pool's own lock,
+    /// inside `close`) so no waiter can check-then-sleep past it.
+    pub fn abort(&self) {
+        {
+            let _st = self.shared.ready.lock().unwrap_or_else(|e| e.into_inner());
+            self.shared.abort.store(true, Ordering::Relaxed);
+            self.shared.delivered.notify_all();
+        }
+        self.pool.close();
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.pool.peak()
+    }
+}
+
+/// Aborts the prefetcher when dropped — on both the normal exit path
+/// and an unwinding panic out of the consumer body.
+struct AbortOnDrop<'p, 'a>(&'p Prefetcher<'a>);
+
+impl Drop for AbortOnDrop<'_, '_> {
+    fn drop(&mut self) {
+        self.0.abort();
+    }
+}
+
+fn io_loop(store: &StoreReader, shared: &Shared, pool: &Arc<BytePool>) {
+    loop {
+        if shared.abort.load(Ordering::Relaxed) {
+            return;
+        }
+        let seq = shared.next_fetch.fetch_add(1, Ordering::Relaxed);
+        if seq >= shared.entries.len() {
+            return;
+        }
+        let entry = &shared.entries[seq];
+        let Some(guard) = pool.acquire(shared.ticket_base + seq as u64, entry.dense_bytes())
+        else {
+            return; // pool closed: aborting
+        };
+        let res = store
+            .read_dense(entry)
+            .map(|w| (w, guard))
+            .map_err(|e| anyhow!(e).context(format!("prefetch layer '{}'", entry.name)));
+        let failed = res.is_err();
+        {
+            let mut st = shared.ready.lock().unwrap_or_else(|e| e.into_inner());
+            st.loaded.insert(seq, res);
+            if failed {
+                // One failed read poisons the stream; the abort flag is
+                // set under the same lock that guards `loaded`, so any
+                // consumer wakes to (error present, abort set).
+                shared.abort.store(true, Ordering::Relaxed);
+            }
+            shared.delivered.notify_all();
+        }
+        if failed {
+            pool.close();
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::store::write_checkpoint;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tsenor_prefetch_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn checkpoint(dir: &PathBuf, k: usize, d: usize) -> Vec<(String, Mat)> {
+        let mut rng = Rng::new(5);
+        let weights: Vec<(String, Mat)> = (0..k)
+            .map(|i| (format!("l{i:02}"), Mat::from_fn(d, d, |_, _| rng.normal())))
+            .collect();
+        write_checkpoint(dir, weights.iter().map(|(n, w)| (n.as_str(), w)), 4096).unwrap();
+        weights
+    }
+
+    #[test]
+    fn delivers_in_order_bit_exact() {
+        let dir = tmp("order");
+        let weights = checkpoint(&dir, 9, 16);
+        let store = StoreReader::open(&dir).unwrap();
+        let entries = store.index.order.clone();
+        let pool = BytePool::new(0);
+        Prefetcher::run(&store, entries, pool, 3, 0, |pf| {
+            for (i, (name, w)) in weights.iter().enumerate() {
+                let f = pf.next().unwrap().unwrap();
+                assert_eq!(f.seq, i, "{name}");
+                assert_eq!(f.w.data, w.data, "{name}");
+            }
+            assert!(pf.next().is_none());
+        });
+    }
+
+    #[test]
+    fn budget_bounds_peak_bytes() {
+        let dir = tmp("budget");
+        let d = 16usize;
+        let layer_bytes = (d * d * 4) as u64;
+        checkpoint(&dir, 12, d);
+        let store = StoreReader::open(&dir).unwrap();
+        let entries = store.index.order.clone();
+        let budget = 2 * layer_bytes + layer_bytes / 2; // 2.5 layers
+        let pool = BytePool::new(budget);
+        let peak = Prefetcher::run(&store, entries, Arc::clone(&pool), 4, 0, |pf| {
+            // Hold each guard a moment so read-ahead presses the cap.
+            let mut held = Vec::new();
+            while let Some(f) = pf.next() {
+                let f = f.unwrap();
+                held.push(f.guard);
+                if held.len() > 1 {
+                    held.remove(0); // keep ≤ 2 live guards consumer-side
+                }
+            }
+            pf.peak_bytes()
+        });
+        assert!(peak > 0);
+        assert!(peak <= budget, "peak {peak} exceeded budget {budget}");
+        assert_eq!(pool.peak(), peak);
+    }
+
+    #[test]
+    fn unbounded_budget_loads_ahead() {
+        let dir = tmp("unbounded");
+        checkpoint(&dir, 6, 8);
+        let store = StoreReader::open(&dir).unwrap();
+        let entries = store.index.order.clone();
+        let pool = BytePool::new(0);
+        Prefetcher::run(&store, entries, Arc::clone(&pool), 2, 0, |pf| {
+            // Hold every guard: with no budget, all 6 layers may be
+            // resident simultaneously — and with the consumer keeping
+            // them alive, the peak must reach exactly the whole model.
+            let mut held = Vec::new();
+            while let Some(f) = pf.next() {
+                held.push(f.unwrap());
+            }
+            assert_eq!(held.len(), 6);
+        });
+        assert_eq!(pool.peak(), 6 * 8 * 8 * 4);
+    }
+
+    #[test]
+    fn missing_shard_surfaces_as_error_not_hang() {
+        let dir = tmp("missing");
+        checkpoint(&dir, 4, 8);
+        let store = StoreReader::open(&dir).unwrap();
+        let entries = store.index.order.clone();
+        // Remove the backing shard after indexing.
+        for s in &store.index.shards {
+            std::fs::remove_file(dir.join(s)).unwrap();
+        }
+        let pool = BytePool::new(0);
+        Prefetcher::run(&store, entries, pool, 2, 0, |pf| {
+            let first = pf.next().unwrap();
+            assert!(first.is_err());
+            let err = format!("{:?}", first.err().unwrap());
+            assert!(err.contains("prefetch layer"), "{err}");
+        });
+    }
+
+    #[test]
+    fn early_consumer_exit_joins_cleanly() {
+        let dir = tmp("early_exit");
+        checkpoint(&dir, 10, 16);
+        let store = StoreReader::open(&dir).unwrap();
+        let entries = store.index.order.clone();
+        let pool = BytePool::new((16 * 16 * 4) as u64); // one layer at a time
+        Prefetcher::run(&store, entries, pool, 3, 0, |pf| {
+            let _ = pf.next(); // take one, then walk away
+            pf.abort();
+        });
+        // Reaching here means the scope joined: no deadlocked readers.
+    }
+}

@@ -1,0 +1,673 @@
+//! Sharded checkpoint store: many tensors packed into a few flat npy
+//! shard files plus a JSON index mapping tensor name -> shard / element
+//! offset / shape. This is the on-disk interchange format of the
+//! out-of-core streaming subsystem — both the *input* side (dense
+//! weight checkpoints the prefetcher reads layer-by-layer) and the
+//! *output* side (the write-back sink's dense or `NmCompressed`
+//! shards).
+//!
+//! Two ways to get an input store:
+//!
+//! * [`write_checkpoint`] splits an in-memory weight map into capped
+//!   npy shards (the generator used by tests, benches and the
+//!   `tsenor shard` command);
+//! * [`StoreReader::from_manifest`] views an existing artifact bundle
+//!   as a store without copying: every manifest weight file is its own
+//!   single-tensor "shard".
+//!
+//! Reads are ranged ([`util::npy::read_slice_f32`]): pulling one tensor
+//! out of a multi-tensor shard touches only that tensor's bytes, so
+//! resident memory tracks the *tensor*, not the shard.
+
+use crate::runtime::artifacts::Manifest;
+use crate::util::json::{self, Json};
+use crate::util::npy;
+use crate::util::tensor::Mat;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub const INDEX_FILE: &str = "index.json";
+pub const FORMAT: &str = "tsenor-ckpt-v1";
+
+/// Where one tensor lives. Offsets are in *elements* of the shard's
+/// dtype (f32 for values, u8 for index/mask bytes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorLoc {
+    /// Dense f32 tensor, optionally paired with a packed mask-bit
+    /// record (one bit per element, row-major, LSB-first) written by
+    /// the pruning write-back sink.
+    Dense {
+        shard: usize,
+        offset: usize,
+        mask: Option<(usize, usize)>, // (u8 shard, offset)
+    },
+    /// N:M-compressed tensor: `rows/m * n * cols` kept values plus the
+    /// same count of in-group u8 row offsets (`sparse::nm::NmCompressed`).
+    Compressed {
+        n: usize,
+        m: usize,
+        val_shard: usize,
+        val_offset: usize,
+        idx_shard: usize,
+        idx_offset: usize,
+    },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub loc: TensorLoc,
+}
+
+impl TensorEntry {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Resident bytes of the decoded dense tensor.
+    pub fn dense_bytes(&self) -> u64 {
+        (self.numel() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// Parsed checkpoint index.
+#[derive(Clone, Debug, Default)]
+pub struct ShardIndex {
+    /// Shard file names, in creation order (`TensorLoc` indexes this).
+    pub shards: Vec<String>,
+    /// Tensor entries in checkpoint (manifest) order.
+    pub order: Vec<TensorEntry>,
+}
+
+impl ShardIndex {
+    /// Linear name lookup — fine for tests and one-off queries; bulk
+    /// consumers go through `StoreReader::entry`, which indexes once.
+    pub fn get(&self, name: &str) -> Option<&TensorEntry> {
+        self.order.iter().find(|e| e.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let tensors = Json::Arr(
+            self.order
+                .iter()
+                .map(|e| {
+                    let mut fields = vec![
+                        ("name", Json::Str(e.name.clone())),
+                        ("rows", Json::Num(e.rows as f64)),
+                        ("cols", Json::Num(e.cols as f64)),
+                    ];
+                    match &e.loc {
+                        TensorLoc::Dense { shard, offset, mask } => {
+                            fields.push(("kind", Json::Str("dense".into())));
+                            fields.push(("shard", Json::Num(*shard as f64)));
+                            fields.push(("offset", Json::Num(*offset as f64)));
+                            if let Some((ms, mo)) = mask {
+                                fields.push(("mask_shard", Json::Num(*ms as f64)));
+                                fields.push(("mask_offset", Json::Num(*mo as f64)));
+                            }
+                        }
+                        TensorLoc::Compressed {
+                            n,
+                            m,
+                            val_shard,
+                            val_offset,
+                            idx_shard,
+                            idx_offset,
+                        } => {
+                            fields.push(("kind", Json::Str("nm".into())));
+                            fields.push(("n", Json::Num(*n as f64)));
+                            fields.push(("m", Json::Num(*m as f64)));
+                            fields.push(("val_shard", Json::Num(*val_shard as f64)));
+                            fields.push(("val_offset", Json::Num(*val_offset as f64)));
+                            fields.push(("idx_shard", Json::Num(*idx_shard as f64)));
+                            fields.push(("idx_offset", Json::Num(*idx_offset as f64)));
+                        }
+                    }
+                    json::obj(fields)
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            (
+                "shards",
+                Json::Arr(self.shards.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            ("tensors", tensors),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardIndex> {
+        let format = j.req("format")?.as_str().context("index format")?;
+        ensure!(
+            format == FORMAT,
+            "checkpoint index format '{format}' != expected '{FORMAT}'"
+        );
+        let shards = j
+            .req("shards")?
+            .as_arr()
+            .context("index shards")?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string).context("shard name"))
+            .collect::<Result<Vec<_>>>()?;
+        let req_usize = |e: &Json, key: &str| -> Result<usize> {
+            e.req(key)?
+                .as_usize()
+                .with_context(|| format!("index tensor field '{key}'"))
+        };
+        let mut order = Vec::new();
+        for e in j.req("tensors")?.as_arr().context("index tensors")? {
+            let name = e.req("name")?.as_str().context("tensor name")?.to_string();
+            let rows = req_usize(e, "rows")?;
+            let cols = req_usize(e, "cols")?;
+            let kind = e.req("kind")?.as_str().context("tensor kind")?;
+            let loc = match kind {
+                "dense" => {
+                    let mask = match (e.get("mask_shard"), e.get("mask_offset")) {
+                        (Some(s), Some(o)) => Some((
+                            s.as_usize().context("mask_shard")?,
+                            o.as_usize().context("mask_offset")?,
+                        )),
+                        (None, None) => None,
+                        // A half-present pair must not silently demote
+                        // to the nonzero-inferred mask (which loses
+                        // kept-but-zero weights).
+                        _ => bail!(
+                            "tensor '{name}': mask_shard and mask_offset must \
+                             appear together"
+                        ),
+                    };
+                    TensorLoc::Dense {
+                        shard: req_usize(e, "shard")?,
+                        offset: req_usize(e, "offset")?,
+                        mask,
+                    }
+                }
+                "nm" => TensorLoc::Compressed {
+                    n: req_usize(e, "n")?,
+                    m: req_usize(e, "m")?,
+                    val_shard: req_usize(e, "val_shard")?,
+                    val_offset: req_usize(e, "val_offset")?,
+                    idx_shard: req_usize(e, "idx_shard")?,
+                    idx_offset: req_usize(e, "idx_offset")?,
+                },
+                other => bail!("tensor '{name}': unknown kind '{other}'"),
+            };
+            for (what, shard) in shard_refs(&loc) {
+                ensure!(
+                    shard < shards.len(),
+                    "tensor '{name}': {what} shard {shard} out of range ({} shards)",
+                    shards.len()
+                );
+            }
+            order.push(TensorEntry { name, rows, cols, loc });
+        }
+        Ok(ShardIndex { shards, order })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(INDEX_FILE), self.to_json().to_string_pretty())
+            .with_context(|| format!("write {}", dir.join(INDEX_FILE).display()))
+    }
+}
+
+fn shard_refs(loc: &TensorLoc) -> Vec<(&'static str, usize)> {
+    match loc {
+        TensorLoc::Dense { shard, mask, .. } => {
+            let mut v = vec![("data", *shard)];
+            if let Some((ms, _)) = mask {
+                v.push(("mask", *ms));
+            }
+            v
+        }
+        TensorLoc::Compressed { val_shard, idx_shard, .. } => {
+            vec![("values", *val_shard), ("indices", *idx_shard)]
+        }
+    }
+}
+
+/// Shared roll-over logic for a shard series: start a new shard file
+/// (`<prefix>-NNN.npy`) whenever the current one would exceed the
+/// payload cap, else keep appending. The ONE place the roll predicate
+/// lives — the checkpoint generator and both write-back series use it,
+/// so their shard layouts can never diverge.
+pub(crate) fn rolling_appender<'a>(
+    dir: &Path,
+    slot: &'a mut Option<(String, npy::NpyAppender)>,
+    seq: &mut usize,
+    max_shard_bytes: u64,
+    incoming: u64,
+    prefix: &str,
+    create: fn(&Path) -> Result<npy::NpyAppender>,
+) -> Result<(String, &'a mut npy::NpyAppender)> {
+    let roll = match slot {
+        Some((_, a)) => {
+            a.data_bytes() > 0 && a.data_bytes() as u64 + incoming > max_shard_bytes
+        }
+        None => true,
+    };
+    if roll {
+        let file = format!("{prefix}-{:03}.npy", *seq);
+        *seq += 1;
+        let appender = create(&dir.join(&file))?;
+        *slot = Some((file, appender));
+    }
+    let (name, a) = slot.as_mut().expect("appender just ensured");
+    Ok((name.clone(), a))
+}
+
+/// Split an in-memory weight map into a sharded checkpoint: flat f32
+/// npy shards of at most `max_shard_bytes` payload (a tensor larger
+/// than the cap gets a shard of its own), plus the index. `weights`
+/// iteration order becomes the checkpoint order.
+pub fn write_checkpoint<'a>(
+    dir: &Path,
+    weights: impl IntoIterator<Item = (&'a str, &'a Mat)>,
+    max_shard_bytes: u64,
+) -> Result<ShardIndex> {
+    std::fs::create_dir_all(dir)?;
+    let mut index = ShardIndex::default();
+    let mut cur: Option<(String, npy::NpyAppender)> = None;
+    let mut seq = 0usize;
+    for (name, w) in weights {
+        let bytes = (w.data.len() * 4) as u64;
+        let (file, appender) = rolling_appender(
+            dir,
+            &mut cur,
+            &mut seq,
+            max_shard_bytes.max(1),
+            bytes,
+            "shard",
+            npy::NpyAppender::create_f32,
+        )?;
+        let offset = appender.append_f32(&w.data)?;
+        if index.shards.last() != Some(&file) {
+            index.shards.push(file);
+        }
+        index.order.push(TensorEntry {
+            name: name.to_string(),
+            rows: w.rows,
+            cols: w.cols,
+            loc: TensorLoc::Dense { shard: index.shards.len() - 1, offset, mask: None },
+        });
+    }
+    drop(cur);
+    index.save(dir)?;
+    Ok(index)
+}
+
+/// Read side of a sharded checkpoint. npy headers are parsed once per
+/// shard and cached; tensor reads are ranged.
+pub struct StoreReader {
+    root: PathBuf,
+    pub index: ShardIndex,
+    /// name -> position in `index.order`, built once at open: per-layer
+    /// lookups stay O(log n) at multi-thousand-tensor checkpoint scale.
+    by_name: BTreeMap<String, usize>,
+    headers: Mutex<BTreeMap<usize, npy::NpyHeader>>,
+}
+
+fn name_positions(index: &ShardIndex) -> BTreeMap<String, usize> {
+    index
+        .order
+        .iter()
+        .enumerate()
+        .map(|(i, e)| (e.name.clone(), i))
+        .collect()
+}
+
+impl StoreReader {
+    /// Open a checkpoint directory written by [`write_checkpoint`] or
+    /// the write-back sink.
+    pub fn open(dir: &Path) -> Result<StoreReader> {
+        let text = std::fs::read_to_string(dir.join(INDEX_FILE))
+            .with_context(|| format!("checkpoint index {}", dir.join(INDEX_FILE).display()))?;
+        let index = ShardIndex::from_json(&json::parse(&text)?)
+            .with_context(|| format!("parse {}", dir.join(INDEX_FILE).display()))?;
+        Ok(StoreReader {
+            root: dir.to_path_buf(),
+            by_name: name_positions(&index),
+            index,
+            headers: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// View an artifact bundle as a store: every manifest weight file
+    /// becomes a single-tensor shard (offset 0). No bytes are copied.
+    pub fn from_manifest(manifest: &Manifest) -> StoreReader {
+        let mut index = ShardIndex::default();
+        for w in &manifest.weights {
+            let (rows, cols) = match w.shape.len() {
+                1 => (1, w.shape[0]),
+                _ => (w.shape[0], w.shape.get(1).copied().unwrap_or(1)),
+            };
+            index.shards.push(w.file.clone());
+            index.order.push(TensorEntry {
+                name: w.name.clone(),
+                rows,
+                cols,
+                loc: TensorLoc::Dense { shard: index.shards.len() - 1, offset: 0, mask: None },
+            });
+        }
+        StoreReader {
+            root: manifest.root.clone(),
+            by_name: name_positions(&index),
+            index,
+            headers: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Indexed tensor lookup (O(log n)).
+    pub fn entry(&self, name: &str) -> Option<&TensorEntry> {
+        self.by_name.get(name).map(|&i| &self.index.order[i])
+    }
+
+    /// Cheap content fingerprint of the backing shards: per shard, the
+    /// file name, byte length and first 4 KiB, FNV-combined. NOT a full
+    /// hash — reading the whole model to fingerprint it would defeat
+    /// streaming — but it catches the realistic resume accident: the
+    /// checkpoint regenerated between attempts with identical tensor
+    /// names and shapes but different weights.
+    pub fn content_fingerprint(&self) -> Result<u64> {
+        use std::io::Read;
+        let mut h = crate::util::Fnv1a::new();
+        h.update(b"tsenor-ckpt-content-v1");
+        let mut head = vec![0u8; 4096];
+        for name in &self.index.shards {
+            let path = self.root.join(name);
+            let mut f = std::fs::File::open(&path)
+                .with_context(|| format!("fingerprint shard {}", path.display()))?;
+            let len = f.metadata()?.len();
+            h.update(name.as_bytes());
+            h.update(&len.to_le_bytes());
+            let mut got = 0usize;
+            while got < head.len() {
+                let n = f.read(&mut head[got..])?;
+                if n == 0 {
+                    break;
+                }
+                got += n;
+            }
+            h.update(&head[..got]);
+        }
+        Ok(h.finish())
+    }
+
+    fn shard_path(&self, shard: usize) -> PathBuf {
+        self.root.join(&self.index.shards[shard])
+    }
+
+    fn header(&self, shard: usize) -> Result<npy::NpyHeader> {
+        let mut cache = self.headers.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(h) = cache.get(&shard) {
+            return Ok(h.clone());
+        }
+        let h = npy::read_header(&self.shard_path(shard))?;
+        cache.insert(shard, h.clone());
+        Ok(h)
+    }
+
+    fn slice_f32(&self, shard: usize, offset: usize, count: usize) -> Result<Vec<f32>> {
+        let h = self.header(shard)?;
+        npy::read_slice_f32(&self.shard_path(shard), &h, offset, count)
+    }
+
+    fn slice_u8(&self, shard: usize, offset: usize, count: usize) -> Result<Vec<u8>> {
+        let h = self.header(shard)?;
+        npy::read_slice_u8(&self.shard_path(shard), &h, offset, count)
+    }
+
+    /// Read a dense tensor (the prefetcher's per-layer read). Errors on
+    /// compressed entries — the streaming *input* is dense weights.
+    pub fn read_dense(&self, entry: &TensorEntry) -> Result<Mat> {
+        match &entry.loc {
+            TensorLoc::Dense { shard, offset, .. } => {
+                let data = self
+                    .slice_f32(*shard, *offset, entry.numel())
+                    .with_context(|| format!("tensor '{}'", entry.name))?;
+                Ok(Mat::from_vec(entry.rows, entry.cols, data))
+            }
+            TensorLoc::Compressed { .. } => bail!(
+                "tensor '{}' is N:M-compressed; streaming prune input must be dense",
+                entry.name
+            ),
+        }
+    }
+
+    /// Decode a tensor to `(weights, mask)` whatever its kind — the
+    /// write-back reload path. Dense entries without a mask record get
+    /// the implicit nonzero mask; compressed entries reconstruct both
+    /// exactly from values + validated index bytes.
+    pub fn read_pruned(&self, entry: &TensorEntry) -> Result<(Mat, Mat)> {
+        match &entry.loc {
+            TensorLoc::Dense { shard, offset, mask } => {
+                let w = Mat::from_vec(
+                    entry.rows,
+                    entry.cols,
+                    self.slice_f32(*shard, *offset, entry.numel())
+                        .with_context(|| format!("tensor '{}'", entry.name))?,
+                );
+                let mask = match mask {
+                    Some((ms, mo)) => {
+                        let packed = self
+                            .slice_u8(*ms, *mo, entry.numel().div_ceil(8))
+                            .with_context(|| format!("mask of '{}'", entry.name))?;
+                        unpack_mask(&packed, entry.rows, entry.cols)
+                    }
+                    None => w.map(|x| if x != 0.0 { 1.0 } else { 0.0 }),
+                };
+                Ok((w, mask))
+            }
+            TensorLoc::Compressed {
+                n,
+                m,
+                val_shard,
+                val_offset,
+                idx_shard,
+                idx_offset,
+            } => {
+                ensure!(
+                    *m > 0 && entry.rows % m == 0,
+                    "tensor '{}': {} rows not divisible by M={m}",
+                    entry.name,
+                    entry.rows
+                );
+                let kept = entry.rows / m * n * entry.cols;
+                let values = self
+                    .slice_f32(*val_shard, *val_offset, kept)
+                    .with_context(|| format!("values of '{}'", entry.name))?;
+                let indices = self
+                    .slice_u8(*idx_shard, *idx_offset, kept)
+                    .with_context(|| format!("indices of '{}'", entry.name))?;
+                // Validate every index byte before trusting the shard:
+                // a corrupted byte is reported with its absolute offset
+                // in the index shard, so the bad disk region is
+                // locatable from the error alone.
+                for (k, &idx) in indices.iter().enumerate() {
+                    ensure!(
+                        (idx as usize) < *m,
+                        "tensor '{}': corrupt index byte at shard '{}' offset {} \
+                         (value {idx} >= M={m})",
+                        entry.name,
+                        self.index.shards[*idx_shard],
+                        idx_offset + k,
+                    );
+                }
+                let c = crate::sparse::nm::NmCompressed {
+                    rows: entry.rows,
+                    cols: entry.cols,
+                    n: *n,
+                    m: *m,
+                    values,
+                    indices,
+                };
+                let mask = c.mask()?;
+                Ok((c.decompress(), mask))
+            }
+        }
+    }
+
+    /// Load every tensor densely (tests / the in-memory comparison
+    /// path of `prune-ckpt`).
+    pub fn load_all(&self) -> Result<BTreeMap<String, Mat>> {
+        let mut out = BTreeMap::new();
+        for e in &self.index.order {
+            out.insert(e.name.clone(), self.read_dense(e)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Pack a 0/1 mask into bits, row-major, LSB-first within each byte.
+pub fn pack_mask(mask: &Mat) -> Vec<u8> {
+    let mut out = vec![0u8; mask.data.len().div_ceil(8)];
+    for (i, &x) in mask.data.iter().enumerate() {
+        if x != 0.0 {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_mask`].
+pub fn unpack_mask(packed: &[u8], rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |i, j| {
+        let at = i * cols + j;
+        if packed[at / 8] >> (at % 8) & 1 == 1 {
+            1.0
+        } else {
+            0.0
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tsenor_store_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn toy_weights(k: usize, seed: u64) -> Vec<(String, Mat)> {
+        let mut rng = Rng::new(seed);
+        (0..k)
+            .map(|i| {
+                let d = 8 + 8 * (i % 3);
+                (format!("layers.{i:02}.w"), Mat::from_fn(d, 16, |_, _| rng.normal()))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_sharding() {
+        let dir = tmp("roundtrip");
+        let weights = toy_weights(7, 3);
+        // Cap ~2 small tensors per shard so several shards form.
+        let index = write_checkpoint(
+            &dir,
+            weights.iter().map(|(n, w)| (n.as_str(), w)),
+            2 * 16 * 16 * 4,
+        )
+        .unwrap();
+        assert!(index.shards.len() >= 3, "expected several shards, got {:?}", index.shards);
+        let store = StoreReader::open(&dir).unwrap();
+        // Order preserved, every tensor reads back bit-exact.
+        let names: Vec<&str> = store.index.order.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, weights.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>());
+        for (name, w) in &weights {
+            let e = store.index.get(name).unwrap();
+            let got = store.read_dense(e).unwrap();
+            assert_eq!(got.data, w.data, "{name}");
+            assert_eq!((got.rows, got.cols), (w.rows, w.cols));
+        }
+    }
+
+    #[test]
+    fn oversized_tensor_gets_own_shard() {
+        let dir = tmp("oversize");
+        let big = Mat::from_fn(64, 64, |i, j| (i * 64 + j) as f32);
+        let small = Mat::from_fn(4, 4, |_, _| 1.0);
+        let index = write_checkpoint(
+            &dir,
+            [("small", &small), ("big", &big), ("small2", &small)],
+            1024, // smaller than `big`
+        )
+        .unwrap();
+        assert_eq!(index.shards.len(), 3);
+        let store = StoreReader::open(&dir).unwrap();
+        let got = store.read_dense(store.index.get("big").unwrap()).unwrap();
+        assert_eq!(got.data, big.data);
+    }
+
+    #[test]
+    fn mask_bits_roundtrip() {
+        let mut rng = Rng::new(9);
+        let mask = Mat::from_fn(13, 7, |_, _| if rng.next_u64() % 3 == 0 { 1.0 } else { 0.0 });
+        let packed = pack_mask(&mask);
+        assert_eq!(packed.len(), (13 * 7 + 7) / 8);
+        let back = unpack_mask(&packed, 13, 7);
+        assert_eq!(back.data, mask.data);
+    }
+
+    #[test]
+    fn index_json_roundtrip_including_compressed_entries() {
+        let index = ShardIndex {
+            shards: vec!["a.npy".into(), "b.npy".into()],
+            order: vec![
+                TensorEntry {
+                    name: "w1".into(),
+                    rows: 8,
+                    cols: 8,
+                    loc: TensorLoc::Dense { shard: 0, offset: 0, mask: Some((1, 4)) },
+                },
+                TensorEntry {
+                    name: "w2".into(),
+                    rows: 16,
+                    cols: 8,
+                    loc: TensorLoc::Compressed {
+                        n: 4,
+                        m: 8,
+                        val_shard: 0,
+                        val_offset: 64,
+                        idx_shard: 1,
+                        idx_offset: 12,
+                    },
+                },
+            ],
+        };
+        let back = ShardIndex::from_json(&index.to_json()).unwrap();
+        assert_eq!(back.shards, index.shards);
+        assert_eq!(back.order, index.order);
+        // Dangling shard references are rejected.
+        let mut bad = index.to_json();
+        if let Json::Obj(o) = &mut bad {
+            o.insert("shards".into(), Json::Arr(vec![Json::Str("a.npy".into())]));
+        }
+        assert!(ShardIndex::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = json::obj(vec![
+            ("format", Json::Str("something-else".into())),
+            ("shards", Json::Arr(vec![])),
+            ("tensors", Json::Arr(vec![])),
+        ]);
+        let err = ShardIndex::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("something-else"), "{err}");
+    }
+}

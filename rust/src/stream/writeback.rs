@@ -1,0 +1,408 @@
+//! Write-back sink: streams pruned layers to disk as they complete, so
+//! pruned weights never accumulate in memory. Two on-disk forms, both
+//! recorded in the same [`store::ShardIndex`] schema:
+//!
+//! * **dense** — the pruned f32 values plus the exact mask as packed
+//!   bits (1 bit/element). Bit-exact reload; masks are NOT inferred
+//!   from zeros (a kept weight may legitimately be 0.0).
+//! * **nm** (`NmCompressed`) — kept values + in-group u8 indices, the
+//!   2:4 / 16:32 sparse-tensor-core interchange layout. Used when the
+//!   layer's mask is column-wise N:M along the contraction axis (every
+//!   transposable mask is); layers whose mask is not (unstructured
+//!   runs, say) fall back to dense records in the same run.
+//!
+//! Crash consistency: shard bytes are appended with
+//! [`util::npy::NpyAppender`] (header re-patched + flushed per append),
+//! and the caller journals a layer only after `put` returns — so the
+//! journal never names bytes that a crash could have lost. Locations
+//! are recorded by shard *file name* ([`NamedLoc`]), which makes
+//! journal entries self-contained across run attempts: a resumed run
+//! writes new `wb-a<K>-…` files and never appends to a previous
+//! attempt's, it only reads them.
+
+use super::store::{pack_mask, rolling_appender, ShardIndex, StoreReader, TensorEntry, TensorLoc};
+use crate::masks::NmPattern;
+use crate::sparse::nm::NmCompressed;
+use crate::util::npy::NpyAppender;
+use crate::util::tensor::Mat;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Serialization mode of the sink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WritebackMode {
+    #[default]
+    Dense,
+    /// `NmCompressed` records where the mask allows, dense fallback.
+    Compressed,
+}
+
+impl WritebackMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WritebackMode::Dense => "dense",
+            WritebackMode::Compressed => "nm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WritebackMode> {
+        match s {
+            "dense" => Ok(WritebackMode::Dense),
+            "nm" | "compressed" => Ok(WritebackMode::Compressed),
+            _ => anyhow::bail!("unknown writeback mode '{s}' (valid: dense|nm)"),
+        }
+    }
+}
+
+/// Where one pruned layer landed, by shard *file name* (self-contained
+/// across run attempts — this is what the resume journal stores).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NamedLoc {
+    Dense {
+        file: String,
+        offset: usize,
+        mask_file: String,
+        mask_offset: usize,
+    },
+    Compressed {
+        n: usize,
+        m: usize,
+        val_file: String,
+        val_offset: usize,
+        idx_file: String,
+        idx_offset: usize,
+    },
+}
+
+/// Streaming shard writer for pruned layers. Shard files roll over at
+/// `max_shard_bytes` of payload; f32 values and u8 aux bytes (packed
+/// masks / nm indices) live in separate shard series because npy
+/// shards are homogeneous.
+pub struct WriteBack {
+    dir: PathBuf,
+    mode: WritebackMode,
+    max_shard_bytes: u64,
+    /// Unique tag for this run attempt (resume never reuses files).
+    attempt: String,
+    val: Option<(String, NpyAppender)>,
+    aux: Option<(String, NpyAppender)>,
+    val_seq: usize,
+    aux_seq: usize,
+}
+
+impl WriteBack {
+    pub fn create(
+        dir: &Path,
+        mode: WritebackMode,
+        max_shard_bytes: u64,
+        attempt: u64,
+    ) -> Result<WriteBack> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create write-back dir {}", dir.display()))?;
+        Ok(WriteBack {
+            dir: dir.to_path_buf(),
+            mode,
+            max_shard_bytes: max_shard_bytes.max(1),
+            attempt: format!("a{attempt}"),
+            val: None,
+            aux: None,
+            val_seq: 0,
+            aux_seq: 0,
+        })
+    }
+
+    pub fn mode(&self) -> WritebackMode {
+        self.mode
+    }
+
+    fn val_appender(&mut self, incoming: u64) -> Result<(String, &mut NpyAppender)> {
+        rolling_appender(
+            &self.dir,
+            &mut self.val,
+            &mut self.val_seq,
+            self.max_shard_bytes,
+            incoming,
+            &format!("wb-{}-val", self.attempt),
+            NpyAppender::create_f32,
+        )
+    }
+
+    fn aux_appender(&mut self, incoming: u64) -> Result<(String, &mut NpyAppender)> {
+        rolling_appender(
+            &self.dir,
+            &mut self.aux,
+            &mut self.aux_seq,
+            self.max_shard_bytes,
+            incoming,
+            &format!("wb-{}-aux", self.attempt),
+            NpyAppender::create_u8,
+        )
+    }
+
+    /// Stream one pruned layer out. Returns the location record for the
+    /// journal; by the time this returns, the bytes are flushed.
+    pub fn put(
+        &mut self,
+        _name: &str,
+        pattern: NmPattern,
+        w: &Mat,
+        mask: &Mat,
+    ) -> Result<NamedLoc> {
+        if self.mode == WritebackMode::Compressed && pattern.m > 0 && w.rows % pattern.m == 0 {
+            // The interchange layout needs the mask to be column-wise
+            // N:M along rows; compress tells us by failing cleanly.
+            if let Ok(c) = NmCompressed::compress(w, mask, pattern.n, pattern.m) {
+                let (val_file, val_offset) = {
+                    let (name, a) = self.val_appender((c.values.len() * 4) as u64)?;
+                    (name, a.append_f32(&c.values)?)
+                };
+                let (idx_file, idx_offset) = {
+                    let (name, a) = self.aux_appender(c.indices.len() as u64)?;
+                    (name, a.append_u8(&c.indices)?)
+                };
+                return Ok(NamedLoc::Compressed {
+                    n: pattern.n,
+                    m: pattern.m,
+                    val_file,
+                    val_offset,
+                    idx_file,
+                    idx_offset,
+                });
+            }
+        }
+        let packed = pack_mask(mask);
+        let (file, offset) = {
+            let (name, a) = self.val_appender((w.data.len() * 4) as u64)?;
+            (name, a.append_f32(&w.data)?)
+        };
+        let (mask_file, mask_offset) = {
+            let (name, a) = self.aux_appender(packed.len() as u64)?;
+            (name, a.append_u8(&packed)?)
+        };
+        Ok(NamedLoc::Dense { file, offset, mask_file, mask_offset })
+    }
+}
+
+/// Assemble the final checkpoint index for a (possibly multi-attempt)
+/// streamed run from name-based layer locations, in `order` (the
+/// manifest order of the run).
+pub fn save_index(
+    dir: &Path,
+    order: &[String],
+    layers: &BTreeMap<String, (usize, usize, NamedLoc)>,
+) -> Result<ShardIndex> {
+    let mut shards: Vec<String> = Vec::new();
+    let mut shard_of: BTreeMap<String, usize> = BTreeMap::new();
+    let mut intern = |file: &String| -> usize {
+        *shard_of.entry(file.clone()).or_insert_with(|| {
+            shards.push(file.clone());
+            shards.len() - 1
+        })
+    };
+    let mut index_order = Vec::with_capacity(order.len());
+    for name in order {
+        let Some((rows, cols, loc)) = layers.get(name) else {
+            anyhow::bail!("write-back index: layer '{name}' never completed");
+        };
+        let loc = match loc {
+            NamedLoc::Dense { file, offset, mask_file, mask_offset } => TensorLoc::Dense {
+                shard: intern(file),
+                offset: *offset,
+                mask: Some((intern(mask_file), *mask_offset)),
+            },
+            NamedLoc::Compressed { n, m, val_file, val_offset, idx_file, idx_offset } => {
+                TensorLoc::Compressed {
+                    n: *n,
+                    m: *m,
+                    val_shard: intern(val_file),
+                    val_offset: *val_offset,
+                    idx_shard: intern(idx_file),
+                    idx_offset: *idx_offset,
+                }
+            }
+        };
+        index_order.push(TensorEntry { name: name.clone(), rows: *rows, cols: *cols, loc });
+    }
+    let index = ShardIndex { shards, order: index_order };
+    index.save(dir)?;
+    Ok(index)
+}
+
+/// Reload a streamed run's pruned layers into a model state (weights
+/// replaced, masks installed), verifying each mask against its
+/// journaled checksum. The eval / fine-tune stages downstream of a
+/// streamed prune go through this.
+pub fn overlay_state(
+    dir: &Path,
+    state: &mut crate::model::ModelState,
+    checksums: &BTreeMap<String, u64>,
+) -> Result<()> {
+    let store = StoreReader::open(dir)?;
+    for entry in &store.index.order {
+        let (w, mask) = store.read_pruned(entry)?;
+        if let Some(&want) = checksums.get(&entry.name) {
+            let got = super::journal::mask_checksum(&mask);
+            ensure!(
+                got == want,
+                "layer '{}': reloaded mask checksum {got:#018x} != journaled \
+                 {want:#018x} (write-back shards corrupted or mixed up)",
+                entry.name
+            );
+        }
+        state.set_pruned(&entry.name, w, mask);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::solver::{solve_matrix, Method, SolveCfg};
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tsenor_writeback_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn pruned_layer(d: usize, seed: u64, pattern: NmPattern) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_fn(d, d, |_, _| rng.heavy_tail());
+        let mask = solve_matrix(Method::Tsenor, &w, pattern, &SolveCfg::default());
+        (w.hadamard(&mask), mask)
+    }
+
+    #[test]
+    fn dense_writeback_roundtrips_weights_and_mask() {
+        let dir = tmp("dense");
+        let pattern = NmPattern::new(4, 8);
+        let mut wb = WriteBack::create(&dir, WritebackMode::Dense, 1 << 14, 0).unwrap();
+        let mut layers = BTreeMap::new();
+        let mut originals = Vec::new();
+        for i in 0..4 {
+            let (w, mask) = pruned_layer(16, 30 + i, pattern);
+            let name = format!("l{i}");
+            let loc = wb.put(&name, pattern, &w, &mask).unwrap();
+            layers.insert(name.clone(), (16, 16, loc));
+            originals.push((name, w, mask));
+        }
+        let order: Vec<String> = originals.iter().map(|(n, _, _)| n.clone()).collect();
+        save_index(&dir, &order, &layers).unwrap();
+
+        let store = StoreReader::open(&dir).unwrap();
+        for (name, w, mask) in &originals {
+            let e = store.index.get(name).unwrap();
+            let (gw, gm) = store.read_pruned(e).unwrap();
+            assert_eq!(gw.data, w.data, "{name} weights");
+            assert_eq!(gm.data, mask.data, "{name} mask (exact, not zero-inferred)");
+        }
+    }
+
+    #[test]
+    fn dense_mask_distinguishes_kept_zero_from_pruned() {
+        let dir = tmp("kept_zero");
+        let pattern = NmPattern::new(2, 4);
+        // A mask keeping a weight whose VALUE is exactly 0.0.
+        let w = Mat::from_vec(4, 1, vec![0.0, 5.0, 0.0, 0.0]);
+        let mask = Mat::from_vec(4, 1, vec![1.0, 1.0, 0.0, 0.0]);
+        let mut wb = WriteBack::create(&dir, WritebackMode::Dense, 1 << 12, 0).unwrap();
+        let loc = wb.put("z", pattern, &w, &mask).unwrap();
+        let mut layers = BTreeMap::new();
+        layers.insert("z".to_string(), (4, 1, loc));
+        save_index(&dir, &["z".into()], &layers).unwrap();
+        let store = StoreReader::open(&dir).unwrap();
+        let (_, gm) = store.read_pruned(store.index.get("z").unwrap()).unwrap();
+        assert_eq!(gm.data, mask.data, "kept-zero weight must stay in the mask");
+    }
+
+    #[test]
+    fn compressed_writeback_roundtrips_and_falls_back() {
+        let dir = tmp("nm");
+        let pattern = NmPattern::new(4, 8);
+        let mut wb = WriteBack::create(&dir, WritebackMode::Compressed, 1 << 14, 1).unwrap();
+        let mut layers = BTreeMap::new();
+        // Transposable layer -> compressed record.
+        let (w, mask) = pruned_layer(16, 77, pattern);
+        let loc = wb.put("t", pattern, &w, &mask).unwrap();
+        assert!(matches!(loc, NamedLoc::Compressed { .. }));
+        layers.insert("t".to_string(), (16, 16, loc));
+        // Unstructured-ish mask -> dense fallback in the same run.
+        let wu = Mat::from_fn(8, 8, |i, j| (1 + i * 8 + j) as f32);
+        let mut mu = Mat::zeros(8, 8);
+        mu.data[0] = 1.0; // 1 kept in the first column group: not 4:8
+        let loc = wb.put("u", pattern, &wu.hadamard(&mu), &mu).unwrap();
+        assert!(matches!(loc, NamedLoc::Dense { .. }));
+        layers.insert("u".to_string(), (8, 8, loc));
+        save_index(&dir, &["t".into(), "u".into()], &layers).unwrap();
+
+        let store = StoreReader::open(&dir).unwrap();
+        let (gw, gm) = store.read_pruned(store.index.get("t").unwrap()).unwrap();
+        assert_eq!(gw.data, w.data);
+        assert_eq!(gm.data, mask.data);
+        let (gw, gm) = store.read_pruned(store.index.get("u").unwrap()).unwrap();
+        assert_eq!(gw.data, wu.hadamard(&mu).data);
+        assert_eq!(gm.data, mu.data);
+    }
+
+    #[test]
+    fn corrupt_index_byte_is_rejected_with_offset() {
+        let dir = tmp("corrupt");
+        let pattern = NmPattern::new(4, 8);
+        let mut wb = WriteBack::create(&dir, WritebackMode::Compressed, 1 << 14, 0).unwrap();
+        let (w, mask) = pruned_layer(16, 91, pattern);
+        let loc = wb.put("t", pattern, &w, &mask).unwrap();
+        let mut layers = BTreeMap::new();
+        layers.insert("t".to_string(), (16, 16, loc));
+        let index = save_index(&dir, &["t".into()], &layers).unwrap();
+        drop(wb);
+        // Flip one index byte to an out-of-range value.
+        let TensorLoc::Compressed { idx_shard, idx_offset, .. } = &index.order[0].loc
+        else {
+            panic!("expected compressed record")
+        };
+        let shard_path = dir.join(&index.shards[*idx_shard]);
+        let mut bytes = std::fs::read(&shard_path).unwrap();
+        let h = crate::util::npy::read_header(&shard_path).unwrap();
+        let victim = idx_offset + 5;
+        bytes[h.data_start + victim] = 200; // >= M
+        std::fs::write(&shard_path, bytes).unwrap();
+        let store = StoreReader::open(&dir).unwrap();
+        let err = store
+            .read_pruned(store.index.get("t").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("corrupt index byte"), "{err}");
+        assert!(err.contains(&format!("offset {victim}")), "must name the offset: {err}");
+        assert!(err.contains("200"), "must name the value: {err}");
+    }
+
+    #[test]
+    fn multi_attempt_index_merges_shards() {
+        let dir = tmp("attempts");
+        let pattern = NmPattern::new(4, 8);
+        let mut layers = BTreeMap::new();
+        let (w0, m0) = pruned_layer(8, 1, pattern);
+        let (w1, m1) = pruned_layer(8, 2, pattern);
+        {
+            let mut wb = WriteBack::create(&dir, WritebackMode::Dense, 1 << 12, 0).unwrap();
+            let loc = wb.put("first", pattern, &w0, &m0).unwrap();
+            layers.insert("first".to_string(), (8, 8, loc));
+        }
+        {
+            let mut wb = WriteBack::create(&dir, WritebackMode::Dense, 1 << 12, 1).unwrap();
+            let loc = wb.put("second", pattern, &w1, &m1).unwrap();
+            layers.insert("second".to_string(), (8, 8, loc));
+        }
+        let index = save_index(&dir, &["first".into(), "second".into()], &layers).unwrap();
+        assert!(index.shards.iter().any(|s| s.contains("-a0-")));
+        assert!(index.shards.iter().any(|s| s.contains("-a1-")));
+        let store = StoreReader::open(&dir).unwrap();
+        let (gw, _) = store.read_pruned(store.index.get("first").unwrap()).unwrap();
+        assert_eq!(gw.data, w0.data);
+        let (gw, _) = store.read_pruned(store.index.get("second").unwrap()).unwrap();
+        assert_eq!(gw.data, w1.data);
+    }
+}

@@ -5,3 +5,41 @@ pub mod json;
 pub mod npy;
 pub mod rng;
 pub mod tensor;
+
+/// Incremental FNV-1a 64 — deterministic across runs and platforms.
+/// The ONE copy of the constants: the executable-cache shard picker,
+/// the stream journal's mask checksums and the resume fingerprints all
+/// hash through here. The streaming form exists so layer-sized inputs
+/// (mask bit patterns, shard samples) hash without materializing a
+/// byte buffer.
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}

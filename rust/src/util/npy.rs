@@ -1,9 +1,23 @@
-//! Minimal .npy reader/writer (v1.0, C-order, little-endian f32/i32/u8).
+//! Minimal .npy reader/writer (C-order, little-endian f32/i32/u8).
 //! This is the weight-interchange format between the build-time python
-//! side (np.save) and the runtime Rust coordinator.
+//! side (np.save) and the runtime Rust coordinator, and the shard
+//! format of the out-of-core streaming subsystem (`stream::store`).
+//!
+//! Versions: 1.0 (2-byte header length) and 2.0 (4-byte header length —
+//! numpy switches to it when the header outgrows the 64KB v1.0 limit,
+//! which large sharded checkpoints routinely do) are read; anything
+//! else is rejected with an error naming the found version. Writes are
+//! v1.0 unless the header needs v2.0.
+//!
+//! Beyond whole-file reads, this module exposes header-level access
+//! ([`read_header`]) and ranged element reads ([`read_slice_f32`] /
+//! [`read_slice_u8`]) so the streaming store can pull one tensor out of
+//! a multi-tensor shard without loading the shard, plus a crash-safe
+//! [`NpyAppender`] whose header is re-patched after every append (any
+//! prefix of a partially-written shard parses as a valid file).
 
-use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -33,6 +47,23 @@ impl Npy {
 }
 
 const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// Parsed npy preamble: dtype, layout, shape, and where the raw data
+/// starts in the file.
+#[derive(Clone, Debug)]
+pub struct NpyHeader {
+    pub descr: String,
+    pub fortran: bool,
+    pub shape: Vec<usize>,
+    /// Byte offset of the first data element.
+    pub data_start: usize,
+}
+
+impl NpyHeader {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
 
 /// Parse the python-dict header, e.g.
 /// `{'descr': '<f4', 'fortran_order': False, 'shape': (256, 256), }`.
@@ -69,36 +100,93 @@ fn parse_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
     Ok((descr, fortran, shape))
 }
 
+/// Parse magic + version + header dict from the first bytes of a file.
+/// `buf` needs to cover the full header (see [`read_header`] for the
+/// file-based variant that sizes the read itself).
+pub fn parse_preamble(buf: &[u8]) -> Result<NpyHeader> {
+    let total = parse_probe(buf)?;
+    ensure!(
+        buf.len() >= total,
+        "npy: truncated header ({} bytes, need {total})",
+        buf.len()
+    );
+    // Version was validated by the probe: major 1 => 2-byte header
+    // length at offset 8, major 2 => 4-byte.
+    let hstart = if buf[6] == 1 { 10 } else { 12 };
+    let header = std::str::from_utf8(&buf[hstart..total])?;
+    let (descr, fortran, shape) = parse_header(header)?;
+    Ok(NpyHeader { descr, fortran, shape, data_start: total })
+}
+
+/// Read just the preamble of an npy file on disk (no data bytes).
+pub fn read_header(path: &Path) -> Result<NpyHeader> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    // 12-byte fixed preamble first, then exactly the declared header.
+    let mut fixed = [0u8; 12];
+    let got = read_up_to(&mut f, &mut fixed)?;
+    let probe = parse_probe(&fixed[..got])?;
+    let mut buf = fixed[..got].to_vec();
+    let need = probe;
+    if buf.len() < need {
+        let mut rest = vec![0u8; need - buf.len()];
+        f.read_exact(&mut rest)
+            .with_context(|| format!("npy header of {}", path.display()))?;
+        buf.extend_from_slice(&rest);
+    }
+    parse_preamble(&buf).with_context(|| format!("npy header of {}", path.display()))
+}
+
+/// Total preamble size (magic..end of header dict) declared by the
+/// first bytes, validating the version on the way.
+fn parse_probe(buf: &[u8]) -> Result<usize> {
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let (major, minor) = (buf[6], buf[7]);
+    match major {
+        1 => Ok(10 + u16::from_le_bytes([buf[8], buf[9]]) as usize),
+        2 => {
+            ensure!(buf.len() >= 12, "npy: truncated v2.0 header length");
+            Ok(12 + u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize)
+        }
+        _ => bail!(
+            "npy: unsupported version {major}.{minor} (this reader handles 1.0 \
+             and 2.0; rewrite the file with np.save or np.lib.format 2.0)"
+        ),
+    }
+}
+
+fn read_up_to(f: &mut std::fs::File, buf: &mut [u8]) -> Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = f.read(&mut buf[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    Ok(got)
+}
+
 pub fn read(path: &Path) -> Result<Npy> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     let mut buf = Vec::new();
     f.read_to_end(&mut buf)?;
-    read_bytes(&buf)
+    read_bytes(&buf).with_context(|| format!("read {}", path.display()))
 }
 
 pub fn read_bytes(buf: &[u8]) -> Result<Npy> {
-    if buf.len() < 10 || &buf[..6] != MAGIC {
-        bail!("not an npy file");
-    }
-    let (major, _minor) = (buf[6], buf[7]);
-    let (hlen, hstart) = if major == 1 {
-        (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10)
-    } else {
-        (
-            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
-            12,
-        )
-    };
-    let header = std::str::from_utf8(&buf[hstart..hstart + hlen])?;
-    let (descr, fortran, shape) = parse_header(header)?;
-    if fortran {
+    let h = parse_preamble(buf)?;
+    if h.fortran {
         bail!("npy: fortran order unsupported");
     }
-    let numel: usize = shape.iter().product();
-    let body = &buf[hstart + hlen..];
-    let data = match descr.as_str() {
+    let numel = h.numel();
+    let body = &buf[h.data_start..];
+    let data = match h.descr.as_str() {
         "<f4" => {
+            ensure!(body.len() >= numel * 4, "npy: truncated f32 data");
             let mut v = Vec::with_capacity(numel);
             for c in body[..numel * 4].chunks_exact(4) {
                 v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
@@ -106,20 +194,94 @@ pub fn read_bytes(buf: &[u8]) -> Result<Npy> {
             NpyData::F32(v)
         }
         "<i4" => {
+            ensure!(body.len() >= numel * 4, "npy: truncated i32 data");
             let mut v = Vec::with_capacity(numel);
             for c in body[..numel * 4].chunks_exact(4) {
                 v.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
             }
             NpyData::I32(v)
         }
-        "|u1" => NpyData::U8(body[..numel].to_vec()),
+        "|u1" => {
+            ensure!(body.len() >= numel, "npy: truncated u8 data");
+            NpyData::U8(body[..numel].to_vec())
+        }
         other => bail!("npy: unsupported dtype {other}"),
     };
-    Ok(Npy { shape, data })
+    Ok(Npy { shape: h.shape, data })
 }
 
-pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
+/// Read `count` f32 elements starting at element `offset` of a flat
+/// (or flattened) npy file, without loading the rest of the file. The
+/// caller usually has the header cached; pass it to skip re-parsing.
+pub fn read_slice_f32(
+    path: &Path,
+    header: &NpyHeader,
+    offset: usize,
+    count: usize,
+) -> Result<Vec<f32>> {
+    ensure!(
+        header.descr == "<f4",
+        "npy: {} holds {}, expected <f4",
+        path.display(),
+        header.descr
+    );
+    // Same stance as the whole-file reader: a Fortran-order file read
+    // as row-major would silently transpose every tensor.
+    ensure!(!header.fortran, "npy: {} is fortran order (unsupported)", path.display());
+    ensure!(
+        offset + count <= header.numel(),
+        "npy: slice {}..{} out of bounds ({} elements) in {}",
+        offset,
+        offset + count,
+        header.numel(),
+        path.display()
+    );
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    f.seek(SeekFrom::Start((header.data_start + offset * 4) as u64))?;
+    let mut raw = vec![0u8; count * 4];
+    f.read_exact(&mut raw)
+        .with_context(|| format!("npy: short read in {}", path.display()))?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// u8 counterpart of [`read_slice_f32`].
+pub fn read_slice_u8(
+    path: &Path,
+    header: &NpyHeader,
+    offset: usize,
+    count: usize,
+) -> Result<Vec<u8>> {
+    ensure!(
+        header.descr == "|u1",
+        "npy: {} holds {}, expected |u1",
+        path.display(),
+        header.descr
+    );
+    ensure!(!header.fortran, "npy: {} is fortran order (unsupported)", path.display());
+    ensure!(
+        offset + count <= header.numel(),
+        "npy: slice {}..{} out of bounds ({} elements) in {}",
+        offset,
+        offset + count,
+        header.numel(),
+        path.display()
+    );
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    f.seek(SeekFrom::Start((header.data_start + offset) as u64))?;
+    let mut raw = vec![0u8; count];
+    f.read_exact(&mut raw)
+        .with_context(|| format!("npy: short read in {}", path.display()))?;
+    Ok(raw)
+}
+
+/// Render the header dict for `shape`, padded so the whole preamble is
+/// a multiple of 64 ending in `\n`. Returns (header_bytes, version).
+fn render_header(descr: &str, shape: &[usize], min_total: usize) -> (Vec<u8>, u8) {
     let shape_str = match shape.len() {
         1 => format!("({},)", shape[0]),
         _ => format!(
@@ -131,37 +293,173 @@ pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
                 .join(", ")
         ),
     };
-    let mut header = format!(
-        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
-    );
-    // Pad so that magic+version+len+header is a multiple of 64, ending in \n.
-    let base = MAGIC.len() + 2 + 2;
-    let total = (base + header.len() + 1).div_ceil(64) * 64;
-    while base + header.len() + 1 < total {
-        header.push(' ');
+    let mut header =
+        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // v1.0 has a 10-byte fixed preamble and a u16 length; fall back to
+    // v2.0 (12-byte preamble, u32 length) when the header outgrows it.
+    let base_v1 = MAGIC.len() + 2 + 2;
+    let mut total = (base_v1 + header.len() + 1).div_ceil(64) * 64;
+    total = total.max(min_total);
+    if total - base_v1 <= u16::MAX as usize {
+        while base_v1 + header.len() + 1 < total {
+            header.push(' ');
+        }
+        header.push('\n');
+        (header.into_bytes(), 1)
+    } else {
+        let base_v2 = MAGIC.len() + 2 + 4;
+        let mut total = (base_v2 + header.len() + 1).div_ceil(64) * 64;
+        total = total.max(min_total);
+        while base_v2 + header.len() + 1 < total {
+            header.push(' ');
+        }
+        header.push('\n');
+        (header.into_bytes(), 2)
     }
-    header.push('\n');
+}
+
+/// The complete preamble (magic + version + length + header dict) as
+/// one buffer, so callers can emit it in a SINGLE write: the appender
+/// re-patches the preamble in place on every append, and a one-block
+/// 128-byte write at offset 0 is the narrowest possible tear window
+/// for a crash landing mid-patch.
+fn render_full_preamble(descr: &str, shape: &[usize], min_total: usize) -> Vec<u8> {
+    let (header, version) = render_header(descr, shape, min_total);
+    let mut buf = Vec::with_capacity(12 + header.len());
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&[version, 0]);
+    match version {
+        1 => buf.extend_from_slice(&(header.len() as u16).to_le_bytes()),
+        _ => buf.extend_from_slice(&(header.len() as u32).to_le_bytes()),
+    }
+    buf.extend_from_slice(&header);
+    buf
+}
+
+fn write_preamble(
+    f: &mut std::fs::File,
+    descr: &str,
+    shape: &[usize],
+    min_total: usize,
+) -> Result<usize> {
+    let buf = render_full_preamble(descr, shape, min_total);
+    f.write_all(&buf)?;
+    Ok(buf.len())
+}
+
+pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&[1, 0])?;
-    f.write_all(&(header.len() as u16).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
+    write_preamble(&mut f, "<f4", shape, 0)?;
     for x in data {
         f.write_all(&x.to_le_bytes())?;
     }
     Ok(())
 }
 
+pub fn write_u8(path: &Path, shape: &[usize], data: &[u8]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    write_preamble(&mut f, "|u1", shape, 0)?;
+    f.write_all(data)?;
+    Ok(())
+}
+
+/// Fixed preamble size reserved by [`NpyAppender`]: big enough for any
+/// 1-D u64 element count, 64-aligned.
+const APPEND_PREAMBLE: usize = 128;
+
+/// Append-only flat npy writer whose header is re-patched (and the file
+/// flushed) after every append: if the process dies between appends,
+/// the file on disk is a *valid* npy array covering every element
+/// appended so far. The streaming write-back sink builds its shard
+/// files with this, so a crash never leaves an unreadable shard.
+pub struct NpyAppender {
+    file: std::fs::File,
+    descr: &'static str,
+    elem_size: usize,
+    elems: usize,
+}
+
+impl NpyAppender {
+    fn create(path: &Path, descr: &'static str, elem_size: usize) -> Result<NpyAppender> {
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let wrote = write_preamble(&mut file, descr, &[0], APPEND_PREAMBLE)?;
+        ensure!(wrote == APPEND_PREAMBLE, "npy appender: preamble size drifted");
+        Ok(NpyAppender { file, descr, elem_size, elems: 0 })
+    }
+
+    pub fn create_f32(path: &Path) -> Result<NpyAppender> {
+        Self::create(path, "<f4", 4)
+    }
+
+    pub fn create_u8(path: &Path) -> Result<NpyAppender> {
+        Self::create(path, "|u1", 1)
+    }
+
+    /// Elements appended so far (= the element offset the next append
+    /// will land at).
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    /// Bytes of payload appended so far.
+    pub fn data_bytes(&self) -> usize {
+        self.elems * self.elem_size
+    }
+
+    fn commit(&mut self, count: usize) -> Result<()> {
+        self.elems += count;
+        // Re-render the header for the new length in place. The
+        // preamble is fixed-size, so the patch never moves data.
+        self.file.seek(SeekFrom::Start(0))?;
+        let wrote = write_preamble(&mut self.file, self.descr, &[self.elems], APPEND_PREAMBLE)?;
+        ensure!(wrote == APPEND_PREAMBLE, "npy appender: preamble size drifted");
+        self.file.seek(SeekFrom::End(0))?;
+        self.file.flush()?;
+        self.file.sync_data().ok(); // best effort on exotic filesystems
+        Ok(())
+    }
+
+    /// Append f32 elements; returns the element offset they start at.
+    pub fn append_f32(&mut self, data: &[f32]) -> Result<usize> {
+        ensure!(self.descr == "<f4", "npy appender: f32 append into {} shard", self.descr);
+        let at = self.elems;
+        let mut raw = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            raw.extend_from_slice(&x.to_le_bytes());
+        }
+        self.file.write_all(&raw)?;
+        self.commit(data.len())?;
+        Ok(at)
+    }
+
+    /// Append u8 elements; returns the element offset they start at.
+    pub fn append_u8(&mut self, data: &[u8]) -> Result<usize> {
+        ensure!(self.descr == "|u1", "npy appender: u8 append into {} shard", self.descr);
+        let at = self.elems;
+        self.file.write_all(data)?;
+        self.commit(data.len())?;
+        Ok(at)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip_f32() {
+    fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("tsenor_npy_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("a.npy");
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let p = tmp("a.npy");
         let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
         write_f32(&p, &[3, 4], &data).unwrap();
         let npy = read(&p).unwrap();
@@ -171,16 +469,108 @@ mod tests {
 
     #[test]
     fn roundtrip_1d() {
-        let dir = std::env::temp_dir().join("tsenor_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("b.npy");
+        let p = tmp("b.npy");
         write_f32(&p, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
         let npy = read(&p).unwrap();
         assert_eq!(npy.shape, vec![5]);
     }
 
     #[test]
+    fn roundtrip_u8() {
+        let p = tmp("u.npy");
+        write_u8(&p, &[6], &[0, 1, 2, 253, 254, 255]).unwrap();
+        let npy = read(&p).unwrap();
+        assert_eq!(npy.shape, vec![6]);
+        assert_eq!(npy.data, NpyData::U8(vec![0, 1, 2, 253, 254, 255]));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(read_bytes(b"not numpy at all").is_err());
+    }
+
+    /// Hand-build a v2.0 file (4-byte header length) and read it back.
+    #[test]
+    fn reads_v2_headers() {
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (3,), }\n";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&[2, 0]);
+        buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        for x in [1.0f32, 2.0, 3.0] {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let npy = read_bytes(&buf).unwrap();
+        assert_eq!(npy.shape, vec![3]);
+        assert_eq!(npy.f32().unwrap(), &[1.0, 2.0, 3.0]);
+        // File-based header path agrees.
+        let p = tmp("v2.npy");
+        std::fs::write(&p, &buf).unwrap();
+        let h = read_header(&p).unwrap();
+        assert_eq!(h.shape, vec![3]);
+        assert_eq!(h.data_start, 10 + 2 + header.len());
+    }
+
+    /// Unsupported versions are named, not silently misparsed.
+    #[test]
+    fn rejects_other_versions_naming_them() {
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (1,), }\n";
+        for (major, minor) in [(3u8, 0u8), (0, 9)] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&[major, minor]);
+            buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+            buf.extend_from_slice(header.as_bytes());
+            let err = read_bytes(&buf).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("version {major}.{minor}")),
+                "error must name the version: {err}"
+            );
+            assert!(err.contains("1.0") && err.contains("2.0"), "{err}");
+        }
+    }
+
+    #[test]
+    fn slice_reads_match_whole_file() {
+        let p = tmp("s.npy");
+        let data: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        write_f32(&p, &[64], &data).unwrap();
+        let h = read_header(&p).unwrap();
+        assert_eq!(read_slice_f32(&p, &h, 0, 64).unwrap(), data);
+        assert_eq!(read_slice_f32(&p, &h, 10, 7).unwrap(), &data[10..17]);
+        assert!(read_slice_f32(&p, &h, 60, 5).is_err(), "oob slice must fail");
+    }
+
+    #[test]
+    fn appender_is_valid_after_every_append() {
+        let p = tmp("app.npy");
+        let mut a = NpyAppender::create_f32(&p).unwrap();
+        assert_eq!(read(&p).unwrap().shape, vec![0]);
+        let o1 = a.append_f32(&[1.0, 2.0]).unwrap();
+        assert_eq!(o1, 0);
+        // Readable mid-stream: this is the crash-consistency property.
+        let mid = read(&p).unwrap();
+        assert_eq!(mid.f32().unwrap(), &[1.0, 2.0]);
+        let o2 = a.append_f32(&[3.0]).unwrap();
+        assert_eq!(o2, 2);
+        drop(a);
+        let done = read(&p).unwrap();
+        assert_eq!(done.shape, vec![3]);
+        assert_eq!(done.f32().unwrap(), &[1.0, 2.0, 3.0]);
+        // Ranged read out of an appended shard.
+        let h = read_header(&p).unwrap();
+        assert_eq!(read_slice_f32(&p, &h, 1, 2).unwrap(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn appender_u8() {
+        let p = tmp("appu.npy");
+        let mut a = NpyAppender::create_u8(&p).unwrap();
+        a.append_u8(&[7, 8]).unwrap();
+        a.append_u8(&[9]).unwrap();
+        drop(a);
+        let npy = read(&p).unwrap();
+        assert_eq!(npy.data, NpyData::U8(vec![7, 8, 9]));
     }
 }

@@ -172,6 +172,7 @@ fn report_from_outcomes(
         wall_secs: 0.0,
         engine_exec_calls: 0,
         engine_exec_secs: 0.0,
+        stream_peak_bytes: 0,
         state,
     }
 }

@@ -1,0 +1,153 @@
+//! Property tests for `NmCompressed` shard serialization: for random
+//! weights and random column-wise N:M masks across the interchange
+//! patterns (1:4, 2:4, 4:8, 16:32), compress -> write shard -> read
+//! shard -> decompress must round-trip bit-exactly (values AND mask),
+//! and corrupted index bytes must be rejected with an error naming
+//! the shard offset of the bad byte.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use tsenor::masks::NmPattern;
+use tsenor::sparse::nm::NmCompressed;
+use tsenor::stream::store::{StoreReader, TensorLoc};
+use tsenor::stream::writeback::{save_index, NamedLoc, WriteBack, WritebackMode};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+const PATTERNS: &[(usize, usize)] = &[(1, 4), (2, 4), (4, 8), (16, 32)];
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("tsenor_nm_shard").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Random column-wise N:M mask: every M consecutive rows of every
+/// column keep exactly N random positions. (No transposability needed
+/// — compression is along the contraction axis only.)
+fn random_nm_mask(rng: &mut Rng, rows: usize, cols: usize, n: usize, m: usize) -> Mat {
+    let mut mask = Mat::zeros(rows, cols);
+    for g in 0..rows / m {
+        for j in 0..cols {
+            // Partial Fisher-Yates over the group's M offsets.
+            let mut offs: Vec<usize> = (0..m).collect();
+            for pick in 0..n {
+                let k = pick + (rng.next_u64() as usize) % (m - pick);
+                offs.swap(pick, k);
+                *mask.at_mut(g * m + offs[pick], j) = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+fn random_layer(rng: &mut Rng, n: usize, m: usize) -> (Mat, Mat, usize, usize) {
+    // Rows: 1..=3 groups of M; cols: odd sizes allowed.
+    let rows = m * (1 + (rng.next_u64() as usize) % 3);
+    let cols = 3 + (rng.next_u64() as usize) % 13;
+    let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+    let mask = random_nm_mask(rng, rows, cols, n, m);
+    let mut wm = w.hadamard(&mask);
+    // Canonical +0.0 at pruned slots, exactly as the executor emits
+    // (hadamard alone leaves -0.0 where negative weights were masked,
+    // and an nm record cannot carry a pruned zero's sign).
+    for (wv, mv) in wm.data.iter_mut().zip(&mask.data) {
+        if *mv == 0.0 {
+            *wv = 0.0;
+        }
+    }
+    (wm, mask, rows, cols)
+}
+
+#[test]
+fn compress_shard_roundtrip_is_bit_exact_for_all_patterns() {
+    let mut rng = Rng::new(42);
+    for &(n, m) in PATTERNS {
+        let dir = tmp(&format!("rt_{n}_{m}"));
+        let mut wb = WriteBack::create(&dir, WritebackMode::Compressed, 1 << 13, 0).unwrap();
+        let mut layers = BTreeMap::new();
+        let mut order = Vec::new();
+        let mut originals = Vec::new();
+        for t in 0..6 {
+            let (wm, mask, rows, cols) = random_layer(&mut rng, n, m);
+            let name = format!("t{t}");
+            // Direct compression must succeed for a columnwise mask...
+            let c = NmCompressed::compress(&wm, &mask, n, m).unwrap();
+            assert_eq!(c.decompress().data, wm.data);
+            // ...and the shard trip must preserve every bit.
+            let loc = wb.put(&name, NmPattern::new(n, m), &wm, &mask).unwrap();
+            assert!(
+                matches!(loc, NamedLoc::Compressed { .. }),
+                "{n}:{m} t{t}: columnwise mask must take the nm record path"
+            );
+            layers.insert(name.clone(), (rows, cols, loc));
+            order.push(name.clone());
+            originals.push((name, wm, mask));
+        }
+        save_index(&dir, &order, &layers).unwrap();
+        let store = StoreReader::open(&dir).unwrap();
+        for (name, wm, mask) in &originals {
+            let e = store.index.get(name).unwrap();
+            let (gw, gm) = store.read_pruned(e).unwrap();
+            let wb_bits: Vec<u32> = gw.data.iter().map(|x| x.to_bits()).collect();
+            let or_bits: Vec<u32> = wm.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(wb_bits, or_bits, "{n}:{m} {name}: values");
+            assert_eq!(gm.data, mask.data, "{n}:{m} {name}: mask");
+        }
+    }
+}
+
+#[test]
+fn corrupted_index_bytes_are_rejected_naming_the_offset() {
+    let mut rng = Rng::new(7);
+    for &(n, m) in PATTERNS {
+        let dir = tmp(&format!("corrupt_{n}_{m}"));
+        let mut wb = WriteBack::create(&dir, WritebackMode::Compressed, 1 << 13, 0).unwrap();
+        let (wm, mask, rows, cols) = random_layer(&mut rng, n, m);
+        let loc = wb.put("t", NmPattern::new(n, m), &wm, &mask).unwrap();
+        let mut layers = BTreeMap::new();
+        layers.insert("t".to_string(), (rows, cols, loc));
+        let index = save_index(&dir, &["t".into()], &layers).unwrap();
+        drop(wb);
+
+        let TensorLoc::Compressed { idx_shard, idx_offset, .. } = &index.order[0].loc
+        else {
+            panic!("expected nm record")
+        };
+        let shard = dir.join(&index.shards[*idx_shard]);
+        let header = tsenor::util::npy::read_header(&shard).unwrap();
+        let kept = rows / m * n * cols;
+        let victim = idx_offset + (rng.next_u64() as usize) % kept;
+        let mut bytes = std::fs::read(&shard).unwrap();
+        bytes[header.data_start + victim] = m as u8; // one past the valid range
+        std::fs::write(&shard, bytes).unwrap();
+
+        let store = StoreReader::open(&dir).unwrap();
+        let err = store
+            .read_pruned(store.index.get("t").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("corrupt index byte"), "{n}:{m}: {err}");
+        assert!(
+            err.contains(&format!("offset {victim}")),
+            "{n}:{m}: must name offset {victim}: {err}"
+        );
+    }
+}
+
+#[test]
+fn duplicate_index_bytes_are_rejected_by_mask_reconstruction() {
+    // An in-range but duplicated index is also corruption: decompress
+    // would silently drop a kept value. mask() catches it.
+    let c = NmCompressed {
+        rows: 4,
+        cols: 1,
+        n: 2,
+        m: 4,
+        values: vec![1.0, 2.0],
+        indices: vec![3, 3],
+    };
+    let err = c.mask().unwrap_err().to_string();
+    assert!(err.contains("duplicate index"), "{err}");
+}

@@ -30,6 +30,14 @@ fn shipped_mixed_spec_parses_and_is_mixed() {
     assert_eq!(spec.service.window_ms, 2);
     assert_eq!(spec.service.max_in_flight, 4);
     assert_eq!(spec.service.pool, 2);
+    // So does the streaming block (whole-model budget = the in-memory
+    // behavior, just streamed).
+    let stream = spec.stream.clone().expect("shipped spec exercises the stream block");
+    assert_eq!(stream.memory_budget, 0);
+    assert_eq!(stream.io_threads, 2);
+    assert_eq!(stream.writeback, tsenor::stream::writeback::WritebackMode::Dense);
+    assert!(!stream.resume);
+    assert_eq!(stream.dir, "artifacts/stream");
     // And it round-trips.
     let back = PruneSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
     assert_eq!(spec, back);

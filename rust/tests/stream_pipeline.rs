@@ -1,0 +1,558 @@
+//! Differential harness for the out-of-core streaming subsystem.
+//!
+//! The contract under test (ISSUE 4 acceptance criteria):
+//!
+//! * for EVERY framework, a streamed run at any `memory_budget` ≥ the
+//!   largest single layer produces a `to_json_stripped()` report
+//!   byte-identical to the in-memory executor path (both write-back
+//!   modes, with and without cross-layer batching quanta);
+//! * an interrupted-then-resumed run matches an uninterrupted one —
+//!   stripped report AND reloaded weights/masks — at every
+//!   interruption point;
+//! * peak resident weight bytes tracked by the prefetch pool never
+//!   exceed the configured budget, and an impossible budget (smaller
+//!   than one layer) fails up front naming the layer;
+//! * resuming under changed pruning mathematics is refused.
+//!
+//! Everything here is artifact-free: checkpoints are synthetic, Gram
+//! matrices are identity (mirroring `prune-ckpt`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use tsenor::coordinator::executor::{self, LayerTask};
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::model::ModelState;
+use tsenor::pruning::{CpuOracle, LayerProblem, MaskOracle, OracleStats};
+use tsenor::spec::report::PruneReport;
+use tsenor::spec::{Framework, PruneSpec, StreamCfg, Structure};
+use tsenor::stream::store::{write_checkpoint, StoreReader};
+use tsenor::stream::writeback::{overlay_state, WritebackMode};
+use tsenor::stream::{run_prune_stream, StreamLayer, LAMBDA_REL};
+use tsenor::util::tensor::Mat;
+
+const LAYER_DIMS: &[(usize, usize)] =
+    &[(16, 16), (16, 32), (32, 16), (16, 24), (32, 32), (16, 16), (24, 16), (32, 32)];
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("tsenor_stream_pipeline").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Synthetic checkpoint: deterministic heavy-tailed layers, several
+/// shards. Returns (checkpoint dir, layer list).
+fn make_checkpoint(name: &str, seed: u64) -> (PathBuf, Vec<StreamLayer>) {
+    let dir = tmp(name);
+    let mut rng = tsenor::util::rng::Rng::new(seed);
+    let weights: Vec<(String, Mat)> = LAYER_DIMS
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| {
+            (format!("layers.{i:02}.w"), Mat::from_fn(r, c, |_, _| rng.heavy_tail()))
+        })
+        .collect();
+    // ~3 small layers per shard.
+    write_checkpoint(&dir, weights.iter().map(|(n, w)| (n.as_str(), w)), 3 * 16 * 32 * 4)
+        .unwrap();
+    let layers = weights
+        .iter()
+        .map(|(n, w)| StreamLayer { name: n.clone(), rows: w.rows, cols: w.cols })
+        .collect();
+    (dir, layers)
+}
+
+fn gram_eye(l: &StreamLayer) -> anyhow::Result<Mat> {
+    Ok(Mat::eye(l.rows))
+}
+
+fn largest_layer_bytes(layers: &[StreamLayer]) -> u64 {
+    layers.iter().map(|l| (l.rows * l.cols * 4) as u64).max().unwrap()
+}
+
+/// The in-memory reference: same tasks through `run_layer_tasks`,
+/// assembled into a report exactly like `prune-ckpt`'s in-memory path.
+fn run_in_memory(
+    store: &StoreReader,
+    layers: &[StreamLayer],
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+) -> (PruneReport, ModelState) {
+    let weights = store.load_all().unwrap();
+    let tasks: Vec<LayerTask> = layers
+        .iter()
+        .map(|l| {
+            LayerTask::new(LayerProblem {
+                name: l.name.clone(),
+                w: weights[&l.name].clone(),
+                gram: gram_eye(l).unwrap(),
+                pattern: spec.pattern_for(&l.name),
+                lambda_rel: LAMBDA_REL,
+            })
+        })
+        .collect();
+    let outcomes = executor::run_layer_tasks(tasks, spec, oracle).unwrap();
+    let mut state = ModelState::new(BTreeMap::new());
+    let mut reports = Vec::new();
+    for out in outcomes {
+        state.set_pruned(&out.report.name, out.w, out.mask);
+        reports.push(out.report);
+    }
+    let report = PruneReport {
+        spec: spec.clone(),
+        oracle: oracle.name().to_string(),
+        oracle_stats: OracleStats::default(),
+        layers: reports,
+        model_sparsity: state.sparsity(),
+        perplexity: BTreeMap::new(),
+        wall_secs: 0.0,
+        engine_exec_calls: 0,
+        engine_exec_secs: 0.0,
+        stream_peak_bytes: 0,
+        state: ModelState::default(),
+    };
+    (report, state)
+}
+
+/// A streamed run assembled into the same report shape.
+fn run_streamed(
+    store: &StoreReader,
+    layers: &[StreamLayer],
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+) -> anyhow::Result<(PruneReport, ModelState, u64)> {
+    let run = run_prune_stream(store, layers, &gram_eye, spec, oracle)?;
+    let mut state = ModelState::new(BTreeMap::new());
+    overlay_state(&run.out_dir, &mut state, &run.checksums)?;
+    let report = PruneReport {
+        spec: spec.clone(),
+        oracle: oracle.name().to_string(),
+        oracle_stats: OracleStats::default(),
+        layers: run.layers,
+        model_sparsity: run.model_sparsity,
+        perplexity: BTreeMap::new(),
+        wall_secs: 0.0,
+        engine_exec_calls: 0,
+        engine_exec_secs: 0.0,
+        stream_peak_bytes: 0,
+        state: ModelState::default(),
+    };
+    Ok((report, state, run.peak_bytes))
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_states_bit_equal(a: &ModelState, b: &ModelState, ctx: &str) {
+    assert_eq!(a.weights.len(), b.weights.len(), "{ctx}: layer count");
+    for (name, w) in &a.weights {
+        assert_eq!(bits(w), bits(&b.weights[name]), "{ctx}: weights {name}");
+        assert_eq!(bits(&a.masks[name]), bits(&b.masks[name]), "{ctx}: mask {name}");
+    }
+}
+
+#[test]
+fn streamed_matches_in_memory_for_every_framework_and_mode() {
+    for &framework in Framework::all() {
+        for mode in [WritebackMode::Dense, WritebackMode::Compressed] {
+            let name = format!("diff_{}_{}", framework.name(), mode.name());
+            let (dir, layers) = make_checkpoint(&name, 11);
+            let store = StoreReader::open(&dir).unwrap();
+            let base = PruneSpec::new(framework)
+                .pattern(4, 8)
+                .override_layers("layers.02.*", 2, 8)
+                .jobs(3);
+
+            let mem_oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            let (mem_report, mem_state) =
+                run_in_memory(&store, &layers, &base, &mem_oracle);
+
+            // Budget: exactly the largest layer (the floor of the
+            // guarantee) plus one smaller read-ahead slot.
+            let budget = largest_layer_bytes(&layers) + 16 * 16 * 4;
+            let spec = base.clone().stream(
+                StreamCfg::default()
+                    .memory_budget(budget)
+                    .io_threads(2)
+                    .writeback(mode)
+                    .dir(dir.join("out").to_str().unwrap()),
+            );
+            let st_oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            let (st_report, st_state, peak) =
+                run_streamed(&store, &layers, &spec, &st_oracle).unwrap();
+
+            assert!(peak <= budget, "{name}: peak {peak} > budget {budget}");
+            // Stripped reports are byte-identical: the embedded specs
+            // differ only in the (stripped) stream block.
+            assert_eq!(
+                mem_report.to_json_stripped().to_string_pretty(),
+                st_report.to_json_stripped().to_string_pretty(),
+                "{name}: stripped report"
+            );
+            assert_states_bit_equal(&mem_state, &st_state, &name);
+        }
+    }
+}
+
+#[test]
+fn streamed_matches_in_memory_with_cross_layer_batching() {
+    // A batch quantum forms static groups of the small same-pattern
+    // layers; the streamed grouped pre-pass must re-form the identical
+    // plan and produce identical masks (combined-batch tau included).
+    let (dir, layers) = make_checkpoint("grouped", 23);
+    let store = StoreReader::open(&dir).unwrap();
+    let base = PruneSpec::new(Framework::Wanda).pattern(4, 8).jobs(2);
+
+    let make_oracle =
+        || CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+    let (mem_report, mem_state) = run_in_memory(&store, &layers, &base, &make_oracle());
+
+    let spec = base.clone().stream(
+        StreamCfg::default()
+            .memory_budget(largest_layer_bytes(&layers) * 2)
+            .dir(dir.join("out").to_str().unwrap()),
+    );
+    let (st_report, st_state, _) =
+        run_streamed(&store, &layers, &spec, &make_oracle()).unwrap();
+    assert_eq!(
+        mem_report.to_json_stripped().to_string_pretty(),
+        st_report.to_json_stripped().to_string_pretty()
+    );
+    assert_states_bit_equal(&mem_state, &st_state, "grouped");
+}
+
+#[test]
+fn unbounded_budget_is_the_default_whole_model_behavior() {
+    let (dir, layers) = make_checkpoint("unbounded", 31);
+    let store = StoreReader::open(&dir).unwrap();
+    let base = PruneSpec::new(Framework::Magnitude).pattern(4, 8);
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let mem = run_in_memory(&store, &layers, &base, &oracle);
+    let spec = base
+        .clone()
+        .stream(StreamCfg::default().dir(dir.join("out").to_str().unwrap()));
+    let (st_report, _, peak) = run_streamed(
+        &store,
+        &layers,
+        &spec,
+        &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+    )
+    .unwrap();
+    assert_eq!(
+        mem.0.to_json_stripped().to_string_pretty(),
+        st_report.to_json_stripped().to_string_pretty()
+    );
+    // No budget: the pool may hold everything, and does hold something.
+    assert!(peak > 0);
+}
+
+#[test]
+fn interrupted_then_resumed_matches_uninterrupted_at_every_cut() {
+    let (dir, layers) = make_checkpoint("resume", 47);
+    let store = StoreReader::open(&dir).unwrap();
+    let base = PruneSpec::new(Framework::Alps).pattern(4, 8).jobs(2);
+    let budget = largest_layer_bytes(&layers) * 2;
+
+    // Uninterrupted reference (its own output dir).
+    let ref_spec = base.clone().stream(
+        StreamCfg::default()
+            .memory_budget(budget)
+            .dir(dir.join("ref").to_str().unwrap()),
+    );
+    let (ref_report, ref_state, _) = run_streamed(
+        &store,
+        &layers,
+        &ref_spec,
+        &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+    )
+    .unwrap();
+
+    for cut in [1u64, 3, 6] {
+        let out = dir.join(format!("cut{cut}"));
+        // Interrupted attempt: dies (simulated crash) after `cut`
+        // journaled layers.
+        let crash_spec = base.clone().stream(StreamCfg {
+            memory_budget: budget,
+            fail_after: Some(cut),
+            dir: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        });
+        let err = run_streamed(
+            &store,
+            &layers,
+            &crash_spec,
+            &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+        )
+        .expect_err("fail-after hook must interrupt the run");
+        assert!(format!("{err:#}").contains("interrupted"), "cut {cut}: {err:#}");
+
+        // Resume into the same dir.
+        let resume_spec = base.clone().stream(
+            StreamCfg::default()
+                .memory_budget(budget)
+                .resume(true)
+                .dir(out.to_str().unwrap()),
+        );
+        let (res_report, res_state, _) = run_streamed(
+            &store,
+            &layers,
+            &resume_spec,
+            &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+        )
+        .unwrap();
+        assert_eq!(
+            ref_report.to_json_stripped().to_string_pretty(),
+            res_report.to_json_stripped().to_string_pretty(),
+            "cut {cut}: resumed stripped report"
+        );
+        assert_states_bit_equal(&ref_state, &res_state, &format!("cut {cut}"));
+    }
+}
+
+#[test]
+fn resume_with_grouped_layers_reissues_full_groups() {
+    // Interrupt a run whose small layers form a static group; the
+    // resume must re-solve incomplete groups with their ORIGINAL full
+    // composition so masks stay bit-identical.
+    let (dir, layers) = make_checkpoint("resume_grouped", 59);
+    let store = StoreReader::open(&dir).unwrap();
+    let base = PruneSpec::new(Framework::Wanda).pattern(4, 8);
+    let make_oracle =
+        || CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(8);
+
+    let ref_spec = base
+        .clone()
+        .stream(StreamCfg::default().dir(dir.join("ref").to_str().unwrap()));
+    let (ref_report, ref_state, _) =
+        run_streamed(&store, &layers, &ref_spec, &make_oracle()).unwrap();
+
+    let out = dir.join("cut");
+    let crash_spec = base.clone().stream(StreamCfg {
+        fail_after: Some(2),
+        dir: out.to_str().unwrap().to_string(),
+        ..Default::default()
+    });
+    run_streamed(&store, &layers, &crash_spec, &make_oracle())
+        .expect_err("must interrupt");
+    let resume_spec = base
+        .clone()
+        .stream(StreamCfg::default().resume(true).dir(out.to_str().unwrap()));
+    let (res_report, res_state, _) =
+        run_streamed(&store, &layers, &resume_spec, &make_oracle()).unwrap();
+    assert_eq!(
+        ref_report.to_json_stripped().to_string_pretty(),
+        res_report.to_json_stripped().to_string_pretty()
+    );
+    assert_states_bit_equal(&ref_state, &res_state, "resume_grouped");
+}
+
+#[test]
+fn peak_resident_bytes_never_exceed_budget_under_load() {
+    let (dir, layers) = make_checkpoint("budget", 71);
+    let store = StoreReader::open(&dir).unwrap();
+    // 2.5x the largest layer, 4 jobs, 3 io threads: contention on the
+    // pool from both sides.
+    let budget = largest_layer_bytes(&layers) * 5 / 2;
+    let spec = PruneSpec::new(Framework::Magnitude).pattern(4, 8).jobs(4).stream(
+        StreamCfg::default()
+            .memory_budget(budget)
+            .io_threads(3)
+            .dir(dir.join("out").to_str().unwrap()),
+    );
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let (_, _, peak) = run_streamed(&store, &layers, &spec, &oracle).unwrap();
+    assert!(peak > 0, "peak must be tracked");
+    assert!(peak <= budget, "peak {peak} exceeded budget {budget}");
+}
+
+#[test]
+fn budget_smaller_than_a_layer_fails_up_front_naming_it() {
+    let (dir, layers) = make_checkpoint("too_small", 83);
+    let store = StoreReader::open(&dir).unwrap();
+    let spec = PruneSpec::new(Framework::Magnitude).pattern(4, 8).stream(
+        StreamCfg::default()
+            .memory_budget(64) // smaller than any layer
+            .dir(dir.join("out").to_str().unwrap()),
+    );
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let err = run_prune_stream(&store, &layers, &gram_eye, &spec, &oracle)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("memory budget"), "{err}");
+    assert!(err.contains("layers.00.w"), "must name a layer: {err}");
+}
+
+#[test]
+fn stream_dir_must_not_be_the_checkpoint_dir() {
+    // A fresh streamed run cleans its output dir (incl. index.json);
+    // pointing it at the input checkpoint would destroy the input.
+    let (dir, layers) = make_checkpoint("same_dir", 5);
+    let store = StoreReader::open(&dir).unwrap();
+    let spec = PruneSpec::new(Framework::Magnitude)
+        .pattern(4, 8)
+        .stream(StreamCfg::default().dir(dir.to_str().unwrap()));
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let err = run_prune_stream(&store, &layers, &gram_eye, &spec, &oracle)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("checkpoint directory"), "{err}");
+    // The input index survived the refusal.
+    assert!(dir.join("index.json").exists());
+}
+
+#[test]
+fn resume_refuses_changed_math_but_allows_changed_scheduling() {
+    let (dir, layers) = make_checkpoint("fingerprint", 97);
+    let store = StoreReader::open(&dir).unwrap();
+    let out = dir.join("out");
+    let base = PruneSpec::new(Framework::Magnitude).pattern(4, 8);
+    let crash_spec = base.clone().stream(StreamCfg {
+        fail_after: Some(2),
+        dir: out.to_str().unwrap().to_string(),
+        ..Default::default()
+    });
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    run_prune_stream(&store, &layers, &gram_eye, &crash_spec, &oracle)
+        .expect_err("must interrupt");
+
+    // Different pattern => different mathematics => refused.
+    let changed = base.clone().pattern(2, 8).stream(
+        StreamCfg::default().resume(true).dir(out.to_str().unwrap()),
+    );
+    let err = run_prune_stream(&store, &layers, &gram_eye, &changed, &oracle)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+
+    // Different jobs / budget / io_threads => pure scheduling => fine.
+    let resched = base.clone().jobs(4).stream(
+        StreamCfg::default()
+            .resume(true)
+            .memory_budget(largest_layer_bytes(&layers) * 3)
+            .io_threads(1)
+            .dir(out.to_str().unwrap()),
+    );
+    run_prune_stream(&store, &layers, &gram_eye, &resched, &oracle)
+        .expect("rescheduled resume must succeed");
+}
+
+#[test]
+fn resume_refuses_a_regenerated_checkpoint() {
+    // Same layer names and shapes, different weights (new seed): the
+    // sampled content fingerprint must refuse the resume rather than
+    // mix two models' layers.
+    // The stream output lives OUTSIDE the checkpoint dir so the
+    // regeneration below doesn't wipe the journal being resumed.
+    let out = tmp("regen_out");
+    let (dir, layers) = make_checkpoint("regen", 101);
+    let spec = |resume: bool| {
+        PruneSpec::new(Framework::Magnitude).pattern(4, 8).stream(StreamCfg {
+            fail_after: (!resume).then_some(2),
+            resume,
+            dir: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        })
+    };
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    {
+        let store = StoreReader::open(&dir).unwrap();
+        run_prune_stream(&store, &layers, &gram_eye, &spec(false), &oracle)
+            .expect_err("must interrupt");
+    }
+    // Regenerate the checkpoint in place with a different seed.
+    let (_, layers2) = make_checkpoint("regen", 202);
+    let store = StoreReader::open(&dir).unwrap();
+    let err = run_prune_stream(&store, &layers2, &gram_eye, &spec(true), &oracle)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+}
+
+#[test]
+fn streamed_handles_standard_and_unstructured_structures() {
+    // Non-transposable structures flow through the same machinery
+    // (compressed write-back falls back to dense records).
+    for structure in [Structure::StandardNm, Structure::Unstructured] {
+        let name = format!("structure_{}", structure.name());
+        let (dir, layers) = make_checkpoint(&name, 7);
+        let store = StoreReader::open(&dir).unwrap();
+        let base =
+            PruneSpec::new(Framework::Magnitude).structure(structure).pattern(4, 8);
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let mem = run_in_memory(&store, &layers, &base, &oracle);
+        let spec = base.clone().stream(
+            StreamCfg::default()
+                .writeback(WritebackMode::Compressed)
+                .dir(dir.join("out").to_str().unwrap()),
+        );
+        let (st_report, st_state, _) = run_streamed(
+            &store,
+            &layers,
+            &spec,
+            &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+        )
+        .unwrap();
+        assert_eq!(
+            mem.0.to_json_stripped().to_string_pretty(),
+            st_report.to_json_stripped().to_string_pretty(),
+            "{name}"
+        );
+        assert_states_bit_equal(&mem.1, &st_state, &name);
+    }
+}
+
+#[test]
+fn property_random_budgets_and_jobs_never_change_the_stripped_report() {
+    let (dir, layers) = make_checkpoint("property", 2026);
+    let store = StoreReader::open(&dir).unwrap();
+    let floor = largest_layer_bytes(&layers);
+    let mut rng = tsenor::util::rng::Rng::new(2026);
+    let base = PruneSpec::new(Framework::SparseGpt).pattern(4, 8);
+    let reference = run_in_memory(
+        &store,
+        &layers,
+        &base,
+        &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+    )
+    .0
+    .to_json_stripped()
+    .to_string_pretty();
+    for trial in 0..4u64 {
+        let budget = if rng.next_u64() % 3 == 0 {
+            0 // unbounded
+        } else {
+            floor + rng.next_u64() % (floor * 3)
+        };
+        let jobs = 1 + (rng.next_u64() % 4) as usize;
+        let io = 1 + (rng.next_u64() % 3) as usize;
+        let mode = if rng.next_u64() % 2 == 0 {
+            WritebackMode::Dense
+        } else {
+            WritebackMode::Compressed
+        };
+        let spec = base.clone().jobs(jobs).stream(
+            StreamCfg::default()
+                .memory_budget(budget)
+                .io_threads(io)
+                .writeback(mode)
+                .dir(dir.join(format!("out{trial}")).to_str().unwrap()),
+        );
+        let (report, _, peak) = run_streamed(
+            &store,
+            &layers,
+            &spec,
+            &CpuOracle::new(Method::Tsenor, SolveCfg::default()),
+        )
+        .unwrap();
+        assert_eq!(
+            report.to_json_stripped().to_string_pretty(),
+            reference,
+            "trial {trial}: budget={budget} jobs={jobs} io={io} mode={}",
+            mode.name()
+        );
+        if budget > 0 {
+            assert!(peak <= budget, "trial {trial}: {peak} > {budget}");
+        }
+    }
+}
