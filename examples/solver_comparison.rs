@@ -51,7 +51,7 @@ fn main() {
         let (_, opt) = exact::solve_batch(&scores, pattern.n);
         print!("{:<14}", format!("{pattern}"));
         for method in &methods {
-            let masks = solver::solve_blocks(*method, &scores, pattern.n, &cfg);
+            let masks = solver::solve_blocks(*method, &scores, pattern.n, &cfg).unwrap();
             let rel = relative_error(opt, batch_objective(&masks, &scores));
             print!("{:>12.4}", rel);
         }

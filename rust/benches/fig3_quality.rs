@@ -56,7 +56,7 @@ fn main() {
         let (_, opt) = exact::solve_batch(&scores, pattern.n);
         print!("{:<10}", format!("{pattern}"));
         for method in &methods {
-            let masks = solver::solve_blocks(*method, &scores, pattern.n, &cfg);
+            let masks = solver::solve_blocks(*method, &scores, pattern.n, &cfg).unwrap();
             let rel = relative_error(opt, batch_objective(&masks, &scores));
             if *method == Method::Tsenor {
                 tsenor_worst = tsenor_worst.max(rel);

@@ -4,6 +4,14 @@
 //! product; the backward (transposed) product needs a TRANSPOSABLE mask
 //! to take the compressed fast path, otherwise it pays the gather-scatter
 //! slow path.
+//!
+//! Two sections:
+//!  * per-sparsity pass table (dense vs transposable fast paths vs the
+//!    standard-mask slow path), single-threaded;
+//!  * thread sweep of the engine (spmm / spmm_transposed vs the equally
+//!    threaded dense baseline) with a serial-vs-threaded bit check —
+//!    the acceptance bar is >= 3x spmm throughput at 4 threads over
+//!    1 thread on the large 16:32 layer (4096x4096 at full scale).
 
 #[path = "common.rs"]
 mod common;
@@ -14,14 +22,18 @@ use tsenor::masks::solver::{self, Method, SolveCfg};
 use tsenor::masks::NmPattern;
 use tsenor::pruning::magnitude::standard_nm_mask;
 use tsenor::sparse::gemm;
-use tsenor::sparse::nm::{spmm, spmm_transposed_fast, spmm_transposed_slow, NmCompressed};
+use tsenor::sparse::nm::{
+    spmm, spmm_threaded, spmm_transposed, spmm_transposed_fast, spmm_transposed_slow,
+    spmm_transposed_threaded, NmCompressed,
+};
 use tsenor::util::tensor::Mat;
 
 fn main() {
     common::header("fig4_speedup", "paper Figure 4 lower (sparse GEMM speedup)");
-    let (d, batch) = match common::scale() {
-        Scale::Quick => (256usize, 64usize),
-        _ => (512, 128),
+    let (d, batch, sweep_d) = match common::scale() {
+        Scale::Quick => (256usize, 64usize, 512usize),
+        Scale::Default => (512, 128, 1024),
+        Scale::Full => (512, 128, 4096),
     };
     let trials = 3;
     let patterns = [
@@ -49,12 +61,13 @@ fn main() {
     println!("dense {d}x{d}: fwd {dense_fwd:.4}s  bwd {dense_bwd:.4}s (batch {batch})\n");
 
     println!(
-        "{:<10}{:>12}{:>14}{:>16}{:>18}",
-        "sparsity", "fwd speedup", "bwd(T) fast", "bwd std slow", "mask"
+        "{:<10}{:>12}{:>14}{:>14}{:>16}{:>10}",
+        "sparsity", "fwd speedup", "bwd(T) fast", "bwd(T) 0-dec", "bwd std slow", "mask"
     );
     for pattern in &patterns {
         // Transposable mask -> both passes fast.
-        let tmask = solver::solve_matrix(Method::Tsenor, &rng_w, *pattern, &SolveCfg::default());
+        let tmask = solver::solve_matrix(Method::Tsenor, &rng_w, *pattern, &SolveCfg::default())
+            .expect("finite synthetic scores");
         let wm = rng_w.hadamard(&tmask);
         let ct = NmCompressed::compress(&wm, &tmask, pattern.n, pattern.m)
             .expect("transposable mask is column-group N:M");
@@ -67,6 +80,11 @@ fn main() {
         let (sp_bwd_fast, _) = time_trials(trials, || {
             let _ = spmm_transposed_fast(&g, &ctt);
         });
+        // Decode-free backward: same product served from the FORWARD
+        // record — no second compression resident at all.
+        let (sp_bwd_zero_decode, _) = time_trials(trials, || {
+            let _ = spmm_transposed(&g, &ct);
+        });
 
         // Standard N:M mask -> forward fast, backward slow path.
         let smask = standard_nm_mask(&rng_w, *pattern);
@@ -77,10 +95,11 @@ fn main() {
         });
 
         println!(
-            "{:<10}{:>11.2}x{:>13.2}x{:>15.2}x{:>18}",
+            "{:<10}{:>11.2}x{:>13.2}x{:>13.2}x{:>15.2}x{:>10}",
             format!("{:.1}%", 100.0 * pattern.sparsity()),
             dense_fwd / sp_fwd,
             dense_bwd / sp_bwd_fast,
+            dense_bwd / sp_bwd_zero_decode,
             dense_bwd / sp_bwd_slow,
             format!("{pattern}")
         );
@@ -88,19 +107,70 @@ fn main() {
     println!("\npaper shape: speedup grows with sparsity; transposable masks make the");
     println!("backward pass as fast as the forward; standard masks leave bwd near/below dense.");
 
-    // sanity: all three kernels agree numerically (spot check at 16:32)
-    let pattern = patterns[0];
-    let tmask = solver::solve_matrix(Method::Tsenor, &rng_w, pattern, &SolveCfg::default());
-    let wm = rng_w.hadamard(&tmask);
+    // ---- Thread sweep: the engine's scaling story on a big layer. ----
+    let pattern = NmPattern::new(16, 32);
+    println!(
+        "\nthread sweep {sweep_d}x{sweep_d} {pattern} (batch {batch}); \
+         dense baseline threaded identically"
+    );
+    let mut w_big = workload::structured_matrix(sweep_d, sweep_d, 15);
+    let maxa = w_big.max_abs();
+    w_big = w_big.scale(1.0 / maxa);
+    let xb = workload::structured_matrix(batch, sweep_d, 16);
+    let gb = workload::structured_matrix(batch, sweep_d, 17);
+    let tmask = solver::solve_matrix(
+        Method::Tsenor,
+        &w_big,
+        pattern,
+        &SolveCfg { threads: 4, ..Default::default() },
+    )
+    .expect("finite synthetic scores");
+    let wm = w_big.hadamard(&tmask);
     let ct = NmCompressed::compress(&wm, &tmask, pattern.n, pattern.m).unwrap();
-    let dense = gemm::matmul(&x, &wm);
-    let sparse = spmm(&x, &ct);
-    let max_diff = dense
-        .data
-        .iter()
-        .zip(&sparse.data)
-        .fold(0.0f32, |a, (x, y)| a.max((x - y).abs()));
-    assert!(max_diff < 1e-3 * wm.max_abs().max(1.0), "sparse GEMM drifted: {max_diff}");
-    println!("numeric check: sparse vs dense max diff {max_diff:.2e} OK");
+    let wmt = wm.transpose();
+
+    let y_serial = spmm(&xb, &ct);
+    let dx_serial = spmm_transposed(&gb, &ct);
+    let mut spmm_t1 = f64::NAN;
+    println!(
+        "{:<9}{:>12}{:>14}{:>14}{:>14}{:>16}",
+        "threads", "spmm", "spmm vs t=1", "bwd 0-dec", "dense fwd", "fwd vs dense"
+    );
+    for threads in [1usize, 2, 4, 8] {
+        let (tf, _) = time_trials(trials, || {
+            let _ = spmm_threaded(&xb, &ct, threads);
+        });
+        if threads == 1 {
+            spmm_t1 = tf;
+        }
+        let (tb, _) = time_trials(trials, || {
+            let _ = spmm_transposed_threaded(&gb, &ct, threads);
+        });
+        let (td, _) = time_trials(trials, || {
+            let _ = gemm::matmul_dense_baseline_threaded(&xb, &wm, threads);
+        });
+        // Determinism: threaded output must be BIT-identical to serial.
+        let yt = spmm_threaded(&xb, &ct, threads);
+        assert_eq!(yt.data, y_serial.data, "spmm drifted at {threads} threads");
+        let dxt = spmm_transposed_threaded(&gb, &ct, threads);
+        assert_eq!(dxt.data, dx_serial.data, "spmm_transposed drifted at {threads} threads");
+        println!(
+            "{:<9}{:>11.4}s{:>13.2}x{:>13.4}s{:>13.4}s{:>15.2}x",
+            threads,
+            tf,
+            spmm_t1 / tf,
+            tb,
+            td,
+            td / tf
+        );
+    }
+
+    // sanity: sparse kernels agree with dense bit-for-bit (engine
+    // determinism contract — see sparse::nm module docs).
+    let dense = gemm::matmul_dense_baseline(&xb, &wm);
+    assert_eq!(y_serial.data, dense.data, "spmm drifted from the dense baseline");
+    let dense_bwd = gemm::matmul_dense_baseline(&gb, &wmt);
+    assert_eq!(dx_serial.data, dense_bwd.data, "spmm_transposed drifted from dense");
+    println!("\nnumeric check: sparse vs dense bit-identical OK");
     let _ = Mat::zeros(1, 1);
 }

@@ -50,7 +50,7 @@ fn main() {
         };
 
         let (m2, s2) = time_trials(trials, || {
-            let _ = solver::solve_blocks(Method::TwoApprox, &blocks, pattern.n, &cfg);
+            let _ = solver::solve_blocks(Method::TwoApprox, &blocks, pattern.n, &cfg).unwrap();
         });
 
         // PDHG is the slow LP row; cap it at 512 unless full.
@@ -65,7 +65,7 @@ fn main() {
         };
 
         let (m4, s4) = time_trials(trials, || {
-            let _ = solver::solve_blocks(Method::Tsenor, &blocks, pattern.n, &cfg);
+            let _ = solver::solve_blocks(Method::Tsenor, &blocks, pattern.n, &cfg).unwrap();
         });
 
         let xla_t = if let (Some(manifest), Some(engine)) = (&manifest, &engine) {

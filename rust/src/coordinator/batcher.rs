@@ -87,7 +87,11 @@ impl<'a> XlaSolver<'a> {
     /// Fractional Dykstra solutions for an arbitrary number of blocks,
     /// tau normalized over the whole batch (the solo / static-group
     /// semantics: one matrix in = that matrix's per-matrix tau).
+    /// Errors on non-finite scores, naming the block — the same gate as
+    /// the CPU entry points (`f32::max` would silently swallow a NaN
+    /// in the tau fold below).
     pub fn dykstra_fractional(&self, scores: &Blocks, n: usize) -> Result<Blocks> {
+        crate::masks::solver::validate_scores(scores.view())?;
         let max_abs = scores.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         let tau = self
             .cfg
@@ -217,7 +221,7 @@ impl MaskService for XlaSolver<'_> {
         }
         self.mask_calls.fetch_add(scores.len(), Ordering::Relaxed);
         let (scaled, raw, counts) =
-            concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0);
+            concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0)?;
         let frac = self.dykstra_scaled(&scaled, pattern.n, 1.0)?;
         let masks = rounding::round_batch(&frac, &raw, pattern.n, self.cfg.ls_steps);
         Ok(split_group_masks(&masks, scores, &counts))

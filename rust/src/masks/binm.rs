@@ -4,7 +4,7 @@
 //! constraint in the "at most N" sense but routinely leaves rows
 //! under-filled — the source of its up-to-50% relative error in Fig. 3.
 
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 pub fn solve_block(score: &[f32], m: usize, n: usize) -> Vec<f32> {
     // Row-wise top-N.
@@ -35,7 +35,8 @@ pub fn solve_block(score: &[f32], m: usize, n: usize) -> Vec<f32> {
     mask
 }
 
-pub fn solve_batch(scores: &Blocks, n: usize) -> Blocks {
+pub fn solve_batch<'a>(scores: impl Into<BlocksView<'a>>, n: usize) -> Blocks {
+    let scores = scores.into();
     let mut out = Blocks::zeros(scores.b, scores.m);
     let sz = scores.m * scores.m;
     for k in 0..scores.b {

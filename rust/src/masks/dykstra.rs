@@ -11,7 +11,7 @@
 //! bottleneck (see EXPERIMENTS.md §Perf iteration log).
 
 use crate::util::fastmath::exp_approx;
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 /// Configuration for the entropy-regularized solve.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -124,20 +124,31 @@ pub fn solve_block_scalar(absw: &[f32], m: usize, n: usize, tau: f32, iters: usi
 ///    max-subtraction passes of textbook logsumexp are provably
 ///    unnecessary, halving the exp work per sweep;
 ///  * const-generic M monomorphization fully unrolls the inner loops
-///    (M in {4, 8, 16, 32});
+///    (M in {4, 8, 16, 32, 64});
 ///  * one fused pass per block per iteration keeps the block in L1;
 ///  * one ln per row/column (not per element).
-pub fn solve_batch(absw: &Blocks, n: usize, tau: f32, iters: usize) -> Blocks {
+pub fn solve_batch<'a>(
+    absw: impl Into<BlocksView<'a>>,
+    n: usize,
+    tau: f32,
+    iters: usize,
+) -> Blocks {
+    let absw = absw.into();
     match absw.m {
         4 => solve_batch_m::<4>(absw, n, tau, iters),
         8 => solve_batch_m::<8>(absw, n, tau, iters),
         16 => solve_batch_m::<16>(absw, n, tau, iters),
         32 => solve_batch_m::<32>(absw, n, tau, iters),
+        // M=64 carries the 16:64 / 32:64 patterns of the paper's
+        // compression-accuracy frontier; falling back to the scalar
+        // path here silently cost ~an order of magnitude (the same
+        // class of cliff as rounding's old M<=64 stack limit).
+        64 => solve_batch_m::<64>(absw, n, tau, iters),
         _ => solve_batch_dyn(absw, n, tau, iters),
     }
 }
 
-fn solve_batch_m<const M: usize>(absw: &Blocks, n: usize, tau: f32, iters: usize) -> Blocks {
+fn solve_batch_m<const M: usize>(absw: BlocksView<'_>, n: usize, tau: f32, iters: usize) -> Blocks {
     debug_assert_eq!(absw.m, M);
     let b = absw.b;
     let logn = (n as f32).ln();
@@ -200,8 +211,8 @@ fn solve_batch_m<const M: usize>(absw: &Blocks, n: usize, tau: f32, iters: usize
     Blocks { b, m: M, data }
 }
 
-/// Fallback for non-power-of-two M (kept simple; not on the hot path).
-fn solve_batch_dyn(absw: &Blocks, n: usize, tau: f32, iters: usize) -> Blocks {
+/// Fallback for unusual M (kept simple; not on the hot path).
+fn solve_batch_dyn(absw: BlocksView<'_>, n: usize, tau: f32, iters: usize) -> Blocks {
     let (b, m) = (absw.b, absw.m);
     let sz = m * m;
     let mut out = Blocks::zeros(b, m);
@@ -242,6 +253,43 @@ mod tests {
             let scalar = solve_block_scalar(blocks.block(k), 8, 4, tau, 80);
             for (a, b) in scalar.iter().zip(batch.block(k)) {
                 assert!((a - b).abs() < 1e-4, "scalar {a} vs batch {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_m64_is_vectorized_not_scalar_fallback() {
+        // Regression for the M=64 perf cliff: 16:64 / 32:64 blocks used
+        // to fall back to the per-block scalar path. The vectorized
+        // monomorphization must agree with the scalar reference (the
+        // same tolerance contract as `scalar_matches_batch`) and keep
+        // marginals feasible.
+        let blocks = random_blocks(3, 64, 17);
+        let tau = effective_tau(blocks.data.iter().fold(0.0f32, |a, &x| a.max(x)), 120.0);
+        for n in [16usize, 32] {
+            let batch = solve_batch(&blocks, n, tau, 80);
+            for k in 0..blocks.b {
+                let scalar = solve_block_scalar(blocks.block(k), 64, n, tau, 80);
+                for (a, b) in scalar.iter().zip(batch.block(k)) {
+                    assert!((a - b).abs() < 1e-3, "n={n}: scalar {a} vs batch {b}");
+                }
+            }
+            // Convergence sanity at a longer horizon: row/col marginals
+            // approach n and entries stay in [0, 1].
+            let sol = solve_batch(&blocks, n, tau, 400);
+            for k in 0..sol.b {
+                let blk = sol.block(k);
+                for i in 0..64 {
+                    let row: f32 = blk[i * 64..(i + 1) * 64].iter().sum();
+                    assert!((row - n as f32).abs() < 0.5, "n={n} row sum {row}");
+                }
+                for j in 0..64 {
+                    let col: f32 = (0..64).map(|i| blk[i * 64 + j]).sum();
+                    assert!((col - n as f32).abs() < 0.5, "n={n} col sum {col}");
+                }
+            }
+            for &x in &sol.data {
+                assert!((0.0..=1.0 + 1e-5).contains(&x), "entry {x}");
             }
         }
     }

@@ -14,7 +14,7 @@
 //! dense scan beats a heap for M <= 32). Costs are shifted to
 //! `max_score - score >= 0` so initial potentials are zero.
 
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 /// Solve one M x M block exactly. Returns (mask, objective).
 pub fn solve_block(score: &[f32], m: usize, n: usize) -> (Vec<f32>, f64) {
@@ -157,7 +157,8 @@ pub fn solve_block(score: &[f32], m: usize, n: usize) -> (Vec<f32>, f64) {
 }
 
 /// Exact solve over a batch; returns (masks, total objective).
-pub fn solve_batch(scores: &Blocks, n: usize) -> (Blocks, f64) {
+pub fn solve_batch<'a>(scores: impl Into<BlocksView<'a>>, n: usize) -> (Blocks, f64) {
+    let scores = scores.into();
     let mut out = Blocks::zeros(scores.b, scores.m);
     let sz = scores.m * scores.m;
     let mut total = 0.0;

@@ -14,7 +14,7 @@
 //! the specialized TSENOR solver.
 
 use crate::masks::rounding;
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 #[derive(Clone, Copy, Debug)]
 pub struct PdlpCfg {
@@ -123,7 +123,8 @@ pub fn solve_block(score: &[f32], m: usize, n: usize, cfg: PdlpCfg) -> Vec<f32> 
     rounding::round_block(&frac, score, m, n, 10)
 }
 
-pub fn solve_batch(scores: &Blocks, n: usize, cfg: PdlpCfg) -> Blocks {
+pub fn solve_batch<'a>(scores: impl Into<BlocksView<'a>>, n: usize, cfg: PdlpCfg) -> Blocks {
+    let scores = scores.into();
     let mut out = Blocks::zeros(scores.b, scores.m);
     let sz = scores.m * scores.m;
     for k in 0..scores.b {

@@ -5,7 +5,7 @@
 //! doubly-N-regular).
 
 use crate::util::rng::Rng;
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 /// One random feasible transposable mask.
 pub fn random_feasible(rng: &mut Rng, m: usize, n: usize) -> Vec<f32> {
@@ -49,7 +49,14 @@ pub fn solve_block(score: &[f32], m: usize, n: usize, k: usize, rng: &mut Rng) -
 
 /// `offset` is the global index of the first block, so per-block RNG
 /// streams are identical whether the batch is solved whole or chunked.
-pub fn solve_batch_offset(scores: &Blocks, n: usize, k: usize, seed: u64, offset: usize) -> Blocks {
+pub fn solve_batch_offset<'a>(
+    scores: impl Into<BlocksView<'a>>,
+    n: usize,
+    k: usize,
+    seed: u64,
+    offset: usize,
+) -> Blocks {
+    let scores = scores.into();
     let mut out = Blocks::zeros(scores.b, scores.m);
     let sz = scores.m * scores.m;
     for kk in 0..scores.b {
@@ -62,7 +69,12 @@ pub fn solve_batch_offset(scores: &Blocks, n: usize, k: usize, seed: u64, offset
     out
 }
 
-pub fn solve_batch(scores: &Blocks, n: usize, k: usize, seed: u64) -> Blocks {
+pub fn solve_batch<'a>(
+    scores: impl Into<BlocksView<'a>>,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> Blocks {
     solve_batch_offset(scores, n, k, seed, 0)
 }
 

@@ -15,7 +15,7 @@
 //! polytope is an integral b-matching polytope, so an augmenting path
 //! always exists while any row is unsaturated).
 
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 /// IEEE-754 total-order key: sorts f32 (incl. negatives) as u32.
 #[inline]
@@ -291,7 +291,13 @@ pub fn simple_round(frac: &[f32], m: usize, n: usize) -> Vec<f32> {
 
 /// Batch rounding over a (B, M, M) batch (allocation-free per block:
 /// the sort buffer is reused and masks are written in place).
-pub fn round_batch(frac: &Blocks, score: &Blocks, n: usize, ls_steps: usize) -> Blocks {
+pub fn round_batch<'a, 'b>(
+    frac: impl Into<BlocksView<'a>>,
+    score: impl Into<BlocksView<'b>>,
+    n: usize,
+    ls_steps: usize,
+) -> Blocks {
+    let (frac, score) = (frac.into(), score.into());
     assert_eq!(frac.b, score.b);
     assert_eq!(frac.m, score.m);
     let m = frac.m;

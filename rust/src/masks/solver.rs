@@ -7,7 +7,8 @@
 //! the pure-CPU methods so the algorithm layer stays runtime-free.
 
 use crate::masks::{binm, dykstra, exact, pdlp, random, rounding, two_approx, NmPattern};
-use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
+use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, BlocksView, Mat};
+use anyhow::{bail, Result};
 
 /// Which algorithm generates the transposable masks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,21 +102,45 @@ impl Default for SolveCfg {
     }
 }
 
-fn batch_tau(scores: &Blocks, cfg: &SolveCfg) -> f32 {
+fn batch_tau(scores: BlocksView<'_>, cfg: &SolveCfg) -> f32 {
     cfg.tau_override.unwrap_or_else(|| {
         let max_abs = scores.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         dykstra::effective_tau(max_abs, cfg.dykstra.tau0)
     })
 }
 
-/// TSENOR on CPU: Algorithm 1 (batch) + Algorithm 2.
-pub fn tsenor_cpu(scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
+/// Reject non-finite scores before any solve touches them. `f32::max`
+/// silently drops NaN (`NaN.max(x) == x`), so a NaN score used to sail
+/// through `batch_tau`'s max-|W| fold and produce a garbage mask with no
+/// diagnostic; every public entry point now fails loudly instead,
+/// naming the offending block. Crate-visible so the XLA path
+/// (`coordinator::batcher`) gates its tau fold with the same check.
+pub(crate) fn validate_scores(scores: BlocksView<'_>) -> Result<()> {
+    let sz = scores.m * scores.m;
+    for (at, &x) in scores.data.iter().enumerate() {
+        if !x.is_finite() {
+            bail!(
+                "solver: non-finite score {x} in block {} (offset {} within the block); \
+                 masks solved from NaN/inf scores would be garbage",
+                at / sz.max(1),
+                at % sz.max(1),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// TSENOR on CPU: Algorithm 1 (batch) + Algorithm 2. Private on
+/// purpose: it skips `validate_scores` (its callers pre-screen), so
+/// exposing it would reopen the silent-NaN hole the public entry
+/// points close.
+fn tsenor_cpu(scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
     let tau = batch_tau(scores, cfg);
     let frac = dykstra::solve_batch(scores, n, tau, cfg.dykstra.iters);
     rounding::round_batch(&frac, scores, n, cfg.ls_steps)
 }
 
-fn tsenor_scalar(scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
+fn tsenor_scalar(scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
     let tau = batch_tau(scores, cfg);
     let mut out = Blocks::zeros(scores.b, scores.m);
     let sz = scores.m * scores.m;
@@ -128,7 +153,7 @@ fn tsenor_scalar(scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
     out
 }
 
-fn entropy_simple(scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
+fn entropy_simple(scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
     let tau = batch_tau(scores, cfg);
     let frac = dykstra::solve_batch(scores, n, tau, cfg.dykstra.iters);
     let mut out = Blocks::zeros(scores.b, scores.m);
@@ -140,8 +165,10 @@ fn entropy_simple(scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
     out
 }
 
-/// Solve a batch of blocks with the chosen method (single thread).
-pub fn solve_blocks(method: Method, scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
+/// Method dispatch over a (pre-validated) borrowed batch. Infallible:
+/// every failure mode is screened by `validate_scores` at the public
+/// entry points, so per-chunk workers need no error plumbing.
+fn dispatch(method: Method, scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
     match method {
         Method::Tsenor => tsenor_cpu(scores, n, cfg),
         Method::TsenorScalar => tsenor_scalar(scores, n, cfg),
@@ -156,15 +183,35 @@ pub fn solve_blocks(method: Method, scores: &Blocks, n: usize, cfg: &SolveCfg) -
     }
 }
 
+/// Solve a batch of blocks with the chosen method (single thread).
+/// Errors on non-finite scores, naming the block.
+pub fn solve_blocks(method: Method, scores: &Blocks, n: usize, cfg: &SolveCfg) -> Result<Blocks> {
+    validate_scores(scores.view())?;
+    Ok(dispatch(method, scores.view(), n, cfg))
+}
+
 /// Solve a batch with `cfg.threads`-way fan-out over block chunks.
-pub fn solve_blocks_parallel(method: Method, scores: &Blocks, n: usize, cfg: &SolveCfg) -> Blocks {
+///
+/// §Memory: workers solve *borrowed* sub-ranges of `scores`
+/// ([`Blocks::range`]) — the fan-out owns only the output batch. The
+/// chunks were `.to_vec()` copies once, which transiently doubled the
+/// layer's score footprint at exactly the moment a `--memory-budget`
+/// run is tightest (the copies sat outside `stream_peak_bytes`
+/// accounting); `tests/solver_memory.rs` pins the no-copy behavior.
+pub fn solve_blocks_parallel(
+    method: Method,
+    scores: &Blocks,
+    n: usize,
+    cfg: &SolveCfg,
+) -> Result<Blocks> {
     let threads = cfg.threads.max(1);
     if threads == 1 || scores.b < 2 * threads {
         return solve_blocks(method, scores, n, cfg);
     }
+    validate_scores(scores.view())?;
     // Normalize tau by the GLOBAL max so chunking is invisible.
     let mut cfg = *cfg;
-    cfg.tau_override = Some(batch_tau(scores, &cfg));
+    cfg.tau_override = Some(batch_tau(scores.view(), &cfg));
     let cfg = &cfg;
     let sz = scores.m * scores.m;
     let chunk = scores.b.div_ceil(threads);
@@ -185,28 +232,30 @@ pub fn solve_blocks_parallel(method: Method, scores: &Blocks, n: usize, cfg: &So
     std::thread::scope(|scope| {
         for (start, dst) in slices {
             let nblocks = dst.len() / sz;
-            let sub = Blocks {
-                b: nblocks,
-                m: scores.m,
-                data: scores.data[start * sz..(start + nblocks) * sz].to_vec(),
-            };
+            let sub = scores.range(start, nblocks);
             let mut cfg = *cfg;
             cfg.block_offset += start;
             scope.spawn(move || {
-                let solved = solve_blocks(method, &sub, n, &cfg);
+                let solved = dispatch(method, sub, n, &cfg);
                 dst.copy_from_slice(&solved.data);
             });
         }
     });
-    out
+    Ok(out)
 }
 
 /// Whole-matrix API: transposable N:M mask of `w` maximizing kept |W|
 /// (or any externally-supplied score matrix of identical shape).
-pub fn solve_matrix(method: Method, score: &Mat, pattern: NmPattern, cfg: &SolveCfg) -> Mat {
+/// Errors on non-finite scores, naming the block.
+pub fn solve_matrix(
+    method: Method,
+    score: &Mat,
+    pattern: NmPattern,
+    cfg: &SolveCfg,
+) -> Result<Mat> {
     let blocks = partition_blocks(&score.abs(), pattern.m);
-    let masks = solve_blocks_parallel(method, &blocks, pattern.n, cfg);
-    assemble_blocks(&masks, score.rows, score.cols)
+    let masks = solve_blocks_parallel(method, &blocks, pattern.n, cfg)?;
+    Ok(assemble_blocks(&masks, score.rows, score.cols))
 }
 
 #[cfg(test)]
@@ -226,7 +275,7 @@ mod tests {
         let scores = random_blocks(4, 8, 21);
         let cfg = SolveCfg { random_k: 50, ..Default::default() };
         for &method in Method::all() {
-            let masks = solve_blocks(method, &scores, 4, &cfg);
+            let masks = solve_blocks(method, &scores, 4, &cfg).unwrap();
             if method == Method::BiNm || method == Method::EntropySimple {
                 continue; // allowed to underfill by construction
             }
@@ -240,7 +289,7 @@ mod tests {
         let scores = random_blocks(16, 8, 33);
         let cfg = SolveCfg { random_k: 200, ..Default::default() };
         let f = |m: Method| {
-            let masks = solve_blocks(m, &scores, 4, &cfg);
+            let masks = solve_blocks(m, &scores, 4, &cfg).unwrap();
             batch_objective(&masks, &scores)
         };
         let exact = f(Method::Exact);
@@ -261,9 +310,54 @@ mod tests {
         let cfg1 = SolveCfg { random_k: 60, ..Default::default() };
         let cfg4 = SolveCfg { threads: 4, random_k: 60, ..Default::default() };
         for &method in Method::all() {
-            let a = solve_blocks(method, &scores, 4, &cfg1);
-            let b = solve_blocks_parallel(method, &scores, 4, &cfg4);
+            let a = solve_blocks(method, &scores, 4, &cfg1).unwrap();
+            let b = solve_blocks_parallel(method, &scores, 4, &cfg4).unwrap();
             assert_eq!(a.data, b.data, "{}: parallel != serial", method.name());
+        }
+    }
+
+    #[test]
+    fn non_finite_scores_rejected_naming_the_block() {
+        // A planted NaN must fail loudly at every entry point — not
+        // silently vanish inside `f32::max` and yield a garbage mask.
+        let mut scores = random_blocks(5, 8, 61);
+        scores.data[2 * 64 + 13] = f32::NAN;
+        let cfg = SolveCfg::default();
+        let err = solve_blocks(Method::Tsenor, &scores, 4, &cfg).unwrap_err().to_string();
+        assert!(err.contains("block 2"), "{err}");
+        assert!(err.contains("NaN"), "{err}");
+        let cfg4 = SolveCfg { threads: 4, ..Default::default() };
+        assert!(solve_blocks_parallel(Method::Tsenor, &scores, 4, &cfg4).is_err());
+        // Infinities are just as poisonous to tau normalization.
+        scores.data[2 * 64 + 13] = f32::INFINITY;
+        let err = solve_blocks(Method::Tsenor, &scores, 4, &cfg).unwrap_err().to_string();
+        assert!(err.contains("inf") && err.contains("block 2"), "{err}");
+        // And the whole-matrix API reports through the same check.
+        let mut w = Mat::from_fn(16, 16, |i, j| (1 + i + j) as f32);
+        *w.at_mut(9, 1) = f32::NAN; // second 8x8 block row -> block 2
+        let err = solve_matrix(Method::Tsenor, &w, NmPattern::new(4, 8), &cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("block 2"), "{err}");
+    }
+
+    #[test]
+    fn m64_patterns_take_the_vectorized_path_end_to_end() {
+        // The compression-accuracy frontier patterns (16:64, 32:64) must
+        // run the full vectorized TSENOR stack: feasible masks, near
+        // scalar-path quality, and chunked fan-out still bit-invisible.
+        let scores = random_blocks(6, 64, 91);
+        let cfg = SolveCfg::default();
+        for n in [16usize, 32] {
+            let masks = solve_blocks(Method::Tsenor, &scores, n, &cfg).unwrap();
+            assert!(batch_feasible(&masks, n), "16:64-class mask infeasible at n={n}");
+            let scalar = solve_blocks(Method::TsenorScalar, &scores, n, &cfg).unwrap();
+            let ov = batch_objective(&masks, &scores);
+            let os = batch_objective(&scalar, &scores);
+            assert!((ov - os).abs() / ov.abs() < 1e-3, "n={n}: {ov} vs {os}");
+            let cfg3 = SolveCfg { threads: 3, ..Default::default() };
+            let par = solve_blocks_parallel(Method::Tsenor, &scores, n, &cfg3).unwrap();
+            assert_eq!(masks.data, par.data, "n={n}: parallel != serial at M=64");
         }
     }
 
@@ -285,7 +379,8 @@ mod tests {
             &w,
             NmPattern::new(4, 8),
             &SolveCfg::default(),
-        );
+        )
+        .unwrap();
         assert_eq!((mask.rows, mask.cols), (16, 32));
         // Transposable: row & col sums inside each 8x8 block are 4.
         let blocks = partition_blocks(&mask, 8);
@@ -296,8 +391,8 @@ mod tests {
     fn scalar_matches_vectorized_tsenor() {
         let scores = random_blocks(6, 8, 55);
         let cfg = SolveCfg::default();
-        let a = solve_blocks(Method::Tsenor, &scores, 4, &cfg);
-        let b = solve_blocks(Method::TsenorScalar, &scores, 4, &cfg);
+        let a = solve_blocks(Method::Tsenor, &scores, 4, &cfg).unwrap();
+        let b = solve_blocks(Method::TsenorScalar, &scores, 4, &cfg).unwrap();
         // Same algorithm, same order of float ops in rounding; dykstra
         // differs only in reduction order -> identical masks expected on
         // well-separated inputs. Compare objectives with tolerance.

@@ -8,7 +8,7 @@
 //! quality gap this costs.
 
 use crate::masks::rounding;
-use crate::util::tensor::Blocks;
+use crate::util::tensor::{Blocks, BlocksView};
 
 /// One block: greedy on raw scores + feasibility repair (the published
 /// method completes the mask arbitrarily; we complete via the same
@@ -20,7 +20,8 @@ pub fn solve_block(score: &[f32], m: usize, n: usize) -> Vec<f32> {
     mask
 }
 
-pub fn solve_batch(scores: &Blocks, n: usize) -> Blocks {
+pub fn solve_batch<'a>(scores: impl Into<BlocksView<'a>>, n: usize) -> Blocks {
+    let scores = scores.into();
     let mut out = Blocks::zeros(scores.b, scores.m);
     let sz = scores.m * scores.m;
     for k in 0..scores.b {

@@ -261,18 +261,28 @@ pub(crate) fn concat_score_blocks(scores: &[&Mat], m: usize) -> (Blocks, Vec<usi
 /// [`concat_score_blocks`] with each member's effective tau folded into
 /// its block data (the per-matrix normalization of the coalesced path):
 /// returns (scaled batch for Dykstra-at-tau-1, raw batch for rounding,
-/// per-matrix block counts).
+/// per-matrix block counts). Errors on non-finite scores — this path
+/// bypasses `solver::solve_matrix`'s entry check, and `f32::max` would
+/// otherwise swallow a NaN during the per-member tau fold.
 pub(crate) fn concat_scaled_blocks(
     scores: &[&Mat],
     m: usize,
     tau0: f32,
-) -> (Blocks, Blocks, Vec<usize>) {
+) -> Result<(Blocks, Blocks, Vec<usize>)> {
     let mut scaled = Blocks { b: 0, m, data: Vec::new() };
     let mut raw = Blocks { b: 0, m, data: Vec::new() };
     let mut counts = Vec::with_capacity(scores.len());
-    for s in scores {
+    for (i, s) in scores.iter().enumerate() {
         let blocks = partition_blocks(&s.abs(), m);
-        let max_abs = blocks.data.iter().fold(0.0f32, |a, &x| a.max(x));
+        let mut max_abs = 0.0f32;
+        for (at, &x) in blocks.data.iter().enumerate() {
+            anyhow::ensure!(
+                x.is_finite(),
+                "coalesced solve: non-finite score {x} in member {i}, block {}",
+                at / (m * m)
+            );
+            max_abs = max_abs.max(x);
+        }
         let tau = dykstra::effective_tau(max_abs, tau0);
         counts.push(blocks.b);
         scaled.b += blocks.b;
@@ -280,7 +290,7 @@ pub(crate) fn concat_scaled_blocks(
         raw.b += blocks.b;
         raw.data.extend_from_slice(&blocks.data);
     }
-    (scaled, raw, counts)
+    Ok((scaled, raw, counts))
 }
 
 /// Inverse of [`concat_score_blocks`]: slice the solved batch back into
@@ -346,7 +356,7 @@ impl CpuOracle {
             (score.rows / pattern.m) * (score.cols / pattern.m),
             Ordering::Relaxed,
         );
-        Ok(solver::solve_matrix(self.method, score, pattern, &self.cfg))
+        solver::solve_matrix(self.method, score, pattern, &self.cfg)
     }
 }
 
@@ -377,7 +387,7 @@ impl MaskService for CpuOracle {
         }
         let (combined, counts) = concat_score_blocks(scores, pattern.m);
         let solved =
-            solver::solve_blocks_parallel(self.method, &combined, pattern.n, &self.cfg);
+            solver::solve_blocks_parallel(self.method, &combined, pattern.n, &self.cfg)?;
         self.calls.fetch_add(scores.len(), Ordering::Relaxed);
         self.blocks.fetch_add(combined.b, Ordering::Relaxed);
         Ok(split_group_masks(&solved, scores, &counts))
@@ -394,7 +404,8 @@ impl MaskService for CpuOracle {
         {
             return scores.iter().map(|s| self.solve_now(s, pattern)).collect();
         }
-        let (scaled, raw, counts) = concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0);
+        let (scaled, raw, counts) =
+            concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0)?;
         let frac = dykstra::solve_batch(&scaled, pattern.n, 1.0, self.cfg.dykstra.iters);
         let masks = rounding::round_batch(&frac, &raw, pattern.n, self.cfg.ls_steps);
         self.calls.fetch_add(scores.len(), Ordering::Relaxed);

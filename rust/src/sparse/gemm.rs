@@ -59,15 +59,36 @@ fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 /// match `matmul` (same loop order; `c + 0.0` only ever changes a
 /// zero's sign bit).
 pub fn matmul_dense_baseline(a: &Mat, b: &Mat) -> Mat {
+    matmul_dense_baseline_threaded(a, b, 1)
+}
+
+/// [`matmul_dense_baseline`] with `threads`-way row-panel fan-out, so
+/// the dense baseline stays honest when timed against the threaded
+/// sparse kernels (a serial baseline would hand the sparse side a free
+/// `threads`x). Per-row work and accumulation order are unchanged, so
+/// any thread count is bit-identical to serial.
+pub fn matmul_dense_baseline_threaded(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows, "gemm shape mismatch");
     let mut c = Mat::zeros(a.rows, b.cols);
+    crate::sparse::fan_out_rows(a.rows, b.cols, threads, &mut c.data, |row0, panel| {
+        dense_baseline_rows(a, b, row0, panel);
+    });
+    c
+}
+
+/// Serial no-skip panel: a's rows `row0..row0 + panel rows` into `out`.
+/// Same k-panel/i-panel blocking (and therefore the same ascending-k
+/// accumulation order per element) as the historical whole-matrix loop.
+fn dense_baseline_rows(a: &Mat, b: &Mat, row0: usize, out: &mut [f32]) {
+    let cols = b.cols;
+    let nrows = out.len() / cols.max(1);
     for kk in (0..a.cols).step_by(KC) {
         let kend = (kk + KC).min(a.cols);
-        for ii in (0..a.rows).step_by(MC) {
-            let iend = (ii + MC).min(a.rows);
+        for ii in (0..nrows).step_by(MC) {
+            let iend = (ii + MC).min(nrows);
             for i in ii..iend {
-                let arow = a.row(i);
-                let crow = c.row_mut(i);
+                let arow = a.row(row0 + i);
+                let crow = &mut out[i * cols..(i + 1) * cols];
                 for k in kk..kend {
                     let aik = arow[k];
                     let brow = b.row(k);
@@ -78,7 +99,6 @@ pub fn matmul_dense_baseline(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
-    c
 }
 
 /// c = a^T @ a (Gram matrix), exploiting symmetry.
@@ -168,6 +188,21 @@ mod tests {
         for (g, w) in got.data.iter().zip(&want.data) {
             assert!((g - w).abs() < 1e-4, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn dense_baseline_threaded_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(11);
+        let a = Mat::from_fn(23, 17, |_, _| rng.normal());
+        let b = Mat::from_fn(17, 9, |_, _| rng.normal());
+        let serial = matmul_dense_baseline(&a, &b);
+        for threads in [2usize, 5, 64] {
+            let par = matmul_dense_baseline_threaded(&a, &b, threads);
+            assert_eq!(par.data, serial.data, "threads={threads}");
+        }
+        // Empty shapes are fine.
+        let e = matmul_dense_baseline_threaded(&Mat::zeros(0, 4), &Mat::zeros(4, 3), 4);
+        assert_eq!((e.rows, e.cols), (0, 3));
     }
 
     #[test]

@@ -2,6 +2,81 @@
 //! (lower) — measuring what (transposable) N:M sparsity buys on forward
 //! and backward matrix products relative to dense GEMM. Stand-in for
 //! nmSPMM / cuBLAS on this testbed (DESIGN.md §Substitutions).
+//!
+//! `nm` holds the compressed format + SpMM kernels, `gemm` the dense
+//! baselines, `train` the end-to-end training-step workload (the
+//! `train-step` CLI). All hot kernels share one threading discipline:
+//! [`fan_out_rows`] splits the OUTPUT into disjoint contiguous row
+//! panels over scoped threads (the same shape as
+//! `coordinator::executor`'s layer fan-out), so threading is
+//! bit-invisible — no worker ever accumulates into another's rows.
 
 pub mod gemm;
 pub mod nm;
+pub mod train;
+
+/// Fan a row-parallel kernel out over scoped threads: `out` (a
+/// `rows * cols` row-major buffer) is split into contiguous disjoint
+/// row panels, and `kernel(row0, panel)` runs once per panel.
+/// `threads <= 1` (or a single row) runs inline on the caller thread.
+///
+/// Determinism: panels partition the output, each output row is written
+/// by exactly one invocation, and `kernel` is required to be a pure
+/// function of `(row0, panel length)` plus shared read-only state — so
+/// every thread count produces bit-identical output.
+pub(crate) fn fan_out_rows(
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    out: &mut [f32],
+    kernel: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(rows);
+    if threads <= 1 {
+        kernel(0, out);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let kernel = &kernel;
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = chunk.min(rows - row0);
+            let (head, tail) = rest.split_at_mut(take * cols);
+            rest = tail;
+            scope.spawn(move || kernel(row0, head));
+            row0 += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_out_covers_every_row_exactly_once() {
+        for (rows, cols, threads) in [(7usize, 3usize, 3usize), (4, 2, 8), (1, 5, 4), (6, 1, 2)] {
+            let mut out = vec![0.0f32; rows * cols];
+            fan_out_rows(rows, cols, threads, &mut out, |row0, panel| {
+                let nrows = panel.len() / cols;
+                for r in 0..nrows {
+                    for c in 0..cols {
+                        panel[r * cols + c] += ((row0 + r) * cols + c) as f32 + 1.0;
+                    }
+                }
+            });
+            for (i, &x) in out.iter().enumerate() {
+                assert_eq!(x, i as f32 + 1.0, "rows={rows} threads={threads} slot {i}");
+            }
+        }
+        // Degenerate shapes are no-ops, not panics.
+        fan_out_rows(0, 4, 2, &mut [], |_, _| unreachable!());
+        fan_out_rows(4, 0, 2, &mut [], |_, _| unreachable!());
+    }
+}

@@ -11,9 +11,61 @@
 //!     TRANSPOSABLE mask — to use the same compressed fast path. With a
 //!     standard mask the backward falls back to dense-gather (slow path),
 //!     which is exactly the asymmetry the paper motivates with.
+//!
+//! # Kernel engine
+//!
+//! All three training-step products are served from ONE `NmCompressed`
+//! record of W (what "transposable" buys — no second compression, no
+//! dense decode):
+//!
+//! * `spmm`                  y  = x @ W         (forward)
+//! * `spmm_transposed`       dx = g @ W^T       (backward-data, scatter)
+//! * `spmm_backward_weight`  dW = (x^T @ g) ⊙ S (backward-weight, masked)
+//!
+//! §Perf structure (shared by all kernels; `*_threaded` variants fan
+//! disjoint output panels over scoped threads, same pattern as
+//! `coordinator::executor`):
+//!  * register blocking over RB=4 batch rows: the values/indices streams
+//!    (the only large operands) are read once per 4 rows instead of once
+//!    per row, quadrupling arithmetic intensity on the metadata;
+//!  * column panels of JP keep the output panel L1/L2-resident;
+//!  * the `idx < M` bounds check is hoisted out of every inner loop into
+//!    the format invariant (enforced at construction — see below), so
+//!    the x-window gather is a single unchecked load;
+//!  * values/indices are consumed as contiguous streams.
+//!
+//! # Determinism contract
+//!
+//! Output rows are partitioned disjointly across threads and every
+//! output element accumulates its terms in a fixed order — ascending
+//! `(group, slot)` for `spmm`, ascending contraction index for the
+//! backward kernels — independent of RB, JP or thread count. Threaded
+//! results are therefore **bit-identical** to serial, and (because the
+//! fixed order is the ascending contraction order and skipped terms are
+//! exact `±0.0` no-ops) bit-identical to the no-skip dense baseline
+//! (`gemm::matmul_dense_baseline`) too. `tests/sparse_kernels.rs` pins
+//! all of this.
+//!
+//! # Trust boundary
+//!
+//! `indices[k] < M` (and in-group uniqueness) is a *format invariant*,
+//! not a per-use check. The two constructors uphold it: [`NmCompressed::compress`]
+//! by construction, [`NmCompressed::from_parts`] by validating untrusted
+//! bytes (the stream store's shard-reload path). The payload fields are
+//! private precisely so no third, unvalidated construction path exists —
+//! a corrupt index byte from disk fails loudly at deserialization with
+//! the offending position named, and never reaches the unchecked
+//! gathers in the kernels.
 
+use crate::sparse::fan_out_rows;
 use crate::util::tensor::Mat;
 use anyhow::{bail, ensure, Result};
+
+/// Batch rows per register block (see module §Perf).
+const RB: usize = 4;
+/// Output columns per panel: JP f32 accumulator slots per blocked row
+/// stay cache-resident while the values/indices streams pass through.
+const JP: usize = 512;
 
 /// N:M-compressed matrix (compressed along rows: each column j of W is
 /// split into row-groups of M with exactly N kept).
@@ -23,10 +75,13 @@ pub struct NmCompressed {
     pub cols: usize,
     pub n: usize,
     pub m: usize,
-    /// (rows/M * N) x cols values, row-group-major.
-    pub values: Vec<f32>,
-    /// Matching in-group row offsets (0..M).
-    pub indices: Vec<u8>,
+    /// (rows/M * N) x cols values, row-group-major. Private: every
+    /// construction goes through `compress` or `from_parts`, which
+    /// uphold the `indices < M` / no-duplicate invariant the unchecked
+    /// kernel gathers rely on.
+    values: Vec<f32>,
+    /// Matching in-group row offsets (0..M), same layout and invariant.
+    indices: Vec<u8>,
 }
 
 impl NmCompressed {
@@ -84,12 +139,93 @@ impl NmCompressed {
         Ok(NmCompressed { rows: w.rows, cols: w.cols, n, m, values, indices })
     }
 
+    /// Reconstruct a record from externally-supplied parts — THE entry
+    /// point for untrusted bytes (disk shards, network). Validates shape
+    /// arithmetic, payload lengths, `indices < M`, and in-group index
+    /// uniqueness; errors name the offending flat position so a corrupt
+    /// byte is locatable. Without this gate a crafted index byte would
+    /// be out-of-bounds UB in the kernels' unchecked gathers.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        n: usize,
+        m: usize,
+        values: Vec<f32>,
+        indices: Vec<u8>,
+    ) -> Result<Self> {
+        ensure!(m > 0, "nm record: M must be positive");
+        ensure!(n <= m, "nm record: N={n} > M={m}");
+        ensure!(
+            rows % m == 0,
+            "nm record: {rows} rows not divisible into groups of M={m}"
+        );
+        let kept = rows / m * n * cols;
+        ensure!(
+            values.len() == kept,
+            "nm record: {} values, expected {kept} for {rows}x{cols} {n}:{m}",
+            values.len()
+        );
+        ensure!(
+            indices.len() == kept,
+            "nm record: {} index bytes, expected {kept} for {rows}x{cols} {n}:{m}",
+            indices.len()
+        );
+        let c = NmCompressed { rows, cols, n, m, values, indices };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Walk every index byte: range check + in-group duplicate check,
+    /// both naming the flat position. Same screening as [`Self::mask`]
+    /// but allocation-light (an M-entry stamp table instead of a dense
+    /// rows x cols matrix) — this runs on every shard load, where the
+    /// streaming path's whole point is bounded transient memory.
+    ///
+    /// Duplicates are per (group, column), so all n slots of one
+    /// column are checked together (j outside s): interleaving columns
+    /// between a column's slots would let another column legally
+    /// reusing the same row offset overwrite its stamp and hide the
+    /// duplicate.
+    fn validate(&self) -> Result<()> {
+        let groups = if self.m == 0 { 0 } else { self.rows / self.m };
+        // seen[r] == stamp of the (group, column) that last kept row
+        // offset r; a repeat within the same stamp is a duplicate.
+        let mut seen = vec![usize::MAX; self.m];
+        for g in 0..groups {
+            for j in 0..self.cols {
+                let stamp = g * self.cols + j;
+                for s in 0..self.n {
+                    let at = (g * self.n + s) * self.cols + j;
+                    let r = self.indices[at] as usize;
+                    ensure!(r < self.m, "nm record: index {r} >= M={} at position {at}", self.m);
+                    ensure!(
+                        seen[r] != stamp,
+                        "nm record: duplicate index {r} in column {j}, row group {g} \
+                         (position {at})"
+                    );
+                    seen[r] = stamp;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Kept values, row-group-major (read-only; see the field invariant).
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// In-group row offsets matching `values` (read-only).
+    pub fn indices(&self) -> &[u8] {
+        &self.indices
+    }
+
     /// Reconstruct the exact binary mask from the index bytes. Errors
     /// on duplicate in-group indices (a corrupt record would silently
     /// drop a kept value in `decompress`), naming the flat position.
     pub fn mask(&self) -> Result<Mat> {
         let mut mask = Mat::zeros(self.rows, self.cols);
-        let groups = self.rows / self.m;
+        let groups = if self.m == 0 { 0 } else { self.rows / self.m };
         for g in 0..groups {
             for s in 0..self.n {
                 for j in 0..self.cols {
@@ -109,7 +245,7 @@ impl NmCompressed {
         Ok(mask)
     }
 
-    /// Decompress back to dense (for testing).
+    /// Decompress back to dense (for testing and the slow path).
     pub fn decompress(&self) -> Mat {
         let mut w = Mat::zeros(self.rows, self.cols);
         let groups = self.rows / self.m;
@@ -126,58 +262,279 @@ impl NmCompressed {
     }
 }
 
-/// Forward sparse GEMM: y = x @ W_compressed. Skips the (M-N)/M zero
-/// fraction of multiply-adds; the gather on x reads within one M-element
-/// window (L1-resident).
-///
-/// §Perf: the x gather is the only non-contiguous access; `idx < M` is a
-/// format invariant (enforced by `compress`), so the window lookup uses
-/// an unchecked read and the remaining loop is a pure vals/idxs stream.
+/// Forward sparse GEMM: y = x @ W_compressed. Serial entry point
+/// (`spmm_threaded` with one worker); skips the (M-N)/M zero fraction
+/// of multiply-adds.
 pub fn spmm(x: &Mat, w: &NmCompressed) -> Mat {
-    assert_eq!(x.cols, w.rows);
+    spmm_threaded(x, w, 1)
+}
+
+/// Forward sparse GEMM with `threads`-way row-panel fan-out. Panels are
+/// disjoint output rows, so any thread count is bit-identical to serial.
+pub fn spmm_threaded(x: &Mat, w: &NmCompressed, threads: usize) -> Mat {
+    assert_eq!(x.cols, w.rows, "spmm shape mismatch");
     let mut y = Mat::zeros(x.rows, w.cols);
-    let groups = w.rows / w.m;
+    fan_out_rows(x.rows, w.cols, threads, &mut y.data, |row0, panel| {
+        spmm_rows(x, w, row0, panel);
+    });
+    y
+}
+
+/// Serial panel kernel: x rows `row0..row0 + out.len()/cols` into the
+/// matching y rows. Register-blocks RB rows at a time.
+fn spmm_rows(x: &Mat, w: &NmCompressed, row0: usize, out: &mut [f32]) {
+    if w.cols == 0 {
+        return;
+    }
+    let nrows = out.len() / w.cols;
+    let mut r = 0usize;
+    while r + RB <= nrows {
+        spmm_rb::<RB>(x, w, row0 + r, &mut out[r * w.cols..(r + RB) * w.cols]);
+        r += RB;
+    }
+    while r < nrows {
+        spmm_rb::<1>(x, w, row0 + r, &mut out[r * w.cols..(r + 1) * w.cols]);
+        r += 1;
+    }
+}
+
+/// Micro-kernel: RB_ rows of x against the full record. The inner loop
+/// is a pure contiguous stream over one (group, slot) row of
+/// values/indices, amortized over RB_ output rows; the only gather is
+/// the L1-resident M-element x window.
+fn spmm_rb<const RB_: usize>(x: &Mat, w: &NmCompressed, xrow0: usize, out: &mut [f32]) {
     let cols = w.cols;
-    for i in 0..x.rows {
-        let xrow = x.row(i);
-        let yrow = y.row_mut(i);
+    debug_assert_eq!(out.len(), RB_ * cols);
+    let groups = if w.m == 0 { 0 } else { w.rows / w.m };
+    let xrows: [&[f32]; RB_] = std::array::from_fn(|t| x.row(xrow0 + t));
+    // Raw base pointer: the RB_ accumulator rows live in one contiguous
+    // panel but must be updated together inside the j loop, which safe
+    // code cannot express as RB_ simultaneous `&mut` rows.
+    let yptr = out.as_mut_ptr();
+    let mut jp = 0usize;
+    while jp < cols {
+        let jlen = JP.min(cols - jp);
         for g in 0..groups {
             let base = g * w.m;
-            let window = &xrow[base..base + w.m];
+            let wins: [&[f32]; RB_] = std::array::from_fn(|t| &xrows[t][base..base + w.m]);
             for s in 0..w.n {
-                let voff = (g * w.n + s) * cols;
-                let vals = &w.values[voff..voff + cols];
-                let idxs = &w.indices[voff..voff + cols];
-                for j in 0..cols {
-                    // SAFETY: compress() guarantees idxs[j] < M == window.len().
-                    let xv = unsafe { *window.get_unchecked(idxs[j] as usize) };
-                    yrow[j] += xv * vals[j];
+                let voff = (g * w.n + s) * cols + jp;
+                let vals = &w.values[voff..voff + jlen];
+                let idxs = &w.indices[voff..voff + jlen];
+                for j in 0..jlen {
+                    let idx = idxs[j] as usize;
+                    let v = vals[j];
+                    for t in 0..RB_ {
+                        // SAFETY: idx < M == wins[t].len() is the
+                        // NmCompressed format invariant (enforced by
+                        // compress()/from_parts(); fields are private,
+                        // so no unvalidated record exists). t*cols +
+                        // jp+j < RB_*cols == out.len().
+                        unsafe {
+                            let xv = *wins[t].get_unchecked(idx);
+                            *yptr.add(t * cols + jp + j) += xv * v;
+                        }
+                    }
+                }
+            }
+        }
+        jp += jlen;
+    }
+}
+
+/// Backward-data fast path, decode-free: dx = g @ W^T served directly
+/// from the SAME compressed record as the forward pass — the payoff of
+/// a transposable mask (`spmm_transposed_fast` needs a second
+/// `compress` of W^T; this kernel needs no extra allocation at all).
+/// A scatter-style panel kernel: each stored (i, j, v) contributes
+/// `g[a, j] * v` to `dx[a, i]`, with j iterated ascending so every
+/// output element accumulates in ascending contraction order (bitwise
+/// equal to the dense baseline and to `spmm_transposed_fast`).
+///
+/// Note this serves ANY column-group record; what a NON-transposable
+/// mask loses is the forward direction of its transpose — the realistic
+/// standard-mask training fallback stays `spmm_transposed_slow`
+/// (decompress + dense), which is what Fig. 4 (lower) quantifies.
+pub fn spmm_transposed(g: &Mat, w: &NmCompressed) -> Mat {
+    spmm_transposed_threaded(g, w, 1)
+}
+
+/// `spmm_transposed` with `threads`-way row-panel fan-out over g's rows
+/// (disjoint dx rows; bit-identical at any thread count).
+pub fn spmm_transposed_threaded(g: &Mat, w: &NmCompressed, threads: usize) -> Mat {
+    assert_eq!(g.cols, w.cols, "spmm_transposed shape mismatch");
+    let mut dx = Mat::zeros(g.rows, w.rows);
+    fan_out_rows(g.rows, w.rows, threads, &mut dx.data, |row0, panel| {
+        spmm_t_rows(g, w, row0, panel);
+    });
+    dx
+}
+
+fn spmm_t_rows(g: &Mat, w: &NmCompressed, row0: usize, out: &mut [f32]) {
+    if w.rows == 0 {
+        return;
+    }
+    let nrows = out.len() / w.rows;
+    let mut r = 0usize;
+    while r + RB <= nrows {
+        spmm_t_rb::<RB>(g, w, row0 + r, &mut out[r * w.rows..(r + RB) * w.rows]);
+        r += RB;
+    }
+    while r < nrows {
+        spmm_t_rb::<1>(g, w, row0 + r, &mut out[r * w.rows..(r + 1) * w.rows]);
+        r += 1;
+    }
+}
+
+/// Transposed micro-kernel: RB_ rows of g scattered into RB_ dx rows.
+/// Loop order is group → j (ascending) → slot, so each dx element's
+/// terms arrive in ascending j; the n values/indices rows of a group
+/// advance as n contiguous lock-step streams. The scatter target is the
+/// M-element dx window of the current group (L1-resident).
+fn spmm_t_rb<const RB_: usize>(g: &Mat, w: &NmCompressed, grow0: usize, out: &mut [f32]) {
+    let cols = w.cols;
+    let wrows = w.rows;
+    debug_assert_eq!(out.len(), RB_ * wrows);
+    let groups = if w.m == 0 { 0 } else { wrows / w.m };
+    let grows: [&[f32]; RB_] = std::array::from_fn(|t| g.row(grow0 + t));
+    let optr = out.as_mut_ptr();
+    for grp in 0..groups {
+        let base = grp * w.m;
+        for j in 0..cols {
+            let gv: [f32; RB_] = std::array::from_fn(|t| grows[t][j]);
+            for s in 0..w.n {
+                let at = (grp * w.n + s) * cols + j;
+                // SAFETY: at < groups*n*cols == values.len() ==
+                // indices.len(); idx < M (format invariant), so
+                // base + idx < wrows and t*wrows + base + idx fits out.
+                unsafe {
+                    let idx = *w.indices.get_unchecked(at) as usize;
+                    let v = *w.values.get_unchecked(at);
+                    for t in 0..RB_ {
+                        *optr.add(t * wrows + base + idx) += gv[t] * v;
+                    }
                 }
             }
         }
     }
-    y
 }
 
-/// Backward fast path: dx = g @ W^T where W^T is ALSO available compressed
-/// — only possible when the mask is transposable. `wt` is the compressed
-/// transpose (compress(w.transpose(), mask.transpose())).
+/// Backward-weight product at sparse cost: dW = (x^T @ g) ⊙ S, computed
+/// ONLY at the record's kept positions (the masked-gradient update
+/// never reads pruned slots, so the (M-N)/M fraction of the dense
+/// product is wasted work). Uses the record's index metadata alone —
+/// values are untouched — and accumulates each kept element over the
+/// batch in ascending order, bitwise equal to the kept entries of the
+/// dense `x^T @ g`. Pruned slots stay exactly +0.0.
+pub fn spmm_backward_weight(x: &Mat, g: &Mat, w: &NmCompressed) -> Mat {
+    spmm_backward_weight_threaded(x, g, w, 1)
+}
+
+/// `spmm_backward_weight` fanned over group-aligned row panels of dW
+/// (each M-row group is written by exactly one thread; bit-identical at
+/// any thread count).
+pub fn spmm_backward_weight_threaded(
+    x: &Mat,
+    g: &Mat,
+    w: &NmCompressed,
+    threads: usize,
+) -> Mat {
+    assert_eq!(x.cols, w.rows, "spmm_backward_weight: x vs W shape mismatch");
+    assert_eq!(g.cols, w.cols, "spmm_backward_weight: g vs W shape mismatch");
+    assert_eq!(x.rows, g.rows, "spmm_backward_weight: batch mismatch");
+    let mut dw = Mat::zeros(w.rows, w.cols);
+    let groups = if w.m == 0 { 0 } else { w.rows / w.m };
+    // "Rows" of the fan-out are whole M-row groups so panel boundaries
+    // never split a scatter window.
+    fan_out_rows(groups, w.m * w.cols, threads, &mut dw.data, |grp0, panel| {
+        dw_groups(x, g, w, grp0, panel);
+    });
+    dw
+}
+
+fn dw_groups(x: &Mat, g: &Mat, w: &NmCompressed, grp0: usize, out: &mut [f32]) {
+    let cols = w.cols;
+    let gsz = w.m * cols;
+    if gsz == 0 {
+        return;
+    }
+    let ngroups = out.len() / gsz;
+    for gi in 0..ngroups {
+        let out_grp = &mut out[gi * gsz..(gi + 1) * gsz];
+        let mut b = 0usize;
+        while b + RB <= x.rows {
+            dw_group_rb::<RB>(x, g, w, grp0 + gi, b, out_grp);
+            b += RB;
+        }
+        while b < x.rows {
+            dw_group_rb::<1>(x, g, w, grp0 + gi, b, out_grp);
+            b += 1;
+        }
+    }
+}
+
+/// One group's dW panel, accumulating RB_ batch rows per sweep of the
+/// group's index streams (metadata read once per RB_ batch rows).
+fn dw_group_rb<const RB_: usize>(
+    x: &Mat,
+    g: &Mat,
+    w: &NmCompressed,
+    grp: usize,
+    b0: usize,
+    out: &mut [f32],
+) {
+    let cols = w.cols;
+    debug_assert_eq!(out.len(), w.m * cols);
+    let base = grp * w.m;
+    let xwins: [&[f32]; RB_] = std::array::from_fn(|t| &x.row(b0 + t)[base..base + w.m]);
+    let grows: [&[f32]; RB_] = std::array::from_fn(|t| g.row(b0 + t));
+    let optr = out.as_mut_ptr();
+    for s in 0..w.n {
+        let off = (grp * w.n + s) * cols;
+        let idxs = &w.indices[off..off + cols];
+        for j in 0..cols {
+            let idx = idxs[j] as usize;
+            for t in 0..RB_ {
+                // SAFETY: idx < M (format invariant) bounds both the
+                // xwins gather and the out row; idx*cols + j <
+                // M*cols == out.len(). Terms add in ascending batch
+                // order (b-blocks ascend, t ascends within a block).
+                unsafe {
+                    let xv = *xwins[t].get_unchecked(idx);
+                    let gv = *grows[t].get_unchecked(j);
+                    *optr.add(idx * cols + j) += xv * gv;
+                }
+            }
+        }
+    }
+}
+
+/// Backward fast path via a SECOND compressed record: dx = g @ W^T where
+/// `wt` is `compress(w.transpose(), mask.transpose())`. Kept as the
+/// differential reference for `spmm_transposed` (which serves the same
+/// product from the original record with no extra allocation).
 pub fn spmm_transposed_fast(g: &Mat, wt: &NmCompressed) -> Mat {
     spmm(g, wt)
 }
 
 /// Backward slow path for non-transposable masks: the compressed layout
-/// cannot serve the transposed product, so the realistic fallback is
-/// decompress-to-dense + dense GEMM — i.e. the backward pass gets NO
-/// sparsity speedup (plus the decompression tax). This is exactly the
-/// asymmetry Fig. 4 (lower) quantifies. The GEMM is the guaranteed
-/// dense-cost kernel: the decompressed matrix is (M-N)/M zeros, and
-/// while `matmul_acc`'s skip only fires on the LEFT operand (the dense
-/// gradient here), the fallback's cost model must not depend on which
-/// side the zeros happen to land.
+/// cannot serve a *forward-style* transposed product, so the realistic
+/// fallback is decompress-to-dense + dense GEMM — i.e. the backward
+/// pass gets NO sparsity speedup (plus the decompression tax). This is
+/// exactly the asymmetry Fig. 4 (lower) quantifies. The GEMM is the
+/// guaranteed dense-cost kernel: the decompressed matrix is (M-N)/M
+/// zeros, and the fallback's cost model must not depend on where the
+/// zeros land.
 pub fn spmm_transposed_slow(g: &Mat, w: &NmCompressed) -> Mat {
+    spmm_transposed_slow_threaded(g, w, 1)
+}
+
+/// `spmm_transposed_slow` with the dense GEMM fanned over `threads`
+/// row panels (the fallback must not be handicapped when the fast
+/// paths are threaded).
+pub fn spmm_transposed_slow_threaded(g: &Mat, w: &NmCompressed, threads: usize) -> Mat {
     let dense = w.decompress();
-    crate::sparse::gemm::matmul_dense_baseline(g, &dense.transpose())
+    crate::sparse::gemm::matmul_dense_baseline_threaded(g, &dense.transpose(), threads)
 }
 
 #[cfg(test)]
@@ -196,7 +553,8 @@ mod tests {
             &w,
             NmPattern::new(n, m),
             &SolveCfg::default(),
-        );
+        )
+        .unwrap();
         (w, mask)
     }
 
@@ -236,31 +594,148 @@ mod tests {
     }
 
     #[test]
-    fn spmm_matches_dense() {
+    fn from_parts_roundtrips_a_valid_record() {
+        let (w, mask) = transposable_setup(16, 24, 4, 8);
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
+        let back = NmCompressed::from_parts(
+            c.rows,
+            c.cols,
+            c.n,
+            c.m,
+            c.values().to_vec(),
+            c.indices().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back.decompress(), wm);
+    }
+
+    #[test]
+    fn from_parts_rejects_corrupt_parts_naming_the_position() {
+        // Out-of-range index byte: the OOB-UB vector this gate exists for.
+        let err = NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![0, 9])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("index 9 >= M=4"), "{err}");
+        assert!(err.contains("position 1"), "{err}");
+        // In-range duplicate: would silently drop a kept value.
+        let err = NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![3, 3])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate index 3"), "{err}");
+        assert!(err.contains("position 1"), "{err}");
+        // Multi-column interleaving regression: column 0 keeps offset 0
+        // twice while column 1 legally also keeps offset 0 — a stamp
+        // scheme that visits other columns between a column's slots
+        // would overwrite the stamp and miss this. Layout is
+        // slot-major: s0 = [0, 0], s1 = [0, 1].
+        let err = NmCompressed::from_parts(
+            4,
+            2,
+            2,
+            4,
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![0, 0, 0, 1],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("duplicate index 0"), "{err}");
+        assert!(err.contains("column 0"), "{err}");
+        assert!(err.contains("position 2"), "{err}");
+        // Length mismatches are shape errors, not panics.
+        let err = NmCompressed::from_parts(4, 1, 2, 4, vec![1.0], vec![0, 1])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("1 values"), "{err}");
+        let err = NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![0])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("1 index bytes"), "{err}");
+        // Shape arithmetic that cannot hold a record at all.
+        assert!(NmCompressed::from_parts(5, 1, 2, 4, vec![], vec![]).is_err());
+        assert!(NmCompressed::from_parts(4, 1, 5, 4, vec![], vec![]).is_err());
+        assert!(NmCompressed::from_parts(4, 1, 2, 0, vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn spmm_matches_dense_bitwise() {
         let (w, mask) = transposable_setup(16, 24, 4, 8);
         let wm = w.hadamard(&mask);
         let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
         let mut rng = Rng::new(3);
         let x = Mat::from_fn(5, 16, |_, _| rng.normal());
         let got = spmm(&x, &c);
-        let want = gemm::matmul(&x, &wm);
-        for (g, wv) in got.data.iter().zip(&want.data) {
+        // Ascending contraction order + exact-zero no-ops => the sparse
+        // kernel is bit-identical to the no-skip dense baseline.
+        let want = gemm::matmul_dense_baseline(&x, &wm);
+        assert_eq!(got.data, want.data);
+        // The blocked `matmul` stays within fp tolerance.
+        let blocked = gemm::matmul(&x, &wm);
+        for (g, wv) in got.data.iter().zip(&blocked.data) {
             assert!((g - wv).abs() < 1e-3);
         }
     }
 
     #[test]
-    fn transposable_backward_matches_dense() {
+    fn transposed_kernels_agree_bitwise() {
         let (w, mask) = transposable_setup(16, 16, 4, 8);
         let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
         let wt =
             NmCompressed::compress(&wm.transpose(), &mask.transpose(), 4, 8).expect("transposable");
         let mut rng = Rng::new(4);
         let g = Mat::from_fn(5, 16, |_, _| rng.normal());
         let fast = spmm_transposed_fast(&g, &wt);
-        let want = gemm::matmul(&g, &wm.transpose());
-        for (a, b) in fast.data.iter().zip(&want.data) {
-            assert!((a - b).abs() < 1e-3);
+        let decode_free = spmm_transposed(&g, &c);
+        let want = gemm::matmul_dense_baseline(&g, &wm.transpose());
+        assert_eq!(decode_free.data, want.data, "scatter kernel vs dense");
+        assert_eq!(fast.data, want.data, "re-compressed kernel vs dense");
+    }
+
+    #[test]
+    fn backward_weight_matches_masked_dense() {
+        let (w, mask) = transposable_setup(16, 16, 4, 8);
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
+        let mut rng = Rng::new(6);
+        let x = Mat::from_fn(7, 16, |_, _| rng.normal());
+        let g = Mat::from_fn(7, 16, |_, _| rng.normal());
+        let got = spmm_backward_weight(&x, &g, &c);
+        let want = gemm::matmul_dense_baseline(&x.transpose(), &g).hadamard(&mask);
+        // Kept entries bit-exact; pruned entries exactly +0.0 on the
+        // sparse side (dense ⊙ mask may carry a -0.0).
+        for i in 0..got.data.len() {
+            if mask.data[i] != 0.0 {
+                assert_eq!(got.data[i].to_bits(), want.data[i].to_bits(), "kept entry {i}");
+            } else {
+                assert_eq!(got.data[i].to_bits(), 0.0f32.to_bits(), "pruned entry {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_kernels_are_bit_identical_to_serial() {
+        let (w, mask) = transposable_setup(32, 24, 4, 8);
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 4, 8).unwrap();
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(13, 32, |_, _| rng.normal());
+        let g = Mat::from_fn(13, 24, |_, _| rng.normal());
+        let y1 = spmm(&x, &c);
+        let dx1 = spmm_transposed(&g, &c);
+        let dw1 = spmm_backward_weight(&x, &g, &c);
+        for threads in [2usize, 3, 8, 64] {
+            assert_eq!(spmm_threaded(&x, &c, threads).data, y1.data, "spmm t={threads}");
+            assert_eq!(
+                spmm_transposed_threaded(&g, &c, threads).data,
+                dx1.data,
+                "spmm_transposed t={threads}"
+            );
+            assert_eq!(
+                spmm_backward_weight_threaded(&x, &g, &c, threads).data,
+                dw1.data,
+                "spmm_backward_weight t={threads}"
+            );
         }
     }
 
@@ -276,6 +751,7 @@ mod tests {
         for (a, b) in slow.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-3);
         }
+        assert_eq!(spmm_transposed_slow_threaded(&g, &c, 3).data, slow.data);
     }
 
     #[test]

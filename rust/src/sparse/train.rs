@@ -1,0 +1,347 @@
+//! End-to-end training-step workload: the Fig. 4 (lower) story as an
+//! executable scenario (CLI `train-step`).
+//!
+//! One optimizer step of a linear layer `y = x @ W` runs three matrix
+//! products:
+//!
+//! * forward          `y  = x @ W`
+//! * backward-data    `dx = g @ W^T`
+//! * backward-weight  `dW = (x^T @ g) ⊙ S`   (the update is masked)
+//!
+//! A STANDARD N:M mask accelerates the forward product only — its
+//! backward-data pass pays the decompress + dense-GEMM slow path. A
+//! TRANSPOSABLE mask serves all three passes from ONE compressed record
+//! (`sparse::nm`): forward `spmm`, decode-free `spmm_transposed`, and
+//! the index-driven masked `spmm_backward_weight`. This module times
+//! the three regimes (dense / transposable / standard) pass-by-pass
+//! with the same thread fan-out, self-checking every sparse result
+//! against the dense baseline before timing — a benchmark that drifted
+//! numerically would report an error, not a speedup.
+
+use crate::masks::NmPattern;
+use crate::sparse::gemm::matmul_dense_baseline_threaded;
+use crate::sparse::nm::{
+    spmm_backward_weight_threaded, spmm_threaded, spmm_transposed_slow_threaded,
+    spmm_transposed_threaded, NmCompressed,
+};
+use crate::util::tensor::Mat;
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// Training-step workload knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStepCfg {
+    /// Kernel fan-out width, already resolved by the caller (the CLI
+    /// maps a spec-level `0` = auto through
+    /// `coordinator::executor::effective_jobs`; `0` here is treated as
+    /// `1`). Bit-invisible: every pass threads by disjoint output
+    /// panels.
+    pub threads: usize,
+    /// Timing repetitions per pass (mean reported).
+    pub trials: usize,
+}
+
+impl Default for TrainStepCfg {
+    fn default() -> Self {
+        TrainStepCfg { threads: 1, trials: 3 }
+    }
+}
+
+/// Mean wall seconds per pass of one regime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PassTimes {
+    pub fwd: f64,
+    pub bwd_data: f64,
+    pub bwd_weight: f64,
+}
+
+impl PassTimes {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.bwd_data + self.bwd_weight
+    }
+}
+
+/// Timed training step under the three regimes.
+#[derive(Clone, Debug)]
+pub struct TrainStepReport {
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+    pub pattern: NmPattern,
+    pub threads: usize,
+    /// Dense weights, no sparsity anywhere (the cuBLAS-stand-in floor).
+    pub dense: PassTimes,
+    /// Transposable mask: every pass on the compressed fast path.
+    pub transposable: PassTimes,
+    /// Standard (non-transposable) mask: forward fast, backward-data on
+    /// the decompress + dense slow path.
+    pub standard: PassTimes,
+}
+
+impl TrainStepReport {
+    /// Human-readable pass table with dense/sparse ratios.
+    pub fn render(&self) -> String {
+        let row = |name: &str, t: &PassTimes| {
+            format!(
+                "{name:<14}{:>12.4}{:>12.4}{:>12.4}{:>12.4}\n",
+                t.fwd,
+                t.bwd_data,
+                t.bwd_weight,
+                t.total()
+            )
+        };
+        let ratio = |name: &str, t: &PassTimes| {
+            format!(
+                "{name:<14}{:>11.2}x{:>11.2}x{:>11.2}x{:>11.2}x\n",
+                self.dense.fwd / t.fwd,
+                self.dense.bwd_data / t.bwd_data,
+                self.dense.bwd_weight / t.bwd_weight,
+                self.dense.total() / t.total()
+            )
+        };
+        let mut out = format!(
+            "train-step {}x{} batch {} pattern {} threads {}\n\
+             {:<14}{:>12}{:>12}{:>12}{:>12}\n",
+            self.rows,
+            self.cols,
+            self.batch,
+            self.pattern,
+            self.threads,
+            "secs",
+            "fwd",
+            "bwd-data",
+            "bwd-wgt",
+            "step"
+        );
+        out.push_str(&row("  dense", &self.dense));
+        out.push_str(&row("  transposable", &self.transposable));
+        out.push_str(&row("  standard", &self.standard));
+        out.push_str(&format!(
+            "{:<14}{:>12}{:>12}{:>12}{:>12}\n",
+            "speedup", "fwd", "bwd-data", "bwd-wgt", "step"
+        ));
+        out.push_str(&ratio("  transposable", &self.transposable));
+        out.push_str(&ratio("  standard", &self.standard));
+        out
+    }
+}
+
+fn time_mean(trials: usize, mut f: impl FnMut()) -> f64 {
+    let trials = trials.max(1);
+    let t0 = Instant::now();
+    for _ in 0..trials {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / trials as f64
+}
+
+/// Assert two products agree bit-for-bit (the engine's determinism
+/// contract makes exact equality the RIGHT tolerance — any drift is a
+/// kernel bug, not fp noise).
+fn check_bits(name: &str, got: &Mat, want: &Mat) -> Result<()> {
+    ensure!(
+        got.data.len() == want.data.len(),
+        "train-step {name}: shape drift ({}x{} vs {}x{})",
+        got.rows,
+        got.cols,
+        want.rows,
+        want.cols
+    );
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        ensure!(
+            g.to_bits() == w.to_bits(),
+            "train-step {name}: kernel drifted from dense at element {i}: {g} vs {w}"
+        );
+    }
+    Ok(())
+}
+
+/// Run the timed training step. `x` is the activation batch
+/// `(batch, rows)`, `g` the output gradient `(batch, cols)`, `w` the
+/// dense weight `(rows, cols)`; `tmask` must be transposable N:M and
+/// `smask` standard (column-group) N:M of the same pattern.
+pub fn run_train_step(
+    x: &Mat,
+    g: &Mat,
+    w: &Mat,
+    tmask: &Mat,
+    smask: &Mat,
+    pattern: NmPattern,
+    cfg: &TrainStepCfg,
+) -> Result<TrainStepReport> {
+    ensure!(
+        x.cols == w.rows && g.cols == w.cols && x.rows == g.rows,
+        "train-step: x {}x{}, g {}x{}, w {}x{} are inconsistent",
+        x.rows,
+        x.cols,
+        g.rows,
+        g.cols,
+        w.rows,
+        w.cols
+    );
+    let threads = cfg.threads.max(1);
+    let (n, m) = (pattern.n, pattern.m);
+
+    // One record per regime — the transposable record serves all three
+    // passes with no re-compression and no dense decode.
+    let wt_masked = w.hadamard(tmask);
+    let ct = NmCompressed::compress(&wt_masked, tmask, n, m)
+        .context("train-step: transposable mask is not column-group N:M")?;
+    let ws_masked = w.hadamard(smask);
+    let cs = NmCompressed::compress(&ws_masked, smask, n, m)
+        .context("train-step: standard mask is not column-group N:M")?;
+
+    // Dense operand transposes are precomputed OUTSIDE the timed
+    // region: a real dense stack keeps a transposed copy resident, and
+    // handicapping the baseline with per-step transposes would flatter
+    // the sparse ratios.
+    let w_t = w.transpose();
+    let x_t = x.transpose();
+    let wt_masked_t = wt_masked.transpose();
+    let ws_masked_t = ws_masked.transpose();
+
+    // Self-check EVERY sparse kernel of BOTH regimes against the
+    // no-skip dense baseline before timing anything (bit-exact; see
+    // sparse::nm determinism) — the CLI's "bit-identical OK" line and
+    // CI's grep for it mean all six timed sparse passes, not just the
+    // transposable three.
+    let dw_dense = matmul_dense_baseline_threaded(&x_t, g, threads);
+    let check_dw = |name: &str, got: &Mat, mask: &Mat| -> Result<()> {
+        for i in 0..got.data.len() {
+            let gv = got.data[i];
+            let want = if mask.data[i] != 0.0 { dw_dense.data[i] } else { 0.0 };
+            ensure!(
+                gv.to_bits() == want.to_bits(),
+                "train-step {name}: drifted at element {i}: {gv} vs {want}"
+            );
+        }
+        Ok(())
+    };
+    check_bits(
+        "fwd(transposable)",
+        &spmm_threaded(x, &ct, threads),
+        &matmul_dense_baseline_threaded(x, &wt_masked, threads),
+    )?;
+    check_bits(
+        "bwd-data(transposable)",
+        &spmm_transposed_threaded(g, &ct, threads),
+        &matmul_dense_baseline_threaded(g, &wt_masked_t, threads),
+    )?;
+    check_dw(
+        "bwd-weight(transposable)",
+        &spmm_backward_weight_threaded(x, g, &ct, threads),
+        tmask,
+    )?;
+    check_bits(
+        "fwd(standard)",
+        &spmm_threaded(x, &cs, threads),
+        &matmul_dense_baseline_threaded(x, &ws_masked, threads),
+    )?;
+    check_bits(
+        "bwd-data(standard, slow path)",
+        &spmm_transposed_slow_threaded(g, &cs, threads),
+        &matmul_dense_baseline_threaded(g, &ws_masked_t, threads),
+    )?;
+    check_dw(
+        "bwd-weight(standard)",
+        &spmm_backward_weight_threaded(x, g, &cs, threads),
+        smask,
+    )?;
+
+    let trials = cfg.trials;
+    let dense = PassTimes {
+        fwd: time_mean(trials, || {
+            let _ = matmul_dense_baseline_threaded(x, w, threads);
+        }),
+        bwd_data: time_mean(trials, || {
+            let _ = matmul_dense_baseline_threaded(g, &w_t, threads);
+        }),
+        bwd_weight: time_mean(trials, || {
+            let _ = matmul_dense_baseline_threaded(&x_t, g, threads);
+        }),
+    };
+    let transposable = PassTimes {
+        fwd: time_mean(trials, || {
+            let _ = spmm_threaded(x, &ct, threads);
+        }),
+        bwd_data: time_mean(trials, || {
+            let _ = spmm_transposed_threaded(g, &ct, threads);
+        }),
+        bwd_weight: time_mean(trials, || {
+            let _ = spmm_backward_weight_threaded(x, g, &ct, threads);
+        }),
+    };
+    let standard = PassTimes {
+        fwd: time_mean(trials, || {
+            let _ = spmm_threaded(x, &cs, threads);
+        }),
+        // The slow path's decompress allocation is PART of the cost
+        // being measured — a standard mask pays it every step.
+        bwd_data: time_mean(trials, || {
+            let _ = spmm_transposed_slow_threaded(g, &cs, threads);
+        }),
+        bwd_weight: time_mean(trials, || {
+            let _ = spmm_backward_weight_threaded(x, g, &cs, threads);
+        }),
+    };
+
+    Ok(TrainStepReport {
+        rows: w.rows,
+        cols: w.cols,
+        batch: x.rows,
+        pattern,
+        threads,
+        dense,
+        transposable,
+        standard,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::solver::{solve_matrix, Method, SolveCfg};
+    use crate::pruning::magnitude::standard_nm_mask;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn train_step_runs_and_self_checks() {
+        let mut rng = Rng::new(21);
+        let (rows, cols, batch) = (16usize, 24usize, 6usize);
+        let pattern = NmPattern::new(4, 8);
+        let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+        let x = Mat::from_fn(batch, rows, |_, _| rng.normal());
+        let g = Mat::from_fn(batch, cols, |_, _| rng.normal());
+        let tmask = solve_matrix(Method::Tsenor, &w, pattern, &SolveCfg::default()).unwrap();
+        let smask = standard_nm_mask(&w, pattern);
+        let cfg = TrainStepCfg { threads: 2, trials: 1 };
+        let report = run_train_step(&x, &g, &w, &tmask, &smask, pattern, &cfg).unwrap();
+        assert_eq!((report.rows, report.cols, report.batch), (rows, cols, batch));
+        assert!(report.dense.total() > 0.0);
+        assert!(report.transposable.total() > 0.0);
+        assert!(report.standard.total() > 0.0);
+        let txt = report.render();
+        assert!(txt.contains("transposable"), "{txt}");
+        assert!(txt.contains("bwd-data"), "{txt}");
+    }
+
+    #[test]
+    fn train_step_rejects_inconsistent_shapes() {
+        let w = Mat::zeros(8, 8);
+        let x = Mat::zeros(4, 8);
+        let g = Mat::zeros(3, 8); // batch mismatch vs x
+        let mask = Mat::zeros(8, 8);
+        let err = run_train_step(
+            &x,
+            &g,
+            &w,
+            &mask,
+            &mask,
+            NmPattern::new(4, 8),
+            &TrainStepCfg::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("inconsistent"), "{err}");
+    }
+}

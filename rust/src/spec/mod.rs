@@ -688,6 +688,123 @@ impl SolveSpec {
     }
 }
 
+/// Configuration of a sparse training-step workload run (the
+/// `train-step` command): time forward / backward-data /
+/// backward-weight products of one linear layer under dense,
+/// transposable-mask and standard-mask regimes (`sparse::train`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSpec {
+    /// Layer shape (contraction dim x output dim) and batch rows.
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+    pub pattern: NmPattern,
+    /// Solver producing the transposable mask (the standard mask is
+    /// always magnitude top-N per column group).
+    pub method: Method,
+    /// Kernel fan-out width (`0` = one worker per core). Bit-invisible:
+    /// the sparse engine threads by disjoint output panels.
+    pub threads: usize,
+    /// Timing repetitions per pass.
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl TrainSpec {
+    pub fn new() -> Self {
+        TrainSpec {
+            rows: 512,
+            cols: 512,
+            batch: 128,
+            pattern: NmPattern::new(16, 32),
+            method: Method::Tsenor,
+            threads: 0,
+            trials: 3,
+            seed: 0,
+        }
+    }
+
+    pub fn shape(mut self, rows: usize, cols: usize) -> Self {
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn pattern(mut self, n: usize, m: usize) -> Self {
+        self.pattern = NmPattern::new(n, m);
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", Json::Str("train-step".into())),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("pattern", Json::Str(self.pattern.to_string())),
+            ("method", Json::Str(self.method.name().into())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("trials", Json::Num(self.trials as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainSpec> {
+        let mut spec = TrainSpec::new();
+        if let Some(k) = json_usize(j, "rows")? {
+            spec.rows = k;
+        }
+        if let Some(k) = json_usize(j, "cols")? {
+            spec.cols = k;
+        }
+        if let Some(k) = json_usize(j, "batch")? {
+            spec.batch = k;
+        }
+        if let Some(s) = j.get("pattern").and_then(Json::as_str) {
+            spec.pattern = NmPattern::parse(s)?;
+        }
+        if let Some(s) = j.get("method").and_then(Json::as_str) {
+            spec.method = Method::parse(s)?;
+        }
+        if let Some(k) = json_usize(j, "threads")? {
+            spec.threads = k;
+        }
+        if let Some(k) = json_usize(j, "trials")? {
+            spec.trials = k;
+        }
+        if let Some(k) = json_usize(j, "seed")? {
+            spec.seed = k as u64;
+        }
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> Result<TrainSpec> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<TrainSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read spec {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse spec {}", path.display()))
+    }
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Configuration of a prune-then-fine-tune run (the `finetune` command).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FinetuneSpec {
@@ -955,6 +1072,26 @@ mod tests {
         assert_eq!(spec.pattern, NmPattern::new(16, 32));
         assert_eq!(spec.calib_batches, 8);
         assert!(spec.overrides.is_empty());
+    }
+
+    #[test]
+    fn train_spec_roundtrip_defaults_and_strictness() {
+        // Defaults: the Fig. 4 (lower) default shape, auto threads.
+        let spec = TrainSpec::new();
+        assert_eq!((spec.rows, spec.cols, spec.batch), (512, 512, 128));
+        assert_eq!(spec.pattern, NmPattern::new(16, 32));
+        assert_eq!(spec.threads, 0);
+        // Builder + JSON round-trip.
+        let spec = TrainSpec::new().shape(256, 384).batch(64).pattern(4, 8).threads(4);
+        let back = TrainSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec, back);
+        // Partial JSON overlays defaults; integers are strict.
+        let spec = TrainSpec::parse(r#"{"rows": 128, "pattern": "2:4"}"#).unwrap();
+        assert_eq!((spec.rows, spec.cols), (128, 512));
+        assert_eq!(spec.pattern, NmPattern::new(2, 4));
+        assert!(TrainSpec::parse(r#"{"threads": -1}"#).is_err());
+        assert!(TrainSpec::parse(r#"{"batch": 1.5}"#).is_err());
+        assert!(TrainSpec::parse(r#"{"method": "resnet"}"#).is_err());
     }
 
     #[test]

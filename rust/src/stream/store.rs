@@ -467,53 +467,77 @@ impl StoreReader {
                 };
                 Ok((w, mask))
             }
-            TensorLoc::Compressed {
-                n,
-                m,
-                val_shard,
-                val_offset,
-                idx_shard,
-                idx_offset,
-            } => {
-                ensure!(
-                    *m > 0 && entry.rows % m == 0,
-                    "tensor '{}': {} rows not divisible by M={m}",
-                    entry.name,
-                    entry.rows
-                );
-                let kept = entry.rows / m * n * entry.cols;
-                let values = self
-                    .slice_f32(*val_shard, *val_offset, kept)
-                    .with_context(|| format!("values of '{}'", entry.name))?;
-                let indices = self
-                    .slice_u8(*idx_shard, *idx_offset, kept)
-                    .with_context(|| format!("indices of '{}'", entry.name))?;
-                // Validate every index byte before trusting the shard:
-                // a corrupted byte is reported with its absolute offset
-                // in the index shard, so the bad disk region is
-                // locatable from the error alone.
-                for (k, &idx) in indices.iter().enumerate() {
-                    ensure!(
-                        (idx as usize) < *m,
-                        "tensor '{}': corrupt index byte at shard '{}' offset {} \
-                         (value {idx} >= M={m})",
-                        entry.name,
-                        self.index.shards[*idx_shard],
-                        idx_offset + k,
-                    );
-                }
-                let c = crate::sparse::nm::NmCompressed {
-                    rows: entry.rows,
-                    cols: entry.cols,
-                    n: *n,
-                    m: *m,
-                    values,
-                    indices,
-                };
+            TensorLoc::Compressed { .. } => {
+                let c = self.read_compressed(entry)?;
                 let mask = c.mask()?;
                 Ok((c.decompress(), mask))
             }
         }
+    }
+
+    /// Read an N:M-compressed tensor as a VALIDATED [`NmCompressed`]
+    /// record, without decompressing — the decode-free load path for
+    /// serving SpMM straight from shards. (`read_pruned` builds on it;
+    /// note `train-step --checkpoint` deliberately goes through
+    /// `read_pruned` instead, because it must solve FRESH masks over
+    /// the dense weights rather than reuse the record's mask.)
+    ///
+    /// This is a trust boundary: the record's index bytes come from
+    /// disk, but the SpMM kernels gather through them *unchecked*
+    /// (format invariant). Every byte is therefore validated here —
+    /// first range-checked against the shard so a corrupt byte is
+    /// reported with its absolute shard offset (the bad disk region is
+    /// locatable from the error alone), then passed through
+    /// [`NmCompressed::from_parts`], which re-screens ranges and
+    /// in-group duplicates before any kernel can see the record.
+    pub fn read_compressed(&self, entry: &TensorEntry) -> Result<crate::sparse::nm::NmCompressed> {
+        let TensorLoc::Compressed { n, m, val_shard, val_offset, idx_shard, idx_offset } =
+            &entry.loc
+        else {
+            bail!("tensor '{}' is dense, not an N:M record", entry.name);
+        };
+        ensure!(
+            *m > 0 && entry.rows % m == 0,
+            "tensor '{}': {} rows not divisible by M={m}",
+            entry.name,
+            entry.rows
+        );
+        let kept = entry.rows / m * n * entry.cols;
+        let values = self
+            .slice_f32(*val_shard, *val_offset, kept)
+            .with_context(|| format!("values of '{}'", entry.name))?;
+        let indices = self
+            .slice_u8(*idx_shard, *idx_offset, kept)
+            .with_context(|| format!("indices of '{}'", entry.name))?;
+        // Deliberate second scan next to from_parts' validation: this
+        // loop is what names the ABSOLUTE shard offset of a bad byte
+        // (the contract the corrupt-shard tests pin), which a wrapped
+        // from_parts error cannot — and one extra pass over u8
+        // metadata is noise next to the 4x-larger f32 read above.
+        for (k, &idx) in indices.iter().enumerate() {
+            ensure!(
+                (idx as usize) < *m,
+                "tensor '{}': corrupt index byte at shard '{}' offset {} \
+                 (value {idx} >= M={m})",
+                entry.name,
+                self.index.shards[*idx_shard],
+                idx_offset + k,
+            );
+        }
+        crate::sparse::nm::NmCompressed::from_parts(
+            entry.rows,
+            entry.cols,
+            *n,
+            *m,
+            values,
+            indices,
+        )
+        .with_context(|| {
+            format!(
+                "tensor '{}': corrupt nm record (index shard '{}' @ {})",
+                entry.name, self.index.shards[*idx_shard], idx_offset
+            )
+        })
     }
 
     /// Load every tensor densely (tests / the in-memory comparison

@@ -154,12 +154,12 @@ impl WriteBack {
             // N:M along rows; compress tells us by failing cleanly.
             if let Ok(c) = NmCompressed::compress(w, mask, pattern.n, pattern.m) {
                 let (val_file, val_offset) = {
-                    let (name, a) = self.val_appender((c.values.len() * 4) as u64)?;
-                    (name, a.append_f32(&c.values)?)
+                    let (name, a) = self.val_appender((c.values().len() * 4) as u64)?;
+                    (name, a.append_f32(c.values())?)
                 };
                 let (idx_file, idx_offset) = {
-                    let (name, a) = self.aux_appender(c.indices.len() as u64)?;
-                    (name, a.append_u8(&c.indices)?)
+                    let (name, a) = self.aux_appender(c.indices().len() as u64)?;
+                    (name, a.append_u8(c.indices())?)
                 };
                 return Ok(NamedLoc::Compressed {
                     n: pattern.n,
@@ -271,7 +271,7 @@ mod tests {
     fn pruned_layer(d: usize, seed: u64, pattern: NmPattern) -> (Mat, Mat) {
         let mut rng = Rng::new(seed);
         let w = Mat::from_fn(d, d, |_, _| rng.heavy_tail());
-        let mask = solve_matrix(Method::Tsenor, &w, pattern, &SolveCfg::default());
+        let mask = solve_matrix(Method::Tsenor, &w, pattern, &SolveCfg::default()).unwrap();
         (w.hadamard(&mask), mask)
     }
 

@@ -169,6 +169,60 @@ impl Blocks {
     pub fn block_mat(&self, k: usize) -> Mat {
         Mat::from_vec(self.m, self.m, self.block(k).to_vec())
     }
+
+    /// Borrowed view of the whole batch.
+    #[inline]
+    pub fn view(&self) -> BlocksView<'_> {
+        BlocksView { b: self.b, m: self.m, data: &self.data }
+    }
+
+    /// Borrowed view of `count` blocks starting at block `start` —
+    /// the zero-copy currency of the solver fan-out
+    /// (`masks::solver::solve_blocks_parallel`): chunking a batch over
+    /// threads must never duplicate the score memory, or a threaded
+    /// solve transiently doubles the layer's footprint outside every
+    /// `--memory-budget` account.
+    #[inline]
+    pub fn range(&self, start: usize, count: usize) -> BlocksView<'_> {
+        let sz = self.m * self.m;
+        BlocksView {
+            b: count,
+            m: self.m,
+            data: &self.data[start * sz..(start + count) * sz],
+        }
+    }
+}
+
+/// Borrowed batch of B dense M x M blocks — `Blocks` without ownership.
+/// Every solver `solve_batch` entry point takes `impl Into<BlocksView>`,
+/// so owned batches (`&Blocks`) and sub-range views both flow through
+/// with zero copies.
+#[derive(Clone, Copy, Debug)]
+pub struct BlocksView<'a> {
+    pub b: usize,
+    pub m: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> BlocksView<'a> {
+    #[inline]
+    pub fn block(&self, k: usize) -> &'a [f32] {
+        let sz = self.m * self.m;
+        &self.data[k * sz..(k + 1) * sz]
+    }
+
+    /// Copy into an owned batch (only where an owned `Blocks` is
+    /// genuinely required, e.g. shipping to an XLA literal).
+    pub fn to_blocks(&self) -> Blocks {
+        Blocks { b: self.b, m: self.m, data: self.data.to_vec() }
+    }
+}
+
+impl<'a> From<&'a Blocks> for BlocksView<'a> {
+    #[inline]
+    fn from(b: &'a Blocks) -> BlocksView<'a> {
+        b.view()
+    }
 }
 
 /// Partition a matrix into M x M blocks, (B, M, M) contiguous, row-block
@@ -259,5 +313,25 @@ mod tests {
     fn partition_requires_divisible() {
         let w = Mat::zeros(10, 10);
         partition_blocks(&w, 4);
+    }
+
+    #[test]
+    fn blocks_view_and_range_borrow_without_copying() {
+        let mut rng = Rng::new(3);
+        let mut blocks = Blocks::zeros(5, 4);
+        for x in blocks.data.iter_mut() {
+            *x = rng.normal();
+        }
+        let view = blocks.view();
+        assert_eq!((view.b, view.m), (5, 4));
+        assert_eq!(view.block(3), blocks.block(3));
+        // A range view re-indexes blocks from its own origin.
+        let sub = blocks.range(2, 2);
+        assert_eq!(sub.b, 2);
+        assert_eq!(sub.block(0), blocks.block(2));
+        assert_eq!(sub.block(1), blocks.block(3));
+        // Same backing memory, not a copy.
+        assert!(std::ptr::eq(sub.block(0).as_ptr(), blocks.block(2).as_ptr()));
+        assert_eq!(sub.to_blocks().data, blocks.data[2 * 16..4 * 16]);
     }
 }

@@ -62,7 +62,7 @@ fn xla_tsenor_end_to_end_quality() {
     assert!(rel < 0.10, "XLA TSENOR rel error {rel}");
 
     // And it must agree closely with the CPU TSENOR pipeline.
-    let cpu = solver::solve_blocks(Method::Tsenor, &scores, pattern.n, &SolveCfg::default());
+    let cpu = solver::solve_blocks(Method::Tsenor, &scores, pattern.n, &SolveCfg::default()).unwrap();
     let cpu_obj = batch_objective(&cpu, &scores);
     assert!(
         (got - cpu_obj).abs() / cpu_obj.abs() < 5e-3,

@@ -137,17 +137,63 @@ fn corrupted_index_bytes_are_rejected_naming_the_offset() {
 }
 
 #[test]
-fn duplicate_index_bytes_are_rejected_by_mask_reconstruction() {
+fn duplicate_index_bytes_are_rejected_at_construction() {
     // An in-range but duplicated index is also corruption: decompress
-    // would silently drop a kept value. mask() catches it.
-    let c = NmCompressed {
-        rows: 4,
-        cols: 1,
-        n: 2,
-        m: 4,
-        values: vec![1.0, 2.0],
-        indices: vec![3, 3],
-    };
-    let err = c.mask().unwrap_err().to_string();
+    // would silently drop a kept value. `from_parts` — the only way to
+    // build a record from raw bytes now that the payload fields are
+    // private — refuses it, naming the position.
+    let err = NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![3, 3])
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("duplicate index"), "{err}");
+    assert!(err.contains("position 1"), "{err}");
+}
+
+#[test]
+fn decode_free_load_validates_and_serves_kernels() {
+    // `read_compressed` is the decode-free path: the record goes from
+    // shard bytes straight to SpMM with no dense intermediate — so its
+    // validation IS the kernel's bounds check.
+    let mut rng = Rng::new(19);
+    let dir = tmp("decode_free");
+    let (n, m) = (4usize, 8usize);
+    let mut wb = WriteBack::create(&dir, WritebackMode::Compressed, 1 << 13, 0).unwrap();
+    let (wm, mask, rows, cols) = random_layer(&mut rng, n, m);
+    let loc = wb.put("t", NmPattern::new(n, m), &wm, &mask).unwrap();
+    let mut layers = BTreeMap::new();
+    layers.insert("t".to_string(), (rows, cols, loc));
+    let index = save_index(&dir, &["t".into()], &layers).unwrap();
+    drop(wb);
+
+    let store = StoreReader::open(&dir).unwrap();
+    let c = store.read_compressed(store.index.get("t").unwrap()).unwrap();
+    assert_eq!(c.decompress().data, wm.data, "record reloads bit-exactly");
+    // The loaded record serves a forward product identical to dense.
+    let x = Mat::from_fn(3, rows, |_, _| 0.5);
+    let y = tsenor::sparse::nm::spmm(&x, &c);
+    let want = tsenor::sparse::gemm::matmul_dense_baseline(&x, &wm);
+    assert_eq!(y.data, want.data);
+    // A duplicated (in-range) index byte fails CONSTRUCTION, before any
+    // kernel could gather through it.
+    let TensorLoc::Compressed { idx_shard, idx_offset, .. } = &index.order[0].loc
+    else {
+        panic!("expected nm record")
+    };
+    let shard = dir.join(&index.shards[*idx_shard]);
+    let header = tsenor::util::npy::read_header(&shard).unwrap();
+    let mut bytes = std::fs::read(&shard).unwrap();
+    // First two slots of column 0 belong to the same (group, column);
+    // make them collide while staying in range.
+    let a = bytes[header.data_start + idx_offset];
+    bytes[header.data_start + idx_offset + cols] = a;
+    std::fs::write(&shard, bytes).unwrap();
+    let store = StoreReader::open(&dir).unwrap();
+    // `{:#}` renders the full context chain (the cause carries the
+    // position, the context the shard location).
+    let err = format!(
+        "{:#}",
+        store.read_compressed(store.index.get("t").unwrap()).unwrap_err()
+    );
+    assert!(err.contains("duplicate index"), "{err}");
+    assert!(err.contains("corrupt nm record"), "{err}");
 }

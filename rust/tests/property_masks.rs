@@ -34,7 +34,7 @@ fn tsenor_feasible_and_near_optimal_everywhere() {
     for &(m, n) in &[(4usize, 2usize), (8, 4), (8, 2), (16, 8), (16, 4), (32, 16), (32, 8)] {
         for trial in 0..4 {
             let scores = arb_blocks(&mut rng, 6, m);
-            let masks = solver::solve_blocks(Method::Tsenor, &scores, n, &cfg);
+            let masks = solver::solve_blocks(Method::Tsenor, &scores, n, &cfg).unwrap();
             assert!(batch_feasible(&masks, n), "m={m} n={n} trial={trial}");
             let (_, opt) = exact::solve_batch(&scores, n);
             let rel = relative_error(opt, batch_objective(&masks, &scores));
@@ -56,8 +56,8 @@ fn scale_invariance() {
             m: scores.m,
             data: scores.data.iter().map(|&x| x * 37.5).collect(),
         };
-        let a = solver::solve_blocks(Method::Tsenor, &scores, 4, &cfg);
-        let b = solver::solve_blocks(Method::Tsenor, &scaled, 4, &cfg);
+        let a = solver::solve_blocks(Method::Tsenor, &scores, 4, &cfg).unwrap();
+        let b = solver::solve_blocks(Method::Tsenor, &scaled, 4, &cfg).unwrap();
         assert_eq!(a.data, b.data, "mask changed under scaling");
     }
 }
@@ -81,8 +81,8 @@ fn permutation_equivariance_objective() {
             }
         }
         let cfg = SolveCfg::default();
-        let a = solver::solve_blocks(Method::Tsenor, &scores, n, &cfg);
-        let b = solver::solve_blocks(Method::Tsenor, &permuted, n, &cfg);
+        let a = solver::solve_blocks(Method::Tsenor, &scores, n, &cfg).unwrap();
+        let b = solver::solve_blocks(Method::Tsenor, &permuted, n, &cfg).unwrap();
         let oa = batch_objective(&a, &scores);
         let ob = batch_objective(&b, &permuted);
         assert!((oa - ob).abs() / oa.max(1e-9) < 0.02, "{oa} vs {ob}");
@@ -101,7 +101,7 @@ fn exact_dominates_all_methods() {
             if method == Method::Exact {
                 continue;
             }
-            let masks = solver::solve_blocks(method, &scores, 4, &cfg);
+            let masks = solver::solve_blocks(method, &scores, 4, &cfg).unwrap();
             let obj = batch_objective(&masks, &scores);
             assert!(
                 obj <= opt + 1e-4 * opt.abs().max(1.0),
@@ -146,10 +146,10 @@ fn matrix_roundtrip_objective_identity() {
     let w = Mat::from_fn(32, 64, |_, _| rng.heavy_tail());
     let cfg = SolveCfg::default();
     let pattern = tsenor::masks::NmPattern::new(4, 8);
-    let mask_mat = solver::solve_matrix(Method::Tsenor, &w, pattern, &cfg);
+    let mask_mat = solver::solve_matrix(Method::Tsenor, &w, pattern, &cfg).unwrap();
     let blocks_w = partition_blocks(&w.abs(), 8);
     let blocks_mask = partition_blocks(&mask_mat, 8);
-    let direct = solver::solve_blocks(Method::Tsenor, &blocks_w, 4, &cfg);
+    let direct = solver::solve_blocks(Method::Tsenor, &blocks_w, 4, &cfg).unwrap();
     assert_eq!(blocks_mask.data, direct.data);
     let back = assemble_blocks(&blocks_mask, 32, 64);
     assert_eq!(back.data, mask_mat.data);

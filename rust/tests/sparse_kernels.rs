@@ -1,0 +1,176 @@
+//! Differential + property suite for the sparse compute engine
+//! (`tsenor::sparse::nm`): every kernel, every interchange pattern,
+//! rectangular shapes, degenerate batches, and the full thread sweep —
+//! all pinned BIT-FOR-BIT against the no-skip dense baseline.
+//!
+//! Why exact bits and not a tolerance: the engine's determinism
+//! contract (see `sparse::nm` module docs) fixes each output element's
+//! accumulation to ascending contraction order regardless of register
+//! blocking, column panels or thread count — the same order the dense
+//! baseline uses, with skipped terms being exact `±0.0` no-ops. Under
+//! that contract any difference at all is a kernel bug.
+
+use tsenor::masks::random::random_feasible;
+use tsenor::sparse::gemm::{matmul_dense_baseline, matmul_dense_baseline_threaded};
+use tsenor::sparse::nm::{
+    spmm, spmm_backward_weight, spmm_backward_weight_threaded, spmm_threaded,
+    spmm_transposed, spmm_transposed_fast, spmm_transposed_slow,
+    spmm_transposed_slow_threaded, spmm_transposed_threaded, NmCompressed,
+};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+const PATTERNS: &[(usize, usize)] = &[(1, 4), (2, 4), (4, 8), (16, 32)];
+const THREADS: &[usize] = &[1, 2, 3, 8];
+
+/// Random TRANSPOSABLE mask: every MxM block is an exactly-N-regular
+/// 0/1 matrix (`masks::random::random_feasible`), so both W and W^T are
+/// column-group N:M — the full mask family, not just solver outputs.
+fn random_transposable_mask(rng: &mut Rng, rows: usize, cols: usize, n: usize, m: usize) -> Mat {
+    assert!(rows % m == 0 && cols % m == 0);
+    let mut mask = Mat::zeros(rows, cols);
+    for bi in 0..rows / m {
+        for bj in 0..cols / m {
+            let block = random_feasible(rng, m, n);
+            for r in 0..m {
+                for c in 0..m {
+                    *mask.at_mut(bi * m + r, bj * m + c) = block[r * m + c];
+                }
+            }
+        }
+    }
+    mask
+}
+
+fn bits(mat: &Mat) -> Vec<u32> {
+    mat.data.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn forward_and_backward_match_dense_bitwise_across_patterns_and_threads() {
+    let mut rng = Rng::new(0xF16_4);
+    for &(n, m) in PATTERNS {
+        // Rectangular both ways + the b=0 / single-row batch edges.
+        for &(rmul, cmul) in &[(2usize, 3usize), (3, 1)] {
+            let (rows, cols) = (m * rmul, m * cmul);
+            let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+            let mask = random_transposable_mask(&mut rng, rows, cols, n, m);
+            let wm = w.hadamard(&mask);
+            let ct = NmCompressed::compress(&wm, &mask, n, m)
+                .expect("transposable mask is column-group N:M");
+            let ctt = NmCompressed::compress(&wm.transpose(), &mask.transpose(), n, m)
+                .expect("transposable mask transposes");
+            let wmt = wm.transpose();
+
+            for &batch in &[0usize, 1, 5] {
+                let tag = format!("{n}:{m} {rows}x{cols} batch={batch}");
+                let x = Mat::from_fn(batch, rows, |_, _| rng.normal());
+                let g = Mat::from_fn(batch, cols, |_, _| rng.normal());
+
+                // Forward: y = x @ W.
+                let y = spmm(&x, &ct);
+                let y_dense = matmul_dense_baseline(&x, &wm);
+                assert_eq!(bits(&y), bits(&y_dense), "{tag}: fwd vs dense");
+
+                // Backward-data: decode-free == re-compressed == dense.
+                let dx = spmm_transposed(&g, &ct);
+                let dx_fast = spmm_transposed_fast(&g, &ctt);
+                let dx_dense = matmul_dense_baseline(&g, &wmt);
+                assert_eq!(bits(&dx), bits(&dx_dense), "{tag}: bwd 0-decode vs dense");
+                assert_eq!(bits(&dx_fast), bits(&dx_dense), "{tag}: bwd fast vs dense");
+                // Slow path (decompress + dense) lands on the same bits:
+                // decompressed zeros are +0.0 and zero-adds are no-ops.
+                let dx_slow = spmm_transposed_slow(&g, &ct);
+                assert_eq!(bits(&dx_slow), bits(&dx_dense), "{tag}: bwd slow vs dense");
+
+                // Backward-weight: kept entries == dense x^T @ g, pruned
+                // entries exactly +0.0.
+                let dw = spmm_backward_weight(&x, &g, &ct);
+                let dw_dense = matmul_dense_baseline(&x.transpose(), &g);
+                for i in 0..dw.data.len() {
+                    let want = if mask.data[i] != 0.0 { dw_dense.data[i] } else { 0.0 };
+                    assert_eq!(
+                        dw.data[i].to_bits(),
+                        want.to_bits(),
+                        "{tag}: bwd-weight element {i}"
+                    );
+                }
+
+                // Thread sweep: every kernel bit-identical to serial.
+                for &t in THREADS {
+                    let ttag = format!("{tag} threads={t}");
+                    assert_eq!(bits(&spmm_threaded(&x, &ct, t)), bits(&y), "{ttag}: fwd");
+                    assert_eq!(
+                        bits(&spmm_transposed_threaded(&g, &ct, t)),
+                        bits(&dx),
+                        "{ttag}: bwd-data"
+                    );
+                    assert_eq!(
+                        bits(&spmm_backward_weight_threaded(&x, &g, &ct, t)),
+                        bits(&dw),
+                        "{ttag}: bwd-weight"
+                    );
+                    assert_eq!(
+                        bits(&spmm_transposed_slow_threaded(&g, &ct, t)),
+                        bits(&dx_slow),
+                        "{ttag}: bwd-slow"
+                    );
+                    assert_eq!(
+                        bits(&matmul_dense_baseline_threaded(&x, &wm, t)),
+                        bits(&y_dense),
+                        "{ttag}: dense baseline"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn standard_column_group_masks_serve_the_forward_kernel_too() {
+    // The engine is mask-structure-agnostic on the forward side: any
+    // column-group N:M record (transposable or not) must match dense.
+    let mut rng = Rng::new(0x57D);
+    let (n, m, rows, cols) = (4usize, 8usize, 16usize, 24usize);
+    let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+    let smask =
+        tsenor::pruning::magnitude::standard_nm_mask(&w, tsenor::masks::NmPattern::new(n, m));
+    let ws = w.hadamard(&smask);
+    let cs = NmCompressed::compress(&ws, &smask, n, m).expect("standard mask is column-group");
+    let x = Mat::from_fn(5, rows, |_, _| rng.normal());
+    let y_dense = matmul_dense_baseline(&x, &ws);
+    assert_eq!(bits(&spmm(&x, &cs)), bits(&y_dense));
+    for &t in THREADS {
+        assert_eq!(bits(&spmm_threaded(&x, &cs, t)), bits(&y_dense), "threads={t}");
+    }
+    // Its backward-data REALISTIC path is the slow one; numerically it
+    // still matches dense exactly.
+    let g = Mat::from_fn(5, cols, |_, _| rng.normal());
+    let dx_dense = matmul_dense_baseline(&g, &ws.transpose());
+    assert_eq!(bits(&spmm_transposed_slow(&g, &cs)), bits(&dx_dense));
+}
+
+#[test]
+fn degenerate_shapes_are_well_defined() {
+    // Zero-column weight: kernels produce empty / zero outputs, no
+    // panics, no divisions by zero.
+    let w = Mat::zeros(8, 0);
+    let mask = Mat::zeros(8, 0);
+    let c = NmCompressed::compress(&w, &mask, 2, 4).unwrap();
+    let x = Mat::zeros(3, 8);
+    let y = spmm_threaded(&x, &c, 4);
+    assert_eq!((y.rows, y.cols), (3, 0));
+    let g = Mat::zeros(3, 0);
+    let dx = spmm_transposed_threaded(&g, &c, 4);
+    assert_eq!((dx.rows, dx.cols), (3, 8));
+    assert!(dx.data.iter().all(|&v| v == 0.0));
+    let dw = spmm_backward_weight_threaded(&x, &g, &c, 4);
+    assert_eq!((dw.rows, dw.cols), (8, 0));
+    // Empty batch everywhere.
+    let x0 = Mat::zeros(0, 8);
+    let g0 = Mat::zeros(0, 0);
+    assert_eq!(spmm(&x0, &c).rows, 0);
+    assert_eq!(spmm_transposed(&g0, &c).rows, 0);
+    let dw0 = spmm_backward_weight(&x0, &g0, &c);
+    assert!(dw0.data.is_empty());
+}
