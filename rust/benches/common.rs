@@ -10,6 +10,7 @@
 
 use std::time::Instant;
 use tsenor::runtime::Manifest;
+use tsenor::util::json::{self, Json};
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Scale {
@@ -50,6 +51,53 @@ pub fn manifest() -> Option<Manifest> {
     } else {
         eprintln!("note: no artifacts/ bundle — XLA rows skipped (run `make artifacts`)");
         None
+    }
+}
+
+/// Machine-readable bench results. Collect named metrics while the
+/// human tables print, then `write()` a `BENCH_<name>.json` in the
+/// working directory (the crate root under `cargo bench`) so CI can
+/// archive and compare runs without scraping stdout. Keys are flat
+/// (`spmm_gflops_t4`, `cpu_svc_masks_per_sec_c4`, ...); every file
+/// carries the bench name, the scale it ran at, and total wall secs.
+pub struct BenchJson {
+    name: String,
+    started: Instant,
+    metrics: Vec<(String, Json)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), started: Instant::now(), metrics: Vec::new() }
+    }
+
+    /// Record a numeric metric (masks/sec, GFLOP/s, wall secs, ...).
+    pub fn num(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), Json::Num(value)));
+    }
+
+    pub fn str(&mut self, key: &str, value: &str) {
+        self.metrics.push((key.to_string(), Json::Str(value.to_string())));
+    }
+
+    /// Write `BENCH_<name>.json`; the path is printed so CI logs show
+    /// where the artifact landed.
+    pub fn write(&self) {
+        let scale_name = match scale() {
+            Scale::Quick => "quick",
+            Scale::Default => "default",
+            Scale::Full => "full",
+        };
+        let doc = json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("scale", Json::Str(scale_name.to_string())),
+            ("wall_secs", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("metrics", Json::Obj(self.metrics.iter().cloned().collect())),
+        ]);
+        let path = format!("BENCH_{}.json", self.name);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
     }
 }
 

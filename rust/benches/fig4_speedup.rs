@@ -16,7 +16,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::{time_trials, Scale};
+use common::{time_trials, BenchJson, Scale};
 use tsenor::data::workload;
 use tsenor::masks::solver::{self, Method, SolveCfg};
 use tsenor::masks::NmPattern;
@@ -35,6 +35,7 @@ fn main() {
         Scale::Default => (512, 128, 1024),
         Scale::Full => (512, 128, 4096),
     };
+    let mut bj = BenchJson::new("fig4_speedup");
     let trials = 3;
     let patterns = [
         NmPattern::new(16, 32), // 50%
@@ -103,6 +104,10 @@ fn main() {
             dense_bwd / sp_bwd_slow,
             format!("{pattern}")
         );
+        bj.num(&format!("fwd_speedup_{pattern}"), dense_fwd / sp_fwd);
+        bj.num(&format!("bwd_fast_speedup_{pattern}"), dense_bwd / sp_bwd_fast);
+        bj.num(&format!("bwd_zero_decode_speedup_{pattern}"), dense_bwd / sp_bwd_zero_decode);
+        bj.num(&format!("bwd_slow_speedup_{pattern}"), dense_bwd / sp_bwd_slow);
     }
     println!("\npaper shape: speedup grows with sparsity; transposable masks make the");
     println!("backward pass as fast as the forward; standard masks leave bwd near/below dense.");
@@ -136,6 +141,10 @@ fn main() {
         "{:<9}{:>12}{:>14}{:>14}{:>14}{:>16}",
         "threads", "spmm", "spmm vs t=1", "bwd 0-dec", "dense fwd", "fwd vs dense"
     );
+    // Dense-equivalent work per pass: the conventional effective-rate
+    // denominator for sparse-speedup tables (useful flops / time would
+    // scale it by n/m).
+    let gflop = 2.0 * batch as f64 * sweep_d as f64 * sweep_d as f64 / 1e9;
     for threads in [1usize, 2, 4, 8] {
         let (tf, _) = time_trials(trials, || {
             let _ = spmm_threaded(&xb, &ct, threads);
@@ -149,6 +158,9 @@ fn main() {
         let (td, _) = time_trials(trials, || {
             let _ = gemm::matmul_dense_baseline_threaded(&xb, &wm, threads);
         });
+        bj.num(&format!("spmm_gflops_t{threads}"), gflop / tf);
+        bj.num(&format!("spmm_transposed_gflops_t{threads}"), gflop / tb);
+        bj.num(&format!("dense_gflops_t{threads}"), gflop / td);
         // Determinism: threaded output must be BIT-identical to serial.
         let yt = spmm_threaded(&xb, &ct, threads);
         assert_eq!(yt.data, y_serial.data, "spmm drifted at {threads} threads");
@@ -172,5 +184,6 @@ fn main() {
     let dense_bwd = gemm::matmul_dense_baseline(&gb, &wmt);
     assert_eq!(dx_serial.data, dense_bwd.data, "spmm_transposed drifted from dense");
     println!("\nnumeric check: sparse vs dense bit-identical OK");
+    bj.write();
     let _ = Mat::zeros(1, 1);
 }

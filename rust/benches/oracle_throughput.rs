@@ -16,7 +16,7 @@
 #[path = "common.rs"]
 mod common;
 
-use common::Scale;
+use common::{BenchJson, Scale};
 use std::sync::Mutex;
 use std::time::Instant;
 use tsenor::coordinator::batcher::XlaSolver;
@@ -112,6 +112,7 @@ fn main() {
         Scale::Default => (96, 16),
         Scale::Full => (256, 32),
     };
+    let mut bj = BenchJson::new("oracle_throughput");
     let pattern = NmPattern::new(4, 8);
     let requests = requests_for(count, dim, pattern, 11);
     let quantum = 16usize;
@@ -146,6 +147,10 @@ fn main() {
             "{callers:<10}{mutex_rate:>14.0}{pool_rate:>14.0}{svc_rate:>14.0}{:>11.0}%",
             100.0 * fill
         );
+        bj.num(&format!("cpu_mutex_masks_per_sec_c{callers}"), mutex_rate);
+        bj.num(&format!("cpu_pool_masks_per_sec_c{callers}"), pool_rate);
+        bj.num(&format!("cpu_svc_masks_per_sec_c{callers}"), svc_rate);
+        bj.num(&format!("cpu_svc_fill_c{callers}"), fill);
     }
     if let (Some(first), Some(at4)) = (scaling.first(), scaling.get(2)) {
         println!(
@@ -190,10 +195,15 @@ fn main() {
                  {:>11.0}%{padded:>14}",
                 100.0 * fill
             );
+            bj.num(&format!("xla_mutex_masks_per_sec_c{callers}"), mutex_rate);
+            bj.num(&format!("xla_pool_masks_per_sec_c{callers}"), pool_rate);
+            bj.num(&format!("xla_svc_masks_per_sec_c{callers}"), svc_rate);
+            bj.num(&format!("xla_svc_padded_blocks_c{callers}"), padded as f64);
         }
         println!(
             "\npool + coalescing shrinks padded_blocks (bucket fill) while the \
              pool lifts concurrent masks/sec; quote the 1 -> 4 scaling above."
         );
     }
+    bj.write();
 }

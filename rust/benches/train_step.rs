@@ -1,0 +1,66 @@
+//! Training-step pass timings at bench scale: the three regimes of
+//! `sparse::train::run_train_step` — dense floor, transposable mask
+//! (every pass on the compressed fast path), standard mask (backward-
+//! data forced onto the decompress + dense slow path) — with
+//! dense-equivalent GFLOP/s per pass emitted to `BENCH_train_step.json`
+//! so CI can compare runs without scraping the table.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{BenchJson, Scale};
+use tsenor::data::workload;
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::masks::NmPattern;
+use tsenor::pruning::magnitude::standard_nm_mask;
+use tsenor::sparse::train::{run_train_step, TrainStepCfg};
+
+fn main() {
+    common::header("train_step", "ROADMAP: sparse training-step workload");
+    let (d, batch) = match common::scale() {
+        Scale::Quick => (256usize, 64usize),
+        Scale::Default => (1024, 128),
+        Scale::Full => (4096, 256),
+    };
+    let pattern = NmPattern::new(16, 32);
+    let threads = 4usize;
+    let trials = 3usize;
+    let mut bj = BenchJson::new("train_step");
+    println!("layer {d}x{d}, batch {batch}, pattern {pattern}, {threads} threads");
+
+    let w = workload::structured_matrix(d, d, 21);
+    let x = workload::structured_matrix(batch, d, 22);
+    let g = workload::structured_matrix(batch, d, 23);
+    let solve_cfg = SolveCfg { threads, ..Default::default() };
+    let tmask = solver::solve_matrix(Method::Tsenor, &w, pattern, &solve_cfg)
+        .expect("finite synthetic scores");
+    let smask = standard_nm_mask(&w, pattern);
+
+    let cfg = TrainStepCfg { threads, trials };
+    let report =
+        run_train_step(&x, &g, &w, &tmask, &smask, pattern, &cfg).expect("train step");
+    print!("{}", report.render());
+    println!(
+        "backward-data: transposable (decode-free) is {:.2}x the standard slow path",
+        report.standard.bwd_data / report.transposable.bwd_data
+    );
+
+    // Dense-equivalent GFLOP per pass: fwd and bwd-data are batch x d
+    // x d products, bwd-weight is d x batch x d — all the same count.
+    let gflop = 2.0 * batch as f64 * d as f64 * d as f64 / 1e9;
+    let regimes = [
+        ("dense", &report.dense),
+        ("transposable", &report.transposable),
+        ("standard", &report.standard),
+    ];
+    for (regime, t) in regimes {
+        bj.num(&format!("{regime}_fwd_gflops"), gflop / t.fwd);
+        bj.num(&format!("{regime}_bwd_data_gflops"), gflop / t.bwd_data);
+        bj.num(&format!("{regime}_bwd_weight_gflops"), gflop / t.bwd_weight);
+    }
+    bj.num(
+        "bwd_data_speedup_vs_standard",
+        report.standard.bwd_data / report.transposable.bwd_data,
+    );
+    bj.write();
+}

@@ -124,11 +124,33 @@ pub fn run(
     oracle: &dyn MaskOracle,
     metrics: &mut Metrics,
 ) -> Result<PruneReport> {
+    run_pooled(rt, None, spec, oracle, metrics)
+}
+
+/// `run`, with engine counters aggregated across a whole `EnginePool`.
+///
+/// The runtime executes on pool slot 0, but a pooled XLA oracle
+/// round-robins its solves over EVERY slot — snapshotting only
+/// `rt.engine` (as `run` without a pool must) undercounts
+/// `engine_exec_calls`/`engine_exec_secs` by the work slots 1.. did.
+/// Callers that built a pool pass it here so the report's deltas cover
+/// all slots (`EnginePool::stats` sums them).
+pub fn run_pooled(
+    rt: &ModelRuntime,
+    pool: Option<&crate::runtime::EnginePool>,
+    spec: &PruneSpec,
+    oracle: &dyn MaskOracle,
+    metrics: &mut Metrics,
+) -> Result<PruneReport> {
     let t0 = std::time::Instant::now();
     let stats_before = oracle.stats();
-    // Engine counters cover the runtime engine (calibration, eval, and
-    // the oracle's solves when it shares this engine / pool slot 0).
-    let engine_before = rt.engine.stats();
+    // Engine counters: the whole pool when one was provided, else the
+    // runtime engine (calibration, eval, and the oracle's solves when
+    // it shares this engine / pool slot 0).
+    let engine_before = match pool {
+        Some(p) => p.stats(),
+        None => rt.engine.stats(),
+    };
     let weights = rt.manifest.load_weights()?;
     let grams = calibrate(rt, &weights, spec.calib_batches)?;
 
@@ -151,7 +173,10 @@ pub fn run(
     for (corpus, p) in &perplexity {
         metrics.put(&format!("ppl_{corpus}"), *p);
     }
-    let engine_stats = rt.engine.stats().since(&engine_before);
+    let engine_stats = match pool {
+        Some(p) => p.stats().since(&engine_before),
+        None => rt.engine.stats().since(&engine_before),
+    };
     Ok(PruneReport {
         spec: spec.clone(),
         oracle: oracle.name().to_string(),

@@ -23,6 +23,12 @@
 //! top of any backend, dispatching to a [`runtime::EnginePool`] of
 //! independent PJRT clients on the XLA path.
 //!
+//! The [`train`] subsystem runs multi-step sparse training on the N:M
+//! GEMM substrate: dense shadow weights, SR-STE updates, and pluggable
+//! mask re-solve schedules routed through the same dispatcher, with a
+//! stripped [`train::TrainReport`] that is bit-identical at any worker
+//! count.
+//!
 //! Models larger than memory prune through the out-of-core [`stream`]
 //! subsystem: sharded checkpoints, a byte-budgeted prefetcher feeding
 //! the layer executor, streaming write-back (dense or `NmCompressed`
@@ -42,4 +48,5 @@ pub mod runtime;
 pub mod sparse;
 pub mod spec;
 pub mod stream;
+pub mod train;
 pub mod util;

@@ -25,6 +25,17 @@
 //!                                 --checkpoint DIR [--layer NAME] runs
 //!                                 a real sharded-checkpoint layer.
 //!                                 --batch B --threads T --trials K
+//!   train    [opts]               multi-step sparse training loop:
+//!                                 dense shadow weights, SR-STE decay,
+//!                                 periodic mask re-solves through the
+//!                                 mask-service dispatcher. Never
+//!                                 densifies — every step runs on the
+//!                                 compressed N:M record. --schedule
+//!                                 fixed|ramp|bidirectional --steps K
+//!                                 --freq F --layers L --lambda-w X
+//!                                 --lr X --jobs N; emits a TrainReport
+//!                                 (--report FILE, --report-stripped
+//!                                 FILE for the jobs-invariant bytes)
 //!
 //! Runs are configured by typed specs (`tsenor::spec`). Every spec field
 //! can come from a JSON file and/or the command line; CLI flags override
@@ -89,6 +100,7 @@ use tsenor::spec::report::PruneReport;
 use tsenor::spec::{FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure, TrainSpec};
 use tsenor::stream::store::StoreReader;
 use tsenor::stream::StreamLayer;
+use tsenor::train::ScheduleKind;
 use tsenor::util::tensor::{partition_blocks, Mat};
 
 struct Args {
@@ -179,6 +191,13 @@ fn apply_service_overrides(
         args.usize("service-max-in-flight", service.max_in_flight)?;
     service.pool = args.usize("service-pool", service.pool)?;
     Ok(())
+}
+
+/// Float option value: present-but-unparsable -> error (a typo must
+/// never silently become the default), mirroring `Args::usize`.
+fn parse_f32(v: &str, key: &str) -> Result<f32> {
+    v.parse()
+        .with_context(|| format!("--{key}: '{v}' is not a valid number"))
 }
 
 /// Byte count with optional k/m/g suffix ("64k", "2m", "1g", "4096").
@@ -431,7 +450,9 @@ fn cmd_prune(args: &Args) -> Result<()> {
     }
 
     let mut metrics = Metrics::new();
-    let report = pipeline::run(&rt, &spec, oracle, &mut metrics)?;
+    // Pool-wide engine accounting: a pooled XLA oracle executes on
+    // every slot, not just the runtime's slot 0.
+    let report = pipeline::run_pooled(&rt, Some(&pool), &spec, oracle, &mut metrics)?;
     print!("{}", report.render());
     if let Some(d) = &dispatcher {
         let s = d.dispatch_stats();
@@ -799,6 +820,88 @@ fn cmd_train_step(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The multi-step sparse training loop (`tsenor::train`): periodic
+/// mask re-solves routed through the dispatcher, SR-STE updates on
+/// dense shadow weights, every pass on the compressed N:M record. Runs
+/// entirely on the CPU solver path — no artifact bundle needed.
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut spec = match args.opts.get("spec") {
+        Some(path) => TrainSpec::load(Path::new(path))?,
+        None => TrainSpec::new(),
+    };
+    if let Some(p) = args.opts.get("pattern") {
+        spec.pattern = NmPattern::parse(p)?;
+    }
+    if let Some(m) = args.opts.get("method") {
+        spec.method = Method::parse(m)?;
+    }
+    if let Some(s) = args.opts.get("schedule") {
+        spec.schedule = ScheduleKind::parse(s)?;
+    }
+    spec.rows = args.usize("rows", spec.rows)?;
+    spec.cols = args.usize("cols", spec.cols)?;
+    spec.batch = args.usize("batch", spec.batch)?;
+    spec.layers = args.usize("layers", spec.layers)?;
+    spec.steps = args.usize("steps", spec.steps)?;
+    spec.freq = args.usize("freq", spec.freq)?;
+    spec.ramp_steps = args.usize("ramp-steps", spec.ramp_steps)?;
+    spec.threads = args.usize("threads", spec.threads)?;
+    spec.jobs = args.usize("jobs", spec.jobs)?;
+    spec.seed = args.usize("seed", spec.seed as usize)? as u64;
+    if let Some(v) = args.opts.get("lr") {
+        spec.lr = parse_f32(v, "lr")?;
+    }
+    if let Some(v) = args.opts.get("lambda-w") {
+        spec.lambda_w = parse_f32(v, "lambda-w")?;
+    }
+    apply_service_overrides(&mut spec.service, args)?;
+
+    // Solver fan-out matches the kernel width; the run seed reaches any
+    // randomized solver baseline.
+    let threads = executor::effective_jobs(spec.threads);
+    let solve_cfg = tsenor::masks::solver::SolveCfg {
+        threads,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let backend = CpuOracle::new(spec.method, solve_cfg);
+    // All transposable re-solves go through the dispatcher: layers
+    // re-solving at the same step coalesce into shared solver buckets.
+    let dispatcher = MaskDispatcher::new(&backend, spec.service);
+    println!(
+        "training: schedule={} pattern={} method={} layers={} steps={} freq={} jobs={}",
+        spec.schedule.name(),
+        spec.pattern,
+        spec.method.name(),
+        spec.layers,
+        spec.steps,
+        spec.freq,
+        executor::effective_jobs(spec.jobs).min(spec.layers).max(1)
+    );
+    let report = tsenor::train::run_training(&spec, &dispatcher)?;
+    print!("{}", report.render());
+    let s = dispatcher.dispatch_stats();
+    println!(
+        "  service: {} dispatches ({} coalesced, {} singleton), bucket fill {:.0}%",
+        s.dispatches,
+        s.coalesced_requests,
+        s.singleton_requests,
+        100.0 * s.fill_rate()
+    );
+    if let Some(path) = args.opts.get("report") {
+        report.write(Path::new(path))?;
+        println!("  report -> {path}");
+    }
+    if let Some(path) = args.opts.get("report-stripped") {
+        report.write_stripped(Path::new(path))?;
+        println!("  stripped report -> {path}");
+    }
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.cmd.as_str() {
@@ -810,9 +913,10 @@ fn main() -> Result<()> {
         "shard" => cmd_shard(&args),
         "prune-ckpt" => cmd_prune_ckpt(&args),
         "train-step" => cmd_train_step(&args),
+        "train" => cmd_train(&args),
         other => bail!(
             "unknown command '{other}' \
-             (info|solve|prune|eval|finetune|shard|prune-ckpt|train-step)"
+             (info|solve|prune|eval|finetune|shard|prune-ckpt|train-step|train)"
         ),
     }
 }

@@ -25,6 +25,7 @@ use crate::masks::solver::{Method, SolveCfg};
 use crate::masks::NmPattern;
 use crate::pruning::ServiceCfg;
 use crate::stream::writeback::WritebackMode;
+use crate::train::ScheduleKind;
 use crate::util::json::{self, Json};
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -688,10 +689,17 @@ impl SolveSpec {
     }
 }
 
-/// Configuration of a sparse training-step workload run (the
-/// `train-step` command): time forward / backward-data /
-/// backward-weight products of one linear layer under dense,
-/// transposable-mask and standard-mask regimes (`sparse::train`).
+/// Configuration of a sparse training run. Drives BOTH training
+/// commands:
+///
+/// * `train-step` — time forward / backward-data / backward-weight
+///   products of one linear layer under dense, transposable-mask and
+///   standard-mask regimes (`sparse::train`); uses the shape/batch/
+///   pattern/method/threads/trials/seed subset.
+/// * `train` — the multi-step training loop (`train`): `layers`
+///   parallel layers, `steps` SR-STE updates with `lambda_w` decay on
+///   pruned shadow weights, mask re-solves every `freq` steps per the
+///   `schedule`, routed through the mask service (`service` knobs).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainSpec {
     /// Layer shape (contraction dim x output dim) and batch rows.
@@ -699,15 +707,37 @@ pub struct TrainSpec {
     pub cols: usize,
     pub batch: usize,
     pub pattern: NmPattern,
-    /// Solver producing the transposable mask (the standard mask is
-    /// always magnitude top-N per column group).
+    /// Solver producing transposable masks (the standard / magnitude
+    /// masks are always per-group top-N).
     pub method: Method,
     /// Kernel fan-out width (`0` = one worker per core). Bit-invisible:
     /// the sparse engine threads by disjoint output panels.
     pub threads: usize,
-    /// Timing repetitions per pass.
+    /// Timing repetitions per pass (`train-step` only).
     pub trials: usize,
     pub seed: u64,
+    /// Mask re-solve schedule (`train` only).
+    pub schedule: ScheduleKind,
+    /// Optimizer steps (`train` only).
+    pub steps: usize,
+    /// Re-solve every `freq` steps (`0` = every step).
+    pub freq: usize,
+    /// Ramp length of the decaying schedule (steps to reach the target
+    /// keep count; `0` = no ramp, solve at the target from step 0).
+    pub ramp_steps: usize,
+    /// SR-STE decay strength on pruned shadow weights (`0` = plain
+    /// masked SGD, bit-for-bit).
+    pub lambda_w: f32,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Independent layers trained concurrently — what the mask service
+    /// coalesces across at re-solve steps.
+    pub layers: usize,
+    /// Concurrent layer workers (`0` = auto). Bit-invisible.
+    pub jobs: usize,
+    /// Mask-service knobs for the dispatcher the `train` command wraps
+    /// around the solver backend.
+    pub service: ServiceCfg,
 }
 
 impl TrainSpec {
@@ -721,6 +751,16 @@ impl TrainSpec {
             threads: 0,
             trials: 3,
             seed: 0,
+            schedule: ScheduleKind::Fixed,
+            steps: 8,
+            freq: 4,
+            ramp_steps: 4,
+            // The 2by4-pretrain recipe's decay strength.
+            lambda_w: 2e-4,
+            lr: 0.01,
+            layers: 2,
+            jobs: 0,
+            service: ServiceCfg::default(),
         }
     }
 
@@ -745,9 +785,54 @@ impl TrainSpec {
         self
     }
 
+    pub fn schedule(mut self, kind: ScheduleKind) -> Self {
+        self.schedule = kind;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn freq(mut self, freq: usize) -> Self {
+        self.freq = freq;
+        self
+    }
+
+    pub fn ramp_steps(mut self, ramp_steps: usize) -> Self {
+        self.ramp_steps = ramp_steps;
+        self
+    }
+
+    pub fn lambda_w(mut self, lambda_w: f32) -> Self {
+        self.lambda_w = lambda_w;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn layers(mut self, layers: usize) -> Self {
+        self.layers = layers;
+        self
+    }
+
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    pub fn service(mut self, cfg: ServiceCfg) -> Self {
+        self.service = cfg;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("kind", Json::Str("train-step".into())),
+            ("kind", Json::Str("train".into())),
             ("rows", Json::Num(self.rows as f64)),
             ("cols", Json::Num(self.cols as f64)),
             ("batch", Json::Num(self.batch as f64)),
@@ -756,7 +841,30 @@ impl TrainSpec {
             ("threads", Json::Num(self.threads as f64)),
             ("trials", Json::Num(self.trials as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("schedule", Json::Str(self.schedule.name().into())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("freq", Json::Num(self.freq as f64)),
+            ("ramp_steps", Json::Num(self.ramp_steps as f64)),
+            ("lambda_w", Json::Num(self.lambda_w as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("layers", Json::Num(self.layers as f64)),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("service", service_cfg_to_json(&self.service)),
         ])
+    }
+
+    /// `to_json` minus the pure-scheduling knobs (`threads`, `jobs`,
+    /// `trials`, `service`) — the spec fields a stripped `TrainReport`
+    /// embeds, so runs that differ only in worker counts or coalescing
+    /// settings compare byte-equal.
+    pub fn scheduling_free_json(&self) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            for key in ["threads", "jobs", "trials", "service"] {
+                m.remove(key);
+            }
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<TrainSpec> {
@@ -784,6 +892,33 @@ impl TrainSpec {
         }
         if let Some(k) = json_usize(j, "seed")? {
             spec.seed = k as u64;
+        }
+        if let Some(s) = j.get("schedule").and_then(Json::as_str) {
+            spec.schedule = ScheduleKind::parse(s)?;
+        }
+        if let Some(k) = json_usize(j, "steps")? {
+            spec.steps = k;
+        }
+        if let Some(k) = json_usize(j, "freq")? {
+            spec.freq = k;
+        }
+        if let Some(k) = json_usize(j, "ramp_steps")? {
+            spec.ramp_steps = k;
+        }
+        if let Some(x) = j.get("lambda_w").and_then(Json::as_f64) {
+            spec.lambda_w = x as f32;
+        }
+        if let Some(x) = j.get("lr").and_then(Json::as_f64) {
+            spec.lr = x as f32;
+        }
+        if let Some(k) = json_usize(j, "layers")? {
+            spec.layers = k;
+        }
+        if let Some(k) = json_usize(j, "jobs")? {
+            spec.jobs = k;
+        }
+        if let Some(sj) = j.get("service") {
+            spec.service = service_cfg_from_json(sj, spec.service)?;
         }
         Ok(spec)
     }
@@ -1092,6 +1227,60 @@ mod tests {
         assert!(TrainSpec::parse(r#"{"threads": -1}"#).is_err());
         assert!(TrainSpec::parse(r#"{"batch": 1.5}"#).is_err());
         assert!(TrainSpec::parse(r#"{"method": "resnet"}"#).is_err());
+    }
+
+    #[test]
+    fn train_spec_loop_fields_roundtrip() {
+        // Loop defaults: fixed-frequency schedule, SR-STE decay on.
+        let spec = TrainSpec::new();
+        assert_eq!(spec.schedule, ScheduleKind::Fixed);
+        assert_eq!((spec.steps, spec.freq, spec.layers), (8, 4, 2));
+        assert!(spec.lambda_w > 0.0);
+        // Builder + JSON round-trip over every loop knob.
+        let spec = TrainSpec::new()
+            .shape(64, 64)
+            .batch(16)
+            .pattern(4, 8)
+            .schedule(ScheduleKind::Ramp)
+            .steps(12)
+            .freq(3)
+            .ramp_steps(6)
+            .lambda_w(5e-4)
+            .lr(0.02)
+            .layers(3)
+            .jobs(4)
+            .service(crate::pruning::ServiceCfg::default().window_ms(2));
+        let back = TrainSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec, back);
+        // Loop integers are strict; schedule names are validated.
+        assert!(TrainSpec::parse(r#"{"steps": -1}"#).is_err());
+        assert!(TrainSpec::parse(r#"{"freq": 2.5}"#).is_err());
+        assert!(TrainSpec::parse(r#"{"schedule": "cosine"}"#).is_err());
+        assert_eq!(
+            TrainSpec::parse(r#"{"schedule": "bidir"}"#).unwrap().schedule,
+            ScheduleKind::Bidirectional
+        );
+    }
+
+    #[test]
+    fn train_spec_scheduling_free_json_drops_worker_knobs() {
+        let a = TrainSpec::new().threads(1).jobs(1);
+        let mut b = TrainSpec::new().threads(8).jobs(4);
+        b.trials = 9;
+        b.service = crate::pruning::ServiceCfg::default().window_ms(7).pool(4);
+        let free = a.scheduling_free_json();
+        assert!(free.get("threads").is_none());
+        assert!(free.get("jobs").is_none());
+        assert!(free.get("trials").is_none());
+        assert!(free.get("service").is_none());
+        assert!(free.get("schedule").is_some() && free.get("lambda_w").is_some());
+        assert_eq!(
+            free.to_string_pretty(),
+            b.scheduling_free_json().to_string_pretty()
+        );
+        // The full JSON keeps them.
+        assert!(a.to_json().get("threads").is_some());
+        assert!(a.to_json().get("service").is_some());
     }
 
     #[test]

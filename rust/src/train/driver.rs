@@ -1,0 +1,382 @@
+//! The multi-step training loop: dense shadow weights per layer, masked
+//! forward/backward on the compressed N:M record, SR-STE updates, and
+//! periodic mask re-solves driven by a [`MaskSchedule`].
+//!
+//! Each step of each layer runs the three products of `sparse::train`'s
+//! single-step workload, but as a real optimization trajectory:
+//!
+//! * forward          `y  = x @ (W ⊙ S)`        — `spmm`
+//! * backward-data    `dx = g @ (W ⊙ S)^T`      — `spmm_transposed`
+//!   (decode-free; the bi-directional baseline swaps in its own
+//!   backward mask's record here)
+//! * backward-weight  `dW = (x^T g) ⊙ S`        — `spmm_backward_weight`
+//!
+//! against a fixed dense teacher (`loss = ||x W_s ⊙ S − x W*||² /
+//! (batch · cols)`), so the loss trace is a pure function of the spec.
+//!
+//! Transposable re-solves are submitted to the mask service from the
+//! per-layer workers, so concurrent layers coalesce into shared solver
+//! buckets mid-training when the service is a `MaskDispatcher`.
+//!
+//! Determinism: every kernel threads by disjoint output panels
+//! (bit-identical at any width), dispatcher coalescing is bit-invisible
+//! by the service contract, batches derive from explicit seeds, and all
+//! cross-layer aggregation happens in layer order after the workers
+//! join — so the stripped `TrainReport` (loss + flip-rate trace,
+//! final-weight checksum) is byte-identical at any `--jobs` / thread
+//! count.
+
+use crate::coordinator::executor::effective_jobs;
+use crate::data::workload;
+use crate::masks::NmPattern;
+use crate::pruning::magnitude::standard_nm_mask;
+use crate::pruning::MaskService;
+use crate::sparse::gemm::matmul_dense_baseline_threaded;
+use crate::sparse::nm::{
+    spmm_backward_weight_threaded, spmm_threaded, spmm_transposed_threaded, NmCompressed,
+};
+use crate::spec::TrainSpec;
+use crate::train::report::{StepStats, TrainReport};
+use crate::train::schedule::{schedule_for_spec, MaskSchedule, Resolve};
+use crate::train::sgd::srste_update;
+use crate::util::rng::splitmix64;
+use crate::util::tensor::Mat;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::time::Instant;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv_mat(h: u64, m: &Mat) -> u64 {
+    m.data.iter().fold(h, |acc, x| fnv_bytes(acc, &x.to_le_bytes()))
+}
+
+/// Independent deterministic stream per (run seed, layer, salt).
+fn stream_seed(seed: u64, layer: u64, salt: u64) -> u64 {
+    let mut s = seed
+        ^ layer.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ salt.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    splitmix64(&mut s)
+}
+
+/// Per-layer training state: the dense shadow weight, its fixed dense
+/// teacher, and the current mask(s). Compressed records are rebuilt
+/// from `w` every step (the weights just moved), so only masks persist.
+struct LayerState {
+    w: Mat,
+    teacher: Mat,
+    fwd_mask: Option<Mat>,
+    /// Bi-directional only: independent mask over `W^T` for the
+    /// backward-data pass.
+    bwd_mask: Option<Mat>,
+    pattern: NmPattern,
+}
+
+/// Per-layer, per-step outcome (aggregated in layer order).
+struct StepOut {
+    loss: f64,
+    flips: u64,
+    flip_elems: u64,
+    resolves: u64,
+    resolve_secs: f64,
+    dx_fnv: u64,
+    mask_zeros: u64,
+    mask_elems: u64,
+}
+
+struct StepCtx<'a> {
+    service: &'a dyn MaskService,
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    lr: f32,
+    lambda_w: f32,
+    seed: u64,
+    threads: usize,
+}
+
+fn solve_masks(
+    state: &LayerState,
+    resolve: Resolve,
+    ctx: &StepCtx,
+) -> Result<(Mat, Option<Mat>)> {
+    match resolve {
+        Resolve::Transposable(p) => {
+            // A dense "mask" (N == M, the ramp's opening patterns) has
+            // exactly one feasible answer — skip the solver.
+            let mask = if p.n == p.m {
+                Mat::from_fn(state.w.rows, state.w.cols, |_, _| 1.0)
+            } else {
+                let score = state.w.abs();
+                ctx.service
+                    .submit(&score, p)
+                    .wait()
+                    .context("train: transposable mask re-solve failed")?
+            };
+            Ok((mask, None))
+        }
+        Resolve::BiDirectional(p) => {
+            let fwd = standard_nm_mask(&state.w, p);
+            let bwd = standard_nm_mask(&state.w.transpose(), p);
+            Ok((fwd, Some(bwd)))
+        }
+    }
+}
+
+fn layer_step(
+    state: &mut LayerState,
+    layer: usize,
+    step: usize,
+    resolve: Option<Resolve>,
+    ctx: &StepCtx,
+) -> Result<StepOut> {
+    let mut out = StepOut {
+        loss: 0.0,
+        flips: 0,
+        flip_elems: 0,
+        resolves: 0,
+        resolve_secs: 0.0,
+        dx_fnv: 0,
+        mask_zeros: 0,
+        mask_elems: 0,
+    };
+
+    if let Some(resolve) = resolve {
+        let t0 = Instant::now();
+        let (fwd, bwd) = solve_masks(state, resolve, ctx)?;
+        out.resolve_secs = t0.elapsed().as_secs_f64();
+        out.resolves = 1;
+        if let Some(old) = &state.fwd_mask {
+            out.flip_elems = old.data.len() as u64;
+            out.flips = old
+                .data
+                .iter()
+                .zip(&fwd.data)
+                .filter(|(a, b)| a != b)
+                .count() as u64;
+        }
+        state.fwd_mask = Some(fwd);
+        state.bwd_mask = bwd;
+        state.pattern = resolve.pattern();
+    }
+    let mask = state
+        .fwd_mask
+        .as_ref()
+        .ok_or_else(|| anyhow!("train: no mask at step {step} (schedule skipped step 0)"))?;
+    out.mask_elems = mask.data.len() as u64;
+    out.mask_zeros = mask.data.iter().filter(|&&x| x == 0.0).count() as u64;
+
+    // Rebuild the compressed record from the CURRENT shadow weights —
+    // one record then serves forward, backward-data and backward-weight.
+    let (n, m) = (state.pattern.n, state.pattern.m);
+    let rec = NmCompressed::compress(&state.w.hadamard(mask), mask, n, m)
+        .context("train: forward mask is not column-group N:M")?;
+
+    let batch_seed = stream_seed(ctx.seed, layer as u64, 1000 + step as u64);
+    let x = workload::structured_matrix(ctx.batch, ctx.rows, batch_seed);
+    let y_star = matmul_dense_baseline_threaded(&x, &state.teacher, ctx.threads);
+    let y = spmm_threaded(&x, &rec, ctx.threads);
+    let diff = y.sub(&y_star);
+    out.loss = diff.frob_sq() / (ctx.batch * ctx.cols) as f64;
+    let g = diff.scale(1.0 / ctx.batch as f32);
+
+    // Backward-data: decode-free from the transposable record, or (for
+    // the bi-directional baseline) a forward spmm on the separate
+    // backward mask's record over W^T.
+    let dx = match &state.bwd_mask {
+        Some(bwd) => {
+            let wt = state.w.transpose();
+            let brec = NmCompressed::compress(&wt.hadamard(bwd), bwd, n, m)
+                .context("train: backward mask is not column-group N:M")?;
+            spmm_threaded(&g, &brec, ctx.threads)
+        }
+        None => spmm_transposed_threaded(&g, &rec, ctx.threads),
+    };
+    out.dx_fnv = fnv_mat(FNV_OFFSET, &dx);
+
+    let dw = spmm_backward_weight_threaded(&x, &g, &rec, ctx.threads);
+    srste_update(&mut state.w, &dw, mask, ctx.lr, ctx.lambda_w);
+    Ok(out)
+}
+
+/// Run the multi-step sparse training loop a `TrainSpec` describes,
+/// routing transposable mask re-solves through `service`.
+pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<TrainReport> {
+    ensure!(spec.steps > 0, "train: --steps must be positive");
+    ensure!(spec.layers > 0, "train: --layers must be positive");
+    ensure!(spec.batch > 0, "train: --batch must be positive");
+    let m = spec.pattern.m;
+    ensure!(
+        spec.rows % m == 0 && spec.cols % m == 0,
+        "train: layer {}x{} does not partition into {m}x{m} blocks for pattern {}",
+        spec.rows,
+        spec.cols,
+        spec.pattern
+    );
+    let schedule = schedule_for_spec(spec);
+    ensure!(
+        schedule.resolve_at(0).is_some(),
+        "train: schedule '{}' must re-solve at step 0 (no mask exists before it)",
+        schedule.name()
+    );
+
+    let t0 = Instant::now();
+    let stats_before = service.service_stats();
+    let ctx = StepCtx {
+        service,
+        rows: spec.rows,
+        cols: spec.cols,
+        batch: spec.batch,
+        lr: spec.lr,
+        lambda_w: spec.lambda_w,
+        seed: spec.seed,
+        threads: effective_jobs(spec.threads),
+    };
+    let jobs = effective_jobs(spec.jobs).min(spec.layers).max(1);
+
+    let mut states: Vec<LayerState> = (0..spec.layers)
+        .map(|l| {
+            let init = stream_seed(spec.seed, l as u64, 0);
+            let target = stream_seed(spec.seed, l as u64, 1);
+            LayerState {
+                w: workload::structured_matrix(spec.rows, spec.cols, init),
+                teacher: workload::structured_matrix(spec.rows, spec.cols, target),
+                fwd_mask: None,
+                bwd_mask: None,
+                pattern: spec.pattern,
+            }
+        })
+        .collect();
+
+    let chunk_size = spec.layers.div_ceil(jobs);
+    let mut trace = Vec::with_capacity(spec.steps);
+    let mut dx_checksum = FNV_OFFSET;
+    let mut total_resolves = 0u64;
+    for step in 0..spec.steps {
+        let ts = Instant::now();
+        let resolve = schedule.resolve_at(step);
+        // Fan the layers over `jobs` workers in contiguous chunks;
+        // outcomes come back per chunk and are stitched in layer order,
+        // so aggregation never depends on completion order.
+        let mut outs: Vec<StepOut> = Vec::with_capacity(spec.layers);
+        std::thread::scope(|sc| -> Result<()> {
+            let ctx = &ctx;
+            let mut handles = Vec::new();
+            for (ci, chunk) in states.chunks_mut(chunk_size).enumerate() {
+                let start = ci * chunk_size;
+                handles.push(sc.spawn(move || -> Result<Vec<StepOut>> {
+                    let mut outs = Vec::with_capacity(chunk.len());
+                    for (off, state) in chunk.iter_mut().enumerate() {
+                        outs.push(layer_step(state, start + off, step, resolve, ctx)?);
+                    }
+                    Ok(outs)
+                }));
+            }
+            for h in handles {
+                outs.extend(h.join().map_err(|_| anyhow!("train: worker panicked"))??);
+            }
+            Ok(())
+        })?;
+
+        let loss = outs.iter().map(|o| o.loss).sum::<f64>() / spec.layers as f64;
+        let flips: u64 = outs.iter().map(|o| o.flips).sum();
+        let flip_elems: u64 = outs.iter().map(|o| o.flip_elems).sum();
+        let zeros: u64 = outs.iter().map(|o| o.mask_zeros).sum();
+        let elems: u64 = outs.iter().map(|o| o.mask_elems).sum();
+        let resolves: u64 = outs.iter().map(|o| o.resolves).sum();
+        for o in &outs {
+            dx_checksum = fnv_bytes(dx_checksum, &o.dx_fnv.to_le_bytes());
+        }
+        total_resolves += resolves;
+        trace.push(StepStats {
+            step,
+            loss,
+            flip_rate: if flip_elems > 0 { flips as f64 / flip_elems as f64 } else { 0.0 },
+            sparsity: if elems > 0 { zeros as f64 / elems as f64 } else { 0.0 },
+            resolves,
+            resolve_secs: outs.iter().map(|o| o.resolve_secs).sum(),
+            step_secs: ts.elapsed().as_secs_f64(),
+        });
+    }
+
+    let final_checksum = states.iter().fold(FNV_OFFSET, |h, s| fnv_mat(h, &s.w));
+    let final_sparsity = trace.last().map_or(0.0, |s| s.sparsity);
+    Ok(TrainReport {
+        spec: spec.clone(),
+        schedule: schedule.name().to_string(),
+        oracle: service.service_name().to_string(),
+        trace,
+        final_checksum,
+        dx_checksum,
+        final_sparsity,
+        total_resolves,
+        oracle_stats: service.service_stats().since(&stats_before),
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::solver::{Method, SolveCfg};
+    use crate::pruning::CpuOracle;
+    use crate::train::schedule::ScheduleKind;
+
+    fn smoke_spec() -> TrainSpec {
+        TrainSpec::new()
+            .shape(16, 16)
+            .batch(4)
+            .pattern(4, 8)
+            .steps(4)
+            .freq(2)
+            .layers(2)
+    }
+
+    #[test]
+    fn fixed_schedule_trains_and_reports() {
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let report = run_training(&smoke_spec(), &oracle).unwrap();
+        assert_eq!(report.trace.len(), 4);
+        assert_eq!(report.schedule, "fixed");
+        // Re-solves at steps 0 and 2, one per layer.
+        assert_eq!(report.total_resolves, 4);
+        assert_eq!(report.trace[0].resolves, 2);
+        assert_eq!(report.trace[1].resolves, 0);
+        assert!((report.final_sparsity - 0.5).abs() < 1e-9);
+        assert!(report.oracle_stats.calls >= 2, "re-solves must hit the oracle");
+        for s in &report.trace {
+            assert!(s.loss.is_finite() && s.loss > 0.0);
+        }
+        // Step 0 has no previous mask: flip rate pinned to 0.
+        assert_eq!(report.trace[0].flip_rate, 0.0);
+    }
+
+    #[test]
+    fn bidirectional_schedule_needs_no_oracle_calls() {
+        let mut spec = smoke_spec();
+        spec.schedule = ScheduleKind::Bidirectional;
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let report = run_training(&spec, &oracle).unwrap();
+        assert_eq!(report.schedule, "bidirectional");
+        assert_eq!(report.oracle_stats.calls, 0, "magnitude mask pairs are local");
+        assert_eq!(report.total_resolves, 4);
+    }
+
+    #[test]
+    fn rejects_indivisible_shapes_and_zero_steps() {
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        let spec = smoke_spec().shape(20, 16);
+        let err = run_training(&spec, &oracle).unwrap_err().to_string();
+        assert!(err.contains("partition"), "{err}");
+        let spec = smoke_spec().steps(0);
+        assert!(run_training(&spec, &oracle).is_err());
+    }
+}

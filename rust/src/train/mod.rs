@@ -1,0 +1,30 @@
+//! Multi-step sparse training subsystem (CLI `train`).
+//!
+//! Grows `sparse::train`'s single timed step into a real optimization
+//! trajectory: dense shadow weights per layer, masked forward /
+//! backward-data / backward-weight passes served by ONE compressed
+//! transposable record per layer per step, SR-STE decay on the pruned
+//! shadow weights, and periodic mask re-solves driven by a pluggable
+//! [`MaskSchedule`] — fixed-frequency transposable re-solves, Kao-style
+//! decaying keep-count ramps, or Zhang-style bi-directional
+//! forward/backward magnitude mask pairs as the cheap baseline.
+//!
+//! Transposable re-solves go through the submission-based mask service
+//! (`pruning::MaskService`), so a `MaskDispatcher` coalesces concurrent
+//! layers into shared solver buckets mid-training. The run yields a
+//! typed [`TrainReport`]: per-step loss / mask-flip-rate / sparsity /
+//! re-solve-latency telemetry plus final-weight and backward-data
+//! checksums, with `to_json_stripped()` byte-identical at any `--jobs`
+//! or kernel-thread count (CI diffs it across worker counts).
+
+pub mod driver;
+pub mod report;
+pub mod schedule;
+pub mod sgd;
+
+pub use driver::run_training;
+pub use report::{StepStats, TrainReport};
+pub use schedule::{
+    schedule_for_spec, BiDirectional, DecayingRamp, FixedFrequency, MaskSchedule, Resolve,
+    ScheduleKind,
+};

@@ -1,0 +1,287 @@
+//! Typed result of a multi-step sparse training run: the per-step
+//! telemetry trace (loss, mask-flip rate, realized sparsity, re-solve
+//! latency) plus final-state checksums — everything the `train` command
+//! renders and dumps as JSON. `to_json_stripped()` removes every
+//! timing-class field so two runs that differ only in scheduling
+//! (`--jobs`, kernel threads, service coalescing) compare byte-equal —
+//! the same differential discipline as `PruneReport`.
+
+use crate::pruning::OracleStats;
+use crate::spec::TrainSpec;
+use crate::util::json::{self, Json};
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Telemetry of one training step, aggregated over layers in layer
+/// order (so the trace is identical at every worker count).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepStats {
+    pub step: usize,
+    /// Mean squared error against the teacher, averaged over layers.
+    pub loss: f64,
+    /// Fraction of forward-mask entries that changed in this step's
+    /// re-solves (0 when no re-solve ran, and 0 at the initial solve —
+    /// there is no previous mask to flip from).
+    pub flip_rate: f64,
+    /// Realized forward-mask sparsity across all layers after the step.
+    pub sparsity: f64,
+    /// Mask re-solves performed this step (one per re-solved layer).
+    pub resolves: u64,
+    /// Wall seconds spent in mask re-solves (summed over layers).
+    /// Timing-class: omitted by `to_json_stripped()`.
+    pub resolve_secs: f64,
+    /// Wall seconds of the whole step. Timing-class.
+    pub step_secs: f64,
+}
+
+/// Outcome of a `train::run_training` run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// The spec that produced this report (embedded for replay).
+    pub spec: TrainSpec,
+    /// Schedule implementation name ("fixed", "ramp", "bidirectional").
+    pub schedule: String,
+    /// Mask service the transposable re-solves routed through.
+    pub oracle: String,
+    pub trace: Vec<StepStats>,
+    /// FNV-1a over the final dense shadow weights, layer order — the
+    /// determinism witness (bit-identical across `--jobs` / thread
+    /// counts).
+    pub final_checksum: u64,
+    /// FNV-1a folded over every backward-data output: proves the
+    /// decode-free `dx` pass ran and was bit-stable too.
+    pub dx_checksum: u64,
+    /// Realized forward-mask sparsity after the final step.
+    pub final_sparsity: f64,
+    pub total_resolves: u64,
+    /// Oracle call/block counters (per-run delta). Timing-class:
+    /// dispatcher coalescing makes backend call counts depend on
+    /// window timing, so they are telemetry, not mathematics.
+    pub oracle_stats: OracleStats,
+    /// Timing-class.
+    pub wall_secs: f64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        self.json_impl(true)
+    }
+
+    /// JSON with every scheduling artifact removed — step timings,
+    /// oracle statistics, wall time, and the embedded spec's
+    /// `threads`/`jobs`/`trials`/`service` knobs — so `--jobs 1` and
+    /// `--jobs N` runs compare byte-for-byte (the CI `train-smoke` job
+    /// diffs exactly these bytes).
+    pub fn to_json_stripped(&self) -> Json {
+        self.json_impl(false)
+    }
+
+    fn json_impl(&self, with_timing: bool) -> Json {
+        let spec_json = if with_timing {
+            self.spec.to_json()
+        } else {
+            self.spec.scheduling_free_json()
+        };
+        let trace = Json::Arr(
+            self.trace
+                .iter()
+                .map(|s| {
+                    let mut fields = vec![
+                        ("step", Json::Num(s.step as f64)),
+                        ("loss", Json::Num(s.loss)),
+                        ("flip_rate", Json::Num(s.flip_rate)),
+                        ("sparsity", Json::Num(s.sparsity)),
+                        ("resolves", Json::Num(s.resolves as f64)),
+                    ];
+                    if with_timing {
+                        fields.push(("resolve_secs", Json::Num(s.resolve_secs)));
+                        fields.push(("step_secs", Json::Num(s.step_secs)));
+                    }
+                    json::obj(fields)
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("spec", spec_json),
+            ("schedule", Json::Str(self.schedule.clone())),
+            ("oracle", Json::Str(self.oracle.clone())),
+            ("trace", trace),
+            // u64 checksums as hex strings: JSON numbers are f64 and
+            // would silently lose the low bits the check exists for.
+            (
+                "final_weight_checksum",
+                Json::Str(format!("{:016x}", self.final_checksum)),
+            ),
+            ("dx_checksum", Json::Str(format!("{:016x}", self.dx_checksum))),
+            ("final_sparsity", Json::Num(self.final_sparsity)),
+            ("total_resolves", Json::Num(self.total_resolves as f64)),
+        ];
+        if with_timing {
+            let stats = json::obj(vec![
+                ("calls", Json::Num(self.oracle_stats.calls as f64)),
+                ("blocks_solved", Json::Num(self.oracle_stats.blocks_solved as f64)),
+                ("padded_blocks", Json::Num(self.oracle_stats.padded_blocks as f64)),
+            ]);
+            fields.push(("oracle_stats", stats));
+            fields.push(("wall_secs", Json::Num(self.wall_secs)));
+        }
+        json::obj(fields)
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "  trained {} steps x {} layers in {:.2}s | schedule={} oracle={}",
+            self.trace.len(),
+            self.spec.layers,
+            self.wall_secs,
+            self.schedule,
+            self.oracle
+        );
+        let _ = writeln!(
+            s,
+            "  {:<6}{:>12}{:>10}{:>10}{:>10}{:>12}",
+            "step", "loss", "flips", "sparsity", "resolves", "resolve-ms"
+        );
+        for st in &self.trace {
+            let _ = writeln!(
+                s,
+                "  {:<6}{:>12.5}{:>9.1}%{:>10.3}{:>10}{:>12.2}",
+                st.step,
+                st.loss,
+                100.0 * st.flip_rate,
+                st.sparsity,
+                st.resolves,
+                1e3 * st.resolve_secs
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  final: sparsity={:.3} weights={:016x} dx={:016x} ({} re-solves, {} oracle calls)",
+            self.final_sparsity,
+            self.final_checksum,
+            self.dx_checksum,
+            self.total_resolves,
+            self.oracle_stats.calls
+        );
+        s
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn write_stripped(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json_stripped().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_report() -> TrainReport {
+        TrainReport {
+            spec: TrainSpec::new().shape(64, 64).batch(16),
+            schedule: "fixed".into(),
+            oracle: "dispatch(tsenor)".into(),
+            trace: vec![
+                StepStats {
+                    step: 0,
+                    loss: 0.5,
+                    flip_rate: 0.0,
+                    sparsity: 0.5,
+                    resolves: 2,
+                    resolve_secs: 0.01,
+                    step_secs: 0.02,
+                },
+                StepStats {
+                    step: 1,
+                    loss: 0.4,
+                    flip_rate: 0.125,
+                    sparsity: 0.5,
+                    resolves: 2,
+                    resolve_secs: 0.01,
+                    step_secs: 0.02,
+                },
+            ],
+            final_checksum: 0xdead_beef_cafe_f00d,
+            dx_checksum: 0x0123_4567_89ab_cdef,
+            final_sparsity: 0.5,
+            total_resolves: 4,
+            oracle_stats: OracleStats { calls: 4, blocks_solved: 16, padded_blocks: 0 },
+            wall_secs: 0.1,
+        }
+    }
+
+    #[test]
+    fn json_shape_and_checksum_fidelity() {
+        let r = toy_report();
+        let j = r.to_json();
+        assert_eq!(
+            j.get("final_weight_checksum").unwrap().as_str(),
+            Some("deadbeefcafef00d")
+        );
+        assert_eq!(j.get("trace").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("schedule").unwrap().as_str(), Some("fixed"));
+        let text = j.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn stripped_json_removes_timing_and_scheduling() {
+        let r = toy_report();
+        let full = r.to_json();
+        assert!(full.get("wall_secs").is_some());
+        assert!(full.get("oracle_stats").is_some());
+        assert!(full.get("trace").unwrap().idx(0).unwrap().get("step_secs").is_some());
+        assert!(full.get("spec").unwrap().get("jobs").is_some());
+
+        let stripped = r.to_json_stripped();
+        assert!(stripped.get("wall_secs").is_none());
+        assert!(stripped.get("oracle_stats").is_none());
+        for st in stripped.get("trace").unwrap().as_arr().unwrap() {
+            assert!(st.get("resolve_secs").is_none());
+            assert!(st.get("step_secs").is_none());
+            assert!(st.get("flip_rate").is_some());
+        }
+        let spec = stripped.get("spec").unwrap();
+        assert!(spec.get("jobs").is_none());
+        assert!(spec.get("threads").is_none());
+        assert!(spec.get("service").is_none());
+        assert!(spec.get("schedule").is_some());
+
+        // Two runs differing only in timing/scheduling strip equal.
+        let mut r2 = r.clone();
+        r2.wall_secs = 9.0;
+        r2.trace[0].resolve_secs = 4.0;
+        r2.trace[1].step_secs = 2.0;
+        r2.spec.jobs = 8;
+        r2.spec.threads = 16;
+        r2.oracle_stats = OracleStats { calls: 1, blocks_solved: 1, padded_blocks: 1 };
+        assert_eq!(
+            r.to_json_stripped().to_string_pretty(),
+            r2.to_json_stripped().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn render_lists_every_step() {
+        let r = toy_report();
+        let s = r.render();
+        assert!(s.contains("schedule=fixed"), "{s}");
+        assert!(s.contains("flips"), "{s}");
+        assert!(s.contains("deadbeefcafef00d"), "{s}");
+    }
+}

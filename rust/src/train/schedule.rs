@@ -1,0 +1,238 @@
+//! Mask schedules: WHEN a training step re-solves its sparsity masks and
+//! WHAT kind of mask it asks for. The three implementations cover the
+//! recipes the literature actually trains with:
+//!
+//! * [`FixedFrequency`] — re-solve a transposable mask every `freq`
+//!   steps (`counter % freq == 0`), the thu-ml/2by4-pretrain recipe.
+//! * [`DecayingRamp`] — Kao et al.'s decaying pruning-mask schedule:
+//!   re-solves start dense (keep all M of M) and ramp the kept count
+//!   down to the target N over `ramp_steps`, so early training explores
+//!   with most weights alive.
+//! * [`BiDirectional`] — Zhang et al.'s forward/backward mask pairs: a
+//!   magnitude N:M mask on `W` for the forward pass and an independent
+//!   one on `W^T` for backward-data. No transposable solve at all —
+//!   the cheap differential baseline TSENOR is measured against.
+//!
+//! Schedules are pure functions of the step index, so a trace is
+//! reproducible from the spec alone.
+
+use crate::masks::NmPattern;
+use anyhow::{bail, Result};
+
+/// Spec-level schedule selector (serialized in `TrainSpec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Fixed-frequency transposable re-solve.
+    Fixed,
+    /// Decaying keep-count ramp (transposable solves).
+    Ramp,
+    /// Bi-directional forward/backward magnitude mask pairs.
+    Bidirectional,
+}
+
+impl ScheduleKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Fixed => "fixed",
+            ScheduleKind::Ramp => "ramp",
+            ScheduleKind::Bidirectional => "bidirectional",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ScheduleKind> {
+        Ok(match s {
+            "fixed" => ScheduleKind::Fixed,
+            "ramp" => ScheduleKind::Ramp,
+            "bidirectional" | "bidir" => ScheduleKind::Bidirectional,
+            other => bail!("unknown schedule '{other}' (fixed|ramp|bidirectional)"),
+        })
+    }
+}
+
+/// What a schedule asks the loop to solve at a re-solve step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolve {
+    /// Transposable mask at this pattern, routed through the mask
+    /// service (concurrent layers coalesce into shared buckets).
+    Transposable(NmPattern),
+    /// Independent magnitude masks for `W` (forward) and `W^T`
+    /// (backward-data), computed locally — per-group top-N needs no
+    /// solver and nothing to batch.
+    BiDirectional(NmPattern),
+}
+
+impl Resolve {
+    pub fn pattern(&self) -> NmPattern {
+        match self {
+            Resolve::Transposable(p) | Resolve::BiDirectional(p) => *p,
+        }
+    }
+}
+
+/// A mask re-solve policy over training steps. Implementations must be
+/// pure in `step` — the trace (and its determinism guarantee) depends
+/// on it.
+pub trait MaskSchedule: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The re-solve to perform before step `step` runs, or `None` to
+    /// keep the current masks frozen. Every schedule must return
+    /// `Some` at step 0 (there is no mask before the first solve).
+    fn resolve_at(&self, step: usize) -> Option<Resolve>;
+}
+
+/// Re-solve a transposable mask at the target pattern every `freq`
+/// steps.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedFrequency {
+    pub freq: usize,
+    pub pattern: NmPattern,
+}
+
+impl MaskSchedule for FixedFrequency {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn resolve_at(&self, step: usize) -> Option<Resolve> {
+        (step % self.freq.max(1) == 0).then_some(Resolve::Transposable(self.pattern))
+    }
+}
+
+/// Decaying keep-count ramp: re-solves every `freq` steps, with the
+/// kept count per group starting at M (dense) and decaying linearly to
+/// the target N by step `ramp_steps`. The kept count never increases,
+/// so realized sparsity is monotone non-decreasing over the trace.
+#[derive(Clone, Copy, Debug)]
+pub struct DecayingRamp {
+    pub freq: usize,
+    pub target: NmPattern,
+    pub ramp_steps: usize,
+}
+
+impl DecayingRamp {
+    /// Pattern solved at `step`: N ramps `M -> target.n` over
+    /// `ramp_steps` (ceil keeps the decay monotone under integer
+    /// rounding).
+    pub fn pattern_at(&self, step: usize) -> NmPattern {
+        let (n, m) = (self.target.n, self.target.m);
+        if self.ramp_steps == 0 || step >= self.ramp_steps {
+            return self.target;
+        }
+        let frac = 1.0 - step as f64 / self.ramp_steps as f64;
+        let extra = ((m - n) as f64 * frac).ceil() as usize;
+        NmPattern::new((n + extra).min(m), m)
+    }
+}
+
+impl MaskSchedule for DecayingRamp {
+    fn name(&self) -> &'static str {
+        "ramp"
+    }
+
+    fn resolve_at(&self, step: usize) -> Option<Resolve> {
+        (step % self.freq.max(1) == 0).then_some(Resolve::Transposable(self.pattern_at(step)))
+    }
+}
+
+/// Bi-directional forward/backward magnitude mask pairs every `freq`
+/// steps.
+#[derive(Clone, Copy, Debug)]
+pub struct BiDirectional {
+    pub freq: usize,
+    pub pattern: NmPattern,
+}
+
+impl MaskSchedule for BiDirectional {
+    fn name(&self) -> &'static str {
+        "bidirectional"
+    }
+
+    fn resolve_at(&self, step: usize) -> Option<Resolve> {
+        (step % self.freq.max(1) == 0).then_some(Resolve::BiDirectional(self.pattern))
+    }
+}
+
+/// Build the schedule a `TrainSpec` describes.
+pub fn schedule_for_spec(spec: &crate::spec::TrainSpec) -> Box<dyn MaskSchedule> {
+    match spec.schedule {
+        ScheduleKind::Fixed => {
+            Box::new(FixedFrequency { freq: spec.freq, pattern: spec.pattern })
+        }
+        ScheduleKind::Ramp => Box::new(DecayingRamp {
+            freq: spec.freq,
+            target: spec.pattern,
+            ramp_steps: spec.ramp_steps,
+        }),
+        ScheduleKind::Bidirectional => {
+            Box::new(BiDirectional { freq: spec.freq, pattern: spec.pattern })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_and_names() {
+        for kind in [ScheduleKind::Fixed, ScheduleKind::Ramp, ScheduleKind::Bidirectional] {
+            assert_eq!(ScheduleKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(ScheduleKind::parse("bidir").unwrap(), ScheduleKind::Bidirectional);
+        let err = ScheduleKind::parse("cosine").unwrap_err().to_string();
+        assert!(err.contains("fixed") && err.contains("ramp"), "{err}");
+    }
+
+    #[test]
+    fn fixed_fires_on_multiples_only() {
+        let s = FixedFrequency { freq: 3, pattern: NmPattern::new(4, 8) };
+        assert!(s.resolve_at(0).is_some());
+        assert!(s.resolve_at(1).is_none());
+        assert!(s.resolve_at(2).is_none());
+        assert!(s.resolve_at(3).is_some());
+        assert_eq!(s.resolve_at(6), Some(Resolve::Transposable(NmPattern::new(4, 8))));
+    }
+
+    #[test]
+    fn zero_freq_is_treated_as_every_step() {
+        let s = FixedFrequency { freq: 0, pattern: NmPattern::new(2, 4) };
+        assert!(s.resolve_at(0).is_some() && s.resolve_at(1).is_some());
+    }
+
+    #[test]
+    fn ramp_keep_count_is_monotone_and_hits_target() {
+        let s = DecayingRamp {
+            freq: 1,
+            target: NmPattern::new(4, 8),
+            ramp_steps: 6,
+        };
+        let mut prev = usize::MAX;
+        for step in 0..10 {
+            let p = s.pattern_at(step);
+            assert_eq!(p.m, 8);
+            assert!(p.n <= prev, "keep count grew at step {step}");
+            prev = p.n;
+        }
+        assert_eq!(s.pattern_at(0).n, 8, "ramp starts dense");
+        assert_eq!(s.pattern_at(6), NmPattern::new(4, 8));
+        assert_eq!(s.pattern_at(99), NmPattern::new(4, 8));
+    }
+
+    #[test]
+    fn ramp_with_zero_ramp_steps_is_fixed_at_target() {
+        let s = DecayingRamp {
+            freq: 2,
+            target: NmPattern::new(2, 4),
+            ramp_steps: 0,
+        };
+        assert_eq!(s.resolve_at(0), Some(Resolve::Transposable(NmPattern::new(2, 4))));
+    }
+
+    #[test]
+    fn bidirectional_requests_mask_pairs() {
+        let s = BiDirectional { freq: 2, pattern: NmPattern::new(4, 8) };
+        assert_eq!(s.resolve_at(0), Some(Resolve::BiDirectional(NmPattern::new(4, 8))));
+        assert!(s.resolve_at(1).is_none());
+    }
+}

@@ -1,0 +1,88 @@
+//! SR-STE weight update on dense shadow weights.
+//!
+//! The backward-weight kernel already returns the MASKED gradient
+//! `dW = (x^T g) ⊙ S` (`sparse::nm::spmm_backward_weight`), so plain
+//! masked SGD is a dense update with that gradient. SR-STE (Zhou et
+//! al.) adds a decay `λ_w · (1 − S) ⊙ W` that shrinks the pruned
+//! shadow weights, regularizing the magnitude ranking the next mask
+//! re-solve scores against:
+//!
+//! ```text
+//! W ← W − lr · dW − lr · λ_w · (1 − S) ⊙ W
+//! ```
+//!
+//! With `λ_w = 0` the decay branch is skipped entirely, so SR-STE is
+//! STRUCTURALLY plain masked SGD — bit-for-bit, not merely within
+//! tolerance (pinned by `tests/property_schedules.rs`). Updates are
+//! serial elementwise loops: the determinism story needs no threading
+//! here, and keeping them branch-simple keeps them auto-vectorizable.
+
+use crate::util::tensor::Mat;
+
+/// `W ← W − lr · dW`. `dw` is the masked gradient, so pruned weights
+/// are untouched (`dw = 0` there — subtracting `lr · 0` is exact).
+pub fn plain_masked_sgd(w: &mut Mat, dw: &Mat, lr: f32) {
+    assert_eq!((w.rows, w.cols), (dw.rows, dw.cols), "sgd: shape mismatch");
+    for (wi, &di) in w.data.iter_mut().zip(&dw.data) {
+        *wi -= lr * di;
+    }
+}
+
+/// SR-STE update: masked gradient step plus decay on pruned weights.
+/// `mask` is the forward mask (1 = kept, 0 = pruned).
+pub fn srste_update(w: &mut Mat, dw: &Mat, mask: &Mat, lr: f32, lambda_w: f32) {
+    if lambda_w == 0.0 {
+        // No `0 * w` arithmetic: `-0.0` weights must survive a λ_w = 0
+        // run bit-for-bit for the masked-SGD equivalence to hold.
+        return plain_masked_sgd(w, dw, lr);
+    }
+    assert_eq!((w.rows, w.cols), (dw.rows, dw.cols), "sgd: shape mismatch");
+    assert_eq!((w.rows, w.cols), (mask.rows, mask.cols), "sgd: mask shape mismatch");
+    let decay = lr * lambda_w;
+    for ((wi, &di), &mi) in w.data.iter_mut().zip(&dw.data).zip(&mask.data) {
+        *wi = *wi - lr * di - decay * (1.0 - mi) * *wi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut r = Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| r.normal())
+    }
+
+    #[test]
+    fn zero_lambda_matches_plain_masked_sgd_bitwise() {
+        let mut r = Rng::new(5);
+        let mask = Mat::from_fn(8, 12, |_, _| if r.f32() < 0.5 { 1.0 } else { 0.0 });
+        let dw_raw = rand_mat(8, 12, 6);
+        let dw = dw_raw.hadamard(&mask);
+        let mut a = rand_mat(8, 12, 7);
+        // Seed a negative zero to pin the edge the branch protects.
+        a.data[3] = -0.0;
+        let mut b = a.clone();
+        srste_update(&mut a, &dw, &mask, 0.05, 0.0);
+        plain_masked_sgd(&mut b, &dw, 0.05);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn decay_shrinks_pruned_and_spares_kept() {
+        let mask = Mat::from_fn(4, 4, |i, j| if (i + j) % 2 == 0 { 1.0 } else { 0.0 });
+        let dw = Mat::zeros(4, 4);
+        let mut w = Mat::from_fn(4, 4, |_, _| 2.0);
+        srste_update(&mut w, &dw, &mask, 0.1, 0.5);
+        for (i, (&wi, &mi)) in w.data.iter().zip(&mask.data).enumerate() {
+            if mi == 1.0 {
+                assert_eq!(wi, 2.0, "kept weight {i} moved with zero gradient");
+            } else {
+                assert!((wi - 2.0 * (1.0 - 0.05)).abs() < 1e-6, "pruned weight {i}: {wi}");
+            }
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Regression for the PR 4 narrow scope: `PruneReport`'s
+//! `engine_exec_calls` / `engine_exec_secs` used to snapshot pool slot
+//! 0 only, silently dropping the PJRT work a pooled XLA oracle did on
+//! slots 1.. — `pipeline::run_pooled` must aggregate deltas across the
+//! whole `EnginePool`. Requires `make artifacts` (self-skips without
+//! the bundle).
+
+use std::path::PathBuf;
+use tsenor::coordinator::batcher::XlaSolver;
+use tsenor::coordinator::metrics::Metrics;
+use tsenor::coordinator::pipeline;
+use tsenor::masks::solver::SolveCfg;
+use tsenor::runtime::client::ModelRuntime;
+use tsenor::runtime::{EnginePool, Manifest};
+use tsenor::spec::{Framework, PruneSpec};
+
+fn manifest() -> Option<Manifest> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&root).unwrap())
+}
+
+#[test]
+fn pooled_report_aggregates_engine_stats_across_all_slots() {
+    let Some(manifest) = manifest() else { return };
+    let pool = EnginePool::new(&manifest, 2).unwrap();
+    assert!(pool.len() >= 2, "regression needs a multi-slot pool");
+    let rt = ModelRuntime::new(pool.primary(), &manifest);
+    let solver = XlaSolver::pooled(&pool, &manifest, SolveCfg::default());
+
+    let spec = PruneSpec::new(Framework::Wanda)
+        .jobs(2)
+        .calib_batches(2)
+        .eval_batches(Some(2));
+
+    let slot0_before = rt.engine.stats();
+    let pool_before = pool.stats();
+    let mut metrics = Metrics::new();
+    let report =
+        pipeline::run_pooled(&rt, Some(&pool), &spec, &solver, &mut metrics).unwrap();
+    let slot0_delta = rt.engine.stats().since(&slot0_before);
+    let pool_delta = pool.stats().since(&pool_before);
+
+    // The report's counters are the POOL delta, exactly.
+    assert_eq!(report.engine_exec_calls, pool_delta.exec_calls);
+    assert!((report.engine_exec_secs - pool_delta.exec_secs()).abs() < 1e-6);
+    // And a pool delta is never less than slot 0 alone.
+    assert!(report.engine_exec_calls >= slot0_delta.exec_calls);
+    // With >= 2 oracle calls the pooled solver's round-robin checkout
+    // must have executed on slot 1 too — the exact undercount the old
+    // slot-0-only snapshot hid.
+    if report.oracle_stats.calls >= 2 {
+        assert!(
+            pool_delta.exec_calls > slot0_delta.exec_calls,
+            "pool delta {} should exceed slot-0 delta {} once solves round-robin",
+            pool_delta.exec_calls,
+            slot0_delta.exec_calls
+        );
+    }
+}
+
+#[test]
+fn unpooled_run_still_counts_the_runtime_engine() {
+    let Some(manifest) = manifest() else { return };
+    let pool = EnginePool::new(&manifest, 1).unwrap();
+    let rt = ModelRuntime::new(pool.primary(), &manifest);
+    let solver = XlaSolver::pooled(&pool, &manifest, SolveCfg::default());
+    let spec = PruneSpec::new(Framework::Wanda)
+        .jobs(1)
+        .calib_batches(2)
+        .eval_batches(Some(2));
+    let mut metrics = Metrics::new();
+    let report = pipeline::run(&rt, &spec, &solver, &mut metrics).unwrap();
+    assert!(report.engine_exec_calls > 0, "calibration + eval run on the engine");
+}

@@ -1,0 +1,88 @@
+//! Property tests for the training subsystem's schedule/update
+//! contracts: a frozen mask never reports flips, the decaying ramp's
+//! realized sparsity is monotone non-decreasing, and SR-STE with
+//! `lambda_w = 0` IS plain masked SGD, bit for bit.
+
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::pruning::CpuOracle;
+use tsenor::spec::TrainSpec;
+use tsenor::train::sgd::{plain_masked_sgd, srste_update};
+use tsenor::train::{run_training, ScheduleKind};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+fn oracle() -> CpuOracle {
+    CpuOracle::new(Method::Tsenor, SolveCfg::default())
+}
+
+fn base_spec() -> TrainSpec {
+    TrainSpec::new().shape(16, 16).batch(4).pattern(4, 8).layers(2).steps(6).freq(2)
+}
+
+#[test]
+fn flip_rate_is_zero_while_the_mask_is_frozen() {
+    // freq > steps: the only re-solve is the mandatory one at step 0,
+    // so no mask ever changes and every step's flip rate is exactly 0
+    // (step 0 itself is pinned to 0 — there is no previous mask).
+    let spec = base_spec().freq(100);
+    let report = run_training(&spec, &oracle()).unwrap();
+    assert_eq!(report.total_resolves, 2, "one initial solve per layer");
+    for s in &report.trace {
+        assert_eq!(s.flip_rate, 0.0, "step {} flipped a frozen mask", s.step);
+    }
+}
+
+#[test]
+fn ramp_sparsity_is_monotone_nondecreasing_and_reaches_target() {
+    let spec = base_spec().schedule(ScheduleKind::Ramp).steps(8).freq(1).ramp_steps(6);
+    let report = run_training(&spec, &oracle()).unwrap();
+    let mut prev = -1.0f64;
+    for s in &report.trace {
+        assert!(
+            s.sparsity >= prev,
+            "sparsity shrank at step {}: {} < {prev}",
+            s.step,
+            s.sparsity
+        );
+        prev = s.sparsity;
+    }
+    assert_eq!(report.trace[0].sparsity, 0.0, "ramp opens dense (keep all M of M)");
+    assert!((report.final_sparsity - 0.5).abs() < 1e-9, "4:8 target is 50%");
+}
+
+#[test]
+fn srste_with_zero_lambda_is_plain_masked_sgd_bitwise() {
+    let mut rng = Rng::new(33);
+    let mut w0 = Mat::from_fn(16, 16, |_, _| rng.heavy_tail());
+    // Seed exact -0.0 weights: any `w - lr*decay*(1-mask)*w` rewrite of
+    // the no-decay case would flip their sign bit.
+    w0.data[3] = -0.0;
+    w0.data[40] = -0.0;
+    let dw = Mat::from_fn(16, 16, |_, _| rng.heavy_tail());
+    let mask = Mat::from_fn(16, 16, |i, j| if (i + j) % 2 == 0 { 1.0 } else { 0.0 });
+
+    let mut a = w0.clone();
+    let mut b = w0.clone();
+    srste_update(&mut a, &dw, &mask, 0.01, 0.0);
+    plain_masked_sgd(&mut b, &dw, 0.01);
+    let abits: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+    let bbits: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(abits, bbits, "lambda_w = 0 must be STRUCTURALLY plain masked SGD");
+}
+
+#[test]
+fn zero_lambda_training_reproduces_and_nonzero_decay_acts() {
+    // Loop level: lambda_w = 0 runs are exactly reproducible, and a
+    // nonzero decay must actually move the pruned weights.
+    let spec0 = base_spec().lambda_w(0.0);
+    let r1 = run_training(&spec0, &oracle()).unwrap();
+    let r2 = run_training(&spec0, &oracle()).unwrap();
+    assert_eq!(r1.final_checksum, r2.final_checksum);
+    assert_eq!(r1.dx_checksum, r2.dx_checksum);
+
+    let decayed = run_training(&base_spec().lambda_w(0.1), &oracle()).unwrap();
+    assert_ne!(
+        r1.final_checksum, decayed.final_checksum,
+        "SR-STE decay must act on the pruned weights"
+    );
+}
