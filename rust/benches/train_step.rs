@@ -36,7 +36,7 @@ fn main() {
         .expect("finite synthetic scores");
     let smask = standard_nm_mask(&w, pattern);
 
-    let cfg = TrainStepCfg { threads, trials };
+    let cfg = TrainStepCfg { threads, trials, seed: 24 };
     let report =
         run_train_step(&x, &g, &w, &tmask, &smask, pattern, &cfg).expect("train step");
     print!("{}", report.render());
@@ -58,6 +58,14 @@ fn main() {
         bj.num(&format!("{regime}_bwd_data_gflops"), gflop / t.bwd_data);
         bj.num(&format!("{regime}_bwd_weight_gflops"), gflop / t.bwd_weight);
     }
+    // All bench batches are multiples of M=32, so the fully-sparse MVUE
+    // backward-weight regime is always present.
+    let mv = report.mvue.expect("bench batch partitions into M-row groups");
+    bj.num("mvue_bwd_weight_gflops", gflop / mv.bwd_weight);
+    bj.num(
+        "mvue_bwd_weight_speedup_vs_dense",
+        report.dense.bwd_weight / mv.bwd_weight,
+    );
     bj.num(
         "bwd_data_speedup_vs_standard",
         report.standard.bwd_data / report.transposable.bwd_data,

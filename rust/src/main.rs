@@ -97,7 +97,9 @@ use tsenor::pruning::{CpuOracle, LayerProblem, MaskDispatcher, MaskOracle, MaskS
 use tsenor::runtime::client::ModelRuntime;
 use tsenor::runtime::{Engine, EnginePool, Manifest};
 use tsenor::spec::report::PruneReport;
-use tsenor::spec::{FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure, TrainSpec};
+use tsenor::spec::{
+    BackwardMode, FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure, TrainSpec,
+};
 use tsenor::stream::store::StoreReader;
 use tsenor::stream::StreamLayer;
 use tsenor::train::ScheduleKind;
@@ -808,7 +810,7 @@ fn cmd_train_step(args: &Args) -> Result<()> {
     let tmask = solver::solve_matrix(spec.method, &w, spec.pattern, &solve_cfg)?;
     let smask = tsenor::pruning::magnitude::standard_nm_mask(&w, spec.pattern);
 
-    let cfg = tsenor::sparse::train::TrainStepCfg { threads, trials: spec.trials };
+    let cfg = tsenor::sparse::train::TrainStepCfg { threads, trials: spec.trials, seed: spec.seed };
     let report =
         tsenor::sparse::train::run_train_step(&x, &g, &w, &tmask, &smask, spec.pattern, &cfg)?;
     print!("{}", report.render());
@@ -837,6 +839,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.opts.get("schedule") {
         spec.schedule = ScheduleKind::parse(s)?;
+    }
+    if let Some(b) = args.opts.get("backward") {
+        spec.backward = BackwardMode::parse(b)?;
     }
     spec.rows = args.usize("rows", spec.rows)?;
     spec.cols = args.usize("cols", spec.cols)?;
@@ -869,10 +874,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     // re-solving at the same step coalesce into shared solver buckets.
     let dispatcher = MaskDispatcher::new(&backend, spec.service);
     println!(
-        "training: schedule={} pattern={} method={} layers={} steps={} freq={} jobs={}",
+        "training: schedule={} pattern={} method={} backward={} layers={} steps={} freq={} jobs={}",
         spec.schedule.name(),
         spec.pattern,
         spec.method.name(),
+        spec.backward.name(),
         spec.layers,
         spec.steps,
         spec.freq,

@@ -4,14 +4,17 @@
 //! nmSPMM / cuBLAS on this testbed (DESIGN.md §Substitutions).
 //!
 //! `nm` holds the compressed format + SpMM kernels, `gemm` the dense
-//! baselines, `train` the end-to-end training-step workload (the
-//! `train-step` CLI). All hot kernels share one threading discipline:
+//! baselines, `mvue` the stochastic unbiased gradient sparsifier that
+//! puts the backward-weight contraction on the sparse path too, and
+//! `train` the end-to-end training-step workload (the `train-step`
+//! CLI). All hot kernels share one threading discipline:
 //! [`fan_out_rows`] splits the OUTPUT into disjoint contiguous row
 //! panels over scoped threads (the same shape as
 //! `coordinator::executor`'s layer fan-out), so threading is
 //! bit-invisible — no worker ever accumulates into another's rows.
 
 pub mod gemm;
+pub mod mvue;
 pub mod nm;
 pub mod train;
 

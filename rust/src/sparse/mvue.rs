@@ -1,0 +1,370 @@
+//! MVUE N:M sparsification of neural gradients (Chmiel et al.,
+//! "Minimum Variance Unbiased N:M Sparsity for the Neural Gradients";
+//! PAPERS.md) — the piece that makes the THIRD training GEMM sparse.
+//! `spmm_backward_weight` contracts the output gradient over the batch
+//! densely; sparsifying `g` to column-group N:M along the batch axis
+//! lets `dW = xᵀ @ g_sparse` run at N/M rate like the other two passes.
+//!
+//! Per M-group of each column, the sparsifier:
+//!
+//! 1. computes keep probabilities `p_i = min(1, |g_i|/τ)` with τ chosen
+//!    so `Σp = N` ([`keep_probs`]) — the exact minimum-variance
+//!    distribution for 1:2 and 2:4 (where it reduces to Chmiel et al.'s
+//!    closed form `p_i = |g_i| / τ`) and the normalized-magnitude
+//!    approximation for general N:M;
+//! 2. draws exactly N survivors without replacement by systematic PPS
+//!    sampling — one uniform per (group, column) places sample points
+//!    `u, u+1, …, u+N−1` on the cumulative-probability line, so entry i
+//!    is kept with probability exactly `p_i`;
+//! 3. rescales survivors by `1/p_i`, making the estimator unbiased:
+//!    `E[sparsified] == dense`, entry by entry.
+//!
+//! **Determinism.** Randomness comes from counter-style
+//! [`Rng::stream`] children, one per absolute group index — a pure
+//! function of `(seed, group)`, never of thread count or scheduling
+//! order. Workers own disjoint contiguous group ranges of the output
+//! (same discipline as [`super::fan_out_rows`]), and the error/norm
+//! telemetry is folded in group order after the join, so the record
+//! AND the realized-variance numbers are bit-identical at any
+//! `threads`.
+
+use crate::sparse::nm::NmCompressed;
+use crate::util::rng::Rng;
+use crate::util::tensor::Mat;
+use anyhow::{ensure, Result};
+
+/// Largest supported group size — matches the engine's kernel
+/// monomorphization limit and the u8 index payload of `NmCompressed`.
+pub const MAX_M: usize = 64;
+
+/// A sparsified gradient plus the estimator's realized-error telemetry.
+#[derive(Clone, Debug)]
+pub struct MvueOut {
+    /// The N:M record of the sparsified gradient (batch-contraction
+    /// layout: groups of M consecutive batch rows per column).
+    pub rec: NmCompressed,
+    /// Σ (ĝ − g)² over the whole tensor, f64, accumulated in ascending
+    /// (group, row, column-within-group) order — deterministic.
+    pub sq_err: f64,
+    /// Σ g² over the whole tensor, same order.
+    pub sq_norm: f64,
+}
+
+impl MvueOut {
+    /// Realized relative variance of this draw: ‖ĝ − g‖² / ‖g‖²
+    /// (0 when the gradient is all-zero).
+    pub fn rel_var(&self) -> f64 {
+        if self.sq_norm > 0.0 {
+            self.sq_err / self.sq_norm
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Optimal keep probabilities for one magnitude group: the minimizer of
+/// `Σ x_i²(1/p_i − 1)` subject to `Σ p_i = n`, `p_i ≤ 1` is
+/// `p_i = min(1, |x_i|/τ)` — magnitude-proportional with the largest
+/// entries capped at 1 and their surplus redistributed (water-filling).
+/// For 1:2 and 2:4 this IS the exact Chmiel et al. closed form; for
+/// general N:M it is their normalized-magnitude approximation.
+///
+/// `abs` holds the group magnitudes (must be non-negative), `p` the
+/// same length; every `p[i]` is written. Entries with zero magnitude
+/// get `p = 0` (they carry no mass) unless the keep budget exceeds the
+/// nonzero count, in which case the leftover budget spreads uniformly
+/// over the zero entries so the sampler still returns exactly n slots.
+pub fn keep_probs(abs: &[f64], n: usize, p: &mut [f64]) {
+    let m = abs.len();
+    debug_assert_eq!(p.len(), m);
+    debug_assert!(n >= 1 && n <= m && m <= MAX_M);
+    if n == m {
+        p.fill(1.0);
+        return;
+    }
+    // Rank order (descending magnitude, index tie-break): the capped
+    // set is always a prefix of this order.
+    let mut order = [0usize; MAX_M];
+    let order = &mut order[..m];
+    for (i, o) in order.iter_mut().enumerate() {
+        *o = i;
+    }
+    order.sort_unstable_by(|&a, &b| abs[b].total_cmp(&abs[a]).then(a.cmp(&b)));
+
+    // Cap the largest entries while their uncapped probability would
+    // exceed 1, i.e. while a_(k)·(n−k) > Σ of the uncapped tail. At
+    // k = n−1 the condition cannot hold (the tail contains a_(k)), so
+    // at most n−1 entries cap and every nonzero keeps p > 0.
+    let mut tail: f64 = order.iter().map(|&i| abs[i]).sum();
+    let mut k = 0usize;
+    while k < n {
+        let a = abs[order[k]];
+        if a * (n - k) as f64 <= tail {
+            break;
+        }
+        p[order[k]] = 1.0;
+        tail -= a;
+        k += 1;
+    }
+    let need = (n - k) as f64;
+    if tail > 0.0 {
+        let inv_tau = need / tail;
+        for &i in &order[k..] {
+            p[i] = (abs[i] * inv_tau).min(1.0);
+        }
+    } else {
+        // Fewer than n nonzeros: pad the keep budget uniformly over the
+        // zero entries (their stored value is 0, so any choice is
+        // unbiased — the budget only keeps the record exactly N:M).
+        let fill = need / (m - k) as f64;
+        for &i in &order[k..] {
+            p[i] = fill;
+        }
+    }
+}
+
+/// Analytic variance of the estimator on one group: for ANY fixed-size
+/// sampling design with inclusion probability `p_i`, the per-entry
+/// variance of `x_i/p_i · 1{kept}` is exactly `x_i²(1/p_i − 1)`, so the
+/// group total is `Σ x_i²(1/p_i − 1)` — the Chmiel et al. minimum the
+/// unbiasedness suite checks the empirical variance against.
+pub fn group_variance_bound(group: &[f32], n: usize) -> f64 {
+    let m = group.len();
+    assert!(n >= 1 && n <= m && m <= MAX_M, "variance bound: bad {n}:{m}");
+    let mut abs = [0.0f64; MAX_M];
+    let mut p = [0.0f64; MAX_M];
+    for (a, &x) in abs[..m].iter_mut().zip(group) {
+        *a = (x as f64).abs();
+    }
+    keep_probs(&abs[..m], n, &mut p[..m]);
+    group
+        .iter()
+        .zip(&p[..m])
+        .filter(|&(_, &pi)| pi > 0.0)
+        .map(|(&x, &pi)| (x as f64) * (x as f64) * (1.0 / pi - 1.0))
+        .sum()
+}
+
+/// Systematic PPS sampling: place sample points `u, u+1, …, u+n−1` on
+/// the cumulative line of `p` (Σp == n) and select each entry whose
+/// probability interval contains a point. Every interval has length
+/// `p_i ≤ 1`, so it contains at most one point — entry i is selected
+/// with probability exactly `p_i`, and exactly n entries are selected
+/// up to floating-point shortfall in the cumulative sum (the caller
+/// pads). Selections land in `sel` in ascending order.
+fn systematic_select(p: &[f64], u: f64, n: usize, sel: &mut [usize]) -> usize {
+    let mut cum = 0.0f64;
+    let mut next = u;
+    let mut k = 0usize;
+    for (i, &pi) in p.iter().enumerate() {
+        cum += pi;
+        if k < n && next < cum {
+            sel[k] = i;
+            k += 1;
+            next += 1.0;
+        }
+    }
+    k
+}
+
+/// Complete a selection that lost slots to cumulative-sum rounding
+/// (an fp-epsilon event): fill with the lowest unselected offsets,
+/// then restore ascending order.
+fn pad_selection(sel: &mut [usize], filled: usize) {
+    let n = sel.len();
+    let mut have = filled;
+    let mut i = 0usize;
+    while have < n {
+        if !sel[..have].contains(&i) {
+            sel[have] = i;
+            have += 1;
+        }
+        i += 1;
+    }
+    sel.sort_unstable();
+}
+
+/// Sparsify the groups `[grp, grp + count)` worth of `g` into the
+/// workers' disjoint `values`/`indices` panels; returns (Σerr², Σg²)
+/// per group via `stats`. Pure function of `(g, seed, group index)`.
+fn sparsify_groups(
+    g: &Mat,
+    n: usize,
+    m: usize,
+    grp0: usize,
+    seed: u64,
+    values: &mut [f32],
+    indices: &mut [u8],
+    stats: &mut [(f64, f64)],
+) {
+    let cols = g.cols;
+    let gsz = n * cols;
+    let mut abs = [0.0f64; MAX_M];
+    let mut p = [0.0f64; MAX_M];
+    let mut sel = [0usize; MAX_M];
+    for (off, stat) in stats.iter_mut().enumerate() {
+        let grp = grp0 + off;
+        let base = grp * m;
+        let panel_v = &mut values[off * gsz..(off + 1) * gsz];
+        let panel_i = &mut indices[off * gsz..(off + 1) * gsz];
+        let mut rng = Rng::stream(seed, grp as u64);
+        let (mut err, mut norm) = (0.0f64, 0.0f64);
+        for j in 0..cols {
+            for (r, a) in abs[..m].iter_mut().enumerate() {
+                *a = (g.at(base + r, j) as f64).abs();
+            }
+            keep_probs(&abs[..m], n, &mut p[..m]);
+            let u = rng.f64();
+            let filled = systematic_select(&p[..m], u, n, &mut sel[..n]);
+            pad_selection(&mut sel[..n], filled);
+            // Slots ascend with the in-group offset (ascending
+            // contraction order, the engine-wide determinism contract);
+            // survivors are rescaled by 1/p so E[stored] == dense.
+            let mut s = 0usize;
+            for r in 0..m {
+                let gv = g.at(base + r, j) as f64;
+                let ghat = if s < n && sel[s] == r {
+                    let pi = p[r];
+                    let v = if pi > 0.0 { (gv / pi) as f32 } else { 0.0 };
+                    panel_v[s * cols + j] = v;
+                    panel_i[s * cols + j] = r as u8;
+                    s += 1;
+                    v as f64
+                } else {
+                    0.0
+                };
+                let d = ghat - gv;
+                err += d * d;
+                norm += gv * gv;
+            }
+        }
+        *stat = (err, norm);
+    }
+}
+
+/// Serial MVUE sparsification (one worker). See [`sparsify_threaded`].
+pub fn sparsify(g: &Mat, n: usize, m: usize, seed: u64) -> Result<MvueOut> {
+    sparsify_threaded(g, n, m, seed, 1)
+}
+
+/// Tensor-wide MVUE N:M sparsification of `g` along its rows (the
+/// batch/contraction axis): every M consecutive rows of each column
+/// keep exactly N stochastic survivors, rescaled so the record is an
+/// unbiased estimator of `g`. Bit-identical at any `threads` — workers
+/// own disjoint group ranges and every group's randomness is the
+/// counter stream `Rng::stream(seed, group)`.
+pub fn sparsify_threaded(
+    g: &Mat,
+    n: usize,
+    m: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<MvueOut> {
+    ensure!(n >= 1 && n <= m, "mvue: invalid pattern {n}:{m}");
+    ensure!(m <= MAX_M, "mvue: M={m} exceeds the engine group limit of {MAX_M}");
+    ensure!(
+        g.rows % m == 0,
+        "mvue: {} gradient rows do not partition into groups of M={m} (remainder {})",
+        g.rows,
+        g.rows % m
+    );
+    let groups = g.rows / m;
+    let cols = g.cols;
+    let mut values = vec![0.0f32; groups * n * cols];
+    let mut indices = vec![0u8; groups * n * cols];
+    let mut stats = vec![(0.0f64, 0.0f64); groups];
+    if groups > 0 && cols > 0 {
+        let threads = threads.max(1).min(groups);
+        let chunk = groups.div_ceil(threads);
+        let gsz = n * cols;
+        std::thread::scope(|sc| {
+            let mut vrest = values.as_mut_slice();
+            let mut irest = indices.as_mut_slice();
+            let mut srest = stats.as_mut_slice();
+            let mut grp0 = 0usize;
+            while grp0 < groups {
+                let take = chunk.min(groups - grp0);
+                let (vh, vt) = vrest.split_at_mut(take * gsz);
+                vrest = vt;
+                let (ih, it) = irest.split_at_mut(take * gsz);
+                irest = it;
+                let (sh, st) = srest.split_at_mut(take);
+                srest = st;
+                sc.spawn(move || sparsify_groups(g, n, m, grp0, seed, vh, ih, sh));
+                grp0 += take;
+            }
+        });
+    }
+    // Fold the per-group partials in group order — bit-identical at
+    // every worker count.
+    let (sq_err, sq_norm) = stats
+        .iter()
+        .fold((0.0, 0.0), |(e, q), &(de, dq)| (e + de, q + dq));
+    let rec = NmCompressed::from_parts(g.rows, cols, n, m, values, indices)?;
+    Ok(MvueOut { rec, sq_err, sq_norm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_probs_sum_to_n_and_match_the_1_2_closed_form() {
+        // 1:2 exact closed form: p_i = |x_i| / (|a| + |b|).
+        let abs = [3.0f64, 1.0];
+        let mut p = [0.0f64; 2];
+        keep_probs(&abs, 1, &mut p);
+        assert!((p[0] - 0.75).abs() < 1e-12 && (p[1] - 0.25).abs() < 1e-12, "{p:?}");
+        // 2:4 with one dominant entry: it caps at 1, the rest share.
+        let abs = [10.0f64, 1.0, 1.0, 2.0];
+        let mut p = [0.0f64; 4];
+        keep_probs(&abs, 2, &mut p);
+        assert!((p[0] - 1.0).abs() < 1e-12, "{p:?}");
+        assert!((p.iter().sum::<f64>() - 2.0).abs() < 1e-12, "{p:?}");
+        assert!(p[3] > p[1] && (p[1] - p[2]).abs() < 1e-12, "{p:?}");
+        // Fewer nonzeros than the keep budget: zeros absorb the rest.
+        let abs = [5.0f64, 0.0, 0.0, 0.0];
+        let mut p = [0.0f64; 4];
+        keep_probs(&abs, 2, &mut p);
+        assert!((p[0] - 1.0).abs() < 1e-12, "{p:?}");
+        assert!((p.iter().sum::<f64>() - 2.0).abs() < 1e-12, "{p:?}");
+    }
+
+    #[test]
+    fn systematic_select_hits_capped_entries_always() {
+        let p = [1.0f64, 0.25, 0.5, 0.25];
+        for u in [0.0, 0.1, 0.49, 0.5, 0.99] {
+            let mut sel = [0usize; 2];
+            let k = systematic_select(&p, u, 2, &mut sel);
+            pad_selection(&mut sel, k);
+            assert!(sel.contains(&0), "u={u}: capped entry missed ({sel:?})");
+            assert!(sel[0] < sel[1], "u={u}: not ascending ({sel:?})");
+        }
+    }
+
+    #[test]
+    fn n_equals_m_is_the_identity() {
+        let g = Mat::from_fn(8, 3, |i, j| (i * 3 + j) as f32 - 11.0);
+        let out = sparsify(&g, 4, 4, 7).unwrap();
+        assert_eq!(out.rec.decompress(), g);
+        assert_eq!(out.sq_err, 0.0);
+        assert_eq!(out.rel_var(), 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_patterns() {
+        let g = Mat::zeros(10, 4);
+        let err = sparsify(&g, 2, 4, 0).unwrap_err().to_string();
+        assert!(err.contains("10 gradient rows") && err.contains("remainder 2"), "{err}");
+        assert!(sparsify(&Mat::zeros(8, 4), 5, 4, 0).is_err());
+        assert!(sparsify(&Mat::zeros(128, 4), 64, 128, 0).is_err());
+    }
+
+    #[test]
+    fn all_zero_gradient_stays_zero_with_exact_structure() {
+        let out = sparsify(&Mat::zeros(8, 5), 2, 4, 3).unwrap();
+        assert!(out.rec.values().iter().all(|&v| v == 0.0));
+        assert!(out.rec.mask().is_ok(), "padded slots must still be valid N:M");
+        assert_eq!(out.rel_var(), 0.0);
+    }
+}

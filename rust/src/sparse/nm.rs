@@ -442,8 +442,20 @@ pub fn spmm_backward_weight_threaded(
     assert_eq!(x.cols, w.rows, "spmm_backward_weight: x vs W shape mismatch");
     assert_eq!(g.cols, w.cols, "spmm_backward_weight: g vs W shape mismatch");
     assert_eq!(x.rows, g.rows, "spmm_backward_weight: batch mismatch");
+    // `rows / m` truncates: a misaligned record would silently drop the
+    // trailing `rows % m` rows of dW (the fan-out covers groups*m rows
+    // only). Both constructors enforce the invariant, so this guards
+    // against a future constructor or transmute, loudly and in release.
+    assert!(
+        w.m > 0 && w.rows % w.m == 0,
+        "spmm_backward_weight: {} rows do not partition into groups of M={} \
+         (remainder {}) — record invariant violated",
+        w.rows,
+        w.m,
+        if w.m == 0 { w.rows } else { w.rows % w.m }
+    );
     let mut dw = Mat::zeros(w.rows, w.cols);
-    let groups = if w.m == 0 { 0 } else { w.rows / w.m };
+    let groups = w.rows / w.m;
     // "Rows" of the fan-out are whole M-row groups so panel boundaries
     // never split a scatter window.
     fan_out_rows(groups, w.m * w.cols, threads, &mut dw.data, |grp0, panel| {
@@ -655,6 +667,38 @@ mod tests {
         assert!(NmCompressed::from_parts(5, 1, 2, 4, vec![], vec![]).is_err());
         assert!(NmCompressed::from_parts(4, 1, 5, 4, vec![], vec![]).is_err());
         assert!(NmCompressed::from_parts(4, 1, 2, 0, vec![], vec![]).is_err());
+    }
+
+    /// Companion to the `from_parts` gate above: the backward-weight
+    /// kernel's own group-alignment guard. No public constructor can
+    /// build a `rows % m != 0` record, so forge one through the private
+    /// fields (test-module privilege) and require the loud panic — the
+    /// truncating `rows / m` would otherwise silently skip the trailing
+    /// rows of dW.
+    #[test]
+    fn backward_weight_asserts_group_alignment() {
+        let w = NmCompressed {
+            rows: 9,
+            cols: 2,
+            n: 1,
+            m: 4,
+            values: vec![0.0; 4],
+            indices: vec![0; 4],
+        };
+        let x = Mat::zeros(3, 9);
+        let g = Mat::zeros(3, 2);
+        let panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            spmm_backward_weight_threaded(&x, &g, &w, 2)
+        }))
+        .expect_err("misaligned record must panic, not truncate");
+        let msg = panic
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("9 rows"), "{msg}");
+        assert!(msg.contains("M=4"), "{msg}");
+        assert!(msg.contains("remainder 1"), "{msg}");
     }
 
     #[test]

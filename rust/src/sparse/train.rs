@@ -20,6 +20,7 @@
 
 use crate::masks::NmPattern;
 use crate::sparse::gemm::matmul_dense_baseline_threaded;
+use crate::sparse::mvue;
 use crate::sparse::nm::{
     spmm_backward_weight_threaded, spmm_threaded, spmm_transposed_slow_threaded,
     spmm_transposed_threaded, NmCompressed,
@@ -39,11 +40,15 @@ pub struct TrainStepCfg {
     pub threads: usize,
     /// Timing repetitions per pass (mean reported).
     pub trials: usize,
+    /// Seed for the MVUE gradient-sparsification regime's stochastic
+    /// draw (the timed result is bit-deterministic in this seed at any
+    /// thread count).
+    pub seed: u64,
 }
 
 impl Default for TrainStepCfg {
     fn default() -> Self {
-        TrainStepCfg { threads: 1, trials: 3 }
+        TrainStepCfg { threads: 1, trials: 3, seed: 0 }
     }
 }
 
@@ -76,6 +81,12 @@ pub struct TrainStepReport {
     /// Standard (non-transposable) mask: forward fast, backward-data on
     /// the decompress + dense slow path.
     pub standard: PassTimes,
+    /// Fully-sparse regime: transposable fwd/bwd-data plus an MVUE
+    /// N:M-sparsified gradient driving the backward-weight contraction
+    /// through the fast `spmm` path. `None` when the batch does not
+    /// partition into M-row groups (the sparsifier needs
+    /// `batch % M == 0`).
+    pub mvue: Option<PassTimes>,
 }
 
 impl TrainStepReport {
@@ -116,12 +127,18 @@ impl TrainStepReport {
         out.push_str(&row("  dense", &self.dense));
         out.push_str(&row("  transposable", &self.transposable));
         out.push_str(&row("  standard", &self.standard));
+        if let Some(mv) = &self.mvue {
+            out.push_str(&row("  mvue", mv));
+        }
         out.push_str(&format!(
             "{:<14}{:>12}{:>12}{:>12}{:>12}\n",
             "speedup", "fwd", "bwd-data", "bwd-wgt", "step"
         ));
         out.push_str(&ratio("  transposable", &self.transposable));
         out.push_str(&ratio("  standard", &self.standard));
+        if let Some(mv) = &self.mvue {
+            out.push_str(&ratio("  mvue", mv));
+        }
         out
     }
 }
@@ -248,6 +265,23 @@ pub fn run_train_step(
         smask,
     )?;
 
+    // The fully-sparse regime N:M-sparsifies the gradient itself (MVUE,
+    // unbiased) so backward-weight runs on the fast `spmm` path too. The
+    // draw is seeded, so the check is still exact: the kernel must
+    // bit-match the dense baseline over the DECOMPRESSED sparsified
+    // gradient. Skipped when the batch does not partition into M-row
+    // groups.
+    let mvue_ok = x.rows > 0 && x.rows % m == 0;
+    if mvue_ok {
+        let sp = mvue::sparsify_threaded(g, n, m, cfg.seed, threads)
+            .context("train-step: MVUE gradient sparsification failed")?;
+        check_bits(
+            "bwd-weight(mvue)",
+            &spmm_threaded(&x_t, &sp.rec, threads),
+            &matmul_dense_baseline_threaded(&x_t, &sp.rec.decompress(), threads),
+        )?;
+    }
+
     let trials = cfg.trials;
     let dense = PassTimes {
         fwd: time_mean(trials, || {
@@ -284,6 +318,23 @@ pub fn run_train_step(
             let _ = spmm_backward_weight_threaded(x, g, &cs, threads);
         }),
     };
+    // fwd / bwd-data are the transposable kernels unchanged — only the
+    // backward-weight pass differs (sparsify + fast spmm + mask), and
+    // the per-step sparsification cost is PART of what is measured.
+    let mvue = mvue_ok.then(|| PassTimes {
+        fwd: transposable.fwd,
+        bwd_data: transposable.bwd_data,
+        bwd_weight: time_mean(trials, || {
+            let sp = mvue::sparsify_threaded(g, n, m, cfg.seed, threads)
+                .expect("shape validated by the pre-timing self-check");
+            let mut dw = spmm_threaded(&x_t, &sp.rec, threads);
+            for (d, &mv) in dw.data.iter_mut().zip(&tmask.data) {
+                if mv == 0.0 {
+                    *d = 0.0;
+                }
+            }
+        }),
+    });
 
     Ok(TrainStepReport {
         rows: w.rows,
@@ -294,6 +345,7 @@ pub fn run_train_step(
         dense,
         transposable,
         standard,
+        mvue,
     })
 }
 
@@ -314,15 +366,37 @@ mod tests {
         let g = Mat::from_fn(batch, cols, |_, _| rng.normal());
         let tmask = solve_matrix(Method::Tsenor, &w, pattern, &SolveCfg::default()).unwrap();
         let smask = standard_nm_mask(&w, pattern);
-        let cfg = TrainStepCfg { threads: 2, trials: 1 };
+        let cfg = TrainStepCfg { threads: 2, trials: 1, seed: 7 };
         let report = run_train_step(&x, &g, &w, &tmask, &smask, pattern, &cfg).unwrap();
         assert_eq!((report.rows, report.cols, report.batch), (rows, cols, batch));
         assert!(report.dense.total() > 0.0);
         assert!(report.transposable.total() > 0.0);
         assert!(report.standard.total() > 0.0);
+        // batch 6 does not partition into groups of M=8: the MVUE
+        // regime is skipped, not mis-timed.
+        assert!(report.mvue.is_none());
         let txt = report.render();
         assert!(txt.contains("transposable"), "{txt}");
         assert!(txt.contains("bwd-data"), "{txt}");
+        assert!(!txt.contains("mvue"), "{txt}");
+    }
+
+    #[test]
+    fn train_step_times_the_mvue_regime_when_batch_partitions() {
+        let mut rng = Rng::new(33);
+        let (rows, cols, batch) = (16usize, 16usize, 8usize);
+        let pattern = NmPattern::new(4, 8);
+        let w = Mat::from_fn(rows, cols, |_, _| rng.heavy_tail());
+        let x = Mat::from_fn(batch, rows, |_, _| rng.normal());
+        let g = Mat::from_fn(batch, cols, |_, _| rng.normal());
+        let tmask = solve_matrix(Method::Tsenor, &w, pattern, &SolveCfg::default()).unwrap();
+        let smask = standard_nm_mask(&w, pattern);
+        let cfg = TrainStepCfg { threads: 2, trials: 1, seed: 7 };
+        let report = run_train_step(&x, &g, &w, &tmask, &smask, pattern, &cfg).unwrap();
+        let mv = report.mvue.expect("batch 8 partitions into 8-row groups");
+        assert!(mv.bwd_weight > 0.0);
+        let txt = report.render();
+        assert!(txt.contains("mvue"), "{txt}");
     }
 
     #[test]

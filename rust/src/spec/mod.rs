@@ -27,7 +27,7 @@ use crate::pruning::ServiceCfg;
 use crate::stream::writeback::WritebackMode;
 use crate::train::ScheduleKind;
 use crate::util::json::{self, Json};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Which layer-wise framework drives the pruning.
@@ -689,6 +689,39 @@ impl SolveSpec {
     }
 }
 
+/// Backward-weight regime of the training loop: how `dW = xᵀ@g ⊙ S`
+/// contracts over the batch. A MATH knob, not a scheduling knob — it
+/// changes the trained weights, so `scheduling_free_json` keeps it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackwardMode {
+    /// Exact masked dW from the dense gradient (`spmm_backward_weight`):
+    /// the contraction over the batch runs at dense rate.
+    Dense,
+    /// MVUE N:M-sparsified gradient (`sparse::mvue`): the gradient is
+    /// stochastically sparsified to the run's N:M pattern along the
+    /// batch axis (unbiased, 1/p-rescaled), so forward, backward-data
+    /// AND backward-weight all run at N/M rate. Requires `batch` to be
+    /// divisible by M.
+    Mvue,
+}
+
+impl BackwardMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackwardMode::Dense => "dense",
+            BackwardMode::Mvue => "mvue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dense" => Ok(BackwardMode::Dense),
+            "mvue" => Ok(BackwardMode::Mvue),
+            other => bail!("unknown backward mode '{other}' (dense|mvue)"),
+        }
+    }
+}
+
 /// Configuration of a sparse training run. Drives BOTH training
 /// commands:
 ///
@@ -730,6 +763,9 @@ pub struct TrainSpec {
     pub lambda_w: f32,
     /// SGD learning rate.
     pub lr: f32,
+    /// Backward-weight regime (`train` only): dense exact gradient, or
+    /// MVUE N:M-sparsified gradient so all three GEMMs run sparse.
+    pub backward: BackwardMode,
     /// Independent layers trained concurrently — what the mask service
     /// coalesces across at re-solve steps.
     pub layers: usize,
@@ -758,6 +794,7 @@ impl TrainSpec {
             // The 2by4-pretrain recipe's decay strength.
             lambda_w: 2e-4,
             lr: 0.01,
+            backward: BackwardMode::Dense,
             layers: 2,
             jobs: 0,
             service: ServiceCfg::default(),
@@ -815,6 +852,11 @@ impl TrainSpec {
         self
     }
 
+    pub fn backward(mut self, mode: BackwardMode) -> Self {
+        self.backward = mode;
+        self
+    }
+
     pub fn layers(mut self, layers: usize) -> Self {
         self.layers = layers;
         self
@@ -847,6 +889,7 @@ impl TrainSpec {
             ("ramp_steps", Json::Num(self.ramp_steps as f64)),
             ("lambda_w", Json::Num(self.lambda_w as f64)),
             ("lr", Json::Num(self.lr as f64)),
+            ("backward", Json::Str(self.backward.name().into())),
             ("layers", Json::Num(self.layers as f64)),
             ("jobs", Json::Num(self.jobs as f64)),
             ("service", service_cfg_to_json(&self.service)),
@@ -856,7 +899,9 @@ impl TrainSpec {
     /// `to_json` minus the pure-scheduling knobs (`threads`, `jobs`,
     /// `trials`, `service`) — the spec fields a stripped `TrainReport`
     /// embeds, so runs that differ only in worker counts or coalescing
-    /// settings compare byte-equal.
+    /// settings compare byte-equal. `backward` SURVIVES the strip: it
+    /// changes the mathematics (which gradient the update consumes),
+    /// not the scheduling.
     pub fn scheduling_free_json(&self) -> Json {
         let mut j = self.to_json();
         if let Json::Obj(m) = &mut j {
@@ -910,6 +955,9 @@ impl TrainSpec {
         }
         if let Some(x) = j.get("lr").and_then(Json::as_f64) {
             spec.lr = x as f32;
+        }
+        if let Some(s) = j.get("backward").and_then(Json::as_str) {
+            spec.backward = BackwardMode::parse(s)?;
         }
         if let Some(k) = json_usize(j, "layers")? {
             spec.layers = k;
@@ -1247,15 +1295,20 @@ mod tests {
             .ramp_steps(6)
             .lambda_w(5e-4)
             .lr(0.02)
+            .backward(BackwardMode::Mvue)
             .layers(3)
             .jobs(4)
             .service(crate::pruning::ServiceCfg::default().window_ms(2));
         let back = TrainSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
         assert_eq!(spec, back);
-        // Loop integers are strict; schedule names are validated.
+        assert_eq!(back.backward, BackwardMode::Mvue);
+        // Loop integers are strict; schedule and backward names are
+        // validated.
         assert!(TrainSpec::parse(r#"{"steps": -1}"#).is_err());
         assert!(TrainSpec::parse(r#"{"freq": 2.5}"#).is_err());
         assert!(TrainSpec::parse(r#"{"schedule": "cosine"}"#).is_err());
+        assert!(TrainSpec::parse(r#"{"backward": "poisson"}"#).is_err());
+        assert_eq!(TrainSpec::new().backward, BackwardMode::Dense);
         assert_eq!(
             TrainSpec::parse(r#"{"schedule": "bidir"}"#).unwrap().schedule,
             ScheduleKind::Bidirectional
@@ -1274,6 +1327,8 @@ mod tests {
         assert!(free.get("trials").is_none());
         assert!(free.get("service").is_none());
         assert!(free.get("schedule").is_some() && free.get("lambda_w").is_some());
+        // `backward` is mathematics, not scheduling: it survives.
+        assert_eq!(free.get("backward").and_then(Json::as_str), Some("dense"));
         assert_eq!(
             free.to_string_pretty(),
             b.scheduling_free_json().to_string_pretty()

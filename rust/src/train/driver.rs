@@ -10,6 +10,10 @@
 //!   (decode-free; the bi-directional baseline swaps in its own
 //!   backward mask's record here)
 //! * backward-weight  `dW = (x^T g) ⊙ S`        — `spmm_backward_weight`
+//!   from the dense gradient, or (with `backward: mvue`) `spmm` over an
+//!   MVUE N:M-sparsified gradient record (`sparse::mvue`), putting the
+//!   batch contraction on the sparse path too — the fully-sparse
+//!   training step
 //!
 //! against a fixed dense teacher (`loss = ||x W_s ⊙ S − x W*||² /
 //! (batch · cols)`), so the loss trace is a pure function of the spec.
@@ -32,10 +36,11 @@ use crate::masks::NmPattern;
 use crate::pruning::magnitude::standard_nm_mask;
 use crate::pruning::MaskService;
 use crate::sparse::gemm::matmul_dense_baseline_threaded;
+use crate::sparse::mvue;
 use crate::sparse::nm::{
     spmm_backward_weight_threaded, spmm_threaded, spmm_transposed_threaded, NmCompressed,
 };
-use crate::spec::TrainSpec;
+use crate::spec::{BackwardMode, TrainSpec};
 use crate::train::report::{StepStats, TrainReport};
 use crate::train::schedule::{schedule_for_spec, MaskSchedule, Resolve};
 use crate::train::sgd::srste_update;
@@ -90,6 +95,10 @@ struct StepOut {
     dx_fnv: u64,
     mask_zeros: u64,
     mask_elems: u64,
+    /// MVUE backward only: Σ(ĝ−g)² and Σg² of this layer's gradient
+    /// draw (both 0.0 under the dense backward).
+    mvue_sq_err: f64,
+    mvue_sq_norm: f64,
 }
 
 struct StepCtx<'a> {
@@ -101,6 +110,7 @@ struct StepCtx<'a> {
     lambda_w: f32,
     seed: u64,
     threads: usize,
+    backward: BackwardMode,
 }
 
 fn solve_masks(
@@ -147,6 +157,8 @@ fn layer_step(
         dx_fnv: 0,
         mask_zeros: 0,
         mask_elems: 0,
+        mvue_sq_err: 0.0,
+        mvue_sq_norm: 0.0,
     };
 
     if let Some(resolve) = resolve {
@@ -202,7 +214,31 @@ fn layer_step(
     };
     out.dx_fnv = fnv_mat(FNV_OFFSET, &dx);
 
-    let dw = spmm_backward_weight_threaded(&x, &g, &rec, ctx.threads);
+    let dw = match ctx.backward {
+        BackwardMode::Dense => spmm_backward_weight_threaded(&x, &g, &rec, ctx.threads),
+        BackwardMode::Mvue => {
+            // Sparsify g along the batch axis at the CURRENT pattern,
+            // then run the contraction as a forward spmm over the
+            // gradient record: dW = xᵀ @ ĝ at N/M rate. Per-group
+            // randomness is the counter stream (seed, layer, step) ×
+            // group index, so the draw is bit-identical at any worker
+            // count.
+            let gseed = stream_seed(ctx.seed, layer as u64, 1_000_000 + step as u64);
+            let sp = mvue::sparsify_threaded(&g, n, m, gseed, ctx.threads)
+                .context("train: MVUE gradient sparsification failed")?;
+            out.mvue_sq_err = sp.sq_err;
+            out.mvue_sq_norm = sp.sq_norm;
+            let mut dw = spmm_threaded(&x.transpose(), &sp.rec, ctx.threads);
+            // Mask the update like the dense kernel does: pruned slots
+            // exactly +0.0 (elementwise, not GEMM work).
+            for (d, &mv) in dw.data.iter_mut().zip(&mask.data) {
+                if mv == 0.0 {
+                    *d = 0.0;
+                }
+            }
+            dw
+        }
+    };
     srste_update(&mut state.w, &dw, mask, ctx.lr, ctx.lambda_w);
     Ok(out)
 }
@@ -221,6 +257,16 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         spec.cols,
         spec.pattern
     );
+    if spec.backward == BackwardMode::Mvue {
+        // The gradient sparsifies along the batch (contraction) axis.
+        ensure!(
+            spec.batch % m == 0,
+            "train: --backward mvue needs --batch divisible by M={m} \
+             (batch {} leaves remainder {})",
+            spec.batch,
+            spec.batch % m
+        );
+    }
     let schedule = schedule_for_spec(spec);
     ensure!(
         schedule.resolve_at(0).is_some(),
@@ -239,6 +285,7 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         lambda_w: spec.lambda_w,
         seed: spec.seed,
         threads: effective_jobs(spec.threads),
+        backward: spec.backward,
     };
     let jobs = effective_jobs(spec.jobs).min(spec.layers).max(1);
 
@@ -292,6 +339,10 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         let zeros: u64 = outs.iter().map(|o| o.mask_zeros).sum();
         let elems: u64 = outs.iter().map(|o| o.mask_elems).sum();
         let resolves: u64 = outs.iter().map(|o| o.resolves).sum();
+        // Estimator telemetry folds in layer order like everything else.
+        let (merr, mnorm) = outs
+            .iter()
+            .fold((0.0f64, 0.0f64), |(e, q), o| (e + o.mvue_sq_err, q + o.mvue_sq_norm));
         for o in &outs {
             dx_checksum = fnv_bytes(dx_checksum, &o.dx_fnv.to_le_bytes());
         }
@@ -302,6 +353,7 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
             flip_rate: if flip_elems > 0 { flips as f64 / flip_elems as f64 } else { 0.0 },
             sparsity: if elems > 0 { zeros as f64 / elems as f64 } else { 0.0 },
             resolves,
+            mvue_rel_var: if mnorm > 0.0 { merr / mnorm } else { 0.0 },
             resolve_secs: outs.iter().map(|o| o.resolve_secs).sum(),
             step_secs: ts.elapsed().as_secs_f64(),
         });

@@ -28,6 +28,12 @@ pub struct StepStats {
     pub sparsity: f64,
     /// Mask re-solves performed this step (one per re-solved layer).
     pub resolves: u64,
+    /// Realized relative variance of the MVUE gradient sparsifier this
+    /// step: `||g_hat - g||^2 / ||g||^2` summed over layers (0 when the
+    /// backward pass is dense). Deterministic mathematics — the draw is
+    /// seeded per (layer, step, group) — so it survives
+    /// `to_json_stripped()`.
+    pub mvue_rel_var: f64,
     /// Wall seconds spent in mask re-solves (summed over layers).
     /// Timing-class: omitted by `to_json_stripped()`.
     pub resolve_secs: f64,
@@ -93,6 +99,7 @@ impl TrainReport {
                         ("flip_rate", Json::Num(s.flip_rate)),
                         ("sparsity", Json::Num(s.sparsity)),
                         ("resolves", Json::Num(s.resolves as f64)),
+                        ("mvue_rel_var", Json::Num(s.mvue_rel_var)),
                     ];
                     if with_timing {
                         fields.push(("resolve_secs", Json::Num(s.resolve_secs)));
@@ -143,18 +150,19 @@ impl TrainReport {
         );
         let _ = writeln!(
             s,
-            "  {:<6}{:>12}{:>10}{:>10}{:>10}{:>12}",
-            "step", "loss", "flips", "sparsity", "resolves", "resolve-ms"
+            "  {:<6}{:>12}{:>10}{:>10}{:>10}{:>12}{:>12}",
+            "step", "loss", "flips", "sparsity", "resolves", "mvue-var", "resolve-ms"
         );
         for st in &self.trace {
             let _ = writeln!(
                 s,
-                "  {:<6}{:>12.5}{:>9.1}%{:>10.3}{:>10}{:>12.2}",
+                "  {:<6}{:>12.5}{:>9.1}%{:>10.3}{:>10}{:>12.4}{:>12.2}",
                 st.step,
                 st.loss,
                 100.0 * st.flip_rate,
                 st.sparsity,
                 st.resolves,
+                st.mvue_rel_var,
                 1e3 * st.resolve_secs
             );
         }
@@ -203,6 +211,7 @@ mod tests {
                     flip_rate: 0.0,
                     sparsity: 0.5,
                     resolves: 2,
+                    mvue_rel_var: 0.0,
                     resolve_secs: 0.01,
                     step_secs: 0.02,
                 },
@@ -212,6 +221,7 @@ mod tests {
                     flip_rate: 0.125,
                     sparsity: 0.5,
                     resolves: 2,
+                    mvue_rel_var: 0.31,
                     resolve_secs: 0.01,
                     step_secs: 0.02,
                 },
@@ -255,6 +265,8 @@ mod tests {
             assert!(st.get("resolve_secs").is_none());
             assert!(st.get("step_secs").is_none());
             assert!(st.get("flip_rate").is_some());
+            // Estimator variance is seeded mathematics, not timing.
+            assert!(st.get("mvue_rel_var").is_some());
         }
         let spec = stripped.get("spec").unwrap();
         assert!(spec.get("jobs").is_none());

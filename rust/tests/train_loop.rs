@@ -7,7 +7,7 @@
 
 use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::pruning::{CpuOracle, MaskDispatcher, ServiceCfg};
-use tsenor::spec::TrainSpec;
+use tsenor::spec::{BackwardMode, TrainSpec};
 use tsenor::train::{run_training, ScheduleKind};
 
 fn base_spec(kind: ScheduleKind) -> TrainSpec {
@@ -66,6 +66,57 @@ fn dispatcher_routing_is_bit_invisible() {
         assert_eq!(a.sparsity.to_bits(), b.sparsity.to_bits());
         assert_eq!(a.resolves, b.resolves);
     }
+}
+
+/// The fully-sparse backward pass (MVUE gradient sparsification) is
+/// stochastic but SEEDED: the stripped report — including the per-step
+/// realized estimator variance — must stay byte-identical across
+/// worker counts, and the variance must actually be nonzero (the
+/// sparsifier ran, it didn't silently fall back to dense).
+#[test]
+fn mvue_backward_is_deterministic_across_worker_counts() {
+    // batch 8 partitions into M=8 groups, as `run_training` requires.
+    let spec = |jobs: usize, threads: usize| {
+        base_spec(ScheduleKind::Fixed)
+            .batch(8)
+            .backward(BackwardMode::Mvue)
+            .jobs(jobs)
+            .threads(threads)
+    };
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let r1 = run_training(&spec(1, 1), &oracle).unwrap();
+    let r4 = run_training(&spec(4, 2), &oracle).unwrap();
+    assert_eq!(r1.final_checksum, r4.final_checksum, "mvue: weights drifted");
+    assert_eq!(r1.dx_checksum, r4.dx_checksum, "mvue: dx drifted");
+    assert_eq!(
+        r1.to_json_stripped().to_string_pretty(),
+        r4.to_json_stripped().to_string_pretty(),
+        "mvue: stripped reports differ across worker counts"
+    );
+    assert!(
+        r1.trace.iter().any(|s| s.mvue_rel_var > 0.0),
+        "mvue backward ran but reported zero realized variance"
+    );
+    assert!(r1.trace.iter().all(|s| s.loss.is_finite()));
+
+    // A dense-backward run of the same spec must differ: the sparsified
+    // gradient really changed the weight trajectory.
+    let dense = base_spec(ScheduleKind::Fixed).batch(8).jobs(1).threads(1);
+    let rd = run_training(&dense, &oracle).unwrap();
+    assert_ne!(r1.final_checksum, rd.final_checksum, "mvue backward was a no-op");
+    assert!(rd.trace.iter().all(|s| s.mvue_rel_var == 0.0));
+}
+
+/// `--backward mvue` needs the batch to partition into M-row groups —
+/// a misaligned spec must fail up front with an actionable message,
+/// not mid-training.
+#[test]
+fn mvue_backward_rejects_misaligned_batch() {
+    let spec = base_spec(ScheduleKind::Fixed).batch(6).backward(BackwardMode::Mvue);
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    let err = run_training(&spec, &oracle).unwrap_err().to_string();
+    assert!(err.contains("divisible by M=8"), "{err}");
+    assert!(err.contains("remainder 6"), "{err}");
 }
 
 #[test]
