@@ -1,0 +1,504 @@
+//! `tsenor-lint` — static enforcement of the repo's determinism and
+//! unsafe-audit invariants over `rust/src/**`.
+//!
+//! The crate's one non-negotiable contract — bit-identical stripped
+//! reports and masks at any `--jobs`/`--threads` — is pinned by
+//! differential tests, but every bug class that has threatened it so
+//! far was mechanically visible in the source. This pass denies those
+//! classes outright:
+//!
+//! * `safety-comment`    — every `unsafe` block / `unsafe impl` must be
+//!   immediately preceded by a well-formed `// SAFETY:` comment.
+//! * `hash-collections`  — no `HashMap`/`HashSet` (iteration-order
+//!   nondeterminism) outside an explicit allowlist.
+//! * `wall-clock`        — no `Instant::now` / `SystemTime` outside
+//!   timing-whitelisted modules, so wall-clock can never leak into
+//!   stripped-report math fields.
+//! * `rng-modulo`        — no `%` applied to raw RNG output
+//!   (`next_u64`/`next_u32`-shaped calls): the modulo-bias class.
+//! * `group-div-assert`  — no truncating `x / m` group count without a
+//!   divisibility guard (`% m`) within a few lines: the silent
+//!   group-truncation class.
+//! * `thread-spawn`      — no raw `thread::spawn`/`thread::scope`
+//!   outside the sanctioned fan-out sites, so all parallelism funnels
+//!   through auditable choke points.
+//!
+//! Per-site escapes: `// lint: allow(<rule>) -- <reason>` suppresses
+//! that rule on the escape's line and the four lines below it. An
+//! escape with a missing reason or an unknown rule is itself a finding
+//! (`malformed-escape`); a file `syn` cannot parse is a `parse-error`.
+//!
+//! Comments are invisible to `syn`, so the SAFETY and escape checks
+//! run on the raw line table and join with AST spans (1-based, via
+//! proc-macro2 `span-locations`).
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+/// Rules a `// lint: allow(...)` escape may name.
+pub const RULES: &[&str] = &[
+    "safety-comment",
+    "hash-collections",
+    "wall-clock",
+    "rng-modulo",
+    "group-div-assert",
+    "thread-spawn",
+];
+
+/// A single lint violation at `file:line`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: PathBuf,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.message)
+    }
+}
+
+/// Whitelists. Paths are matched as `/`-normalized suffixes, so they
+/// work from any invocation directory.
+pub struct Config {
+    /// Files where `HashMap`/`HashSet` are tolerated. Ships empty: the
+    /// crate has no justified use (reports, fingerprints and caches
+    /// all iterate, so they all use ordered maps).
+    pub hash_allowlist: &'static [&'static str],
+    /// Files allowed to read the wall clock (CLI banners, timing
+    /// telemetry that is stripped from reports, dispatcher deadlines
+    /// proven bit-invisible by the differential suites).
+    pub wall_clock_modules: &'static [&'static str],
+    /// The sanctioned thread fan-out sites. Everything else must route
+    /// through them (ROADMAP item 5's single choke point).
+    pub thread_spawn_modules: &'static [&'static str],
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            hash_allowlist: &[],
+            wall_clock_modules: &[
+                "src/main.rs",
+                "src/coordinator/metrics.rs",
+                "src/pruning/service.rs",
+            ],
+            thread_spawn_modules: &[
+                "src/sparse/mod.rs",
+                "src/coordinator/executor.rs",
+                "src/stream/prefetch.rs",
+            ],
+        }
+    }
+}
+
+/// Result of a lint run: every finding plus how many files were read
+/// (so a clean run over zero files cannot masquerade as a pass).
+pub struct Outcome {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Lint every `.rs` file under `paths` (files or directories).
+pub fn run(paths: &[PathBuf], cfg: &Config) -> io::Result<Outcome> {
+    let mut files = BTreeSet::new();
+    for p in paths {
+        if !p.exists() {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("no such path: {}", p.display()),
+            ));
+        }
+        collect_rs_files(p, &mut files)?;
+    }
+    let mut findings = Vec::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f)?;
+        findings.extend(lint_source(f, &text, cfg));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(Outcome { findings, files_scanned: files.len() })
+}
+
+fn collect_rs_files(p: &Path, out: &mut BTreeSet<PathBuf>) -> io::Result<()> {
+    if p.is_dir() {
+        for entry in std::fs::read_dir(p)? {
+            collect_rs_files(&entry?.path(), out)?;
+        }
+    } else if p.extension().is_some_and(|ext| ext == "rs") {
+        out.insert(p.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Lint one file's source text. Public so tests can feed synthetic
+/// snippets without touching the filesystem.
+pub fn lint_source(file: &Path, text: &str, cfg: &Config) -> Vec<Finding> {
+    let (table, mut findings) = LineTable::scan(file, text);
+    match syn::parse_file(text) {
+        Ok(ast) => {
+            let mut linter = FileLinter {
+                file,
+                table: &table,
+                wall_clock_exempt: suffix_match(file, cfg.wall_clock_modules),
+                thread_spawn_exempt: suffix_match(file, cfg.thread_spawn_modules),
+                hash_exempt: suffix_match(file, cfg.hash_allowlist),
+                test_depth: 0,
+                stmt_starts: Vec::new(),
+                findings: Vec::new(),
+            };
+            linter.visit_file(&ast);
+            findings.extend(linter.findings);
+        }
+        Err(err) => findings.push(Finding {
+            file: file.to_path_buf(),
+            line: err.span().start().line,
+            rule: "parse-error",
+            message: format!("file does not parse as Rust: {err}"),
+        }),
+    }
+    findings
+}
+
+fn suffix_match(file: &Path, suffixes: &[&str]) -> bool {
+    let s = file.to_string_lossy().replace('\\', "/");
+    suffixes.iter().any(|suf| s.ends_with(suf))
+}
+
+// ---------------------------------------------------------------------
+// Line table: raw source lines, escape comments, SAFETY runs.
+// ---------------------------------------------------------------------
+
+struct LineTable {
+    lines: Vec<String>,
+    /// `(rule, escape line)` — the escape covers its own line plus the
+    /// four below, so it sits naturally directly above the flagged code.
+    escapes: Vec<(String, usize)>,
+}
+
+const ESCAPE_SPAN: usize = 4;
+
+impl LineTable {
+    fn scan(file: &Path, text: &str) -> (LineTable, Vec<Finding>) {
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let mut escapes = Vec::new();
+        let mut findings = Vec::new();
+        for (idx, raw) in lines.iter().enumerate() {
+            let line = idx + 1;
+            let Some(pos) = raw.find("// lint:") else { continue };
+            match parse_escape(&raw[pos + "// lint:".len()..]) {
+                Ok(rule) => escapes.push((rule, line)),
+                Err(why) => findings.push(Finding {
+                    file: file.to_path_buf(),
+                    line,
+                    rule: "malformed-escape",
+                    message: why,
+                }),
+            }
+        }
+        (LineTable { lines, escapes }, findings)
+    }
+
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.escapes
+            .iter()
+            .any(|(r, e)| r == rule && *e <= line && line <= e + ESCAPE_SPAN)
+    }
+
+    /// Is `line` (1-based) immediately preceded by a contiguous run of
+    /// full-line `//` comments containing a `// SAFETY: <text>` line?
+    fn safety_comment_above(&self, line: usize) -> bool {
+        let mut row = line.saturating_sub(1);
+        while row >= 1 {
+            let trimmed = self.lines[row - 1].trim_start();
+            let Some(rest) = trimmed.strip_prefix("//") else { break };
+            let rest = rest.trim_start_matches('/').trim_start();
+            if let Some(msg) = rest.strip_prefix("SAFETY:") {
+                if !msg.trim().is_empty() {
+                    return true;
+                }
+            }
+            row -= 1;
+        }
+        false
+    }
+
+    /// Is there a `% m`-shaped divisibility guard near `line`? Catches
+    /// `assert!(x % m == 0)`, `ensure!(x % w.m == 0, ..)` and friends.
+    /// The window reaches 10 lines up (multi-line asserts) and 6 down
+    /// (guards that follow the computation).
+    fn div_guard_near(&self, line: usize) -> bool {
+        let lo = line.saturating_sub(10).max(1);
+        let hi = (line + 6).min(self.lines.len());
+        (lo..=hi).any(|l| has_mod_m(&self.lines[l - 1]))
+    }
+}
+
+fn has_mod_m(line: &str) -> bool {
+    for (pos, _) in line.match_indices('%') {
+        let rest = line[pos + 1..].trim_start();
+        let token: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == '.')
+            .collect();
+        if token == "m" || token.ends_with(".m") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Parse the tail of `// lint:` — must be `allow(<known rule>) -- <reason>`.
+fn parse_escape(tail: &str) -> Result<String, String> {
+    let tail = tail.trim_start();
+    let Some(rest) = tail.strip_prefix("allow(") else {
+        return Err(format!("escape must be `allow(<rule>) -- <reason>`, got `{tail}`"));
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("escape is missing the closing `)`".to_string());
+    };
+    let rule = rest[..close].trim();
+    if !RULES.contains(&rule) {
+        return Err(format!("unknown rule `{rule}` (known: {})", RULES.join(", ")));
+    }
+    let after = rest[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix("--") else {
+        return Err(format!("escape for `{rule}` is missing the ` -- <reason>` tail"));
+    };
+    if reason.trim().is_empty() {
+        return Err(format!("escape for `{rule}` has an empty reason"));
+    }
+    Ok(rule.to_string())
+}
+
+// ---------------------------------------------------------------------
+// AST walk.
+// ---------------------------------------------------------------------
+
+struct FileLinter<'a> {
+    file: &'a Path,
+    table: &'a LineTable,
+    wall_clock_exempt: bool,
+    thread_spawn_exempt: bool,
+    hash_exempt: bool,
+    /// Depth inside `#[cfg(test)]` modules / `#[test]` fns — tests may
+    /// legitimately time and spawn, so `wall-clock` and `thread-spawn`
+    /// are suspended there. Every other rule still applies.
+    test_depth: usize,
+    /// Start lines of the enclosing statements, innermost last. An
+    /// `unsafe` block inside a multi-line statement anchors its SAFETY
+    /// lookup at the statement start, not the wrapped `unsafe` token.
+    stmt_starts: Vec<usize>,
+    findings: Vec<Finding>,
+}
+
+impl FileLinter<'_> {
+    fn flag(&mut self, rule: &'static str, line: usize, message: String) {
+        if self.table.allowed(rule, line) {
+            return;
+        }
+        self.findings.push(Finding { file: self.file.to_path_buf(), line, rule, message });
+    }
+
+    fn check_safety(&mut self, line: usize, what: &str) {
+        let anchor = self.stmt_starts.last().copied().unwrap_or(line).min(line);
+        if self.table.safety_comment_above(anchor) {
+            return;
+        }
+        // An escape above either the statement or the `unsafe` token
+        // itself counts.
+        if self.table.allowed("safety-comment", anchor) {
+            return;
+        }
+        self.flag(
+            "safety-comment",
+            line,
+            format!("{what} lacks an immediately preceding `// SAFETY:` comment"),
+        );
+    }
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if !a.path().is_ident("cfg") {
+            return false;
+        }
+        let mut test = false;
+        // `cfg(test)` / `cfg(any(test, ..))` — any `test` ident inside.
+        let _ = a.parse_nested_meta(|meta| {
+            if meta.path.is_ident("test") {
+                test = true;
+            }
+            Ok(())
+        });
+        test
+    })
+}
+
+/// Strip wrappers that do not change what expression is being operated
+/// on: parens, casts, references, unary ops, and invisible groups.
+fn strip(expr: &syn::Expr) -> &syn::Expr {
+    match expr {
+        syn::Expr::Paren(e) => strip(&e.expr),
+        syn::Expr::Cast(e) => strip(&e.expr),
+        syn::Expr::Reference(e) => strip(&e.expr),
+        syn::Expr::Unary(e) => strip(&e.expr),
+        syn::Expr::Group(e) => strip(&e.expr),
+        _ => expr,
+    }
+}
+
+/// The callee name if `expr` is a call or method call, e.g. the
+/// `next_u64` of both `rng.next_u64()` and `Rng::next_u64(&mut rng)`.
+fn call_name(expr: &syn::Expr) -> Option<String> {
+    match strip(expr) {
+        syn::Expr::MethodCall(m) => Some(m.method.to_string()),
+        syn::Expr::Call(c) => match strip(&c.func) {
+            syn::Expr::Path(p) => p.path.segments.last().map(|s| s.ident.to_string()),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Does the divisor name a group size `m` (`m`, `w.m`, `pattern.m`, ..)?
+/// Casts are deliberately NOT stripped here: `x as f64 / m as f64` is a
+/// ratio, not a truncating group count.
+fn divides_by_m(expr: &syn::Expr) -> bool {
+    match expr {
+        syn::Expr::Paren(e) => divides_by_m(&e.expr),
+        syn::Expr::Group(e) => divides_by_m(&e.expr),
+        syn::Expr::Path(p) => p.path.segments.last().is_some_and(|s| s.ident == "m"),
+        syn::Expr::Field(f) => {
+            matches!(&f.member, syn::Member::Named(name) if name == "m")
+        }
+        _ => false,
+    }
+}
+
+fn is_int_literal(expr: &syn::Expr) -> bool {
+    matches!(strip(expr), syn::Expr::Lit(l) if matches!(l.lit, syn::Lit::Int(_)))
+}
+
+impl<'ast> Visit<'ast> for FileLinter<'_> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        syn::visit::visit_item_mod(self, node);
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        let test = node.attrs.iter().any(|a| a.path().is_ident("test"));
+        if test {
+            self.test_depth += 1;
+        }
+        syn::visit::visit_item_fn(self, node);
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_stmt(&mut self, node: &'ast syn::Stmt) {
+        self.stmt_starts.push(node.span().start().line);
+        syn::visit::visit_stmt(self, node);
+        self.stmt_starts.pop();
+    }
+
+    fn visit_expr_unsafe(&mut self, node: &'ast syn::ExprUnsafe) {
+        self.check_safety(node.unsafe_token.span.start().line, "`unsafe` block");
+        syn::visit::visit_expr_unsafe(self, node);
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if let Some(tok) = &node.unsafety {
+            self.check_safety(tok.span.start().line, "`unsafe impl`");
+        }
+        syn::visit::visit_item_impl(self, node);
+    }
+
+    fn visit_ident(&mut self, node: &'ast proc_macro2::Ident) {
+        if !self.hash_exempt && (node == "HashMap" || node == "HashSet") {
+            self.flag(
+                "hash-collections",
+                node.span().start().line,
+                format!("`{node}` iterates in nondeterministic order; use BTreeMap/BTreeSet"),
+            );
+        }
+    }
+
+    fn visit_path(&mut self, node: &'ast syn::Path) {
+        let clock = !self.wall_clock_exempt && self.test_depth == 0;
+        let spawn = !self.thread_spawn_exempt && self.test_depth == 0;
+        let segs: Vec<&syn::Ident> = node.segments.iter().map(|s| &s.ident).collect();
+        for pair in segs.windows(2) {
+            if clock && *pair[0] == "Instant" && *pair[1] == "now" {
+                self.flag(
+                    "wall-clock",
+                    pair[1].span().start().line,
+                    "`Instant::now` outside a timing-whitelisted module".to_string(),
+                );
+            }
+            let spawnish = *pair[1] == "spawn" || *pair[1] == "scope" || *pair[1] == "Builder";
+            if spawn && *pair[0] == "thread" && spawnish {
+                self.flag(
+                    "thread-spawn",
+                    pair[1].span().start().line,
+                    format!("raw `thread::{}` outside the sanctioned fan-out sites", pair[1]),
+                );
+            }
+        }
+        if clock {
+            for seg in &node.segments {
+                if seg.ident == "SystemTime" {
+                    self.flag(
+                        "wall-clock",
+                        seg.ident.span().start().line,
+                        "`SystemTime` outside a timing-whitelisted module".to_string(),
+                    );
+                }
+            }
+        }
+        syn::visit::visit_path(self, node);
+    }
+
+    fn visit_expr_binary(&mut self, node: &'ast syn::ExprBinary) {
+        match node.op {
+            syn::BinOp::Rem(_) => {
+                let biased = call_name(&node.left).is_some_and(|n| n.starts_with("next_u"));
+                if biased {
+                    self.flag(
+                        "rng-modulo",
+                        node.span().start().line,
+                        "`%` on raw RNG output is modulo-biased; use Rng::below".to_string(),
+                    );
+                }
+            }
+            syn::BinOp::Div(_) => {
+                let line = node.span().start().line;
+                if divides_by_m(&node.right)
+                    && !is_int_literal(&node.left)
+                    && !self.table.div_guard_near(line)
+                {
+                    self.flag(
+                        "group-div-assert",
+                        line,
+                        "truncating `/ m` with no `% m` divisibility guard nearby".to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+        syn::visit::visit_expr_binary(self, node);
+    }
+}

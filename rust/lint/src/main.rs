@@ -1,0 +1,35 @@
+//! CLI for `tsenor-lint`. From `rust/`:
+//!
+//!   cargo run -p tsenor-lint --release -- src
+//!
+//! Positional arguments are files or directories to scan (default:
+//! `src`). Exit code 0 = clean, 1 = findings, 2 = usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let paths: Vec<PathBuf> = std::env::args().skip(1).map(PathBuf::from).collect();
+    let paths = if paths.is_empty() { vec![PathBuf::from("src")] } else { paths };
+    let cfg = tsenor_lint::Config::default();
+    let outcome = match tsenor_lint::run(&paths, &cfg) {
+        Ok(o) => o,
+        Err(err) => {
+            eprintln!("tsenor-lint: {err}");
+            return ExitCode::from(2);
+        }
+    };
+    for f in &outcome.findings {
+        println!("{f}");
+    }
+    println!(
+        "tsenor-lint: {} file(s) scanned, {} finding(s)",
+        outcome.files_scanned,
+        outcome.findings.len()
+    );
+    if outcome.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

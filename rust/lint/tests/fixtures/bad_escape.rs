@@ -1,0 +1,13 @@
+//! Fixture: escape hygiene — malformed escapes are findings and they
+//! must not suppress the rule they name.
+
+pub fn missing_reason() -> usize {
+    // lint: allow(hash-collections)
+    let m: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    m.len()
+}
+
+pub fn unknown_rule() {
+    // lint: allow(no-such-rule) -- the rule name is wrong
+    let _ = std::time::SystemTime::UNIX_EPOCH;
+}

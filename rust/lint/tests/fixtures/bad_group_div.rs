@@ -1,0 +1,18 @@
+//! Fixture: rule `group-div-assert`.
+
+pub fn guarded(rows: usize, m: usize) -> usize {
+    assert!(rows % m == 0, "rows must partition into M-groups");
+    rows / m
+}
+
+pub fn literal_dividend(m: usize) -> usize {
+    256 / m
+}
+
+pub fn pad_a() {}
+
+pub fn pad_b() {}
+
+pub fn unguarded(rows: usize, m: usize) -> usize {
+    rows / m
+}

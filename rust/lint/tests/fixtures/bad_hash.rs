@@ -1,0 +1,11 @@
+//! Fixture: rule `hash-collections`.
+
+use std::collections::HashMap;
+
+pub fn tally(names: &[&str]) -> usize {
+    let mut counts = HashMap::new();
+    for n in names {
+        *counts.entry(*n).or_insert(0usize) += 1;
+    }
+    counts.len()
+}

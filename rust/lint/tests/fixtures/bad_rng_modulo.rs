@@ -1,0 +1,14 @@
+//! Fixture: rule `rng-modulo`.
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+}
+
+pub fn pick(rng: &mut Rng) -> u64 {
+    rng.next_u64() % 3
+}

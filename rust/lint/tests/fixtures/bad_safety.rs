@@ -1,0 +1,21 @@
+//! Fixture: rule `safety-comment` — three bad shapes, one good.
+
+pub fn missing(v: &[f32]) -> f32 {
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn lowercase(v: &[f32]) -> f32 {
+    // safety: a lowercase marker is not a SAFETY comment
+    unsafe { *v.get_unchecked(1) }
+}
+
+pub fn separated(v: &[f32]) -> f32 {
+    // SAFETY: a blank line detaches this comment from the block
+
+    unsafe { *v.get_unchecked(2) }
+}
+
+pub fn documented(v: &[f32]) -> f32 {
+    // SAFETY: fixture only — the caller guarantees v.len() > 3.
+    unsafe { *v.get_unchecked(3) }
+}

@@ -1,0 +1,14 @@
+//! Fixture: rule `thread-spawn`.
+
+pub fn scoped() -> usize {
+    let mut n = 0;
+    std::thread::scope(|s| {
+        s.spawn(|| {});
+        n += 1;
+    });
+    n
+}
+
+pub fn detached() -> std::thread::JoinHandle<u64> {
+    std::thread::spawn(|| 42)
+}

@@ -1,0 +1,10 @@
+//! Fixture: rule `wall-clock`.
+
+pub fn stamp() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos()
+}
+
+pub fn epoch() -> std::time::SystemTime {
+    std::time::SystemTime::UNIX_EPOCH
+}

@@ -1,0 +1,136 @@
+//! Golden-fixture suite: every rule is proven live by a known-bad
+//! snippet that fires with the expected rule id and `file:line`, and
+//! the real crate (`rust/src/**`) must lint clean.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use tsenor_lint::{lint_source, run, Config, Finding};
+
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    let path = fixture_path(name);
+    run(&[path], &Config::default()).unwrap().findings
+}
+
+fn fixture_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Sorted, deduplicated lines at which `rule` fired.
+fn hits(findings: &[Finding], rule: &str) -> Vec<usize> {
+    let lines: BTreeSet<usize> =
+        findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect();
+    lines.into_iter().collect()
+}
+
+#[test]
+fn safety_comment_fires_on_each_malformed_shape() {
+    let f = lint_fixture("bad_safety.rs");
+    assert_eq!(hits(&f, "safety-comment"), vec![4, 9, 15], "{f:?}");
+    assert_eq!(f.len(), 3, "the documented block at line 20 must not fire: {f:?}");
+}
+
+#[test]
+fn hash_collections_fires_on_use_and_construction() {
+    let f = lint_fixture("bad_hash.rs");
+    assert_eq!(hits(&f, "hash-collections"), vec![3, 6], "{f:?}");
+    assert_eq!(f.iter().filter(|x| x.rule != "hash-collections").count(), 0, "{f:?}");
+}
+
+#[test]
+fn wall_clock_fires_on_instant_now_and_system_time() {
+    let f = lint_fixture("bad_wallclock.rs");
+    assert_eq!(hits(&f, "wall-clock"), vec![4, 8, 9], "{f:?}");
+}
+
+#[test]
+fn rng_modulo_fires_on_next_u64_remainder() {
+    let f = lint_fixture("bad_rng_modulo.rs");
+    assert_eq!(hits(&f, "rng-modulo"), vec![13], "{f:?}");
+    assert_eq!(f.len(), 1, "{f:?}");
+    // `file:line: [rule] message` is the reporting contract.
+    let shown = f[0].to_string();
+    assert!(shown.contains("bad_rng_modulo.rs:13: [rng-modulo]"), "{shown}");
+}
+
+#[test]
+fn group_div_fires_only_without_a_nearby_guard() {
+    let f = lint_fixture("bad_group_div.rs");
+    assert_eq!(hits(&f, "group-div-assert"), vec![17], "{f:?}");
+    assert_eq!(f.len(), 1, "guarded + literal dividends must not fire: {f:?}");
+}
+
+#[test]
+fn thread_spawn_fires_on_scope_and_spawn_paths() {
+    let f = lint_fixture("bad_thread_spawn.rs");
+    assert_eq!(hits(&f, "thread-spawn"), vec![5, 13], "{f:?}");
+    assert_eq!(f.len(), 2, "scoped `s.spawn` handles must not fire: {f:?}");
+}
+
+#[test]
+fn malformed_escapes_are_findings_and_do_not_suppress() {
+    let f = lint_fixture("bad_escape.rs");
+    assert_eq!(hits(&f, "malformed-escape"), vec![5, 11], "{f:?}");
+    assert_eq!(hits(&f, "hash-collections"), vec![6], "broken escape suppressed: {f:?}");
+    assert_eq!(hits(&f, "wall-clock"), vec![12], "unknown rule suppressed: {f:?}");
+}
+
+#[test]
+fn clean_fixture_produces_zero_findings() {
+    let f = lint_fixture("clean.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn unparseable_safety_typo_is_a_parse_error() {
+    // The `/ SAFETY:` typo class (missing second slash) is not valid
+    // Rust at all — the analyzer must surface it rather than silently
+    // skipping the file.
+    let src = concat!(
+        "pub fn f(v: &[f32]) -> f32 {\n",
+        "    / SAFETY: missing second slash\n",
+        "    unsafe { *v.get_unchecked(0) }\n",
+        "}\n",
+    );
+    let f = lint_source(Path::new("typo.rs"), src, &Config::default());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "parse-error");
+    assert_eq!(f[0].line, 2, "{f:?}");
+}
+
+#[test]
+fn safety_comment_anchors_at_the_statement_start() {
+    // rustfmt may wrap `let x = unsafe { .. }` so the `unsafe` token
+    // lands below the statement line; the comment above the statement
+    // still counts.
+    let src = concat!(
+        "pub fn f(v: &[f32]) -> f32 {\n",
+        "    // SAFETY: the caller guarantees `v` is non-empty.\n",
+        "    let x =\n",
+        "        unsafe { *v.get_unchecked(0) };\n",
+        "    x\n",
+        "}\n",
+    );
+    let f = lint_source(Path::new("wrapped.rs"), src, &Config::default());
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn whitelisted_modules_are_exempt_from_their_rule_only() {
+    let src = "pub fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let cfg = Config::default();
+    // Same snippet: flagged at an arbitrary path, exempt at a
+    // whitelisted suffix.
+    let flagged = lint_source(Path::new("src/pruning/oracle.rs"), src, &cfg);
+    assert_eq!(hits(&flagged, "wall-clock"), vec![2], "{flagged:?}");
+    let exempt = lint_source(Path::new("src/coordinator/metrics.rs"), src, &cfg);
+    assert!(exempt.is_empty(), "{exempt:?}");
+}
+
+#[test]
+fn tsenor_src_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let out = run(&[src], &Config::default()).unwrap();
+    assert!(out.files_scanned >= 50, "expected the full crate, got {}", out.files_scanned);
+    let shown: Vec<String> = out.findings.iter().map(|f| f.to_string()).collect();
+    assert!(out.findings.is_empty(), "tsenor src must lint clean:\n{}", shown.join("\n"));
+}

@@ -90,16 +90,18 @@ pub struct TaskShape {
 }
 
 impl TaskShape {
-    pub fn block_count(&self) -> usize {
-        let m = self.pattern.m;
-        (self.rows / m) * (self.cols / m)
-    }
-
     /// True when the layer's shape partitions cleanly into M x M blocks
     /// (a precondition of every transposable oracle call).
     fn blockable(&self) -> bool {
         let m = self.pattern.m;
         m > 0 && self.rows % m == 0 && self.cols % m == 0
+    }
+
+    /// Block count of a `blockable()` shape — checked by every caller
+    /// before the truncating division below can lose a partial block.
+    pub fn block_count(&self) -> usize {
+        let m = self.pattern.m;
+        (self.rows / m) * (self.cols / m)
     }
 }
 
@@ -409,6 +411,8 @@ fn run_task(
     oracle: &dyn MaskOracle,
     alps_cfg: &alps::AlpsCfg,
 ) -> Result<LayerOutcome> {
+    // lint: allow(wall-clock) -- per-layer wall_secs is timing telemetry,
+    // stripped from the report bytes the determinism contract covers.
     let t0 = Instant::now();
     let p = &task.problem;
     let regime = match spec.structure {

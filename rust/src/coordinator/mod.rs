@@ -6,7 +6,9 @@
 //! calibrate -> prune -> evaluate run (`pipeline`), and aggregates run
 //! metrics (`metrics`).
 
+#[cfg(feature = "backend-xla")]
 pub mod batcher;
 pub mod executor;
 pub mod metrics;
+#[cfg(feature = "backend-xla")]
 pub mod pipeline;

@@ -142,6 +142,8 @@ pub fn run_pooled(
     oracle: &dyn MaskOracle,
     metrics: &mut Metrics,
 ) -> Result<PruneReport> {
+    // lint: allow(wall-clock) -- wall_secs is timing telemetry, stripped
+    // from the report bytes the determinism contract covers.
     let t0 = std::time::Instant::now();
     let stats_before = oracle.stats();
     // Engine counters: the whole pool when one was provided, else the

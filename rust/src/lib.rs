@@ -37,13 +37,21 @@
 //!
 //! Python never runs at runtime; the `tsenor` binary is self-contained
 //! once `make artifacts` has produced the AOT bundle.
+//!
+//! The PJRT/XLA runtime lives behind the `backend-xla` feature (on by
+//! default): `--no-default-features` builds the pure-Rust kernels,
+//! solvers, pruning frameworks, streaming and training stack with no
+//! native XLA extension — the configuration Miri and ThreadSanitizer
+//! run against in CI.
 
 pub mod coordinator;
 pub mod data;
+#[cfg(feature = "backend-xla")]
 pub mod eval;
 pub mod masks;
 pub mod model;
 pub mod pruning;
+#[cfg(feature = "backend-xla")]
 pub mod runtime;
 pub mod sparse;
 pub mod spec;

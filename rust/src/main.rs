@@ -85,25 +85,34 @@
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "backend-xla")]
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::coordinator::executor::{self, LayerTask};
+#[cfg(feature = "backend-xla")]
 use tsenor::coordinator::metrics::Metrics;
+#[cfg(feature = "backend-xla")]
 use tsenor::coordinator::pipeline;
 use tsenor::data::workload;
 use tsenor::masks::solver::{self, Method};
 use tsenor::masks::{self, NmPattern};
-use tsenor::model::{finetune, ModelState};
-use tsenor::pruning::{CpuOracle, LayerProblem, MaskDispatcher, MaskOracle, MaskService};
+#[cfg(feature = "backend-xla")]
+use tsenor::model::finetune;
+use tsenor::model::ModelState;
+#[cfg(feature = "backend-xla")]
+use tsenor::pruning::MaskService;
+use tsenor::pruning::{CpuOracle, LayerProblem, MaskDispatcher, MaskOracle};
+#[cfg(feature = "backend-xla")]
 use tsenor::runtime::client::ModelRuntime;
+#[cfg(feature = "backend-xla")]
 use tsenor::runtime::{Engine, EnginePool, Manifest};
 use tsenor::spec::report::PruneReport;
-use tsenor::spec::{
-    BackwardMode, FinetuneSpec, Framework, PruneSpec, SolveSpec, Structure, TrainSpec,
-};
-use tsenor::stream::store::StoreReader;
+#[cfg(feature = "backend-xla")]
+use tsenor::spec::FinetuneSpec;
+use tsenor::spec::{BackwardMode, Framework, PruneSpec, SolveSpec, Structure, TrainSpec};
+use tsenor::stream::store::{ShardIndex, StoreReader};
 use tsenor::stream::StreamLayer;
 use tsenor::train::ScheduleKind;
-use tsenor::util::tensor::{partition_blocks, Mat};
+use tsenor::util::tensor::{partition_blocks, Blocks, Mat};
 
 struct Args {
     cmd: String,
@@ -151,6 +160,9 @@ impl Args {
         self.flags.iter().any(|f| f == flag)
     }
 
+    // Only the backend-xla commands read the bundle; without the
+    // feature every caller is compiled out.
+    #[cfg_attr(not(feature = "backend-xla"), allow(dead_code))]
     fn artifacts(&self) -> PathBuf {
         PathBuf::from(self.get("artifacts", "artifacts"))
     }
@@ -284,6 +296,12 @@ fn apply_stream_overrides(spec: &mut PruneSpec, args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "backend-xla"))]
+fn cmd_info(_args: &Args) -> Result<()> {
+    bail!("`info` reads a PJRT artifact bundle; rebuild with the `backend-xla` feature");
+}
+
+#[cfg(feature = "backend-xla")]
 fn cmd_info(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
     println!("TSENOR artifact bundle @ {}", manifest.root.display());
@@ -303,6 +321,31 @@ fn cmd_info(args: &Args) -> Result<()> {
     }
     println!("corpora: {:?}", manifest.corpora.keys().collect::<Vec<_>>());
     Ok(())
+}
+
+/// The `solve --xla` path. A standalone solve is a single caller
+/// issuing one logical solve, so a multi-client engine pool would sit
+/// idle — one engine is the right size here (the pool pays off under
+/// `prune --service`, where concurrent layer jobs overlap).
+#[cfg(feature = "backend-xla")]
+fn solve_blocks_xla(args: &Args, spec: &SolveSpec, blocks: &Blocks, n: usize) -> Result<Blocks> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let engine = Engine::new(&manifest)?;
+    let xla = XlaSolver::new(&engine, &manifest, spec.solve);
+    let out = xla.solve_blocks(blocks, n)?;
+    let es = engine.stats();
+    println!(
+        "  xla path: {} exec calls, {:.3}s in PJRT, {} padded blocks",
+        es.exec_calls,
+        es.exec_secs(),
+        xla.stats().padded_blocks
+    );
+    Ok(out)
+}
+
+#[cfg(not(feature = "backend-xla"))]
+fn solve_blocks_xla(_: &Args, _: &SolveSpec, _: &Blocks, _: usize) -> Result<Blocks> {
+    bail!("`solve --xla` needs the PJRT engine; rebuild with the `backend-xla` feature");
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
@@ -342,22 +385,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let masks_out = if args.has("xla") {
-        // A standalone solve is a single caller issuing one logical
-        // solve, so a multi-client engine pool would sit idle — one
-        // engine is the right size here (the pool pays off under
-        // `prune --service`, where concurrent layer jobs overlap).
-        let manifest = Manifest::load(&args.artifacts())?;
-        let engine = Engine::new(&manifest)?;
-        let xla = XlaSolver::new(&engine, &manifest, spec.solve);
-        let out = xla.solve_blocks(&blocks, pattern.n)?;
-        let es = engine.stats();
-        println!(
-            "  xla path: {} exec calls, {:.3}s in PJRT, {} padded blocks",
-            es.exec_calls,
-            es.exec_secs(),
-            xla.stats().padded_blocks
-        );
-        out
+        solve_blocks_xla(args, &spec, &blocks, pattern.n)?
     } else {
         solver::solve_blocks_parallel(spec.method, &blocks, pattern.n, &spec.solve)?
     };
@@ -376,6 +404,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "backend-xla"))]
+fn cmd_prune(_args: &Args) -> Result<()> {
+    bail!(
+        "`prune` runs the PJRT model pipeline; rebuild with the `backend-xla` \
+         feature, or use `prune-ckpt` for the artifact-free CPU path"
+    );
+}
+
+#[cfg(feature = "backend-xla")]
 fn cmd_prune(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
 
@@ -499,6 +536,12 @@ fn cmd_prune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "backend-xla"))]
+fn cmd_eval(_args: &Args) -> Result<()> {
+    bail!("`eval` runs the PJRT model; rebuild with the `backend-xla` feature");
+}
+
+#[cfg(feature = "backend-xla")]
 fn cmd_eval(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
     let engine = Engine::new(&manifest)?;
@@ -519,6 +562,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "backend-xla"))]
+fn cmd_finetune(_args: &Args) -> Result<()> {
+    bail!("`finetune` runs the PJRT model; rebuild with the `backend-xla` feature");
+}
+
+#[cfg(feature = "backend-xla")]
 fn cmd_finetune(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&args.artifacts())?;
     let engine = Engine::new(&manifest)?;
@@ -567,6 +616,29 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `shard --from-artifacts`: split the real manifest weights into
+/// capped shards. Manifest order, not BTreeMap order — the checkpoint
+/// must preserve the canonical layer order.
+#[cfg(feature = "backend-xla")]
+fn shard_from_artifacts(args: &Args, out: &Path, shard_bytes: u64) -> Result<ShardIndex> {
+    let manifest = Manifest::load(&args.artifacts())?;
+    let weights = manifest.load_weights()?;
+    let ordered: Vec<(&str, &Mat)> = manifest
+        .weights
+        .iter()
+        .map(|w| (w.name.as_str(), &weights[&w.name]))
+        .collect();
+    tsenor::stream::store::write_checkpoint(out, ordered, shard_bytes)
+}
+
+#[cfg(not(feature = "backend-xla"))]
+fn shard_from_artifacts(_: &Args, _: &Path, _: u64) -> Result<ShardIndex> {
+    bail!(
+        "`shard --from-artifacts` reads a PJRT artifact bundle; rebuild with \
+         the `backend-xla` feature (synthetic `shard` works without it)"
+    );
+}
+
 /// Write a sharded checkpoint: synthetic layers by default (the CI
 /// smoke workload), or `--from-artifacts` to split the real manifest
 /// weights into capped shards.
@@ -578,16 +650,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let out = Path::new(out);
     let shard_bytes = parse_bytes(&args.get("shard-bytes", "4m")).context("--shard-bytes")?;
     let index = if args.has("from-artifacts") {
-        let manifest = Manifest::load(&args.artifacts())?;
-        let weights = manifest.load_weights()?;
-        // Manifest order, not BTreeMap order: the checkpoint must
-        // preserve the canonical layer order.
-        let ordered: Vec<(&str, &Mat)> = manifest
-            .weights
-            .iter()
-            .map(|w| (w.name.as_str(), &weights[&w.name]))
-            .collect();
-        tsenor::stream::store::write_checkpoint(out, ordered, shard_bytes)?
+        shard_from_artifacts(args, out, shard_bytes)?
     } else {
         let k = args.usize("layers", 12)?;
         let rows = args.usize("rows", 64)?;

@@ -3,12 +3,22 @@
 //! the L1 masked-GEMM kernel whose VJP realizes the transposable-sparsity
 //! backward pass. Python is not involved.
 
+// Everything below `FinetuneCfg` drives the AOT model_grad artifact,
+// so the optimizer loop itself is XLA-gated; the config stays
+// available to `spec` in every build.
+#[cfg(feature = "backend-xla")]
 use crate::data::loader::random_batch;
+#[cfg(feature = "backend-xla")]
 use crate::model::ModelState;
+#[cfg(feature = "backend-xla")]
 use crate::runtime::client::ModelRuntime;
+#[cfg(feature = "backend-xla")]
 use crate::util::rng::Rng;
+#[cfg(feature = "backend-xla")]
 use crate::util::tensor::Mat;
+#[cfg(feature = "backend-xla")]
 use anyhow::Result;
+#[cfg(feature = "backend-xla")]
 use std::collections::BTreeMap;
 
 #[derive(Clone, Copy, Debug)]
@@ -37,12 +47,14 @@ impl Default for FinetuneCfg {
 }
 
 /// Adam state per weight tensor.
+#[cfg(feature = "backend-xla")]
 struct Adam {
     m: BTreeMap<String, Vec<f32>>,
     v: BTreeMap<String, Vec<f32>>,
     t: usize,
 }
 
+#[cfg(feature = "backend-xla")]
 impl Adam {
     fn new(weights: &BTreeMap<String, Mat>) -> Self {
         let m = weights
@@ -78,6 +90,7 @@ impl Adam {
 }
 
 /// Run masked fine-tuning; returns the per-step loss curve.
+#[cfg(feature = "backend-xla")]
 pub fn finetune(
     rt: &ModelRuntime,
     state: &mut ModelState,

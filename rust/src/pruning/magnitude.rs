@@ -38,6 +38,8 @@ pub fn standard_nm_mask(score: &Mat, pattern: NmPattern) -> Mat {
 
 /// Unstructured global top-k mask at the same sparsity as `pattern`.
 pub fn unstructured_mask(score: &Mat, pattern: NmPattern) -> Mat {
+    // lint: allow(group-div-assert) -- a global top-k keep count, not a
+    // group count: flooring the budget is the intended semantics.
     let keep = (score.data.len() * pattern.n) / pattern.m;
     let mut order: Vec<u32> = (0..score.data.len() as u32).collect();
     order.sort_unstable_by(|&a, &b| {

@@ -352,6 +352,8 @@ impl CpuOracle {
     /// One solo whole-matrix solve (the `mask` semantics).
     fn solve_now(&self, score: &Mat, pattern: NmPattern) -> Result<Mat> {
         self.calls.fetch_add(1, Ordering::Relaxed);
+        // lint: allow(group-div-assert) -- telemetry only; solve_matrix
+        // validates divisibility before any mask math runs.
         self.blocks.fetch_add(
             (score.rows / pattern.m) * (score.cols / pattern.m),
             Ordering::Relaxed,

@@ -21,7 +21,7 @@ use crate::runtime::artifacts::{DykstraArtifact, Manifest};
 use crate::runtime::literal;
 use crate::util::tensor::{Blocks, Mat};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -34,12 +34,14 @@ pub struct Executable(PjRtLoadedExecutable);
 
 // SAFETY: the wrapper is only ever *used* (executed / dropped) under
 // the owning `Engine`'s `pjrt_lock` — see the safety argument on
-// `Engine`. `Send + Sync` here only permits storing the handle in the
-// `Arc`-shared cache and moving the `Arc` across threads; the lock
-// provides the mutual exclusion and happens-before edges that make
-// those cross-thread touches sound even if the xla-rs internals use
-// non-atomic reference counts.
+// `Engine`. `Send` here only permits moving the `Arc`-held handle
+// across threads; the lock provides the mutual exclusion and
+// happens-before edges that make cross-thread touches sound even if
+// the xla-rs internals use non-atomic reference counts.
 unsafe impl Send for Executable {}
+// SAFETY: same argument as `Send` above — `Sync` only permits sharing
+// the handle through the `Arc` cache; every actual use is serialized
+// by the owning engine's `pjrt_lock`.
 unsafe impl Sync for Executable {}
 
 impl Executable {
@@ -59,15 +61,18 @@ impl Executable {
 const CACHE_SHARDS: usize = 8;
 
 struct ShardedCache {
-    shards: [RwLock<HashMap<String, Arc<Executable>>>; CACHE_SHARDS],
+    // BTreeMap, not HashMap: the cache is tiny and read-dominated, and
+    // an ordered map keeps any future iteration (eviction, debug dumps,
+    // fingerprints) deterministic by construction.
+    shards: [RwLock<BTreeMap<String, Arc<Executable>>>; CACHE_SHARDS],
 }
 
 impl ShardedCache {
     fn new() -> Self {
-        ShardedCache { shards: std::array::from_fn(|_| RwLock::new(HashMap::new())) }
+        ShardedCache { shards: std::array::from_fn(|_| RwLock::new(BTreeMap::new())) }
     }
 
-    fn shard(&self, key: &str) -> &RwLock<HashMap<String, Arc<Executable>>> {
+    fn shard(&self, key: &str) -> &RwLock<BTreeMap<String, Arc<Executable>>> {
         // FNV-1a; stable across runs so shard assignment is deterministic.
         let h = crate::util::fnv1a(key.as_bytes());
         &self.shards[(h % CACHE_SHARDS as u64) as usize]
@@ -124,6 +129,9 @@ pub struct Engine {
 // objects (each owns its client and compiles its own executables), so
 // pool-level concurrency across engines is unaffected.
 unsafe impl Send for Engine {}
+// SAFETY: same argument as `Send` above — shared references only reach
+// the wrapper objects through methods that take `pjrt_lock`, so `&Engine`
+// is safe to hand to concurrent callers.
 unsafe impl Sync for Engine {}
 
 impl Engine {
@@ -196,6 +204,8 @@ impl Engine {
             let _pjrt = self.pjrt_lock.lock().unwrap_or_else(|e| e.into_inner());
             // Timed under the lock so exec_nanos measures PJRT execution
             // alone, not time spent queueing behind sibling callers.
+            // lint: allow(wall-clock) -- exec_nanos is timing telemetry; it is
+            // stripped from every report the determinism contract covers.
             let t0 = std::time::Instant::now();
             let outs = exe.run(inputs)?;
             (outs, t0.elapsed())

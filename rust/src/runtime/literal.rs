@@ -8,8 +8,12 @@ use xla::{ElementType, Literal};
 
 pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<Literal> {
     debug_assert_eq!(shape.iter().product::<usize>(), data.len());
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let ptr = data.as_ptr() as *const u8;
+    // SAFETY: `data` is a live, initialized `&[f32]`; viewing the same
+    // allocation as bytes is sound (u8 has no alignment or validity
+    // requirements, every f32 bit pattern is a valid u8 quadruple) and
+    // the length covers exactly the slice's `len * 4` bytes.
+    let bytes = unsafe { std::slice::from_raw_parts(ptr, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(
         ElementType::F32,
         shape,
@@ -19,8 +23,11 @@ pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<Literal> {
 
 pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<Literal> {
     debug_assert_eq!(shape.iter().product::<usize>(), data.len());
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let ptr = data.as_ptr() as *const u8;
+    // SAFETY: `data` is a live, initialized `&[i32]`; the byte view
+    // stays within the same allocation, alignment only decreases, and
+    // the length is exactly the slice's `len * 4` bytes.
+    let bytes = unsafe { std::slice::from_raw_parts(ptr, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(
         ElementType::S32,
         shape,

@@ -187,6 +187,8 @@ impl NmCompressed {
     /// reusing the same row offset overwrite its stamp and hide the
     /// duplicate.
     fn validate(&self) -> Result<()> {
+        // lint: allow(group-div-assert) -- compress()/from_parts() already
+        // rejected any rows not a multiple of m; m == 0 is handled.
         let groups = if self.m == 0 { 0 } else { self.rows / self.m };
         // seen[r] == stamp of the (group, column) that last kept row
         // offset r; a repeat within the same stamp is a duplicate.
@@ -225,6 +227,8 @@ impl NmCompressed {
     /// drop a kept value in `decompress`), naming the flat position.
     pub fn mask(&self) -> Result<Mat> {
         let mut mask = Mat::zeros(self.rows, self.cols);
+        // lint: allow(group-div-assert) -- compress()/from_parts() already
+        // rejected any rows not a multiple of m; m == 0 is handled.
         let groups = if self.m == 0 { 0 } else { self.rows / self.m };
         for g in 0..groups {
             for s in 0..self.n {
@@ -248,6 +252,8 @@ impl NmCompressed {
     /// Decompress back to dense (for testing and the slow path).
     pub fn decompress(&self) -> Mat {
         let mut w = Mat::zeros(self.rows, self.cols);
+        // lint: allow(group-div-assert) -- compress()/from_parts() already
+        // rejected any rows not a multiple of m.
         let groups = self.rows / self.m;
         for g in 0..groups {
             for s in 0..self.n {
@@ -305,6 +311,8 @@ fn spmm_rows(x: &Mat, w: &NmCompressed, row0: usize, out: &mut [f32]) {
 fn spmm_rb<const RB_: usize>(x: &Mat, w: &NmCompressed, xrow0: usize, out: &mut [f32]) {
     let cols = w.cols;
     debug_assert_eq!(out.len(), RB_ * cols);
+    // lint: allow(group-div-assert) -- NmCompressed's validating
+    // constructors guarantee rows is a multiple of m; m == 0 is handled.
     let groups = if w.m == 0 { 0 } else { w.rows / w.m };
     let xrows: [&[f32]; RB_] = std::array::from_fn(|t| x.row(xrow0 + t));
     // Raw base pointer: the RB_ accumulator rows live in one contiguous
@@ -395,6 +403,8 @@ fn spmm_t_rb<const RB_: usize>(g: &Mat, w: &NmCompressed, grow0: usize, out: &mu
     let cols = w.cols;
     let wrows = w.rows;
     debug_assert_eq!(out.len(), RB_ * wrows);
+    // lint: allow(group-div-assert) -- NmCompressed's validating
+    // constructors guarantee rows is a multiple of m; m == 0 is handled.
     let groups = if w.m == 0 { 0 } else { wrows / w.m };
     let grows: [&[f32]; RB_] = std::array::from_fn(|t| g.row(grow0 + t));
     let optr = out.as_mut_ptr();
@@ -817,5 +827,67 @@ mod tests {
         }
         // Column groups will generically violate 4:8.
         assert!(NmCompressed::compress(&w, &mask, 4, 8).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // `miri_*` tests: the unsafe gather/scatter kernels under Miri (CI's
+    // `cargo miri test --no-default-features --lib -- miri_`). Hand-built
+    // 2:4 fixtures instead of `transposable_setup` — no solver call, so
+    // each test stays fast under Miri's interpreter while still driving
+    // every `unsafe` block in this module.
+    // -----------------------------------------------------------------
+
+    /// A 4x4 2:4 striped mask — exactly two kept entries per row AND per
+    /// column group, so it is transposable by construction.
+    fn miri_setup() -> (Mat, NmCompressed) {
+        let mut rng = Rng::new(21);
+        let w = Mat::from_fn(4, 4, |_, _| rng.normal());
+        let mask = Mat::from_fn(4, 4, |i, j| if (i + j) % 4 < 2 { 1.0 } else { 0.0 });
+        let wm = w.hadamard(&mask);
+        let c = NmCompressed::compress(&wm, &mask, 2, 4).unwrap();
+        (wm, c)
+    }
+
+    #[test]
+    fn miri_spmm_gather_matches_dense() {
+        let (wm, c) = miri_setup();
+        let mut rng = Rng::new(22);
+        let x = Mat::from_fn(3, 4, |_, _| rng.normal());
+        let want = gemm::matmul_dense_baseline(&x, &wm);
+        assert_eq!(spmm(&x, &c).data, want.data);
+    }
+
+    #[test]
+    fn miri_transposed_scatter_matches_dense() {
+        let (wm, c) = miri_setup();
+        let mut rng = Rng::new(23);
+        let g = Mat::from_fn(3, 4, |_, _| rng.normal());
+        let want = gemm::matmul_dense_baseline(&g, &wm.transpose());
+        assert_eq!(spmm_transposed(&g, &c).data, want.data);
+    }
+
+    #[test]
+    fn miri_threaded_fan_out_is_race_free_and_bit_identical() {
+        let (_, c) = miri_setup();
+        let mut rng = Rng::new(24);
+        let x = Mat::from_fn(3, 4, |_, _| rng.normal());
+        let g = Mat::from_fn(3, 4, |_, _| rng.normal());
+        assert_eq!(spmm_threaded(&x, &c, 2).data, spmm(&x, &c).data);
+        assert_eq!(spmm_transposed_threaded(&g, &c, 2).data, spmm_transposed(&g, &c).data);
+        assert_eq!(
+            spmm_backward_weight_threaded(&x, &g, &c, 2).data,
+            spmm_backward_weight(&x, &g, &c).data
+        );
+    }
+
+    #[test]
+    fn miri_from_parts_gate_rejects_oob_and_duplicate_indices() {
+        // The OOB byte that would turn the unchecked gathers into UB.
+        assert!(NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![0, 9]).is_err());
+        assert!(NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![3, 3]).is_err());
+        let ok = NmCompressed::from_parts(4, 1, 2, 4, vec![1.0, 2.0], vec![0, 2]).unwrap();
+        let dense = ok.decompress();
+        assert_eq!(dense.at(0, 0), 1.0);
+        assert_eq!(dense.at(2, 0), 2.0);
     }
 }

@@ -145,6 +145,8 @@ impl TrainStepReport {
 
 fn time_mean(trials: usize, mut f: impl FnMut()) -> f64 {
     let trials = trials.max(1);
+    // lint: allow(wall-clock) -- train-step is a timing workload; its
+    // numeric checks, not its timings, pin correctness.
     let t0 = Instant::now();
     for _ in 0..trials {
         f();

@@ -19,6 +19,7 @@
 //! out of a multi-tensor shard touches only that tensor's bytes, so
 //! resident memory tracks the *tensor*, not the shard.
 
+#[cfg(feature = "backend-xla")]
 use crate::runtime::artifacts::Manifest;
 use crate::util::json::{self, Json};
 use crate::util::npy;
@@ -339,6 +340,7 @@ impl StoreReader {
 
     /// View an artifact bundle as a store: every manifest weight file
     /// becomes a single-tensor shard (offset 0). No bytes are copied.
+    #[cfg(feature = "backend-xla")]
     pub fn from_manifest(manifest: &Manifest) -> StoreReader {
         let mut index = ShardIndex::default();
         for w in &manifest.weights {
@@ -640,7 +642,7 @@ mod tests {
     #[test]
     fn mask_bits_roundtrip() {
         let mut rng = Rng::new(9);
-        let mask = Mat::from_fn(13, 7, |_, _| if rng.next_u64() % 3 == 0 { 1.0 } else { 0.0 });
+        let mask = Mat::from_fn(13, 7, |_, _| if rng.below(3) == 0 { 1.0 } else { 0.0 });
         let packed = pack_mask(&mask);
         assert_eq!(packed.len(), (13 * 7 + 7) / 8);
         let back = unpack_mask(&packed, 13, 7);

@@ -162,6 +162,8 @@ fn layer_step(
     };
 
     if let Some(resolve) = resolve {
+        // lint: allow(wall-clock) -- resolve_secs is timing telemetry,
+        // stripped from the TrainReport's determinism-checked bytes.
         let t0 = Instant::now();
         let (fwd, bwd) = solve_masks(state, resolve, ctx)?;
         out.resolve_secs = t0.elapsed().as_secs_f64();
@@ -274,6 +276,8 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         schedule.name()
     );
 
+    // lint: allow(wall-clock) -- wall_secs is timing telemetry, stripped
+    // from the TrainReport's determinism-checked bytes.
     let t0 = Instant::now();
     let stats_before = service.service_stats();
     let ctx = StepCtx {
@@ -308,12 +312,16 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
     let mut dx_checksum = FNV_OFFSET;
     let mut total_resolves = 0u64;
     for step in 0..spec.steps {
+        // lint: allow(wall-clock) -- per-step timing telemetry, stripped
+        // from the TrainReport's determinism-checked bytes.
         let ts = Instant::now();
         let resolve = schedule.resolve_at(step);
         // Fan the layers over `jobs` workers in contiguous chunks;
         // outcomes come back per chunk and are stitched in layer order,
         // so aggregation never depends on completion order.
         let mut outs: Vec<StepOut> = Vec::with_capacity(spec.layers);
+        // lint: allow(thread-spawn) -- layer chunks need &mut state each,
+        // which fan_out_rows' shared-slice contract cannot express.
         std::thread::scope(|sc| -> Result<()> {
             let ctx = &ctx;
             let mut handles = Vec::new();

@@ -11,15 +11,20 @@
 //! the artifact bundle is present.
 
 use std::collections::BTreeMap;
+#[cfg(feature = "backend-xla")]
 use std::path::PathBuf;
 use tsenor::coordinator::executor::{self, LayerOutcome, LayerTask};
+#[cfg(feature = "backend-xla")]
 use tsenor::coordinator::metrics::Metrics;
+#[cfg(feature = "backend-xla")]
 use tsenor::coordinator::pipeline;
 use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::masks::NmPattern;
 use tsenor::model::ModelState;
 use tsenor::pruning::{CpuOracle, LayerProblem, MaskOracle, OracleStats};
+#[cfg(feature = "backend-xla")]
 use tsenor::runtime::client::ModelRuntime;
+#[cfg(feature = "backend-xla")]
 use tsenor::runtime::{Engine, Manifest};
 use tsenor::spec::report::PruneReport;
 use tsenor::spec::{Framework, PruneSpec, Structure};
@@ -307,6 +312,7 @@ fn stats_snapshots_mid_run_never_underflow() {
 // Full pipeline::run differential — needs the artifact bundle (PJRT).
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "backend-xla")]
 fn setup() -> Option<(Manifest, Engine)> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !root.join("manifest.json").exists() {
@@ -318,6 +324,7 @@ fn setup() -> Option<(Manifest, Engine)> {
     Some((manifest, engine))
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn pipeline_run_jobs4_matches_jobs1_end_to_end() {
     let Some((manifest, engine)) = setup() else { return };

@@ -5,6 +5,8 @@
 //! whole `EnginePool`. Requires `make artifacts` (self-skips without
 //! the bundle).
 
+#![cfg(feature = "backend-xla")]
+
 use std::path::PathBuf;
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::coordinator::metrics::Metrics;

@@ -2,6 +2,8 @@
 //! pruning pipeline end-to-end, fine-tuning, and evaluation. Requires
 //! `make artifacts`.
 
+#![cfg(feature = "backend-xla")]
+
 use std::path::PathBuf;
 use tsenor::coordinator::metrics::Metrics;
 use tsenor::coordinator::pipeline;

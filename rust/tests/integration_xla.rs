@@ -2,6 +2,8 @@
 //! reference implementation, and the full XLA TSENOR solver must produce
 //! feasible, high-quality masks. Requires `make artifacts`.
 
+#![cfg(feature = "backend-xla")]
+
 use std::path::PathBuf;
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::data::workload;

@@ -7,13 +7,16 @@
 //! settings and request mixes; an artifact-gated test repeats the
 //! differential through the XLA path on a real engine pool.
 
+#[cfg(feature = "backend-xla")]
 use std::path::PathBuf;
+#[cfg(feature = "backend-xla")]
 use tsenor::coordinator::batcher::XlaSolver;
 use tsenor::masks::solver::{Method, SolveCfg};
 use tsenor::masks::NmPattern;
 use tsenor::pruning::{
     CpuOracle, MaskDispatcher, MaskOracle, MaskService, MaskTicket, ServiceCfg,
 };
+#[cfg(feature = "backend-xla")]
 use tsenor::runtime::{EnginePool, Manifest};
 use tsenor::util::rng::Rng;
 use tsenor::util::tensor::Mat;
@@ -169,6 +172,7 @@ fn ticket_burst_from_one_caller_coalesces_and_matches() {
 // XLA path — needs the artifact bundle (PJRT).
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "backend-xla")]
 fn manifest() -> Option<Manifest> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !root.join("manifest.json").exists() {
@@ -178,6 +182,7 @@ fn manifest() -> Option<Manifest> {
     Some(Manifest::load(&root).unwrap())
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn xla_service_differential_on_engine_pool() {
     let Some(manifest) = manifest() else { return };
