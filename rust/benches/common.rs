@@ -60,6 +60,12 @@ pub fn manifest() -> Option<Manifest> {
 /// archive and compare runs without scraping stdout. Keys are flat
 /// (`spmm_gflops_t4`, `cpu_svc_masks_per_sec_c4`, ...); every file
 /// carries the bench name, the scale it ran at, and total wall secs.
+///
+/// Schema: `BENCH_*.json` and the CLI's `--metrics` export share one
+/// vocabulary, stamped `tsenor::obs::metrics::SCHEMA` — the same field
+/// names mean the same units in both (`wall_secs` total seconds,
+/// `*_masks_per_sec` solver throughput, `*_gflops` kernel GFLOP/s), so
+/// downstream tooling parses either file with one reader.
 pub struct BenchJson {
     name: String,
     started: Instant,
@@ -91,6 +97,7 @@ impl BenchJson {
         let doc = json::obj(vec![
             ("bench", Json::Str(self.name.clone())),
             ("scale", Json::Str(scale_name.to_string())),
+            ("schema", Json::Str(tsenor::obs::metrics::SCHEMA.to_string())),
             ("wall_secs", Json::Num(self.started.elapsed().as_secs_f64())),
             ("metrics", Json::Obj(self.metrics.iter().cloned().collect())),
         ]);

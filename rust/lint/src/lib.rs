@@ -65,15 +65,18 @@ impl fmt::Display for Finding {
 }
 
 /// Whitelists. Paths are matched as `/`-normalized suffixes, so they
-/// work from any invocation directory.
+/// work from any invocation directory; an entry ending in `/` names a
+/// directory and exempts every file inside it.
 pub struct Config {
     /// Files where `HashMap`/`HashSet` are tolerated. Ships empty: the
     /// crate has no justified use (reports, fingerprints and caches
     /// all iterate, so they all use ordered maps).
     pub hash_allowlist: &'static [&'static str],
-    /// Files allowed to read the wall clock (CLI banners, timing
-    /// telemetry that is stripped from reports, dispatcher deadlines
-    /// proven bit-invisible by the differential suites).
+    /// Files allowed to read the wall clock. Since the obs subsystem
+    /// became the engine's single sanctioned clock consumer
+    /// (`obs::clock` owns the epoch; `Stopwatch` and `raw_now` are the
+    /// entry points), this is just `src/obs/` plus the CLI banner
+    /// timings in `main.rs` — every other module routes through obs.
     pub wall_clock_modules: &'static [&'static str],
     /// The sanctioned thread fan-out sites. Everything else must route
     /// through them (ROADMAP item 5's single choke point).
@@ -84,11 +87,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             hash_allowlist: &[],
-            wall_clock_modules: &[
-                "src/main.rs",
-                "src/coordinator/metrics.rs",
-                "src/pruning/service.rs",
-            ],
+            wall_clock_modules: &["src/main.rs", "src/obs/"],
             thread_spawn_modules: &[
                 "src/sparse/mod.rs",
                 "src/coordinator/executor.rs",
@@ -168,7 +167,15 @@ pub fn lint_source(file: &Path, text: &str, cfg: &Config) -> Vec<Finding> {
 
 fn suffix_match(file: &Path, suffixes: &[&str]) -> bool {
     let s = file.to_string_lossy().replace('\\', "/");
-    suffixes.iter().any(|suf| s.ends_with(suf))
+    suffixes.iter().any(|suf| {
+        // `dir/` entries exempt the whole directory; plain entries
+        // must match the file path's tail exactly.
+        if suf.ends_with('/') {
+            s.contains(suf)
+        } else {
+            s.ends_with(suf)
+        }
+    })
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,11 @@
+//! Fixture: clock-ownership rule. A stray "just time this solve"
+//! regression outside `src/obs/` must be a `wall-clock` finding — the
+//! sanctioned route is `obs::clock::Stopwatch` / `obs::clock::raw_now`.
+
+pub fn solve_timed(scores: &[f32]) -> (f32, f64) {
+    use std::time::Instant;
+
+    let t0 = Instant::now();
+    let obj = scores.iter().sum();
+    (obj, t0.elapsed().as_secs_f64())
+}

@@ -118,12 +118,34 @@ fn safety_comment_anchors_at_the_statement_start() {
 fn whitelisted_modules_are_exempt_from_their_rule_only() {
     let src = "pub fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
     let cfg = Config::default();
-    // Same snippet: flagged at an arbitrary path, exempt at a
-    // whitelisted suffix.
+    // Same snippet: flagged at an arbitrary path, exempt under the
+    // `src/obs/` directory entry (the obs subsystem owns the clock).
     let flagged = lint_source(Path::new("src/pruning/oracle.rs"), src, &cfg);
     assert_eq!(hits(&flagged, "wall-clock"), vec![2], "{flagged:?}");
-    let exempt = lint_source(Path::new("src/coordinator/metrics.rs"), src, &cfg);
+    let exempt = lint_source(Path::new("src/obs/trace.rs"), src, &cfg);
     assert!(exempt.is_empty(), "{exempt:?}");
+    // The old per-file whitelist entries are gone: their modules now
+    // route through `obs::clock` and must be flagged like anywhere else.
+    for path in ["src/coordinator/metrics.rs", "src/pruning/service.rs"] {
+        let f = lint_source(Path::new(path), src, &cfg);
+        assert_eq!(hits(&f, "wall-clock"), vec![2], "{path} must no longer be exempt: {f:?}");
+    }
+}
+
+#[test]
+fn stray_wall_clock_outside_obs_is_a_finding() {
+    // The clock-ownership rule end-to-end: a realistic "just time this
+    // solve" regression in a pruning module is a wall-clock finding,
+    // while the same shape inside `src/obs/` (the sanctioned consumer)
+    // is not.
+    let f = lint_fixture("stray_wallclock.rs");
+    assert_eq!(hits(&f, "wall-clock"), vec![8], "{f:?}");
+    assert_eq!(f.len(), 1, "{f:?}");
+    let src = std::fs::read_to_string(fixture_path("stray_wallclock.rs")).unwrap();
+    let in_pruning = lint_source(Path::new("src/pruning/service.rs"), &src, &Config::default());
+    assert_eq!(hits(&in_pruning, "wall-clock"), vec![8], "{in_pruning:?}");
+    let in_obs = lint_source(Path::new("src/obs/clock.rs"), &src, &Config::default());
+    assert!(in_obs.is_empty(), "{in_obs:?}");
 }
 
 #[test]

@@ -32,6 +32,7 @@
 //! every `jobs` level).
 
 use crate::masks::NmPattern;
+use crate::obs;
 use crate::pruning::{
     alps, magnitude, sparsegpt, wanda, LayerProblem, MaskOracle, PrunedLayer, Regime,
 };
@@ -41,7 +42,6 @@ use crate::util::tensor::Mat;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
 
 /// One independent layer prune job.
 pub struct LayerTask {
@@ -270,8 +270,13 @@ pub fn run_layer_tasks(
     spec: &PruneSpec,
     oracle: &dyn MaskOracle,
 ) -> Result<Vec<LayerOutcome>> {
+    let run_span =
+        obs::span("executor.run").kv("tasks", tasks.len()).kv("jobs", spec.jobs);
     let plan = plan_batches(&tasks, spec, oracle);
     for group in &plan.groups {
+        let _g = obs::span("executor.group_solve")
+            .kv("pattern", format!("{}:{}", group.pattern.n, group.pattern.m))
+            .kv("members", group.members.len());
         let scores: Vec<Mat> = group
             .members
             .iter()
@@ -287,10 +292,11 @@ pub fn run_layer_tasks(
     let alps_cfg = alps::AlpsCfg::default();
     // Never park more workers than there are tasks.
     let jobs = effective_jobs(spec.jobs).min(tasks.len());
+    let parent = run_span.id();
     if jobs <= 1 {
         return tasks
             .iter()
-            .map(|t| run_task(t, spec, oracle, &alps_cfg))
+            .map(|t| run_task(t, spec, oracle, &alps_cfg, parent))
             .collect();
     }
 
@@ -305,7 +311,11 @@ pub fn run_layer_tasks(
                     if i >= tasks.len() {
                         break;
                     }
-                    let out = run_task(&tasks[i], spec, oracle, alps_cfg);
+                    obs::metrics::gauge_set(
+                        "executor.queue_depth",
+                        (tasks.len() - i) as f64,
+                    );
+                    let out = run_task(&tasks[i], spec, oracle, alps_cfg, parent);
                     *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
                 });
             }
@@ -356,6 +366,8 @@ pub fn run_layer_feed(
     sink: &(dyn Fn(usize, LayerOutcome) -> Result<()> + Sync),
     on_fail: &(dyn Fn() + Sync),
 ) -> Result<()> {
+    let feed_span = obs::span("executor.feed").kv("jobs", spec.jobs);
+    let parent = feed_span.id();
     let alps_cfg = alps::AlpsCfg::default();
     let jobs = effective_jobs(spec.jobs);
     let failed = std::sync::atomic::AtomicBool::new(false);
@@ -379,7 +391,7 @@ pub fn run_layer_feed(
                 }
                 Some(Ok(item)) => item,
             };
-            let done = run_task(&item.task, spec, oracle, &alps_cfg)
+            let done = run_task(&item.task, spec, oracle, &alps_cfg, parent)
                 .and_then(|out| sink(item.index, out));
             drop(item.guard); // release budget AFTER the sink hand-off
             if let Err(e) = done {
@@ -410,10 +422,12 @@ fn run_task(
     spec: &PruneSpec,
     oracle: &dyn MaskOracle,
     alps_cfg: &alps::AlpsCfg,
+    parent: obs::SpanId,
 ) -> Result<LayerOutcome> {
-    // lint: allow(wall-clock) -- per-layer wall_secs is timing telemetry,
-    // stripped from the report bytes the determinism contract covers.
-    let t0 = Instant::now();
+    // Per-layer wall_secs is timing telemetry, stripped from the report
+    // bytes the determinism contract covers.
+    let _span = obs::span_at("executor.layer", parent).kv("layer", &task.problem.name);
+    let t0 = obs::clock::Stopwatch::start();
     let p = &task.problem;
     let regime = match spec.structure {
         Structure::Transposable => Regime::Transposable(oracle),
@@ -465,7 +479,7 @@ fn run_task(
         pattern: p.pattern,
         recon_error: pruned.recon_error,
         sparsity: 1.0 - kept as f64 / pruned.mask.data.len().max(1) as f64,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs: t0.secs(),
     };
     Ok(LayerOutcome { report, w: pruned.w, mask: pruned.mask, safeguard_hits })
 }

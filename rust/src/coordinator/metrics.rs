@@ -1,9 +1,9 @@
 //! Run metrics: structured key/value collection serialized to JSON, used
 //! by the CLI, examples and benches to report paper-shaped tables.
 
+use crate::obs;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::time::Instant;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -58,6 +58,11 @@ impl Metrics {
         for (k, v) in scalars.into_iter().chain(strings).chain(series) {
             all.insert(k, v);
         }
+        // When the obs registry has been fed this run (--metrics), merge
+        // it under a reserved key so one file carries both views.
+        if obs::metrics::enabled() && !obs::metrics::is_empty() {
+            all.insert("obs".to_string(), obs::metrics::to_json());
+        }
         Json::Obj(all)
     }
 
@@ -70,18 +75,19 @@ impl Metrics {
     }
 }
 
-/// Wall-clock timer with (name, seconds) reporting.
+/// Wall-clock timer with (name, seconds) reporting. Thin wrapper over
+/// [`obs::clock::Stopwatch`], the crate's sanctioned clock.
 pub struct Timer {
-    start: Instant,
+    sw: obs::clock::Stopwatch,
 }
 
 impl Timer {
     pub fn start() -> Self {
-        Timer { start: Instant::now() }
+        Timer { sw: obs::clock::Stopwatch::start() }
     }
 
     pub fn secs(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.sw.secs()
     }
 }
 

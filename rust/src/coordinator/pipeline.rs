@@ -142,9 +142,9 @@ pub fn run_pooled(
     oracle: &dyn MaskOracle,
     metrics: &mut Metrics,
 ) -> Result<PruneReport> {
-    // lint: allow(wall-clock) -- wall_secs is timing telemetry, stripped
-    // from the report bytes the determinism contract covers.
-    let t0 = std::time::Instant::now();
+    // wall_secs is timing telemetry, stripped from the report bytes the
+    // determinism contract covers.
+    let t0 = crate::obs::clock::Stopwatch::start();
     let stats_before = oracle.stats();
     // Engine counters: the whole pool when one was provided, else the
     // runtime engine (calibration, eval, and the oracle's solves when
@@ -186,7 +186,7 @@ pub fn run_pooled(
         layers,
         model_sparsity: state.sparsity(),
         perplexity,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs: t0.secs(),
         engine_exec_calls: engine_stats.exec_calls,
         engine_exec_secs: engine_stats.exec_secs(),
         stream_peak_bytes,

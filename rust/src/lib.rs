@@ -50,6 +50,7 @@ pub mod data;
 pub mod eval;
 pub mod masks;
 pub mod model;
+pub mod obs;
 pub mod pruning;
 #[cfg(feature = "backend-xla")]
 pub mod runtime;

@@ -25,6 +25,10 @@
 //!                                 --checkpoint DIR [--layer NAME] runs
 //!                                 a real sharded-checkpoint layer.
 //!                                 --batch B --threads T --trials K
+//!   validate-trace FILE           check a `--trace` output file is a
+//!                                 well-formed Chrome trace-event JSON
+//!                                 document (matched B/E pairs per
+//!                                 thread; loadable at ui.perfetto.dev)
 //!   train    [opts]               multi-step sparse training loop:
 //!                                 dense shadow weights, SR-STE decay,
 //!                                 periodic mask re-solves through the
@@ -68,6 +72,14 @@
 //!                     (default artifacts/reports/prune_report.json)
 //!   --json            also print the PruneReport JSON to stdout
 //!
+//! Observability (any command; see rust/README.md "Observability"):
+//!   --trace FILE      record spans and write a Chrome trace-event /
+//!                     Perfetto JSON file at exit (ui.perfetto.dev)
+//!   --metrics FILE    record the typed metrics registry (counters,
+//!                     gauges, histograms) and write it as JSON at exit
+//! Both are bit-invisible: every report is byte-identical with them
+//! on or off.
+//!
 //! Streaming options (prune / prune-ckpt — see rust/README.md
 //! "Streaming & memory budgets"):
 //!   --stream            prune out-of-core: prefetch layers from the
@@ -100,7 +112,8 @@ use tsenor::model::finetune;
 use tsenor::model::ModelState;
 #[cfg(feature = "backend-xla")]
 use tsenor::pruning::MaskService;
-use tsenor::pruning::{CpuOracle, LayerProblem, MaskDispatcher, MaskOracle};
+use tsenor::obs;
+use tsenor::pruning::{CpuOracle, LayerProblem, MaskDispatcher, MaskOracle, ServiceStats};
 #[cfg(feature = "backend-xla")]
 use tsenor::runtime::client::ModelRuntime;
 #[cfg(feature = "backend-xla")]
@@ -252,6 +265,77 @@ fn bool_flag(args: &Args, name: &str) -> Result<Option<bool>> {
             bail!("--{name} takes no value (or true|false), got '{other}'")
         }
     }
+}
+
+/// Where `--trace` / `--metrics` exports go at command exit. Presence
+/// of a path is what arms the corresponding obs subsystem; both stay
+/// fully disabled (no clock reads, no allocation) otherwise.
+struct ObsOut {
+    trace: Option<PathBuf>,
+    metrics: Option<PathBuf>,
+}
+
+fn obs_setup(args: &Args) -> ObsOut {
+    let trace = args.opts.get("trace").map(PathBuf::from);
+    let metrics = args.opts.get("metrics").map(PathBuf::from);
+    obs::trace::set_enabled(trace.is_some());
+    obs::metrics::set_enabled(metrics.is_some());
+    ObsOut { trace, metrics }
+}
+
+/// Write the armed exports once the command finished. Runs after the
+/// command returns so every span guard has dropped (the trace would
+/// otherwise report unclosed spans).
+fn obs_finish(out: &ObsOut) -> Result<()> {
+    if let Some(path) = &out.trace {
+        obs::trace::write_chrome_trace(path)?;
+        println!("  trace -> {}", path.display());
+    }
+    if let Some(path) = &out.metrics {
+        obs::metrics::write(path)?;
+        println!("  metrics -> {}", path.display());
+    }
+    Ok(())
+}
+
+/// Dispatcher coalescing stats, reported once: recorded into the obs
+/// metrics registry (the machine-readable path `--metrics` exports) and
+/// printed in the familiar human form. `prune` and `train` both route
+/// through here so the two outputs can never drift apart.
+fn report_service_stats(s: &ServiceStats) {
+    obs::metrics::counter_add("service.dispatches", s.dispatches);
+    obs::metrics::counter_add("service.coalesced_requests", s.coalesced_requests);
+    obs::metrics::counter_add("service.singleton_requests", s.singleton_requests);
+    obs::metrics::counter_add("service.window_expiries", s.window_expiries);
+    obs::metrics::counter_add("service.dispatched_blocks", s.dispatched_blocks);
+    obs::metrics::counter_add("service.bucket_blocks", s.bucket_blocks);
+    obs::metrics::gauge_set("service.fill_rate", s.fill_rate());
+    println!(
+        "  service: {} dispatches ({} coalesced, {} singleton), bucket fill {:.0}%",
+        s.dispatches,
+        s.coalesced_requests,
+        s.singleton_requests,
+        100.0 * s.fill_rate()
+    );
+}
+
+/// `validate-trace FILE`: parse and structurally check a `--trace`
+/// output file (the same validator `tests/obs_trace.rs` pins down).
+fn cmd_validate_trace(args: &Args) -> Result<()> {
+    let path = args
+        .opts
+        .get("file")
+        .cloned()
+        .or_else(|| args.flags.first().cloned())
+        .context("validate-trace: usage `validate-trace FILE` (or --file FILE)")?;
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("validate-trace: read {path}"))?;
+    let doc = tsenor::util::json::parse(&text)
+        .with_context(|| format!("validate-trace: parse {path}"))?;
+    obs::trace::validate_chrome_trace(&doc)?;
+    let events = doc.req("traceEvents")?.as_arr().map_or(0, |a| a.len());
+    println!("{path}: valid Chrome trace ({events} events)");
+    Ok(())
 }
 
 /// Overlay `--stream*` flags onto the spec. Streaming turns on when
@@ -494,14 +578,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
     let report = pipeline::run_pooled(&rt, Some(&pool), &spec, oracle, &mut metrics)?;
     print!("{}", report.render());
     if let Some(d) = &dispatcher {
-        let s = d.dispatch_stats();
-        println!(
-            "  service: {} dispatches ({} coalesced, {} singleton), bucket fill {:.0}%",
-            s.dispatches,
-            s.coalesced_requests,
-            s.singleton_requests,
-            100.0 * s.fill_rate()
-        );
+        report_service_stats(&d.dispatch_stats());
     }
     if pool.len() > 1 {
         let es = pool.stats();
@@ -949,14 +1026,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let report = tsenor::train::run_training(&spec, &dispatcher)?;
     print!("{}", report.render());
-    let s = dispatcher.dispatch_stats();
-    println!(
-        "  service: {} dispatches ({} coalesced, {} singleton), bucket fill {:.0}%",
-        s.dispatches,
-        s.coalesced_requests,
-        s.singleton_requests,
-        100.0 * s.fill_rate()
-    );
+    report_service_stats(&dispatcher.dispatch_stats());
     if let Some(path) = args.opts.get("report") {
         report.write(Path::new(path))?;
         println!("  report -> {path}");
@@ -973,6 +1043,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = parse_args();
+    let obs_out = obs_setup(&args);
     match args.cmd.as_str() {
         "info" => cmd_info(&args),
         "solve" => cmd_solve(&args),
@@ -983,9 +1054,12 @@ fn main() -> Result<()> {
         "prune-ckpt" => cmd_prune_ckpt(&args),
         "train-step" => cmd_train_step(&args),
         "train" => cmd_train(&args),
+        "validate-trace" => cmd_validate_trace(&args),
         other => bail!(
             "unknown command '{other}' \
-             (info|solve|prune|eval|finetune|shard|prune-ckpt|train-step|train)"
+             (info|solve|prune|eval|finetune|shard|prune-ckpt|train-step|train|\
+              validate-trace)"
         ),
-    }
+    }?;
+    obs_finish(&obs_out)
 }

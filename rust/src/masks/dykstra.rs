@@ -10,6 +10,7 @@
 //! polynomial, ~1.5e-7 rel err) — the libm exp was the hot-loop
 //! bottleneck (see EXPERIMENTS.md §Perf iteration log).
 
+use crate::obs;
 use crate::util::fastmath::exp_approx;
 use crate::util::tensor::{Blocks, BlocksView};
 
@@ -134,6 +135,8 @@ pub fn solve_batch<'a>(
     iters: usize,
 ) -> Blocks {
     let absw = absw.into();
+    // Work volume telemetry: one unit = one block x one Dykstra sweep.
+    obs::metrics::counter_add("dykstra.block_iters", (absw.b * iters) as u64);
     match absw.m {
         4 => solve_batch_m::<4>(absw, n, tau, iters),
         8 => solve_batch_m::<8>(absw, n, tau, iters),

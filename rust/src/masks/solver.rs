@@ -7,6 +7,7 @@
 //! the pure-CPU methods so the algorithm layer stays runtime-free.
 
 use crate::masks::{binm, dykstra, exact, pdlp, random, rounding, two_approx, NmPattern};
+use crate::obs;
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, BlocksView, Mat};
 use anyhow::{bail, Result};
 
@@ -134,9 +135,24 @@ pub(crate) fn validate_scores(scores: BlocksView<'_>) -> Result<()> {
 /// purpose: it skips `validate_scores` (its callers pre-screen), so
 /// exposing it would reopen the silent-NaN hole the public entry
 /// points close.
-fn tsenor_cpu(scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
+fn tsenor_cpu(
+    scores: BlocksView<'_>,
+    n: usize,
+    cfg: &SolveCfg,
+    parent: obs::SpanId,
+) -> Blocks {
+    // Phase spans sample the chunk holding global block 0 only
+    // (`block_offset == 0`), so the span tree is identical at every
+    // `threads` level: exactly one dykstra + one round span per batch
+    // solve, parented on the batch span whichever thread runs them.
+    let probe = cfg.block_offset == 0;
     let tau = batch_tau(scores, cfg);
-    let frac = dykstra::solve_batch(scores, n, tau, cfg.dykstra.iters);
+    let frac = {
+        let _s = probe
+            .then(|| obs::span_at("solve.dykstra", parent).kv("blocks", scores.b));
+        dykstra::solve_batch(scores, n, tau, cfg.dykstra.iters)
+    };
+    let _s = probe.then(|| obs::span_at("solve.round", parent).kv("blocks", scores.b));
     rounding::round_batch(&frac, scores, n, cfg.ls_steps)
 }
 
@@ -168,9 +184,15 @@ fn entropy_simple(scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
 /// Method dispatch over a (pre-validated) borrowed batch. Infallible:
 /// every failure mode is screened by `validate_scores` at the public
 /// entry points, so per-chunk workers need no error plumbing.
-fn dispatch(method: Method, scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) -> Blocks {
+fn dispatch(
+    method: Method,
+    scores: BlocksView<'_>,
+    n: usize,
+    cfg: &SolveCfg,
+    parent: obs::SpanId,
+) -> Blocks {
     match method {
-        Method::Tsenor => tsenor_cpu(scores, n, cfg),
+        Method::Tsenor => tsenor_cpu(scores, n, cfg, parent),
         Method::TsenorScalar => tsenor_scalar(scores, n, cfg),
         Method::EntropySimple => entropy_simple(scores, n, cfg),
         Method::TwoApprox => two_approx::solve_batch(scores, n),
@@ -186,8 +208,13 @@ fn dispatch(method: Method, scores: BlocksView<'_>, n: usize, cfg: &SolveCfg) ->
 /// Solve a batch of blocks with the chosen method (single thread).
 /// Errors on non-finite scores, naming the block.
 pub fn solve_blocks(method: Method, scores: &Blocks, n: usize, cfg: &SolveCfg) -> Result<Blocks> {
+    let span = obs::span("solve.batch")
+        .kv("method", method.name())
+        .kv("b", scores.b)
+        .kv("m", scores.m)
+        .kv("n", n);
     validate_scores(scores.view())?;
-    Ok(dispatch(method, scores.view(), n, cfg))
+    Ok(dispatch(method, scores.view(), n, cfg, span.id()))
 }
 
 /// Solve a batch with `cfg.threads`-way fan-out over block chunks.
@@ -208,6 +235,12 @@ pub fn solve_blocks_parallel(
     if threads == 1 || scores.b < 2 * threads {
         return solve_blocks(method, scores, n, cfg);
     }
+    let span = obs::span("solve.batch")
+        .kv("method", method.name())
+        .kv("b", scores.b)
+        .kv("m", scores.m)
+        .kv("n", n);
+    let parent = span.id();
     validate_scores(scores.view())?;
     // Normalize tau by the GLOBAL max so chunking is invisible.
     let mut cfg = *cfg;
@@ -238,7 +271,7 @@ pub fn solve_blocks_parallel(
             let mut cfg = *cfg;
             cfg.block_offset += start;
             scope.spawn(move || {
-                let solved = dispatch(method, sub, n, &cfg);
+                let solved = dispatch(method, sub, n, &cfg, parent);
                 dst.copy_from_slice(&solved.data);
             });
         }

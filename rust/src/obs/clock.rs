@@ -1,0 +1,64 @@
+//! Clock ownership for the whole crate.
+//!
+//! `obs::clock` is the single sanctioned consumer of wall-clock time:
+//! tsenor-lint's wall-clock rule whitelists exactly this directory plus
+//! `main.rs`, so every `Instant::now` in the engine funnels through here.
+//! Everything derived from these clocks is *timing-class*: it may appear
+//! in traces, metrics and human logs, but must never steer a decision
+//! that changes report bytes. The one deliberate exception is
+//! [`raw_now`], which exists for dispatcher deadline arithmetic that is
+//! proven bit-invisible by the jobs-1-vs-4 differential tests.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide trace epoch. All trace timestamps are nanoseconds
+/// relative to the first read, so every span in a run shares an origin.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Anchor the trace epoch now (idempotent). Called when tracing is
+/// enabled so timestamps start near zero rather than at the first span.
+pub fn init_epoch() {
+    let _ = epoch();
+}
+
+/// Nanoseconds since the process trace epoch.
+pub fn nanos_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+/// Raw monotonic clock read, for scheduling deadlines (the dispatcher's
+/// coalescing windows). Callers wanting a duration should prefer
+/// [`Stopwatch`]; this exists so `Instant` arithmetic that predates
+/// `obs/` keeps one auditable entry point.
+pub fn raw_now() -> Instant {
+    Instant::now()
+}
+
+/// Duration measurement: `let sw = Stopwatch::start(); ...; sw.secs()`.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// The instant this stopwatch was started (for span timestamps).
+    pub fn started_at(&self) -> Instant {
+        self.start
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn nanos(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}

@@ -1,0 +1,188 @@
+//! Typed metrics registry: counters, gauges, fixed-bucket histograms.
+//!
+//! All three families live in `BTreeMap`s (tsenor-lint's
+//! hash-collections rule applies to obs like everywhere else), so
+//! [`to_json`] output is deterministically ordered. Like tracing, the
+//! registry is off by default and every entry point is a no-op when
+//! off; when on it only accumulates — nothing reads it back into a
+//! scheduling decision, so reports are byte-identical either way.
+//!
+//! Naming convention (see README "Observability"): dotted
+//! `component.metric` names, with histogram key dimensions appended as
+//! `.m{M}.b{bucket}` segments, e.g. `solver.latency_secs.m4.b64`.
+
+use crate::util::json::{obj, Json};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Schema tag stamped on `--metrics` output and on `BENCH_*.json`
+/// (see `benches/common.rs`): both speak the same field names —
+/// `wall_secs`, `masks_per_sec`, `gflops` — under this version tag.
+pub const SCHEMA: &str = "tsenor-metrics-v1";
+
+/// Default latency bounds (seconds) for solver/engine histograms:
+/// decade buckets from 10µs to 10s, plus the implicit overflow bucket.
+pub const LATENCY_SECS: &[f64] = &[1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0];
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Gauge {
+    value: f64,
+    max: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Hist {
+    bounds: &'static [f64],
+    /// One count per bound (upper-inclusive, Prometheus `le` style)
+    /// plus a final overflow bucket.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, Gauge>,
+    hists: BTreeMap<String, Hist>,
+}
+
+static REG: Mutex<Registry> = Mutex::new(Registry {
+    counters: BTreeMap::new(),
+    gauges: BTreeMap::new(),
+    hists: BTreeMap::new(),
+});
+
+/// Add `v` to a monotonically-increasing counter.
+pub fn counter_add(name: &str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REG.lock().unwrap();
+    *reg.counters.entry(name.to_string()).or_insert(0) += v;
+}
+
+/// Set a level gauge (queue depth, pool bytes). Tracks the high-water
+/// mark alongside the last value.
+pub fn gauge_set(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REG.lock().unwrap();
+    let g = reg.gauges.entry(name.to_string()).or_default();
+    g.value = v;
+    if v > g.max {
+        g.max = v;
+    }
+}
+
+/// Adjust an occupancy gauge by `delta` (±1 around a busy region).
+pub fn gauge_add(name: &str, delta: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REG.lock().unwrap();
+    let g = reg.gauges.entry(name.to_string()).or_default();
+    g.value += delta;
+    if g.value > g.max {
+        g.max = g.value;
+    }
+}
+
+/// Record `v` into a fixed-bucket histogram. Bounds are upper-inclusive
+/// (`v <= le` lands in the bucket); values above the last bound land in
+/// the overflow bucket. Non-finite values are dropped. The first
+/// `observe` for a name fixes its bounds; later calls with different
+/// bounds are recorded against the original buckets.
+pub fn observe(name: &str, bounds: &'static [f64], v: f64) {
+    if !enabled() || !v.is_finite() {
+        return;
+    }
+    let mut reg = REG.lock().unwrap();
+    let h = reg.hists.entry(name.to_string()).or_insert_with(|| Hist {
+        bounds,
+        counts: vec![0; bounds.len() + 1],
+        count: 0,
+        sum: 0.0,
+    });
+    let idx = h.bounds.iter().position(|&le| v <= le).unwrap_or(h.bounds.len());
+    h.counts[idx] += 1;
+    h.count += 1;
+    h.sum += v;
+}
+
+/// True when nothing has been recorded (registry off or untouched).
+pub fn is_empty() -> bool {
+    let reg = REG.lock().unwrap();
+    reg.counters.is_empty() && reg.gauges.is_empty() && reg.hists.is_empty()
+}
+
+/// Clear every recorded value (test isolation).
+pub fn reset() {
+    let mut reg = REG.lock().unwrap();
+    reg.counters.clear();
+    reg.gauges.clear();
+    reg.hists.clear();
+}
+
+/// Render the registry as deterministic JSON under the shared schema.
+pub fn to_json() -> Json {
+    let reg = REG.lock().unwrap();
+    let counters = Json::Obj(
+        reg.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+    );
+    let gauges = Json::Obj(
+        reg.gauges
+            .iter()
+            .map(|(k, g)| {
+                let body = obj(vec![("max", Json::Num(g.max)), ("value", Json::Num(g.value))]);
+                (k.clone(), body)
+            })
+            .collect(),
+    );
+    let hists = Json::Obj(
+        reg.hists
+            .iter()
+            .map(|(k, h)| {
+                let mut buckets = Vec::with_capacity(h.counts.len());
+                for (i, c) in h.counts.iter().enumerate() {
+                    let le = match h.bounds.get(i) {
+                        Some(b) => Json::Num(*b),
+                        None => Json::Str("+inf".to_string()),
+                    };
+                    buckets.push(obj(vec![("count", Json::Num(*c as f64)), ("le", le)]));
+                }
+                let body = obj(vec![
+                    ("buckets", Json::Arr(buckets)),
+                    ("count", Json::Num(h.count as f64)),
+                    ("sum", Json::Num(h.sum)),
+                ]);
+                (k.clone(), body)
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", hists),
+        ("schema", Json::Str(SCHEMA.to_string())),
+    ])
+}
+
+/// Write the registry to `path` as pretty JSON.
+pub fn write(path: &Path) -> Result<()> {
+    std::fs::write(path, to_json().to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("metrics: write {}: {e}", path.display()))
+}

@@ -1,0 +1,25 @@
+//! Unified observability: span tracing, typed metrics, clock ownership.
+//!
+//! Three submodules, one contract:
+//!
+//! - [`clock`] — the crate's single sanctioned wall-clock consumer
+//!   (tsenor-lint's wall-clock whitelist is `src/obs/` + `src/main.rs`).
+//! - [`trace`] — RAII span guards with explicit cross-thread parent
+//!   handles, per-thread buffers, Chrome trace-event / Perfetto export
+//!   (`--trace out.json`; open at ui.perfetto.dev).
+//! - [`metrics`] — counters / gauges / fixed-bucket histograms in
+//!   `BTreeMap` order (`--metrics out.json`, merged into
+//!   `Metrics::to_json` under the `"obs"` key).
+//!
+//! The contract is **bit-invisibility**: observability reads clocks and
+//! appends to buffers, but never steers scheduling or changes report
+//! bytes. Stripped reports are byte-identical with tracing/metrics on
+//! or off at every `--jobs` / `--threads`, pinned by
+//! `tests/obs_trace.rs` differential tests and the `obs-smoke` CI leg.
+//! Everything obs emits is timing-class output.
+
+pub mod clock;
+pub mod metrics;
+pub mod trace;
+
+pub use trace::{span, span_at, SpanGuard, SpanId};

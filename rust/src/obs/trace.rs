@@ -1,0 +1,310 @@
+//! Span-based tracer with Chrome trace-event / Perfetto JSON export.
+//!
+//! Spans are RAII guards ([`span`] / [`span_at`]) recorded into
+//! per-thread buffers: each thread owns an `Arc<ThreadBuf>` whose vec is
+//! behind an uncontended mutex, registered once in a global list and
+//! drained at run end by [`snapshot`] / [`write_chrome_trace`]. Guards
+//! nest through a thread-local stack; fan-outs across
+//! `std::thread::scope` pass an explicit parent handle (`SpanId`) so the
+//! logical tree survives thread hops even though Chrome B/E nesting is
+//! per-thread.
+//!
+//! Tracing is off by default and, when off, every entry point is a
+//! no-op: no clock reads, no allocation, no buffer registration. When
+//! on, it reads clocks and appends to thread-local buffers — it never
+//! takes a decision, so reports are byte-identical either way (pinned by
+//! `tests/obs_trace.rs` and the `obs-smoke` CI leg).
+
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Global span-event sequence. A span's open draws one value (its id)
+/// and its close draws another; within a thread the sequence is
+/// program-ordered, which is what makes B/E emission unambiguous even
+/// at equal timestamps.
+static NEXT_SEQ: AtomicU64 = AtomicU64::new(1);
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+/// Turn tracing on or off. Intended for process startup (`--trace`) and
+/// test setup; flipping it mid-run only affects spans opened afterwards.
+pub fn set_enabled(on: bool) {
+    if on {
+        super::clock::init_epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Handle identifying a live (or finished) span, passed across threads
+/// to parent spans opened inside scoped fan-outs. `SpanId::ROOT` means
+/// "no parent".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    pub const ROOT: SpanId = SpanId(0);
+}
+
+/// One finished span, as drained by [`snapshot`].
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// Unique id; doubles as the open-event sequence number.
+    pub id: u64,
+    /// Parent span id, or 0 for a root span.
+    pub parent: u64,
+    /// Trace-local thread id (1-based, assigned on first span).
+    pub tid: u64,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Close-event sequence number (always > `id`).
+    pub end_seq: u64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    recs: Mutex<Vec<SpanRec>>,
+}
+
+thread_local! {
+    static BUF: RefCell<Option<Arc<ThreadBuf>>> = const { RefCell::new(None) };
+    static STACK: RefCell<Vec<SpanId>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_buf<R>(f: impl FnOnce(&ThreadBuf) -> R) -> R {
+    BUF.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let buf = Arc::new(ThreadBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                recs: Mutex::new(Vec::new()),
+            });
+            REGISTRY.lock().unwrap().push(Arc::clone(&buf));
+            *slot = Some(buf);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Open a span whose parent is the innermost span open on this thread
+/// (or none). Returns a no-op guard when tracing is off.
+pub fn span(name: &'static str) -> SpanGuard {
+    let parent = STACK.with(|s| s.borrow().last().copied()).unwrap_or(SpanId::ROOT);
+    span_at(name, parent)
+}
+
+/// Open a span under an explicit parent handle — the form used when a
+/// fan-out worker continues a span tree started on another thread.
+pub fn span_at(name: &'static str, parent: SpanId) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, id: SpanId::ROOT, parent, t0: None, args: Vec::new() };
+    }
+    let id = SpanId(NEXT_SEQ.fetch_add(1, Ordering::Relaxed));
+    STACK.with(|s| s.borrow_mut().push(id));
+    SpanGuard { name, id, parent, t0: Some(Instant::now()), args: Vec::new() }
+}
+
+/// RAII span guard: records a `SpanRec` into this thread's buffer on
+/// drop. Attach key/values with [`SpanGuard::kv`]; pass [`SpanGuard::id`]
+/// into workers as the explicit parent for [`span_at`].
+pub struct SpanGuard {
+    name: &'static str,
+    id: SpanId,
+    parent: SpanId,
+    /// `None` when tracing was off at open time (inactive guard).
+    t0: Option<Instant>,
+    args: Vec<(&'static str, String)>,
+}
+
+impl SpanGuard {
+    pub fn kv(mut self, key: &'static str, value: impl std::fmt::Display) -> Self {
+        if self.t0.is_some() {
+            self.args.push((key, value.to_string()));
+        }
+        self
+    }
+
+    pub fn id(&self) -> SpanId {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(t0) = self.t0 else { return };
+        let t1 = Instant::now();
+        let end_seq = NEXT_SEQ.fetch_add(1, Ordering::Relaxed);
+        STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            if st.last() == Some(&self.id) {
+                st.pop();
+            } else {
+                // Out-of-order drop (guard moved / stored): unlink anyway.
+                st.retain(|&x| x != self.id);
+            }
+        });
+        with_buf(|buf| {
+            let rec = SpanRec {
+                name: self.name,
+                id: self.id.0,
+                parent: self.parent.0,
+                tid: buf.tid,
+                t0_ns: super::clock::nanos_since_epoch(t0),
+                t1_ns: super::clock::nanos_since_epoch(t1),
+                end_seq,
+                args: std::mem::take(&mut self.args),
+            };
+            buf.recs.lock().unwrap().push(rec);
+        });
+    }
+}
+
+/// Copy out every finished span from every thread, sorted by id
+/// (creation order). Threads may keep recording afterwards.
+pub fn snapshot() -> Vec<SpanRec> {
+    let bufs: Vec<Arc<ThreadBuf>> = REGISTRY.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for buf in &bufs {
+        out.extend(buf.recs.lock().unwrap().iter().cloned());
+    }
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+/// Drop all recorded spans (test isolation). Ids keep counting up.
+pub fn reset() {
+    for buf in REGISTRY.lock().unwrap().iter() {
+        buf.recs.lock().unwrap().clear();
+    }
+}
+
+/// Ids of `recs` members belonging to the tree rooted at `root`,
+/// including `root` itself. Tests use this to ignore spans recorded by
+/// concurrently-running tests sharing the global tracer.
+pub fn descendants(recs: &[SpanRec], root: SpanId) -> Vec<u64> {
+    let mut keep: Vec<u64> = vec![root.0];
+    // recs is creation-ordered and a child's id is always greater than
+    // its parent's, so one forward pass closes the tree.
+    let mut sorted: Vec<&SpanRec> = recs.iter().collect();
+    sorted.sort_by_key(|r| r.id);
+    for r in sorted {
+        if r.id != root.0 && keep.contains(&r.parent) {
+            keep.push(r.id);
+        }
+    }
+    keep
+}
+
+/// Render every recorded span as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`), loadable at ui.perfetto.dev. Each span
+/// becomes a matched `B`/`E` pair on its recording thread; the span id
+/// and logical parent ride in the `B` event's `args` so cross-thread
+/// trees stay reconstructable.
+pub fn to_chrome_trace() -> Json {
+    let recs = snapshot();
+    // (sort key, event) — key orders by time, then by the global program
+    // sequence so equal-timestamp events (zero-length spans, same-tick
+    // siblings) still nest correctly per thread.
+    let mut events: Vec<((u64, u64, u64), Json)> = Vec::with_capacity(recs.len() * 2);
+    for r in &recs {
+        let mut args: Vec<(&str, Json)> = vec![
+            ("id", Json::Str(r.id.to_string())),
+            ("parent", Json::Str(r.parent.to_string())),
+        ];
+        for (k, v) in &r.args {
+            args.push((k, Json::Str(v.clone())));
+        }
+        let begin = obj(vec![
+            ("name", Json::Str(r.name.to_string())),
+            ("ph", Json::Str("B".to_string())),
+            ("ts", Json::Num(r.t0_ns as f64 / 1000.0)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(r.tid as f64)),
+            ("args", obj(args)),
+        ]);
+        let end = obj(vec![
+            ("name", Json::Str(r.name.to_string())),
+            ("ph", Json::Str("E".to_string())),
+            ("ts", Json::Num(r.t1_ns as f64 / 1000.0)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(r.tid as f64)),
+        ]);
+        events.push(((r.t0_ns, r.tid, r.id), begin));
+        events.push(((r.t1_ns, r.tid, r.end_seq), end));
+    }
+    events.sort_by_key(|e| e.0);
+    obj(vec![("traceEvents", Json::Arr(events.into_iter().map(|(_, e)| e).collect()))])
+}
+
+/// Write the Chrome trace to `path`.
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    let json = to_chrome_trace();
+    std::fs::write(path, json.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("trace: write {}: {e}", path.display()))
+}
+
+/// Validate a parsed Chrome trace-event document: a `traceEvents` array
+/// whose members carry `name`/`ph`/`ts`/`pid`/`tid`, with every `B`
+/// matched by a same-named `E` on the same (pid, tid) in stack order.
+pub fn validate_chrome_trace(doc: &Json) -> Result<()> {
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("trace: traceEvents is not an array"))?;
+    let mut stacks: std::collections::BTreeMap<(u64, u64), Vec<String>> =
+        std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} name is not a string"))?
+            .to_string();
+        let ph = ev
+            .req("ph")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} ph is not a string"))?;
+        if ev.req("ts")?.as_f64().is_none() {
+            bail!("trace: event {i} ts is not a number");
+        }
+        let pid = ev
+            .req("pid")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} pid is not a number"))?
+            as u64;
+        let tid = ev
+            .req("tid")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("trace: event {i} tid is not a number"))?
+            as u64;
+        let stack = stacks.entry((pid, tid)).or_default();
+        match ph {
+            "B" => stack.push(name),
+            "E" => match stack.pop() {
+                Some(open) if open == name => {}
+                Some(open) => bail!("trace: event {i} closes '{name}' but '{open}' is open"),
+                None => bail!("trace: event {i} closes '{name}' with no span open"),
+            },
+            other => bail!("trace: event {i} has unsupported ph '{other}'"),
+        }
+    }
+    for ((pid, tid), stack) in &stacks {
+        if let Some(open) = stack.last() {
+            bail!("trace: span '{open}' on pid {pid} tid {tid} never closes");
+        }
+    }
+    Ok(())
+}

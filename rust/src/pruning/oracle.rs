@@ -37,6 +37,7 @@
 
 use crate::masks::solver::{self, Method, SolveCfg};
 use crate::masks::{dykstra, rounding, NmPattern};
+use crate::obs;
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -358,7 +359,22 @@ impl CpuOracle {
             (score.rows / pattern.m) * (score.cols / pattern.m),
             Ordering::Relaxed,
         );
-        solver::solve_matrix(self.method, score, pattern, &self.cfg)
+        let sw = obs::metrics::enabled().then(obs::clock::Stopwatch::start);
+        let out = solver::solve_matrix(self.method, score, pattern, &self.cfg);
+        if let Some(sw) = sw {
+            self.observe_latency(pattern.m, sw.secs());
+        }
+        out
+    }
+
+    /// Record one solve's latency under the (M, bucket size) histogram
+    /// key — `bucket` is this backend's batching quantum (0 = unbucketed).
+    fn observe_latency(&self, m: usize, secs: f64) {
+        obs::metrics::observe(
+            &format!("solver.latency_secs.m{m}.b{}", self.batch_quantum),
+            obs::metrics::LATENCY_SECS,
+            secs,
+        );
     }
 }
 
@@ -406,12 +422,17 @@ impl MaskService for CpuOracle {
         {
             return scores.iter().map(|s| self.solve_now(s, pattern)).collect();
         }
+        let _span = obs::span("oracle.coalesced").kv("members", scores.len());
+        let sw = obs::metrics::enabled().then(obs::clock::Stopwatch::start);
         let (scaled, raw, counts) =
             concat_scaled_blocks(scores, pattern.m, self.cfg.dykstra.tau0)?;
         let frac = dykstra::solve_batch(&scaled, pattern.n, 1.0, self.cfg.dykstra.iters);
         let masks = rounding::round_batch(&frac, &raw, pattern.n, self.cfg.ls_steps);
         self.calls.fetch_add(scores.len(), Ordering::Relaxed);
         self.blocks.fetch_add(raw.b, Ordering::Relaxed);
+        if let Some(sw) = sw {
+            self.observe_latency(pattern.m, sw.secs());
+        }
         Ok(split_group_masks(&masks, scores, &counts))
     }
 }

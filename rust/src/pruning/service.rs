@@ -30,6 +30,7 @@
 //! into results — enforced by `tests/service_differential.rs`.
 
 use crate::masks::NmPattern;
+use crate::obs;
 use crate::pruning::oracle::{
     MaskService, MaskTicket, OracleStats, TicketCell, TicketDriver,
 };
@@ -213,7 +214,11 @@ impl<'a> MaskDispatcher<'a> {
         if self.cfg.max_in_flight > 0 && st.dispatching >= self.cfg.max_in_flight {
             return Action::Sleep(MAX_NAP);
         }
-        let now = Instant::now();
+        // Deadline check via the sanctioned clock. This read steers only
+        // WHEN a batch dispatches, never WHAT it computes — coalescing
+        // is bit-invisible (per-matrix tau), so the differential tests
+        // still hold.
+        let now = obs::clock::raw_now();
         // First-fit scan in arrival order: every queued request is
         // sub-bucket (`submit` fast-paths the rest), so they accumulate
         // into at most one open group per pattern.
@@ -284,12 +289,19 @@ impl<'a> MaskDispatcher<'a> {
     /// driving caller's thread, outside the state lock.
     fn execute(&self, batch: Vec<Pending>, quantum: usize, expired: bool) {
         let pattern = batch[0].pattern;
-        let scores: Vec<&Mat> = batch.iter().map(|r| &r.score).collect();
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.backend.submit_coalesced(&scores, pattern)
-        }));
-
         let real_blocks: u64 = batch.iter().map(|r| r.blocks as u64).sum();
+        let scores: Vec<&Mat> = batch.iter().map(|r| &r.score).collect();
+        let outcome = {
+            let _span = obs::span("service.dispatch")
+                .kv("role", "leader")
+                .kv("requests", batch.len())
+                .kv("blocks", real_blocks)
+                .kv("expired", expired);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.backend.submit_coalesced(&scores, pattern)
+            }))
+        };
+
         let c = &self.counters;
         c.dispatches.fetch_add(1, Ordering::Relaxed);
         if batch.len() >= 2 {
@@ -307,6 +319,12 @@ impl<'a> MaskDispatcher<'a> {
             real_blocks.div_ceil(quantum as u64) * quantum as u64
         };
         c.bucket.fetch_add(capacity, Ordering::Relaxed);
+        if capacity > 0 {
+            obs::metrics::gauge_set(
+                "service.fill_rate",
+                real_blocks as f64 / capacity as f64,
+            );
+        }
 
         let panic_payload = match outcome {
             Ok(Ok(masks)) if masks.len() == batch.len() => {
@@ -365,6 +383,9 @@ impl<'a> MaskDispatcher<'a> {
 
 impl TicketDriver for MaskDispatcher<'_> {
     fn drive(&self, cell: &Arc<TicketCell>) -> Result<Mat> {
+        // Covers the caller's whole wait. A nested `service.dispatch`
+        // span means this caller led a batch; none means it followed.
+        let _span = obs::span("service.drive");
         loop {
             if let Some(result) = cell.try_take() {
                 return result;
@@ -426,9 +447,15 @@ impl MaskService for MaskDispatcher<'_> {
             // Synchronous backends solve inside submit, so resolve the
             // ticket here — the in-flight slot frees before we return,
             // and (like `execute`) a backend panic cannot leak the slot.
-            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                self.backend.submit(score, pattern).wait()
-            }));
+            let outcome = {
+                let _span = obs::span("service.dispatch")
+                    .kv("role", "singleton")
+                    .kv("requests", 1)
+                    .kv("blocks", if blocks == usize::MAX { 0 } else { blocks });
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.backend.submit(score, pattern).wait()
+                }))
+            };
             if self.cfg.max_in_flight > 0 {
                 let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
                 st.dispatching -= 1;
@@ -439,17 +466,19 @@ impl MaskService for MaskDispatcher<'_> {
                 Err(payload) => std::panic::resume_unwind(payload),
             };
         }
+        let _span = obs::span("service.submit").kv("blocks", blocks);
         let cell = TicketCell::new();
         let pending = Pending {
             score: score.clone(),
             pattern,
             blocks,
-            deadline: Instant::now() + Duration::from_millis(self.cfg.window_ms),
+            deadline: obs::clock::raw_now() + Duration::from_millis(self.cfg.window_ms),
             cell: cell.clone(),
         };
         {
             let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
             st.queue.push_back(pending);
+            obs::metrics::gauge_set("service.queue_depth", st.queue.len() as f64);
         }
         self.wakeup.notify_all();
         MaskTicket::queued(cell, self)

@@ -17,6 +17,7 @@
 //! round-robin, sharing no wrapper objects — concurrent dykstra solves
 //! run on distinct clients instead of queueing on one global mutex.
 
+use crate::obs;
 use crate::runtime::artifacts::{DykstraArtifact, Manifest};
 use crate::runtime::literal;
 use crate::util::tensor::{Blocks, Mat};
@@ -114,6 +115,8 @@ pub struct Engine {
     pjrt_lock: Mutex<()>,
     exec_nanos: AtomicU64,
     exec_calls: AtomicU64,
+    /// Pool slot index (0 for standalone engines) — span telemetry only.
+    slot: usize,
 }
 
 // SAFETY: the non-`Send`/`Sync` fields are the xla-rs wrapper types
@@ -144,6 +147,7 @@ impl Engine {
             pjrt_lock: Mutex::new(()),
             exec_nanos: AtomicU64::new(0),
             exec_calls: AtomicU64::new(0),
+            slot: 0,
         })
     }
 
@@ -181,6 +185,9 @@ impl Engine {
         .with_context(|| format!("parse HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = {
+            let _span = obs::span("engine.compile")
+                .kv("file", rel_file)
+                .kv("slot", self.slot);
             let _pjrt = self.pjrt_lock.lock().unwrap_or_else(|e| e.into_inner());
             let compiled = Arc::new(Executable(
                 self.client
@@ -200,18 +207,23 @@ impl Engine {
         let exe = self.executable(rel_file)?;
         // A poisoned lock only means a sibling caller panicked mid-call;
         // the engine holds no state between calls, so keep going.
-        let (outs, elapsed) = {
+        let (outs, nanos) = {
             let _pjrt = self.pjrt_lock.lock().unwrap_or_else(|e| e.into_inner());
             // Timed under the lock so exec_nanos measures PJRT execution
             // alone, not time spent queueing behind sibling callers.
-            // lint: allow(wall-clock) -- exec_nanos is timing telemetry; it is
-            // stripped from every report the determinism contract covers.
-            let t0 = std::time::Instant::now();
-            let outs = exe.run(inputs)?;
-            (outs, t0.elapsed())
+            // exec_nanos is timing telemetry, stripped from every report
+            // the determinism contract covers.
+            let _span = obs::span("engine.exec")
+                .kv("file", rel_file)
+                .kv("slot", self.slot);
+            obs::metrics::gauge_add("engine.busy_slots", 1.0);
+            let t0 = obs::clock::Stopwatch::start();
+            let outs = exe.run(inputs);
+            let nanos = t0.nanos();
+            obs::metrics::gauge_add("engine.busy_slots", -1.0);
+            (outs?, nanos)
         };
-        self.exec_nanos
-            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.exec_nanos.fetch_add(nanos, Ordering::Relaxed);
         self.exec_calls.fetch_add(1, Ordering::Relaxed);
         Ok(outs)
     }
@@ -251,7 +263,11 @@ impl EnginePool {
     /// `slots` clients (`0` is clamped to 1).
     pub fn new(manifest: &Manifest, slots: usize) -> Result<Self> {
         let engines = (0..slots.max(1))
-            .map(|_| Engine::new(manifest))
+            .map(|i| {
+                let mut e = Engine::new(manifest)?;
+                e.slot = i;
+                Ok(e)
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(EnginePool { engines, next: AtomicUsize::new(0) })
     }

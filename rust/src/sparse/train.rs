@@ -27,7 +27,6 @@ use crate::sparse::nm::{
 };
 use crate::util::tensor::Mat;
 use anyhow::{ensure, Context, Result};
-use std::time::Instant;
 
 /// Training-step workload knobs.
 #[derive(Clone, Copy, Debug)]
@@ -145,13 +144,13 @@ impl TrainStepReport {
 
 fn time_mean(trials: usize, mut f: impl FnMut()) -> f64 {
     let trials = trials.max(1);
-    // lint: allow(wall-clock) -- train-step is a timing workload; its
-    // numeric checks, not its timings, pin correctness.
-    let t0 = Instant::now();
+    // train-step is a timing workload; its numeric checks, not its
+    // timings, pin correctness.
+    let t0 = crate::obs::clock::Stopwatch::start();
     for _ in 0..trials {
         f();
     }
-    t0.elapsed().as_secs_f64() / trials as f64
+    t0.secs() / trials as f64
 }
 
 /// Assert two products agree bit-for-bit (the engine's determinism

@@ -19,6 +19,7 @@
 //! largest single layer (validated up front by the driver).
 
 use super::store::{StoreReader, TensorEntry};
+use crate::obs;
 use crate::util::tensor::Mat;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -42,6 +43,7 @@ struct PoolState {
 
 impl BytePool {
     pub fn new(budget: u64) -> Arc<BytePool> {
+        obs::metrics::gauge_set("prefetch.pool_budget", budget as f64);
         Arc::new(BytePool {
             budget,
             state: Mutex::new(PoolState { used: 0, turn: 0 }),
@@ -56,6 +58,8 @@ impl BytePool {
     /// budget fits; returns a guard releasing the bytes on drop, or
     /// `None` if the pool was closed (run aborting).
     pub fn acquire(self: &Arc<Self>, ticket: u64, bytes: u64) -> Option<PoolGuard> {
+        // Covers the whole admission wait (turn + budget headroom).
+        let _span = obs::span("prefetch.admit").kv("bytes", bytes);
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if self.closed.load(Ordering::Relaxed) {
@@ -66,6 +70,7 @@ impl BytePool {
                 st.used += bytes;
                 st.turn += 1;
                 self.peak.fetch_max(st.used, Ordering::Relaxed);
+                obs::metrics::gauge_set("prefetch.pool_bytes", st.used as f64);
                 self.changed.notify_all();
                 return Some(PoolGuard { pool: Arc::clone(self), bytes });
             }
@@ -76,6 +81,8 @@ impl BytePool {
     fn release(&self, bytes: u64) {
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.used = st.used.saturating_sub(bytes);
+        obs::metrics::counter_add("prefetch.evictions", 1);
+        obs::metrics::gauge_set("prefetch.pool_bytes", st.used as f64);
         self.changed.notify_all();
     }
 
@@ -270,10 +277,15 @@ fn io_loop(store: &StoreReader, shared: &Shared, pool: &Arc<BytePool>) {
         else {
             return; // pool closed: aborting
         };
-        let res = store
-            .read_dense(entry)
-            .map(|w| (w, guard))
-            .map_err(|e| anyhow!(e).context(format!("prefetch layer '{}'", entry.name)));
+        let res = {
+            let _span = obs::span("prefetch.read")
+                .kv("layer", &entry.name)
+                .kv("bytes", entry.dense_bytes());
+            store
+                .read_dense(entry)
+                .map(|w| (w, guard))
+                .map_err(|e| anyhow!(e).context(format!("prefetch layer '{}'", entry.name)))
+        };
         let failed = res.is_err();
         {
             let mut st = shared.ready.lock().unwrap_or_else(|e| e.into_inner());

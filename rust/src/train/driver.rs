@@ -33,6 +33,7 @@
 use crate::coordinator::executor::effective_jobs;
 use crate::data::workload;
 use crate::masks::NmPattern;
+use crate::obs;
 use crate::pruning::magnitude::standard_nm_mask;
 use crate::pruning::MaskService;
 use crate::sparse::gemm::matmul_dense_baseline_threaded;
@@ -47,7 +48,6 @@ use crate::train::sgd::srste_update;
 use crate::util::rng::splitmix64;
 use crate::util::tensor::Mat;
 use anyhow::{anyhow, ensure, Context, Result};
-use std::time::Instant;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -147,7 +147,9 @@ fn layer_step(
     step: usize,
     resolve: Option<Resolve>,
     ctx: &StepCtx,
+    parent: obs::SpanId,
 ) -> Result<StepOut> {
+    let lspan = obs::span_at("train.layer", parent).kv("layer", layer);
     let mut out = StepOut {
         loss: 0.0,
         flips: 0,
@@ -162,11 +164,15 @@ fn layer_step(
     };
 
     if let Some(resolve) = resolve {
-        // lint: allow(wall-clock) -- resolve_secs is timing telemetry,
-        // stripped from the TrainReport's determinism-checked bytes.
-        let t0 = Instant::now();
-        let (fwd, bwd) = solve_masks(state, resolve, ctx)?;
-        out.resolve_secs = t0.elapsed().as_secs_f64();
+        // resolve_secs is timing telemetry, stripped from the
+        // TrainReport's determinism-checked bytes.
+        let (fwd, bwd) = {
+            let _s = obs::span_at("train.resolve", lspan.id());
+            let t0 = obs::clock::Stopwatch::start();
+            let fb = solve_masks(state, resolve, ctx)?;
+            out.resolve_secs = t0.secs();
+            fb
+        };
         out.resolves = 1;
         if let Some(old) = &state.fwd_mask {
             out.flip_elems = old.data.len() as u64;
@@ -197,7 +203,10 @@ fn layer_step(
     let batch_seed = stream_seed(ctx.seed, layer as u64, 1000 + step as u64);
     let x = workload::structured_matrix(ctx.batch, ctx.rows, batch_seed);
     let y_star = matmul_dense_baseline_threaded(&x, &state.teacher, ctx.threads);
-    let y = spmm_threaded(&x, &rec, ctx.threads);
+    let y = {
+        let _s = obs::span_at("train.fwd", lspan.id());
+        spmm_threaded(&x, &rec, ctx.threads)
+    };
     let diff = y.sub(&y_star);
     out.loss = diff.frob_sq() / (ctx.batch * ctx.cols) as f64;
     let g = diff.scale(1.0 / ctx.batch as f32);
@@ -205,17 +214,21 @@ fn layer_step(
     // Backward-data: decode-free from the transposable record, or (for
     // the bi-directional baseline) a forward spmm on the separate
     // backward mask's record over W^T.
-    let dx = match &state.bwd_mask {
-        Some(bwd) => {
-            let wt = state.w.transpose();
-            let brec = NmCompressed::compress(&wt.hadamard(bwd), bwd, n, m)
-                .context("train: backward mask is not column-group N:M")?;
-            spmm_threaded(&g, &brec, ctx.threads)
+    let dx = {
+        let _s = obs::span_at("train.bwd_data", lspan.id());
+        match &state.bwd_mask {
+            Some(bwd) => {
+                let wt = state.w.transpose();
+                let brec = NmCompressed::compress(&wt.hadamard(bwd), bwd, n, m)
+                    .context("train: backward mask is not column-group N:M")?;
+                spmm_threaded(&g, &brec, ctx.threads)
+            }
+            None => spmm_transposed_threaded(&g, &rec, ctx.threads),
         }
-        None => spmm_transposed_threaded(&g, &rec, ctx.threads),
     };
     out.dx_fnv = fnv_mat(FNV_OFFSET, &dx);
 
+    let bwspan = obs::span_at("train.bwd_weight", lspan.id());
     let dw = match ctx.backward {
         BackwardMode::Dense => spmm_backward_weight_threaded(&x, &g, &rec, ctx.threads),
         BackwardMode::Mvue => {
@@ -241,6 +254,7 @@ fn layer_step(
             dw
         }
     };
+    drop(bwspan);
     srste_update(&mut state.w, &dw, mask, ctx.lr, ctx.lambda_w);
     Ok(out)
 }
@@ -276,9 +290,13 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         schedule.name()
     );
 
-    // lint: allow(wall-clock) -- wall_secs is timing telemetry, stripped
-    // from the TrainReport's determinism-checked bytes.
-    let t0 = Instant::now();
+    // wall_secs is timing telemetry, stripped from the TrainReport's
+    // determinism-checked bytes.
+    let t0 = obs::clock::Stopwatch::start();
+    let run_span = obs::span("train.run")
+        .kv("steps", spec.steps)
+        .kv("layers", spec.layers)
+        .kv("schedule", schedule.name());
     let stats_before = service.service_stats();
     let ctx = StepCtx {
         service,
@@ -312,9 +330,11 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
     let mut dx_checksum = FNV_OFFSET;
     let mut total_resolves = 0u64;
     for step in 0..spec.steps {
-        // lint: allow(wall-clock) -- per-step timing telemetry, stripped
-        // from the TrainReport's determinism-checked bytes.
-        let ts = Instant::now();
+        // Per-step timing telemetry, stripped from the TrainReport's
+        // determinism-checked bytes.
+        let ts = obs::clock::Stopwatch::start();
+        let step_span = obs::span_at("train.step", run_span.id()).kv("step", step);
+        let step_id = step_span.id();
         let resolve = schedule.resolve_at(step);
         // Fan the layers over `jobs` workers in contiguous chunks;
         // outcomes come back per chunk and are stitched in layer order,
@@ -330,7 +350,7 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
                 handles.push(sc.spawn(move || -> Result<Vec<StepOut>> {
                     let mut outs = Vec::with_capacity(chunk.len());
                     for (off, state) in chunk.iter_mut().enumerate() {
-                        outs.push(layer_step(state, start + off, step, resolve, ctx)?);
+                        outs.push(layer_step(state, start + off, step, resolve, ctx, step_id)?);
                     }
                     Ok(outs)
                 }));
@@ -363,7 +383,7 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
             resolves,
             mvue_rel_var: if mnorm > 0.0 { merr / mnorm } else { 0.0 },
             resolve_secs: outs.iter().map(|o| o.resolve_secs).sum(),
-            step_secs: ts.elapsed().as_secs_f64(),
+            step_secs: ts.secs(),
         });
     }
 
@@ -379,7 +399,7 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         final_sparsity,
         total_resolves,
         oracle_stats: service.service_stats().since(&stats_before),
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs: t0.secs(),
     })
 }
 

@@ -1,0 +1,378 @@
+//! The obs subsystem's non-negotiable invariants, in-process:
+//!
+//! * span-tree determinism — same spec + seed produce identical span
+//!   names/parents/counts at any `jobs`/`threads` level (timestamps,
+//!   ids, tids and args excluded);
+//! * bit-invisibility — the stripped `TrainReport` is byte-identical
+//!   with tracing + metrics on vs off;
+//! * histogram bucket-edge semantics (upper-inclusive `le`, overflow
+//!   bucket, non-finite drops);
+//! * the Chrome trace-event validator accepts real exports and rejects
+//!   each malformed shape.
+//!
+//! The tracer and metrics registry are process-global, so every test
+//! serializes on one mutex and filters spans to its own subtree
+//! (`trace::descendants`) — `cargo test` runs test fns concurrently.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use tsenor::coordinator::executor::{run_layer_tasks, LayerTask};
+use tsenor::data::workload;
+use tsenor::masks::solver::{self, Method, SolveCfg};
+use tsenor::obs::metrics;
+use tsenor::obs::trace::{self, SpanId, SpanRec};
+use tsenor::pruning::{CpuOracle, LayerProblem};
+use tsenor::spec::{Framework, PruneSpec, TrainSpec};
+use tsenor::train::run_training;
+use tsenor::util::json::{self, obj, Json};
+use tsenor::util::tensor::{partition_blocks, Mat};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize on the global obs state and leave it disabled and empty
+/// afterwards, whatever the test did.
+fn with_obs<R>(f: impl FnOnce() -> R) -> R {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    trace::set_enabled(false);
+    metrics::set_enabled(false);
+    trace::reset();
+    metrics::reset();
+    let out = f();
+    trace::set_enabled(false);
+    metrics::set_enabled(false);
+    trace::reset();
+    metrics::reset();
+    out
+}
+
+/// The tree under `root` as a sorted multiset of name-paths. Everything
+/// timing- or thread-shaped (timestamps, ids, tids, args) is excluded —
+/// this is exactly the worker-count-invariant part of a trace.
+fn shape_under(recs: &[SpanRec], root: SpanId) -> Vec<String> {
+    let names: BTreeMap<u64, &str> = recs.iter().map(|r| (r.id, r.name)).collect();
+    let parents: BTreeMap<u64, u64> = recs.iter().map(|r| (r.id, r.parent)).collect();
+    let keep = trace::descendants(recs, root);
+    let mut paths: Vec<String> = keep
+        .iter()
+        .filter(|&&id| id != root.0)
+        .map(|&id| {
+            let mut path = Vec::new();
+            let mut cur = id;
+            while cur != root.0 {
+                path.push(names[&cur]);
+                cur = parents[&cur];
+            }
+            path.reverse();
+            path.join("/")
+        })
+        .collect();
+    paths.sort();
+    paths
+}
+
+fn train_spec(jobs: usize, threads: usize) -> TrainSpec {
+    let mut spec = TrainSpec::new()
+        .shape(16, 16)
+        .batch(4)
+        .pattern(4, 8)
+        .layers(3)
+        .steps(3)
+        .freq(2)
+        .jobs(jobs)
+        .threads(threads);
+    spec.seed = 7;
+    spec
+}
+
+fn traced_train_shape(jobs: usize, threads: usize) -> Vec<String> {
+    trace::reset();
+    trace::set_enabled(true);
+    let root = trace::span("test.train");
+    let root_id = root.id();
+    let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+    run_training(&train_spec(jobs, threads), &oracle).unwrap();
+    drop(root);
+    trace::set_enabled(false);
+    shape_under(&trace::snapshot(), root_id)
+}
+
+#[test]
+fn train_span_tree_is_identical_at_any_worker_count() {
+    with_obs(|| {
+        let serial = traced_train_shape(1, 1);
+        let wide = traced_train_shape(4, 2);
+        // The tree is real: steps, per-layer work, re-solves reaching
+        // the solver's phase spans.
+        assert!(serial.iter().any(|p| p.ends_with("train.resolve")), "{serial:?}");
+        assert!(serial.iter().any(|p| p.ends_with("solve.dykstra")), "{serial:?}");
+        assert_eq!(
+            serial.iter().filter(|p| p.ends_with("train.layer")).count(),
+            3 * 3,
+            "one train.layer span per (layer, step): {serial:?}"
+        );
+        assert_eq!(serial, wide, "span tree drifted across jobs/threads");
+    });
+}
+
+#[test]
+fn executor_span_tree_is_identical_at_any_jobs() {
+    let run = |jobs: usize| -> Vec<String> {
+        trace::reset();
+        trace::set_enabled(true);
+        let root = trace::span("test.executor");
+        let root_id = root.id();
+        let mut spec = PruneSpec::new(Framework::Alps).pattern(4, 8);
+        spec.jobs = jobs;
+        let tasks: Vec<LayerTask> = (0..4)
+            .map(|i| {
+                let w = workload::structured_matrix(16, 16, 60 + i);
+                LayerTask::new(LayerProblem {
+                    name: format!("layers.{i:02}.w"),
+                    w,
+                    gram: Mat::eye(16),
+                    pattern: spec.pattern,
+                    lambda_rel: tsenor::stream::LAMBDA_REL,
+                })
+            })
+            .collect();
+        let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+        run_layer_tasks(tasks, &spec, &oracle).unwrap();
+        drop(root);
+        trace::set_enabled(false);
+        shape_under(&trace::snapshot(), root_id)
+    };
+    with_obs(|| {
+        let serial = run(1);
+        let wide = run(4);
+        assert!(serial.iter().any(|p| p.ends_with("executor.run")), "{serial:?}");
+        assert_eq!(
+            serial.iter().filter(|p| p.ends_with("executor.layer")).count(),
+            4,
+            "one executor.layer span per task: {serial:?}"
+        );
+        assert_eq!(serial, wide, "executor span tree drifted across jobs");
+    });
+}
+
+#[test]
+fn solver_phase_spans_sample_exactly_one_chunk() {
+    // `solve.dykstra`/`solve.round` probe the chunk holding global
+    // block 0 only, so the tree has exactly one of each at ANY thread
+    // count — not one per worker.
+    with_obs(|| {
+        let w = workload::structured_matrix(32, 64, 5);
+        let blocks = partition_blocks(&w.abs(), 8);
+        let run = |threads: usize| -> Vec<String> {
+            trace::reset();
+            trace::set_enabled(true);
+            let root = trace::span("test.solve");
+            let root_id = root.id();
+            let cfg = SolveCfg { threads, ..Default::default() };
+            solver::solve_blocks_parallel(Method::Tsenor, &blocks, 4, &cfg).unwrap();
+            drop(root);
+            trace::set_enabled(false);
+            shape_under(&trace::snapshot(), root_id)
+        };
+        let serial = run(1);
+        let wide = run(4);
+        assert_eq!(
+            serial,
+            vec![
+                "solve.batch".to_string(),
+                "solve.batch/solve.dykstra".to_string(),
+                "solve.batch/solve.round".to_string(),
+            ],
+            "{serial:?}"
+        );
+        assert_eq!(serial, wide, "solver span tree drifted across threads");
+    });
+}
+
+#[test]
+fn explicit_parent_survives_thread_hops() {
+    with_obs(|| {
+        trace::set_enabled(true);
+        let root = trace::span("hop.root");
+        let id = root.id();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let _child = trace::span_at("hop.child", id).kv("k", "v");
+            });
+        });
+        drop(root);
+        let recs = trace::snapshot();
+        let child = recs.iter().find(|r| r.name == "hop.child").unwrap();
+        let parent = recs.iter().find(|r| r.name == "hop.root").unwrap();
+        assert_eq!(child.parent, parent.id, "cross-thread parent handle lost");
+        assert_ne!(child.tid, parent.tid, "scoped thread must get its own tid");
+        assert_eq!(child.args, vec![("k", "v".to_string())]);
+    });
+}
+
+#[test]
+fn tracing_and_metrics_are_bit_invisible_to_stripped_reports() {
+    with_obs(|| {
+        let spec = train_spec(3, 2);
+        let off = {
+            let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            run_training(&spec, &oracle).unwrap().to_json_stripped().to_string_pretty()
+        };
+        trace::set_enabled(true);
+        metrics::set_enabled(true);
+        let on = {
+            let oracle = CpuOracle::new(Method::Tsenor, SolveCfg::default());
+            run_training(&spec, &oracle).unwrap().to_json_stripped().to_string_pretty()
+        };
+        trace::set_enabled(false);
+        metrics::set_enabled(false);
+        assert!(!metrics::is_empty(), "the traced run must have recorded metrics");
+        assert_eq!(off, on, "observability leaked into the stripped report bytes");
+    });
+}
+
+#[test]
+fn histogram_buckets_are_upper_inclusive_with_overflow() {
+    with_obs(|| {
+        metrics::set_enabled(true);
+        static BOUNDS: &[f64] = &[1.0, 2.0, 5.0];
+        // Exact bounds land IN their bucket (`v <= le`), just-above
+        // spills to the next, beyond-last lands in overflow, and
+        // non-finite observations are dropped entirely.
+        for v in [1.0, -3.0, 1.000_000_1, 2.0, 5.0, 5.1, f64::NAN, f64::INFINITY] {
+            metrics::observe("test.hist", BOUNDS, v);
+        }
+        let doc = metrics::to_json();
+        let hist = doc.req("histograms").unwrap().req("test.hist").unwrap();
+        assert_eq!(hist.req("count").unwrap().as_f64().unwrap(), 6.0);
+        let buckets = hist.req("buckets").unwrap().as_arr().unwrap();
+        let counts: Vec<f64> = buckets
+            .iter()
+            .map(|b| b.req("count").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(counts, vec![2.0, 2.0, 1.0, 1.0], "{doc:?}");
+        assert_eq!(
+            buckets[3].req("le").unwrap().as_str(),
+            Some("+inf"),
+            "overflow bucket must serialize a string le (inf is not valid JSON)"
+        );
+        let sum = hist.req("sum").unwrap().as_f64().unwrap();
+        assert!((sum - (1.0 - 3.0 + 1.000_000_1 + 2.0 + 5.0 + 5.1)).abs() < 1e-9);
+        metrics::set_enabled(false);
+    });
+}
+
+#[test]
+fn gauges_track_high_water_marks_and_counters_accumulate() {
+    with_obs(|| {
+        metrics::set_enabled(true);
+        metrics::gauge_set("test.depth", 3.0);
+        metrics::gauge_set("test.depth", 1.0);
+        metrics::gauge_add("test.busy", 1.0);
+        metrics::gauge_add("test.busy", 1.0);
+        metrics::gauge_add("test.busy", -1.0);
+        metrics::counter_add("test.evictions", 2);
+        metrics::counter_add("test.evictions", 3);
+        let doc = metrics::to_json();
+        let depth = doc.req("gauges").unwrap().req("test.depth").unwrap();
+        assert_eq!(depth.req("value").unwrap().as_f64(), Some(1.0));
+        assert_eq!(depth.req("max").unwrap().as_f64(), Some(3.0));
+        let busy = doc.req("gauges").unwrap().req("test.busy").unwrap();
+        assert_eq!(busy.req("value").unwrap().as_f64(), Some(1.0));
+        assert_eq!(busy.req("max").unwrap().as_f64(), Some(2.0));
+        let ev = doc.req("counters").unwrap().req("test.evictions").unwrap();
+        assert_eq!(ev.as_f64(), Some(5.0));
+        assert_eq!(doc.req("schema").unwrap().as_str(), Some(metrics::SCHEMA));
+        metrics::set_enabled(false);
+    });
+}
+
+#[test]
+fn disabled_obs_records_nothing() {
+    with_obs(|| {
+        // Both subsystems off: guards are inert, the registry stays
+        // empty — the zero-overhead contract of the default path.
+        {
+            let _s = trace::span("dead.span").kv("k", 1);
+        }
+        metrics::counter_add("dead.counter", 1);
+        metrics::observe("dead.hist", metrics::LATENCY_SECS, 0.5);
+        assert!(trace::snapshot().is_empty());
+        assert!(metrics::is_empty());
+    });
+}
+
+fn ev(name: &str, ph: &str, ts: f64, tid: f64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(ts)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid)),
+    ])
+}
+
+fn doc(events: Vec<Json>) -> Json {
+    obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[test]
+fn validator_accepts_real_exports_through_a_parse_roundtrip() {
+    with_obs(|| {
+        trace::set_enabled(true);
+        {
+            let outer = trace::span("v.outer").kv("n", 2);
+            let _zero = trace::span_at("v.zero_length", outer.id());
+            // Same-tick sibling + nested child on another thread.
+            let id = outer.id();
+            std::thread::scope(|s| {
+                s.spawn(move || {
+                    let _w = trace::span_at("v.worker", id);
+                });
+            });
+        }
+        trace::set_enabled(false);
+        let exported = trace::to_chrome_trace();
+        trace::validate_chrome_trace(&exported).unwrap();
+        // The file the CLI writes is the pretty rendering; it must
+        // survive a parse and re-validate.
+        let reparsed = json::parse(&exported.to_string_pretty()).unwrap();
+        trace::validate_chrome_trace(&reparsed).unwrap();
+        let events = reparsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2 * trace::snapshot().len(), "one B/E pair per span");
+    });
+}
+
+#[test]
+fn validator_rejects_each_malformed_shape() {
+    // Interleaved threads are fine (stacks are per-tid)...
+    let ok = doc(vec![
+        ev("a", "B", 1.0, 1.0),
+        ev("b", "B", 1.5, 2.0),
+        ev("a", "E", 2.0, 1.0),
+        ev("b", "E", 2.5, 2.0),
+    ]);
+    trace::validate_chrome_trace(&ok).unwrap();
+    // ...but every broken shape is named.
+    let close_without_open = doc(vec![ev("a", "E", 1.0, 1.0)]);
+    let err = trace::validate_chrome_trace(&close_without_open).unwrap_err().to_string();
+    assert!(err.contains("no span open"), "{err}");
+    let mismatched = doc(vec![ev("a", "B", 1.0, 1.0), ev("b", "E", 2.0, 1.0)]);
+    let err = trace::validate_chrome_trace(&mismatched).unwrap_err().to_string();
+    assert!(err.contains("closes 'b'") && err.contains("'a' is open"), "{err}");
+    let unclosed = doc(vec![ev("a", "B", 1.0, 1.0)]);
+    let err = trace::validate_chrome_trace(&unclosed).unwrap_err().to_string();
+    assert!(err.contains("never closes"), "{err}");
+    let unknown_ph = doc(vec![ev("a", "X", 1.0, 1.0)]);
+    let err = trace::validate_chrome_trace(&unknown_ph).unwrap_err().to_string();
+    assert!(err.contains("unsupported ph"), "{err}");
+    // Missing required keys are errors, not skips.
+    let missing_ts = doc(vec![obj(vec![
+        ("name", Json::Str("a".to_string())),
+        ("ph", Json::Str("B".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(1.0)),
+    ])]);
+    assert!(trace::validate_chrome_trace(&missing_ts).is_err());
+    let not_an_array = obj(vec![("traceEvents", Json::Num(3.0))]);
+    assert!(trace::validate_chrome_trace(&not_an_array).is_err());
+}
