@@ -19,14 +19,24 @@
 //! * `group-div-assert`  — no truncating `x / m` group count without a
 //!   divisibility guard (`% m`) within a few lines: the silent
 //!   group-truncation class.
-//! * `thread-spawn`      — no raw `thread::spawn`/`thread::scope`
-//!   outside the sanctioned fan-out sites, so all parallelism funnels
-//!   through auditable choke points.
+//! * `raw-sync`          — no `std::sync` / `std::thread` primitives
+//!   outside the `crate::sync` facade (`src/sync/`), so every lock,
+//!   condvar, atomic and spawn compiles against loom's model-checked
+//!   types under `--cfg loom`. Active in test code too: a test that
+//!   sidesteps the facade exercises primitives the models never see.
+//! * `condvar-loop`      — every condvar `wait` / `wait_timeout` must
+//!   be a predicate-checking `_while` variant or sit inside a
+//!   `loop`/`while` that rechecks the guard: the spurious-wakeup /
+//!   lost-wakeup class. (Syntactic: loop containment approximates
+//!   "rechecks the guard".)
 //!
-//! Per-site escapes: `// lint: allow(<rule>) -- <reason>` suppresses
-//! that rule on the escape's line and the four lines below it. An
-//! escape with a missing reason or an unknown rule is itself a finding
-//! (`malformed-escape`); a file `syn` cannot parse is a `parse-error`.
+//! Per-site escapes: a line comment `lint: allow(<rule>) -- <reason>`
+//! (with the usual `//` opener) suppresses that rule on its own line
+//! and the four lines below it. An escape with a missing reason or an
+//! unknown rule is itself a finding (`malformed-escape`); an escape
+//! whose window no longer contains a match for the named rule is one
+//! too (`unused-escape`), so stale suppressions cannot linger; a file
+//! `syn` cannot parse is a `parse-error`.
 //!
 //! Comments are invisible to `syn`, so the SAFETY and escape checks
 //! run on the raw line table and join with AST spans (1-based, via
@@ -39,14 +49,15 @@ use std::path::{Path, PathBuf};
 use syn::spanned::Spanned;
 use syn::visit::Visit;
 
-/// Rules a `// lint: allow(...)` escape may name.
+/// Rules a `lint: allow(..)` escape comment may name.
 pub const RULES: &[&str] = &[
     "safety-comment",
     "hash-collections",
     "wall-clock",
     "rng-modulo",
     "group-div-assert",
-    "thread-spawn",
+    "raw-sync",
+    "condvar-loop",
 ];
 
 /// A single lint violation at `file:line`.
@@ -78,9 +89,17 @@ pub struct Config {
     /// entry points), this is just `src/obs/` plus the CLI banner
     /// timings in `main.rs` — every other module routes through obs.
     pub wall_clock_modules: &'static [&'static str],
-    /// The sanctioned thread fan-out sites. Everything else must route
-    /// through them (ROADMAP item 5's single choke point).
-    pub thread_spawn_modules: &'static [&'static str],
+    /// The one place raw `std::sync`/`std::thread` primitives may
+    /// appear: the facade that swaps them for loom's model-checked
+    /// types under `--cfg loom`. This subsumes the old `thread-spawn`
+    /// site-whitelist — the former sanctioned fan-out sites now import
+    /// `crate::sync::thread` like everyone else.
+    pub raw_sync_modules: &'static [&'static str],
+    /// Files exempt from `condvar-loop`. Only the facade definition
+    /// itself: its loom-side `Condvar` wrapper delegates bare waits by
+    /// construction (the `_while` loops live one layer up, in the
+    /// wrapper methods the rest of the crate calls).
+    pub condvar_loop_modules: &'static [&'static str],
 }
 
 impl Default for Config {
@@ -88,11 +107,8 @@ impl Default for Config {
         Config {
             hash_allowlist: &[],
             wall_clock_modules: &["src/main.rs", "src/obs/"],
-            thread_spawn_modules: &[
-                "src/sparse/mod.rs",
-                "src/coordinator/executor.rs",
-                "src/stream/prefetch.rs",
-            ],
+            raw_sync_modules: &["src/sync/"],
+            condvar_loop_modules: &["src/sync/mod.rs"],
         }
     }
 }
@@ -146,14 +162,29 @@ pub fn lint_source(file: &Path, text: &str, cfg: &Config) -> Vec<Finding> {
                 file,
                 table: &table,
                 wall_clock_exempt: suffix_match(file, cfg.wall_clock_modules),
-                thread_spawn_exempt: suffix_match(file, cfg.thread_spawn_modules),
+                raw_sync_exempt: suffix_match(file, cfg.raw_sync_modules),
+                condvar_loop_exempt: suffix_match(file, cfg.condvar_loop_modules),
                 hash_exempt: suffix_match(file, cfg.hash_allowlist),
                 test_depth: 0,
+                loop_depth: 0,
                 stmt_starts: Vec::new(),
                 findings: Vec::new(),
             };
             linter.visit_file(&ast);
             findings.extend(linter.findings);
+            // Only a fully-walked file can prove an escape unused — on
+            // a parse error every escape would be trivially unmatched.
+            for esc in table.unused_escapes() {
+                findings.push(Finding {
+                    file: file.to_path_buf(),
+                    line: esc.line,
+                    rule: "unused-escape",
+                    message: format!(
+                        "escape for `{}` matches nothing on its line or the {} below; delete it",
+                        esc.rule, ESCAPE_SPAN
+                    ),
+                });
+            }
         }
         Err(err) => findings.push(Finding {
             file: file.to_path_buf(),
@@ -184,9 +215,18 @@ fn suffix_match(file: &Path, suffixes: &[&str]) -> bool {
 
 struct LineTable {
     lines: Vec<String>,
-    /// `(rule, escape line)` — the escape covers its own line plus the
-    /// four below, so it sits naturally directly above the flagged code.
-    escapes: Vec<(String, usize)>,
+    /// Escapes cover their own line plus the four below, so each sits
+    /// naturally directly above the flagged code.
+    escapes: Vec<Escape>,
+}
+
+struct Escape {
+    rule: String,
+    line: usize,
+    /// Whether any finding was actually suppressed through this escape
+    /// (set by [`LineTable::allowed`]; a never-consulted escape is the
+    /// `unused-escape` finding).
+    used: std::cell::Cell<bool>,
 }
 
 const ESCAPE_SPAN: usize = 4;
@@ -199,8 +239,15 @@ impl LineTable {
         for (idx, raw) in lines.iter().enumerate() {
             let line = idx + 1;
             let Some(pos) = raw.find("// lint:") else { continue };
+            // The marker inside a string literal (the linter linting
+            // its own scanner) is not an escape.
+            if inside_string_literal(raw, pos) {
+                continue;
+            }
             match parse_escape(&raw[pos + "// lint:".len()..]) {
-                Ok(rule) => escapes.push((rule, line)),
+                Ok(rule) => {
+                    escapes.push(Escape { rule, line, used: std::cell::Cell::new(false) })
+                }
                 Err(why) => findings.push(Finding {
                     file: file.to_path_buf(),
                     line,
@@ -212,10 +259,22 @@ impl LineTable {
         (LineTable { lines, escapes }, findings)
     }
 
+    /// Does an escape for `rule` cover `line`? Marks every covering
+    /// escape as used, so overlapping windows don't misreport the
+    /// second escape as stale.
     fn allowed(&self, rule: &str, line: usize) -> bool {
-        self.escapes
-            .iter()
-            .any(|(r, e)| r == rule && *e <= line && line <= e + ESCAPE_SPAN)
+        let mut hit = false;
+        for esc in &self.escapes {
+            if esc.rule == rule && esc.line <= line && line <= esc.line + ESCAPE_SPAN {
+                esc.used.set(true);
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    fn unused_escapes(&self) -> impl Iterator<Item = &Escape> {
+        self.escapes.iter().filter(|e| !e.used.get())
     }
 
     /// Is `line` (1-based) immediately preceded by a contiguous run of
@@ -261,7 +320,32 @@ fn has_mod_m(line: &str) -> bool {
     false
 }
 
-/// Parse the tail of `// lint:` — must be `allow(<known rule>) -- <reason>`.
+/// Quote-parity heuristic: is byte offset `pos` inside a `"`-delimited
+/// string literal on this line? Good enough for its one job — keeping
+/// the scanner from parsing its own `raw.find(..)` needle as an escape
+/// when the linter lints `lint/src` itself.
+fn inside_string_literal(line: &str, pos: usize) -> bool {
+    let mut in_str = false;
+    let mut backslash = false;
+    for (i, c) in line.char_indices() {
+        if i >= pos {
+            break;
+        }
+        if backslash {
+            backslash = false;
+            continue;
+        }
+        match c {
+            '\\' => backslash = true,
+            '"' => in_str = !in_str,
+            _ => {}
+        }
+    }
+    in_str
+}
+
+/// Parse the tail after the escape marker — must be
+/// `allow(<known rule>) -- <reason>`.
 fn parse_escape(tail: &str) -> Result<String, String> {
     let tail = tail.trim_start();
     let Some(rest) = tail.strip_prefix("allow(") else {
@@ -292,12 +376,19 @@ struct FileLinter<'a> {
     file: &'a Path,
     table: &'a LineTable,
     wall_clock_exempt: bool,
-    thread_spawn_exempt: bool,
+    raw_sync_exempt: bool,
+    condvar_loop_exempt: bool,
     hash_exempt: bool,
     /// Depth inside `#[cfg(test)]` modules / `#[test]` fns — tests may
-    /// legitimately time and spawn, so `wall-clock` and `thread-spawn`
-    /// are suspended there. Every other rule still applies.
+    /// legitimately read the clock, so `wall-clock` is suspended there.
+    /// Every other rule still applies — notably `raw-sync`: tests must
+    /// exercise the same facade-routed primitives the loom models see.
     test_depth: usize,
+    /// Depth inside `loop` / `while` / `for` — a bare condvar wait is
+    /// only tolerable where the enclosing loop rechecks the predicate.
+    /// Reset across closure and nested-fn boundaries: their bodies do
+    /// not run under the lexically enclosing loop.
+    loop_depth: usize,
     /// Start lines of the enclosing statements, innermost last. An
     /// `unsafe` block inside a multi-line statement anchors its SAFETY
     /// lookup at the statement start, not the wrapped `unsafe` token.
@@ -329,22 +420,82 @@ impl FileLinter<'_> {
             format!("{what} lacks an immediately preceding `// SAFETY:` comment"),
         );
     }
+
+    /// Walk a `use` tree flagging any import rooted at `std::sync` or
+    /// `std::thread` — including grouped forms like
+    /// `use std::{sync::Mutex, thread}` and renames.
+    fn check_use_tree(&mut self, tree: &syn::UseTree, prefix: &mut Vec<String>) {
+        let raw_root = prefix.len() >= 2
+            && prefix[0] == "std"
+            && (prefix[1] == "sync" || prefix[1] == "thread");
+        match tree {
+            syn::UseTree::Path(p) => {
+                prefix.push(p.ident.to_string());
+                if prefix.len() == 2 {
+                    // Re-test now that the second segment is known.
+                    self.flag_raw_sync_use(prefix, p.ident.span().start().line);
+                }
+                self.check_use_tree(&p.tree, prefix);
+                prefix.pop();
+            }
+            syn::UseTree::Group(g) => {
+                for item in &g.items {
+                    self.check_use_tree(item, prefix);
+                }
+            }
+            syn::UseTree::Name(n) => {
+                if raw_root {
+                    return; // already flagged at the prefix
+                }
+                prefix.push(n.ident.to_string());
+                self.flag_raw_sync_use(prefix, n.ident.span().start().line);
+                prefix.pop();
+            }
+            syn::UseTree::Rename(r) => {
+                if raw_root {
+                    return;
+                }
+                prefix.push(r.ident.to_string());
+                self.flag_raw_sync_use(prefix, r.ident.span().start().line);
+                prefix.pop();
+            }
+            syn::UseTree::Glob(_) => {}
+        }
+    }
+
+    fn flag_raw_sync_use(&mut self, prefix: &[String], line: usize) {
+        if prefix.len() >= 2
+            && prefix[0] == "std"
+            && (prefix[1] == "sync" || prefix[1] == "thread")
+        {
+            self.flag(
+                "raw-sync",
+                line,
+                format!(
+                    "`std::{}` import outside the `crate::sync` facade; import from \
+                     `crate::sync` so loom models cover it",
+                    prefix[1]
+                ),
+            );
+        }
+    }
 }
 
+/// `cfg(test)` in any composition — `cfg(all(test, not(loom)))`,
+/// `cfg(any(test, ..))` — detected by scanning the attribute's token
+/// stream for a `test` ident at any nesting depth. (A hypothetical
+/// `cfg(not(test))` would also match; nothing in the tree writes one.)
 fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    fn contains_test(tokens: proc_macro2::TokenStream) -> bool {
+        tokens.into_iter().any(|tt| match tt {
+            proc_macro2::TokenTree::Ident(i) => i == "test",
+            proc_macro2::TokenTree::Group(g) => contains_test(g.stream()),
+            _ => false,
+        })
+    }
     attrs.iter().any(|a| {
-        if !a.path().is_ident("cfg") {
-            return false;
-        }
-        let mut test = false;
-        // `cfg(test)` / `cfg(any(test, ..))` — any `test` ident inside.
-        let _ = a.parse_nested_meta(|meta| {
-            if meta.path.is_ident("test") {
-                test = true;
-            }
-            Ok(())
-        });
-        test
+        a.path().is_ident("cfg")
+            && matches!(&a.meta, syn::Meta::List(l) if contains_test(l.tokens.clone()))
     })
 }
 
@@ -410,10 +561,65 @@ impl<'ast> Visit<'ast> for FileLinter<'_> {
         if test {
             self.test_depth += 1;
         }
+        let outer_loops = std::mem::take(&mut self.loop_depth);
         syn::visit::visit_item_fn(self, node);
+        self.loop_depth = outer_loops;
         if test {
             self.test_depth -= 1;
         }
+    }
+
+    fn visit_expr_closure(&mut self, node: &'ast syn::ExprClosure) {
+        let outer_loops = std::mem::take(&mut self.loop_depth);
+        syn::visit::visit_expr_closure(self, node);
+        self.loop_depth = outer_loops;
+    }
+
+    fn visit_expr_loop(&mut self, node: &'ast syn::ExprLoop) {
+        self.loop_depth += 1;
+        syn::visit::visit_expr_loop(self, node);
+        self.loop_depth -= 1;
+    }
+
+    fn visit_expr_while(&mut self, node: &'ast syn::ExprWhile) {
+        self.loop_depth += 1;
+        syn::visit::visit_expr_while(self, node);
+        self.loop_depth -= 1;
+    }
+
+    fn visit_expr_for_loop(&mut self, node: &'ast syn::ExprForLoop) {
+        self.loop_depth += 1;
+        syn::visit::visit_expr_for_loop(self, node);
+        self.loop_depth -= 1;
+    }
+
+    fn visit_item_use(&mut self, node: &'ast syn::ItemUse) {
+        if !self.raw_sync_exempt {
+            let mut prefix = Vec::new();
+            self.check_use_tree(&node.tree, &mut prefix);
+        }
+        syn::visit::visit_item_use(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        // Arity discriminates the condvar waits from domain `wait`s:
+        // `cv.wait(guard)` takes one arg and `cv.wait_timeout(guard, d)`
+        // two, while e.g. `MaskTicket::wait(&self)` is a zero-arg call.
+        // The `_while` variants carry the predicate themselves.
+        let bare_condvar_wait = (node.method == "wait" && node.args.len() == 1)
+            || (node.method == "wait_timeout" && node.args.len() == 2);
+        if !self.condvar_loop_exempt && bare_condvar_wait && self.loop_depth == 0 {
+            self.flag(
+                "condvar-loop",
+                node.method.span().start().line,
+                format!(
+                    "bare `{}` outside a predicate-rechecking loop; use the `_while` \
+                     variant or loop on the guard",
+                    node.method
+                ),
+            );
+        }
+        syn::visit::visit_expr_method_call(self, node);
     }
 
     fn visit_stmt(&mut self, node: &'ast syn::Stmt) {
@@ -446,7 +652,9 @@ impl<'ast> Visit<'ast> for FileLinter<'_> {
 
     fn visit_path(&mut self, node: &'ast syn::Path) {
         let clock = !self.wall_clock_exempt && self.test_depth == 0;
-        let spawn = !self.thread_spawn_exempt && self.test_depth == 0;
+        // Deliberately NOT test-suspended: a test reaching around the
+        // facade runs primitives the loom models never cover.
+        let raw = !self.raw_sync_exempt;
         let segs: Vec<&syn::Ident> = node.segments.iter().map(|s| &s.ident).collect();
         for pair in segs.windows(2) {
             if clock && *pair[0] == "Instant" && *pair[1] == "now" {
@@ -456,12 +664,15 @@ impl<'ast> Visit<'ast> for FileLinter<'_> {
                     "`Instant::now` outside a timing-whitelisted module".to_string(),
                 );
             }
-            let spawnish = *pair[1] == "spawn" || *pair[1] == "scope" || *pair[1] == "Builder";
-            if spawn && *pair[0] == "thread" && spawnish {
+            if raw && *pair[0] == "std" && (*pair[1] == "sync" || *pair[1] == "thread") {
                 self.flag(
-                    "thread-spawn",
+                    "raw-sync",
                     pair[1].span().start().line,
-                    format!("raw `thread::{}` outside the sanctioned fan-out sites", pair[1]),
+                    format!(
+                        "inline `std::{}` path outside the `crate::sync` facade; route \
+                         through `crate::sync` so loom models cover it",
+                        pair[1]
+                    ),
                 );
             }
         }

@@ -1,0 +1,52 @@
+//! Fixture: bare condvar waits outside a predicate-rechecking loop —
+//! the spurious-wakeup / missed-predicate class. (`crate::` paths are
+//! fine here: the linter is purely syntactic.)
+
+use crate::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub fn bare_wait(cv: &Condvar, lock: &Mutex<bool>) {
+    let g = lock.lock().unwrap();
+    let _g = cv.wait(g).unwrap();
+}
+
+pub fn bare_timed_wait(cv: &Condvar, lock: &Mutex<bool>, d: Duration) {
+    let g = lock.lock().unwrap();
+    let _ = cv.wait_timeout(g, d).unwrap();
+}
+
+pub fn rechecked_in_while(cv: &Condvar, lock: &Mutex<bool>) {
+    let mut g = lock.lock().unwrap();
+    while !*g {
+        g = cv.wait(g).unwrap();
+    }
+}
+
+pub fn rechecked_in_loop(cv: &Condvar, lock: &Mutex<u32>, d: Duration) {
+    let mut g = lock.lock().unwrap();
+    loop {
+        if *g > 0 {
+            return;
+        }
+        let (guard, _) = cv.wait_timeout(g, d).unwrap();
+        g = guard;
+    }
+}
+
+pub fn predicate_variant(cv: &Condvar, lock: &Mutex<bool>, d: Duration) {
+    let g = lock.lock().unwrap();
+    let _ = cv.wait_timeout_while(g, d, |ready| !*ready).unwrap();
+}
+
+pub struct Ticket;
+
+impl Ticket {
+    pub fn wait(&self) -> u32 {
+        7
+    }
+}
+
+/// Zero-arg domain `wait`s (`MaskTicket::wait`) are not condvar waits.
+pub fn domain_wait(t: &Ticket) -> u32 {
+    t.wait()
+}

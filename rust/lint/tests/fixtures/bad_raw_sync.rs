@@ -1,0 +1,38 @@
+//! Fixture: raw `std::sync` / `std::thread` primitives outside the
+//! `crate::sync` facade — the classes loom can only model when every
+//! consumer routes through the facade.
+
+use std::sync::Mutex;
+use std::sync::atomic::AtomicUsize;
+use std::{collections::BTreeMap, thread};
+
+pub fn locked(v: u32) -> u32 {
+    let m = Mutex::new(v);
+    let out = *m.lock().unwrap();
+    let _ = AtomicUsize::new(out as usize);
+    out
+}
+
+pub fn spawn_inline() -> u32 {
+    let h = std::thread::spawn(|| 7);
+    h.join().unwrap()
+}
+
+pub fn ordered() -> BTreeMap<u32, u32> {
+    let _ = thread::available_parallelism();
+    BTreeMap::new()
+}
+
+#[cfg(test)]
+mod tests {
+    // Unlike wall-clock, raw-sync stays live inside tests: a test that
+    // sidesteps the facade exercises primitives loom never models.
+    use std::sync::mpsc;
+
+    #[test]
+    fn channel() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1u32).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture: a stale escape — the code it once suppressed moved away,
+//! so the suppression must become a finding instead of lingering.
+
+// lint: allow(hash-collections) -- stale: the map below became a BTreeMap
+use std::collections::BTreeMap;
+
+pub fn ordered() -> BTreeMap<u32, u32> {
+    BTreeMap::new()
+}
+
+// lint: allow(wall-clock) -- live: deadline probe for the demo below
+pub fn deadline() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -30,7 +30,7 @@ use crate::pruning::{MaskService, MaskTicket, OracleStats};
 use crate::runtime::{Engine, EnginePool, Manifest};
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::{Context, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::atomic::{AtomicUsize, Ordering};
 
 /// Where the solver gets an engine for each logical solve.
 #[derive(Clone, Copy)]

@@ -40,8 +40,8 @@ use crate::spec::report::LayerReport;
 use crate::spec::{Framework, PruneSpec, Structure};
 use crate::util::tensor::Mat;
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
 
 /// One independent layer prune job.
 pub struct LayerTask {
@@ -251,7 +251,7 @@ pub fn member_score(framework: Framework, p: &LayerProblem) -> Mat {
 /// core, anything else is taken literally.
 pub fn effective_jobs(jobs: usize) -> usize {
     if jobs == 0 {
-        std::thread::available_parallelism().map_or(1, |n| n.get())
+        crate::sync::thread::available_parallelism().map_or(1, |n| n.get())
     } else {
         jobs
     }
@@ -304,7 +304,7 @@ pub fn run_layer_tasks(
     let slots: Vec<Slot> = tasks.iter().map(|_| Mutex::new(None)).collect();
     {
         let (tasks, next, slots, alps_cfg) = (&tasks, &next, &slots, &alps_cfg);
-        std::thread::scope(|scope| {
+        crate::sync::thread::scope(|scope| {
             for _ in 0..jobs {
                 scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -370,7 +370,10 @@ pub fn run_layer_feed(
     let parent = feed_span.id();
     let alps_cfg = alps::AlpsCfg::default();
     let jobs = effective_jobs(spec.jobs);
-    let failed = std::sync::atomic::AtomicBool::new(false);
+    // Relaxed: `failed` is a fast-path hint that lets workers stop
+    // pulling new layers early — the authoritative failure value is
+    // `failure`, read only after the scope joins every worker.
+    let failed = crate::sync::atomic::AtomicBool::new(false);
     let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let fail = |e: anyhow::Error| {
         let mut slot = failure.lock().unwrap_or_else(|p| p.into_inner());
@@ -403,7 +406,7 @@ pub fn run_layer_feed(
     if jobs <= 1 {
         work();
     } else {
-        std::thread::scope(|scope| {
+        crate::sync::thread::scope(|scope| {
             for _ in 0..jobs {
                 scope.spawn(work);
             }

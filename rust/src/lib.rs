@@ -57,5 +57,6 @@ pub mod runtime;
 pub mod sparse;
 pub mod spec;
 pub mod stream;
+pub mod sync;
 pub mod train;
 pub mod util;

@@ -262,9 +262,9 @@ pub fn solve_blocks_parallel(
         }
         res
     };
-    // lint: allow(thread-spawn) -- block-chunk fan-out over pre-split
-    // disjoint slices; predates and mirrors sparse::fan_out_rows.
-    std::thread::scope(|scope| {
+    // Block-chunk fan-out over pre-split disjoint slices; predates
+    // and mirrors sparse::fan_out_rows.
+    crate::sync::thread::scope(|scope| {
         for (start, dst) in slices {
             let nblocks = dst.len() / sz;
             let sub = scores.range(start, nblocks);

@@ -9,7 +9,7 @@
 //! [`raw_now`], which exists for dispatcher deadline arithmetic that is
 //! proven bit-invisible by the jobs-1-vs-4 differential tests.
 
-use std::sync::OnceLock;
+use crate::sync::OnceLock;
 use std::time::Instant;
 
 /// Process-wide trace epoch. All trace timestamps are nanoseconds

@@ -15,8 +15,8 @@ use crate::util::json::{obj, Json};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Mutex;
 
 /// Schema tag stamped on `--metrics` output and on `BENCH_*.json`
 /// (see `benches/common.rs`): both speak the same field names —
@@ -27,10 +27,12 @@ pub const SCHEMA: &str = "tsenor-metrics-v1";
 /// decade buckets from 10µs to 10s, plus the implicit overflow bucket.
 pub const LATENCY_SECS: &[f64] = &[1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0];
 
+/// Relaxed on both sides, like `trace::ENABLED`: a monotone arm switch
+/// set at startup; the registry itself is lock-protected.
 static ENABLED: AtomicBool = AtomicBool::new(false);
 
 pub fn set_enabled(on: bool) {
-    ENABLED.store(on, Ordering::SeqCst);
+    ENABLED.store(on, Ordering::Relaxed);
 }
 
 pub fn enabled() -> bool {

@@ -18,8 +18,23 @@
 //! `tests/obs_trace.rs` differential tests and the `obs-smoke` CI leg.
 //! Everything obs emits is timing-class output.
 
+//! Under `--cfg loom` the real implementation is replaced by the no-op
+//! stubs in [`stub`]: the tracer/registry statics are const-initialized
+//! `std` primitives, which loom's types cannot be (no const
+//! constructors), and models must not drag global state between
+//! explored schedules anyway. The coordination cores keep their obs
+//! calls; inside a loom model they cost nothing.
+
+#[cfg(not(loom))]
 pub mod clock;
+#[cfg(not(loom))]
 pub mod metrics;
+#[cfg(not(loom))]
 pub mod trace;
+
+#[cfg(loom)]
+mod stub;
+#[cfg(loom)]
+pub use stub::{clock, metrics, trace};
 
 pub use trace::{span, span_at, SpanGuard, SpanId};

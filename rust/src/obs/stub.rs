@@ -1,0 +1,135 @@
+//! No-op observability for `--cfg loom` builds.
+//!
+//! The real tracer and metrics registry keep const-initialized global
+//! state (`static REGISTRY: Mutex<...>`), which loom's primitives
+//! cannot express (no const constructors) and loom models must not
+//! share across explored schedules anyway. These stubs keep the full
+//! `obs` surface compiling so the coordination cores retain their
+//! instrumentation calls — inside a model every call is inert.
+
+/// No-op mirror of `obs::trace`.
+pub mod trace {
+    use crate::util::json::Json;
+    use anyhow::Result;
+    use std::path::Path;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+    pub struct SpanId(pub u64);
+
+    impl SpanId {
+        pub const ROOT: SpanId = SpanId(0);
+    }
+
+    pub fn set_enabled(_on: bool) {}
+
+    pub fn enabled() -> bool {
+        false
+    }
+
+    pub struct SpanGuard;
+
+    impl SpanGuard {
+        pub fn kv(self, _key: &'static str, _value: impl std::fmt::Display) -> Self {
+            self
+        }
+
+        pub fn id(&self) -> SpanId {
+            SpanId::ROOT
+        }
+    }
+
+    pub fn span(_name: &'static str) -> SpanGuard {
+        SpanGuard
+    }
+
+    pub fn span_at(_name: &'static str, _parent: SpanId) -> SpanGuard {
+        SpanGuard
+    }
+
+    pub fn write_chrome_trace(_path: &Path) -> Result<()> {
+        anyhow::bail!("tracing is unavailable under --cfg loom")
+    }
+
+    pub fn validate_chrome_trace(_doc: &Json) -> Result<()> {
+        anyhow::bail!("tracing is unavailable under --cfg loom")
+    }
+}
+
+/// No-op mirror of `obs::metrics`.
+pub mod metrics {
+    use crate::util::json::Json;
+    use anyhow::Result;
+    use std::path::Path;
+
+    pub const SCHEMA: &str = "tsenor-metrics-v1";
+    pub const LATENCY_SECS: &[f64] = &[1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0];
+
+    pub fn set_enabled(_on: bool) {}
+
+    pub fn enabled() -> bool {
+        false
+    }
+
+    pub fn counter_add(_name: &str, _v: u64) {}
+
+    pub fn gauge_set(_name: &str, _v: f64) {}
+
+    pub fn gauge_add(_name: &str, _delta: f64) {}
+
+    pub fn observe(_name: &str, _bounds: &'static [f64], _v: f64) {}
+
+    pub fn is_empty() -> bool {
+        true
+    }
+
+    pub fn reset() {}
+
+    pub fn to_json() -> Json {
+        Json::Null
+    }
+
+    pub fn write(_path: &Path) -> Result<()> {
+        anyhow::bail!("metrics are unavailable under --cfg loom")
+    }
+}
+
+/// Real clock, minus nothing: the clock module has no global sync
+/// state beyond the epoch `OnceLock`, which loom builds avoid by
+/// re-anchoring on first use per process. Deadline arithmetic in code
+/// compiled (but never modeled) under loom still gets monotonic time.
+pub mod clock {
+    use std::time::Instant;
+
+    pub fn init_epoch() {}
+
+    pub fn nanos_since_epoch(_t: Instant) -> u64 {
+        0
+    }
+
+    pub fn raw_now() -> Instant {
+        Instant::now()
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    pub struct Stopwatch {
+        start: Instant,
+    }
+
+    impl Stopwatch {
+        pub fn start() -> Self {
+            Stopwatch { start: Instant::now() }
+        }
+
+        pub fn started_at(&self) -> Instant {
+            self.start
+        }
+
+        pub fn secs(&self) -> f64 {
+            self.start.elapsed().as_secs_f64()
+        }
+
+        pub fn nanos(&self) -> u64 {
+            self.start.elapsed().as_nanos() as u64
+        }
+    }
+}

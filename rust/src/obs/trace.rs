@@ -19,16 +19,21 @@ use crate::util::json::{obj, Json};
 use anyhow::{bail, Result};
 use std::cell::RefCell;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Relaxed on both sides: the flag is a monotone arm switch set once
+/// at startup before any span opens — no memory published alongside it
+/// is read through it (the registry and buffers have their own locks).
 static ENABLED: AtomicBool = AtomicBool::new(false);
 
-/// Global span-event sequence. A span's open draws one value (its id)
-/// and its close draws another; within a thread the sequence is
-/// program-ordered, which is what makes B/E emission unambiguous even
-/// at equal timestamps.
+/// Global span-event sequence. Relaxed: values only need to be unique
+/// and program-ordered per thread; cross-thread order is reconstructed
+/// from `(t_ns, tid, seq)` at export, never from the counter itself.
+/// A span's open draws one value (its id) and its close draws another;
+/// within a thread the sequence is program-ordered, which is what makes
+/// B/E emission unambiguous even at equal timestamps.
 static NEXT_SEQ: AtomicU64 = AtomicU64::new(1);
 
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
@@ -41,7 +46,7 @@ pub fn set_enabled(on: bool) {
     if on {
         super::clock::init_epoch();
     }
-    ENABLED.store(on, Ordering::SeqCst);
+    ENABLED.store(on, Ordering::Relaxed);
 }
 
 pub fn enabled() -> bool {

@@ -38,11 +38,11 @@
 use crate::masks::solver::{self, Method, SolveCfg};
 use crate::masks::{dykstra, rounding, NmPattern};
 use crate::obs;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::coord::FulfillCell;
+use crate::sync::Arc;
 use crate::util::tensor::{assemble_blocks, partition_blocks, Blocks, Mat};
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
 
 /// Cumulative solve statistics. Backends count over their lifetime;
 /// `PruneReport` stores the per-run delta (see [`OracleStats::since`]).
@@ -71,38 +71,10 @@ impl OracleStats {
 }
 
 /// Shared slot a queued request resolves into: the dispatcher fills it,
-/// any number of waiters observe it.
-pub struct TicketCell {
-    slot: Mutex<Option<Result<Mat>>>,
-    ready: Condvar,
-}
-
-impl TicketCell {
-    pub(crate) fn new() -> Arc<TicketCell> {
-        Arc::new(TicketCell { slot: Mutex::new(None), ready: Condvar::new() })
-    }
-
-    pub(crate) fn fill(&self, result: Result<Mat>) {
-        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
-        *slot = Some(result);
-        self.ready.notify_all();
-    }
-
-    pub(crate) fn try_take(&self) -> Option<Result<Mat>> {
-        self.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
-    }
-
-    /// Block up to `timeout` for the slot to fill; returns the result if
-    /// it did. Spurious timeouts are fine — callers loop.
-    pub(crate) fn wait_take(&self, timeout: Duration) -> Option<Result<Mat>> {
-        let guard = self.slot.lock().unwrap_or_else(|e| e.into_inner());
-        let (mut guard, _) = self
-            .ready
-            .wait_timeout_while(guard, timeout, |slot| slot.is_none())
-            .unwrap_or_else(|e| e.into_inner());
-        guard.take()
-    }
-}
+/// any number of waiters observe it. The fulfill/wait handshake itself
+/// is [`FulfillCell`] — the facade-parameterized core model-checked in
+/// `tests/loom_sync.rs`; this alias just fixes the payload type.
+pub type TicketCell = FulfillCell<Result<Mat>>;
 
 /// Dispatch pump a queued ticket resolves through: `wait` hands control
 /// to the service that owns the queue (see `pruning::service`).
@@ -478,7 +450,7 @@ mod tests {
         // The Send + Sync bound in action: concurrent mask() calls from
         // scoped threads, counters summed exactly.
         let oracle = CpuOracle::new(Method::TwoApprox, SolveCfg::default());
-        std::thread::scope(|scope| {
+        crate::sync::thread::scope(|scope| {
             for t in 0..4u64 {
                 let oracle = &oracle;
                 scope.spawn(move || {

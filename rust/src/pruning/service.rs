@@ -34,11 +34,12 @@ use crate::obs;
 use crate::pruning::oracle::{
     MaskService, MaskTicket, OracleStats, TicketCell, TicketDriver,
 };
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::coord::{Decision, DispatchCore, Step, MAX_NAP};
+use crate::sync::Arc;
 use crate::util::tensor::Mat;
 use anyhow::Result;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Service tuning knobs (serialized in specs as the `"service"` object;
@@ -84,7 +85,7 @@ impl ServiceCfg {
     /// capped at 8 (every slot is a full PJRT client).
     pub fn pool_slots(&self) -> usize {
         if self.pool == 0 {
-            std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
+            crate::sync::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
         } else {
             self.pool
         }
@@ -133,12 +134,6 @@ struct Pending {
     cell: Arc<TicketCell>,
 }
 
-struct DispatchState {
-    queue: VecDeque<Pending>,
-    /// Coalesced backend calls currently executing.
-    dispatching: usize,
-}
-
 #[derive(Default)]
 struct Counters {
     dispatches: AtomicU64,
@@ -149,30 +144,18 @@ struct Counters {
     bucket: AtomicU64,
 }
 
-/// What a driving caller should do next (decided under the state lock,
-/// executed outside it).
-enum Action {
-    /// Execute this batch (same pattern throughout). The `usize` is the
-    /// backend quantum for its M, the `bool` marks a window expiry.
-    Solve(Vec<Pending>, usize, bool),
-    /// Nothing dispatchable yet; re-check after this long (wakeups on
-    /// submit/completion shorten the nap).
-    Sleep(Duration),
-    /// Another leader owns our request; wait on the ticket cell.
-    WaitCell,
-}
-
-/// Upper bound on any single nap, so missed notifications only cost
-/// milliseconds.
-const MAX_NAP: Duration = Duration::from_millis(5);
-
 /// Submission-queue dispatcher over a [`MaskService`] backend.
+///
+/// The leader/follower window state (queue, in-flight slots, the
+/// decide-or-nap step) lives in [`DispatchCore`] — the facade-
+/// parameterized core that `tests/loom_sync.rs` model-checks. This
+/// type contributes only the domain policy: what makes a dispatchable
+/// batch ([`MaskDispatcher::plan`]) and how a batch executes.
 pub struct MaskDispatcher<'a> {
     backend: &'a dyn MaskService,
     cfg: ServiceCfg,
     label: String,
-    state: Mutex<DispatchState>,
-    wakeup: Condvar,
+    core: DispatchCore<Pending>,
     counters: Counters,
 }
 
@@ -182,8 +165,7 @@ impl<'a> MaskDispatcher<'a> {
             label: format!("service({})", backend.service_name()),
             backend,
             cfg,
-            state: Mutex::new(DispatchState { queue: VecDeque::new(), dispatching: 0 }),
-            wakeup: Condvar::new(),
+            core: DispatchCore::new(),
             counters: Counters::default(),
         }
     }
@@ -204,16 +186,11 @@ impl<'a> MaskDispatcher<'a> {
         }
     }
 
-    /// Decide the next step for a driver whose request lives in `me`.
-    fn next_action(&self, me: &Arc<TicketCell>) -> Action {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        if !st.queue.iter().any(|r| Arc::ptr_eq(&r.cell, me)) {
-            // Taken by another leader (or already filled).
-            return Action::WaitCell;
-        }
-        if self.cfg.max_in_flight > 0 && st.dispatching >= self.cfg.max_in_flight {
-            return Action::Sleep(MAX_NAP);
-        }
+    /// Batch-formation policy, consulted by [`DispatchCore::step`]
+    /// under the core's state lock: scan the queue for a dispatchable
+    /// batch, or say how long to nap. The payload is `(bucket quantum,
+    /// window expired)` for the leader's `execute`.
+    fn plan(&self, queue: &VecDeque<Pending>) -> Decision<(usize, bool)> {
         // Deadline check via the sanctioned clock. This read steers only
         // WHEN a batch dispatches, never WHAT it computes — coalescing
         // is bit-invisible (per-matrix tau), so the differential tests
@@ -231,7 +208,7 @@ impl<'a> MaskDispatcher<'a> {
         }
         let mut groups: Vec<Group> = Vec::new();
         let mut chosen: Option<(Vec<usize>, usize, bool)> = None;
-        for (i, r) in st.queue.iter().enumerate() {
+        for (i, r) in queue.iter().enumerate() {
             let quantum = self.backend.coalesce_quantum(r.pattern.m);
             match groups.iter_mut().find(|g| g.pattern == r.pattern) {
                 Some(g) => {
@@ -270,19 +247,11 @@ impl<'a> MaskDispatcher<'a> {
             if chosen.is_none() {
                 let deadline =
                     earliest.expect("driver's own request forms at least one group");
-                return Action::Sleep(
-                    deadline.saturating_duration_since(now).min(MAX_NAP),
-                );
+                return Decision::Nap(deadline.saturating_duration_since(now));
             }
         }
         let (idxs, quantum, expired) = chosen.expect("checked above");
-        let mut batch = Vec::with_capacity(idxs.len());
-        for &i in idxs.iter().rev() {
-            batch.push(st.queue.remove(i).expect("index from the scan above"));
-        }
-        batch.reverse(); // arrival order
-        st.dispatching += 1;
-        Action::Solve(batch, quantum, expired)
+        Decision::Take(idxs, (quantum, expired))
     }
 
     /// Execute one coalesced batch and resolve its tickets. Runs on the
@@ -360,24 +329,14 @@ impl<'a> MaskDispatcher<'a> {
             }
         };
 
-        {
-            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-            st.dispatching -= 1;
-        }
-        self.wakeup.notify_all();
+        // Cells are filled before the slot releases, so a follower woken
+        // by `finish` that finds its request gone finds its cell full.
+        self.core.finish();
         if let Some(payload) = panic_payload {
             // Waiters got an error result; the leader re-raises so the
             // panic surfaces on a real caller thread.
             std::panic::resume_unwind(payload);
         }
-    }
-
-    fn nap(&self, d: Duration) {
-        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        let _ = self
-            .wakeup
-            .wait_timeout(st, d)
-            .unwrap_or_else(|e| e.into_inner());
     }
 }
 
@@ -390,10 +349,16 @@ impl TicketDriver for MaskDispatcher<'_> {
             if let Some(result) = cell.try_take() {
                 return result;
             }
-            match self.next_action(cell) {
-                Action::Solve(batch, quantum, expired) => self.execute(batch, quantum, expired),
-                Action::Sleep(d) => self.nap(d),
-                Action::WaitCell => {
+            match self.core.step(
+                self.cfg.max_in_flight,
+                |r| Arc::ptr_eq(&r.cell, cell),
+                |queue| self.plan(queue),
+            ) {
+                Step::Lead(batch, (quantum, expired)) => {
+                    self.execute(batch, quantum, expired)
+                }
+                // Another leader owns our request: wait on the cell.
+                Step::Gone => {
                     if let Some(result) = cell.wait_take(MAX_NAP) {
                         return result;
                     }
@@ -420,17 +385,7 @@ impl MaskService for MaskDispatcher<'_> {
         // dispatch: it respects and occupies the `max_in_flight` cap.
         let quantum = self.backend.coalesce_quantum(pattern.m);
         if quantum == 0 || blocks >= quantum {
-            if self.cfg.max_in_flight > 0 {
-                let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-                while st.dispatching >= self.cfg.max_in_flight {
-                    let (guard, _) = self
-                        .wakeup
-                        .wait_timeout(st, MAX_NAP)
-                        .unwrap_or_else(|e| e.into_inner());
-                    st = guard;
-                }
-                st.dispatching += 1;
-            }
+            self.core.begin_direct(self.cfg.max_in_flight);
             let c = &self.counters;
             c.dispatches.fetch_add(1, Ordering::Relaxed);
             c.singleton.fetch_add(1, Ordering::Relaxed);
@@ -456,11 +411,7 @@ impl MaskService for MaskDispatcher<'_> {
                     self.backend.submit(score, pattern).wait()
                 }))
             };
-            if self.cfg.max_in_flight > 0 {
-                let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-                st.dispatching -= 1;
-            }
-            self.wakeup.notify_all();
+            self.core.end_direct(self.cfg.max_in_flight);
             return match outcome {
                 Ok(result) => MaskTicket::ready(result),
                 Err(payload) => std::panic::resume_unwind(payload),
@@ -475,12 +426,8 @@ impl MaskService for MaskDispatcher<'_> {
             deadline: obs::clock::raw_now() + Duration::from_millis(self.cfg.window_ms),
             cell: cell.clone(),
         };
-        {
-            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-            st.queue.push_back(pending);
-            obs::metrics::gauge_set("service.queue_depth", st.queue.len() as f64);
-        }
-        self.wakeup.notify_all();
+        let depth = self.core.enqueue(pending);
+        obs::metrics::gauge_set("service.queue_depth", depth as f64);
         MaskTicket::queued(cell, self)
     }
 

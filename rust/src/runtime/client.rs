@@ -24,8 +24,8 @@ use crate::util::tensor::{Blocks, Mat};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{Arc, Mutex, RwLock};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 /// A compiled PJRT executable, shareable across threads. Execution goes

@@ -44,7 +44,7 @@ pub(crate) fn fan_out_rows(
         return;
     }
     let chunk = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
+    crate::sync::thread::scope(|scope| {
         let kernel = &kernel;
         let mut rest = out;
         let mut row0 = 0usize;

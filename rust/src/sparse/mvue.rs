@@ -277,9 +277,9 @@ pub fn sparsify_threaded(
         let threads = threads.max(1).min(groups);
         let chunk = groups.div_ceil(threads);
         let gsz = n * cols;
-        // lint: allow(thread-spawn) -- three disjoint output buffers
-        // advance in lock-step here; fan_out_rows splits only one.
-        std::thread::scope(|sc| {
+        // Three disjoint output buffers advance in lock-step here;
+        // fan_out_rows splits only one.
+        crate::sync::thread::scope(|sc| {
             let mut vrest = values.as_mut_slice();
             let mut irest = indices.as_mut_slice();
             let mut srest = stats.as_mut_slice();

@@ -64,8 +64,8 @@ use anyhow::{bail, ensure, Context, Result};
 use journal::{Journal, JournalEntry};
 use prefetch::{BytePool, Prefetcher};
 use std::collections::BTreeMap;
+use crate::sync::Mutex;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 use store::StoreReader;
 use writeback::{NamedLoc, WriteBack};
 
@@ -331,8 +331,7 @@ pub fn run_prune_stream(
         for &i in &group.members {
             let layer = &layers[i];
             let entry = input.entry(&layer.name).expect("validated above");
-            let guard = pool
-                .acquire(ticket, layer.bytes())
+            let guard = BytePool::acquire(&pool, ticket, layer.bytes())
                 .context("stream aborted during grouped pre-pass")?;
             ticket += 1;
             let w = input.read_dense(entry)?;
@@ -383,7 +382,7 @@ pub fn run_prune_stream(
     let stream_result = Prefetcher::run(
         input,
         fetch_entries,
-        std::sync::Arc::clone(&pool),
+        crate::sync::Arc::clone(&pool),
         scfg.io_threads,
         ticket,
         |pf| -> Result<()> {

@@ -20,108 +20,16 @@
 
 use super::store::{StoreReader, TensorEntry};
 use crate::obs;
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
 use crate::util::tensor::Mat;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 
-/// Byte-budgeted admission pool with in-order tickets.
-pub struct BytePool {
-    budget: u64, // 0 = unbounded
-    state: Mutex<PoolState>,
-    changed: Condvar,
-    peak: AtomicU64,
-    closed: AtomicBool,
-}
-
-struct PoolState {
-    used: u64,
-    /// Next admission ticket allowed to reserve (in-order admission).
-    turn: u64,
-}
-
-impl BytePool {
-    pub fn new(budget: u64) -> Arc<BytePool> {
-        obs::metrics::gauge_set("prefetch.pool_budget", budget as f64);
-        Arc::new(BytePool {
-            budget,
-            state: Mutex::new(PoolState { used: 0, turn: 0 }),
-            changed: Condvar::new(),
-            peak: AtomicU64::new(0),
-            closed: AtomicBool::new(false),
-        })
-    }
-
-    /// Reserve `bytes` under ticket `ticket` (tickets are admitted in
-    /// ascending order). Blocks until it is this ticket's turn AND the
-    /// budget fits; returns a guard releasing the bytes on drop, or
-    /// `None` if the pool was closed (run aborting).
-    pub fn acquire(self: &Arc<Self>, ticket: u64, bytes: u64) -> Option<PoolGuard> {
-        // Covers the whole admission wait (turn + budget headroom).
-        let _span = obs::span("prefetch.admit").kv("bytes", bytes);
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        loop {
-            if self.closed.load(Ordering::Relaxed) {
-                return None;
-            }
-            let fits = self.budget == 0 || st.used + bytes <= self.budget || st.used == 0;
-            if st.turn == ticket && fits {
-                st.used += bytes;
-                st.turn += 1;
-                self.peak.fetch_max(st.used, Ordering::Relaxed);
-                obs::metrics::gauge_set("prefetch.pool_bytes", st.used as f64);
-                self.changed.notify_all();
-                return Some(PoolGuard { pool: Arc::clone(self), bytes });
-            }
-            st = self.changed.wait(st).unwrap_or_else(|e| e.into_inner());
-        }
-    }
-
-    fn release(&self, bytes: u64) {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        st.used = st.used.saturating_sub(bytes);
-        obs::metrics::counter_add("prefetch.evictions", 1);
-        obs::metrics::gauge_set("prefetch.pool_bytes", st.used as f64);
-        self.changed.notify_all();
-    }
-
-    /// Unblock every waiter (abort path). The flag is flipped under
-    /// the state lock so a waiter can never check-then-sleep past it.
-    pub fn close(&self) {
-        let _st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        self.closed.store(true, Ordering::Relaxed);
-        self.changed.notify_all();
-    }
-
-    /// High-water mark of reserved bytes over the pool's lifetime.
-    pub fn peak(&self) -> u64 {
-        self.peak.load(Ordering::Relaxed)
-    }
-
-    pub fn budget(&self) -> u64 {
-        self.budget
-    }
-}
-
-/// Reservation for one tensor's bytes; dropping it returns the bytes
-/// to the pool. Travels with the decoded `Mat` through the executor.
-pub struct PoolGuard {
-    pool: Arc<BytePool>,
-    bytes: u64,
-}
-
-impl PoolGuard {
-    pub fn bytes(&self) -> u64 {
-        self.bytes
-    }
-}
-
-impl Drop for PoolGuard {
-    fn drop(&mut self) {
-        self.pool.release(self.bytes);
-    }
-}
+// The byte-budgeted admission pool lives in `sync::pool` (the loom-
+// model-checked core); re-exported here because the pool is part of
+// this module's public streaming API.
+pub use crate::sync::pool::{BytePool, PoolGuard};
 
 /// One prefetched layer, delivered in list order.
 pub struct Fetched {
@@ -139,6 +47,11 @@ struct Shared {
     next_fetch: AtomicUsize,
     ready: Mutex<ReadyState>,
     delivered: Condvar,
+    /// Relaxed everywhere: the lock-free reads are only the I/O loops'
+    /// early-exit fast path. Every read that gates a WAIT re-checks the
+    /// flag under `ready`'s lock — and every abort store happens under
+    /// that same lock — which is what rules out check-then-sleep races;
+    /// the atomic adds no ordering the protocol relies on.
     abort: AtomicBool,
 }
 
@@ -182,7 +95,7 @@ impl<'a> Prefetcher<'a> {
             _marker: std::marker::PhantomData,
         };
         let io_threads = io_threads.max(1).min(shared.entries.len().max(1));
-        std::thread::scope(|scope| {
+        crate::sync::thread::scope(|scope| {
             for _ in 0..io_threads {
                 let shared = Arc::clone(&shared);
                 let pool = Arc::clone(&pool);
@@ -273,7 +186,8 @@ fn io_loop(store: &StoreReader, shared: &Shared, pool: &Arc<BytePool>) {
             return;
         }
         let entry = &shared.entries[seq];
-        let Some(guard) = pool.acquire(shared.ticket_base + seq as u64, entry.dense_bytes())
+        let Some(guard) =
+            BytePool::acquire(pool, shared.ticket_base + seq as u64, entry.dense_bytes())
         else {
             return; // pool closed: aborting
         };

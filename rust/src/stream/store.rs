@@ -25,9 +25,9 @@ use crate::util::json::{self, Json};
 use crate::util::npy;
 use crate::util::tensor::Mat;
 use anyhow::{bail, ensure, Context, Result};
+use crate::sync::Mutex;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 pub const INDEX_FILE: &str = "index.json";
 pub const FORMAT: &str = "tsenor-ckpt-v1";

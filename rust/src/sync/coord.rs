@@ -1,0 +1,305 @@
+//! Facade-parameterized coordination cores shared by the production
+//! code and the loom models.
+//!
+//! Two protocols live here, stripped of domain types so
+//! `tests/loom_sync.rs` can exhaustively model-check the exact structs
+//! the real paths run:
+//!
+//! * [`FulfillCell`] — the ticket fulfill/wait handshake behind
+//!   `pruning::oracle::TicketCell`: one producer fills the slot, any
+//!   number of waiters observe it, timed waits loop on the predicate so
+//!   spurious wakeups are harmless.
+//! * [`DispatchCore`] — the dispatcher's leader/follower window state
+//!   behind `pruning::service::MaskDispatcher`: a submission queue plus
+//!   in-flight accounting where a waiting caller *is* the worker.
+//!   [`DispatchCore::step`] decides and, when there is nothing to lead,
+//!   waits **under one lock acquisition** — a submit or completion
+//!   notification can never slip between the decision to sleep and the
+//!   sleep itself (the classic check-then-wait lost-wakeup window).
+//!
+//! The prefetch pool's admit/abort protocol is the third core, in
+//! [`crate::sync::pool`].
+
+use crate::sync::{Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Upper bound on any single coordination nap, so in the real build a
+/// missed notification only ever costs milliseconds. Under loom, waits
+/// block until notified (see `crate::sync` docs) and the models prove
+/// this bound is redundancy, not correctness.
+pub const MAX_NAP: Duration = Duration::from_millis(5);
+
+/// Shared slot one producer fills and any number of waiters observe.
+pub struct FulfillCell<T> {
+    slot: Mutex<Option<T>>,
+    ready: Condvar,
+}
+
+impl<T> FulfillCell<T> {
+    pub fn new() -> Arc<FulfillCell<T>> {
+        Arc::new(FulfillCell { slot: Mutex::new(None), ready: Condvar::new() })
+    }
+
+    /// Fill the slot and wake every waiter. The store happens under the
+    /// slot lock, so a waiter can never check-then-sleep past it.
+    pub fn fill(&self, value: T) {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(value);
+        self.ready.notify_all();
+    }
+
+    pub fn try_take(&self) -> Option<T> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    /// Block up to `timeout` for the slot to fill; returns the value if
+    /// it did. The wait loops on the predicate (`wait_timeout_while`),
+    /// so a fill racing even a zero timeout is returned, never dropped.
+    pub fn wait_take(&self, timeout: Duration) -> Option<T> {
+        let guard = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        let (mut guard, _) = self
+            .ready
+            .wait_timeout_while(guard, timeout, |slot| slot.is_none())
+            .unwrap_or_else(|e| e.into_inner());
+        guard.take()
+    }
+
+    /// Block until the slot fills, with no timeout — what the loom
+    /// models use, since under loom timed waits degrade to this anyway.
+    pub fn take_blocking(&self) -> T {
+        let guard = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        let mut guard = self
+            .ready
+            .wait_while(guard, |slot| slot.is_none())
+            .unwrap_or_else(|e| e.into_inner());
+        guard.take().expect("wait_while exits only on Some")
+    }
+}
+
+/// What a scheduling policy tells [`DispatchCore::step`] to do with the
+/// current queue. `P` is policy payload carried to the leader (e.g. the
+/// dispatcher's `(bucket quantum, window expired)` pair).
+pub enum Decision<P> {
+    /// Remove these queue indices (ascending) and lead them as one
+    /// batch.
+    Take(Vec<usize>, P),
+    /// Nothing dispatchable yet; wait for a wakeup, at most this long.
+    Nap(Duration),
+}
+
+/// Outcome of one [`DispatchCore::step`] call.
+pub enum Step<R, P> {
+    /// The caller is now the leader for this batch (arrival order) and
+    /// holds one in-flight slot — it must call
+    /// [`DispatchCore::finish`] when done.
+    Lead(Vec<R>, P),
+    /// The caller's own request is no longer queued: another leader
+    /// took it. Wait on its fulfill cell instead.
+    Gone,
+}
+
+/// Submission queue plus in-flight accounting for caller-driven
+/// dispatch: there are no background threads, a waiting caller becomes
+/// the leader for one batch.
+pub struct DispatchCore<R> {
+    state: Mutex<CoreState<R>>,
+    wakeup: Condvar,
+}
+
+struct CoreState<R> {
+    queue: VecDeque<R>,
+    /// Batches currently executing (leader or direct dispatch).
+    dispatching: usize,
+}
+
+impl<R> DispatchCore<R> {
+    pub fn new() -> DispatchCore<R> {
+        DispatchCore {
+            state: Mutex::new(CoreState { queue: VecDeque::new(), dispatching: 0 }),
+            wakeup: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request and wake any napping driver; returns the queue
+    /// depth after the push (telemetry).
+    pub fn enqueue(&self, req: R) -> usize {
+        let depth = {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.queue.push_back(req);
+            st.queue.len()
+        };
+        self.wakeup.notify_all();
+        depth
+    }
+
+    /// One scheduling step for a driver whose own request satisfies
+    /// `is_mine`. Everything — the membership check, the in-flight cap,
+    /// the `decide` policy, and the nap when nothing is dispatchable —
+    /// happens under a single acquisition of the state lock, so a
+    /// concurrent `enqueue`/`finish` notification cannot fall into a
+    /// decide-then-sleep gap. Returns when the caller either leads a
+    /// batch or discovers its request left the queue.
+    pub fn step<P>(
+        &self,
+        max_in_flight: usize,
+        mut is_mine: impl FnMut(&R) -> bool,
+        mut decide: impl FnMut(&VecDeque<R>) -> Decision<P>,
+    ) -> Step<R, P> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if !st.queue.iter().any(&mut is_mine) {
+                return Step::Gone;
+            }
+            let nap = if max_in_flight > 0 && st.dispatching >= max_in_flight {
+                // At the cap: wait for a completion to free a slot.
+                MAX_NAP
+            } else {
+                match decide(&st.queue) {
+                    Decision::Take(idxs, payload) => {
+                        let mut batch = Vec::with_capacity(idxs.len());
+                        for &i in idxs.iter().rev() {
+                            batch.push(
+                                st.queue.remove(i).expect("decide returned a queue index"),
+                            );
+                        }
+                        batch.reverse(); // arrival order
+                        st.dispatching += 1;
+                        return Step::Lead(batch, payload);
+                    }
+                    Decision::Nap(d) => d.min(MAX_NAP),
+                }
+            };
+            let (guard, _) = self
+                .wakeup
+                .wait_timeout(st, nap)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+    }
+
+    /// Release a leader's in-flight slot and wake every waiter (napping
+    /// drivers re-decide, capped direct submitters retry). Call after
+    /// the batch's fulfill cells are filled, so a woken follower that
+    /// finds its request gone finds its cell full.
+    pub fn finish(&self) {
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.dispatching -= 1;
+        }
+        self.wakeup.notify_all();
+    }
+
+    /// Reserve an in-flight slot for a direct (never-queued) dispatch,
+    /// blocking while the cap is saturated. No-op when `max_in_flight`
+    /// is 0 (unbounded).
+    pub fn begin_direct(&self, max_in_flight: usize) {
+        if max_in_flight == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.dispatching >= max_in_flight {
+            let (guard, _) = self
+                .wakeup
+                .wait_timeout(st, MAX_NAP)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+        st.dispatching += 1;
+    }
+
+    /// Release a [`DispatchCore::begin_direct`] slot. Always notifies —
+    /// even with no cap, queued drivers may be waiting on work that a
+    /// direct dispatch's completion makes relevant.
+    pub fn end_direct(&self, max_in_flight: usize) {
+        if max_in_flight > 0 {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.dispatching -= 1;
+        }
+        self.wakeup.notify_all();
+    }
+}
+
+impl<R> Default for DispatchCore<R> {
+    fn default() -> DispatchCore<R> {
+        DispatchCore::new()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn fill_then_take_roundtrips() {
+        let cell = FulfillCell::new();
+        assert!(cell.try_take().is_none());
+        cell.fill(7u32);
+        assert_eq!(cell.try_take(), Some(7));
+        assert!(cell.try_take().is_none(), "take consumes");
+    }
+
+    #[test]
+    fn wait_take_returns_prefilled_value_even_at_zero_timeout() {
+        let cell = FulfillCell::new();
+        cell.fill(3u32);
+        assert_eq!(cell.wait_take(Duration::ZERO), Some(3));
+    }
+
+    #[test]
+    fn wait_take_times_out_empty() {
+        let cell = FulfillCell::<u32>::new();
+        let t0 = Instant::now();
+        assert_eq!(cell.wait_take(Duration::from_millis(10)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn step_leads_own_singleton() {
+        let core: DispatchCore<u32> = DispatchCore::new();
+        core.enqueue(42);
+        match core.step(0, |&r| r == 42, |q| Decision::Take((0..q.len()).collect(), ()))
+        {
+            Step::Lead(batch, ()) => assert_eq!(batch, vec![42]),
+            Step::Gone => panic!("own request was queued"),
+        }
+        core.finish();
+    }
+
+    #[test]
+    fn step_reports_gone_when_request_absent() {
+        let core: DispatchCore<u32> = DispatchCore::new();
+        core.enqueue(1);
+        match core.step(0, |&r| r == 99, |_| Decision::Nap(Duration::ZERO)) {
+            Step::Gone => {}
+            Step::Lead(..) => panic!("decide must not run for a foreign request"),
+        }
+    }
+
+    #[test]
+    fn take_preserves_arrival_order() {
+        let core: DispatchCore<u32> = DispatchCore::new();
+        for r in [10, 11, 12, 13] {
+            core.enqueue(r);
+        }
+        match core.step(0, |&r| r == 10, |_| Decision::Take(vec![0, 2, 3], "tag")) {
+            Step::Lead(batch, tag) => {
+                assert_eq!(batch, vec![10, 12, 13]);
+                assert_eq!(tag, "tag");
+            }
+            Step::Gone => panic!(),
+        }
+        core.finish();
+    }
+
+    #[test]
+    fn direct_slots_balance() {
+        let core: DispatchCore<u32> = DispatchCore::new();
+        core.begin_direct(1);
+        core.end_direct(1);
+        // A second reservation at cap 1 must not see a leaked slot.
+        core.begin_direct(1);
+        core.end_direct(1);
+    }
+}

@@ -1,0 +1,151 @@
+//! Synchronization facade: the single place this crate touches
+//! `std::sync` and `std::thread`.
+//!
+//! Every module imports its primitives (`Mutex`, `RwLock`, `Condvar`,
+//! `Arc`, the `atomic` types, `thread`) from here instead of `std` —
+//! tsenor-lint's `raw-sync` rule rejects direct `std::sync`/
+//! `std::thread` primitive use anywhere outside this directory. In a
+//! normal build the facade is a zero-cost re-export of `std::sync`.
+//! Under `RUSTFLAGS="--cfg loom"` it re-exports [`loom`]'s
+//! model-checked equivalents, so the coordination cores in
+//! [`coord`]/[`pool`] — the dispatcher's leader/follower window state,
+//! the ticket fulfill/wait handshake, the prefetch pool's admit/abort
+//! protocol — compile against exhaustively explorable primitives and
+//! are model-checked in `tests/loom_sync.rs`.
+//!
+//! # Loom semantics deltas
+//!
+//! Loom has no clock, so the facade's `Condvar` under loom degrades
+//! every timed wait (`wait_timeout`, `wait_timeout_while`) to a plain
+//! blocking wait that never times out. This is deliberate: the models
+//! must prove the **notify discipline alone** guarantees progress.
+//! In the real build the `MAX_NAP`-bounded timeouts are self-healing
+//! redundancy on top of that proof, never load-bearing — a lost
+//! wakeup that real timeouts would mask within 5 ms shows up in loom
+//! as a deadlock (see the `#[should_panic]` negative model).
+//!
+//! `thread::scope` and `thread::available_parallelism` have no loom
+//! equivalent; under loom they resolve to the `std` versions so the
+//! crate still compiles, but no loom model may call them — models
+//! spawn via `loom::thread::spawn` inside `loom::model` only. The
+//! scoped fan-outs (`sparse::fan_out_rows`, the executor pools, the
+//! prefetcher's I/O threads) stay covered by the TSan CI leg instead.
+
+#[cfg(not(loom))]
+mod facade {
+    pub use std::sync::atomic;
+    pub use std::sync::{
+        Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard,
+        RwLockWriteGuard, WaitTimeoutResult,
+    };
+    pub use std::thread;
+}
+
+#[cfg(loom)]
+mod facade {
+    pub use loom::sync::atomic;
+    pub use loom::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+    // Compile-only under loom (loom has no lazy-init cell; the sole
+    // consumer, `obs::clock`, is stubbed out in loom builds anyway).
+    pub use std::sync::OnceLock;
+
+    use std::sync::{LockResult, PoisonError};
+    use std::time::Duration;
+
+    pub mod thread {
+        pub use loom::thread::{spawn, yield_now, JoinHandle};
+        // Compile-only under loom: scoped fan-outs and parallelism
+        // probes are never exercised inside a model (see module docs).
+        pub use std::thread::{available_parallelism, scope, Scope, ScopedJoinHandle};
+    }
+
+    /// Loom-side stand-in for `std::sync::WaitTimeoutResult` (which has
+    /// no public constructor). Under loom a wait never times out.
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    /// `std::sync::Condvar`-shaped wrapper over `loom::sync::Condvar`:
+    /// adds the `_while` predicate variants loom lacks and degrades
+    /// timed waits to blocking waits (loom models no clock — see the
+    /// module docs for why that degradation is the point, not a gap).
+    pub struct Condvar(loom::sync::Condvar);
+
+    impl Condvar {
+        pub fn new() -> Condvar {
+            Condvar(loom::sync::Condvar::new())
+        }
+
+        pub fn notify_one(&self) {
+            self.0.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            self.0.notify_all();
+        }
+
+        pub fn wait<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+        ) -> LockResult<MutexGuard<'a, T>> {
+            self.0.wait(guard)
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            _dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            match self.0.wait(guard) {
+                Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                Err(e) => {
+                    Err(PoisonError::new((e.into_inner(), WaitTimeoutResult(false))))
+                }
+            }
+        }
+
+        pub fn wait_while<'a, T, F>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+            mut condition: F,
+        ) -> LockResult<MutexGuard<'a, T>>
+        where
+            F: FnMut(&mut T) -> bool,
+        {
+            while condition(&mut *guard) {
+                guard = self.0.wait(guard).unwrap_or_else(|e| e.into_inner());
+            }
+            Ok(guard)
+        }
+
+        pub fn wait_timeout_while<'a, T, F>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            _dur: Duration,
+            condition: F,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)>
+        where
+            F: FnMut(&mut T) -> bool,
+        {
+            match self.wait_while(guard, condition) {
+                Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                Err(_) => unreachable!("loom wait_while never reports poison"),
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+}
+
+pub use facade::*;
+
+pub mod coord;
+pub mod pool;

@@ -1,0 +1,130 @@
+//! Byte-budgeted admission pool with in-order tickets — the prefetch
+//! admit/evict/abort protocol, extracted here so `tests/loom_sync.rs`
+//! model-checks the exact struct `stream::prefetch` runs.
+//!
+//! Protocol invariants the loom models prove at small bounds:
+//!
+//! * `close` (abort) racing `acquire` never deadlocks: the closed flag
+//!   is a plain field of the lock-protected state, so an acquirer can
+//!   never check-then-sleep past a close, and a close between admission
+//!   and guard drop still balances `used` back to zero.
+//! * Dropping a [`PoolGuard`] from any thread (including a panicking
+//!   consumer's unwind) releases the reservation and wakes waiters.
+
+use crate::obs;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
+
+/// Byte-budgeted admission pool with in-order tickets.
+pub struct BytePool {
+    budget: u64, // 0 = unbounded
+    state: Mutex<PoolState>,
+    changed: Condvar,
+    /// High-water mark. Relaxed suffices: it is telemetry folded with
+    /// `fetch_max` (order-independent), never part of the admission
+    /// protocol — admission reads only the lock-protected state.
+    peak: AtomicU64,
+}
+
+struct PoolState {
+    used: u64,
+    /// Next admission ticket allowed to reserve (in-order admission).
+    turn: u64,
+    /// Abort flag. A plain bool, not an atomic: it is only ever read
+    /// and written under the state lock, which is exactly what makes
+    /// close/acquire races lost-wakeup-free.
+    closed: bool,
+}
+
+impl BytePool {
+    pub fn new(budget: u64) -> Arc<BytePool> {
+        obs::metrics::gauge_set("prefetch.pool_budget", budget as f64);
+        Arc::new(BytePool {
+            budget,
+            state: Mutex::new(PoolState { used: 0, turn: 0, closed: false }),
+            changed: Condvar::new(),
+            peak: AtomicU64::new(0),
+        })
+    }
+
+    /// Reserve `bytes` under ticket `ticket` (tickets are admitted in
+    /// ascending order). Blocks until it is this ticket's turn AND the
+    /// budget fits; returns a guard releasing the bytes on drop, or
+    /// `None` if the pool was closed (run aborting).
+    ///
+    /// An associated fn rather than a method: the guard must hold an
+    /// owned `Arc` (it outlives the call), and `self: &Arc<Self>`
+    /// receivers only exist for `std`'s `Arc`, not loom's.
+    pub fn acquire(pool: &Arc<BytePool>, ticket: u64, bytes: u64) -> Option<PoolGuard> {
+        // Covers the whole admission wait (turn + budget headroom).
+        let _span = obs::span("prefetch.admit").kv("bytes", bytes);
+        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if st.closed {
+                return None;
+            }
+            let fits =
+                pool.budget == 0 || st.used + bytes <= pool.budget || st.used == 0;
+            if st.turn == ticket && fits {
+                st.used += bytes;
+                st.turn += 1;
+                pool.peak.fetch_max(st.used, Ordering::Relaxed);
+                obs::metrics::gauge_set("prefetch.pool_bytes", st.used as f64);
+                pool.changed.notify_all();
+                return Some(PoolGuard { pool: Arc::clone(pool), bytes });
+            }
+            st = pool.changed.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn release(&self, bytes: u64) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.used = st.used.saturating_sub(bytes);
+        obs::metrics::counter_add("prefetch.evictions", 1);
+        obs::metrics::gauge_set("prefetch.pool_bytes", st.used as f64);
+        self.changed.notify_all();
+    }
+
+    /// Unblock every waiter (abort path). The flag lives inside the
+    /// state lock, so a waiter can never check-then-sleep past it.
+    pub fn close(&self) {
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.closed = true;
+        }
+        self.changed.notify_all();
+    }
+
+    /// High-water mark of reserved bytes over the pool's lifetime.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Currently reserved bytes (loom models assert the zero balance).
+    pub fn used(&self) -> u64 {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).used
+    }
+}
+
+/// Reservation for one tensor's bytes; dropping it returns the bytes
+/// to the pool. Travels with the decoded `Mat` through the executor.
+pub struct PoolGuard {
+    pool: Arc<BytePool>,
+    bytes: u64,
+}
+
+impl PoolGuard {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        self.pool.release(self.bytes);
+    }
+}

@@ -340,9 +340,9 @@ pub fn run_training(spec: &TrainSpec, service: &dyn MaskService) -> Result<Train
         // outcomes come back per chunk and are stitched in layer order,
         // so aggregation never depends on completion order.
         let mut outs: Vec<StepOut> = Vec::with_capacity(spec.layers);
-        // lint: allow(thread-spawn) -- layer chunks need &mut state each,
-        // which fan_out_rows' shared-slice contract cannot express.
-        std::thread::scope(|sc| -> Result<()> {
+        // Layer chunks need &mut state each, which fan_out_rows'
+        // shared-slice contract cannot express.
+        crate::sync::thread::scope(|sc| -> Result<()> {
             let ctx = &ctx;
             let mut handles = Vec::new();
             for (ci, chunk) in states.chunks_mut(chunk_size).enumerate() {

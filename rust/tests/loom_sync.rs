@@ -1,0 +1,282 @@
+//! Loom model checks for the three coordination cores behind the
+//! `crate::sync` facade (build with `RUSTFLAGS="--cfg loom"`):
+//!
+//! * `sync::coord::FulfillCell` — the `MaskTicket` fulfill/wait
+//!   handshake (`pruning::oracle::TicketCell`).
+//! * `sync::coord::DispatchCore` — the dispatcher's leader/follower
+//!   window state (`pruning::service::MaskDispatcher`).
+//! * `sync::pool::BytePool` — the prefetcher's byte-budgeted
+//!   admit/evict/abort protocol (`stream::prefetch`).
+//!
+//! Under loom every timed wait in the facade degrades to a plain
+//! blocking wait (loom has no clock), so these models prove the notify
+//! discipline **alone** guarantees progress: any schedule in which a
+//! notification can be lost shows up as a loom-detected deadlock, not
+//! as a 5 ms `MAX_NAP` hiccup the real build would silently absorb.
+//! The `#[should_panic]` negative model at the bottom demonstrates
+//! that loom really does catch a dropped `notify_all` here.
+//!
+//! Bounds are deliberately tiny (2–3 threads, 1–2 tickets/slots):
+//! loom explores every interleaving, so small bounds already cover the
+//! races that matter — check-then-sleep windows, wake-the-wrong-waiter,
+//! leaked reservations on the abort path.
+
+#![cfg(loom)]
+
+use std::time::Duration;
+
+use tsenor::sync::coord::{Decision, DispatchCore, FulfillCell, Step};
+use tsenor::sync::pool::BytePool;
+use tsenor::sync::{Arc, Condvar, Mutex};
+
+// ---------------------------------------------------------------------------
+// FulfillCell: ticket fulfillment racing a (degraded) timed wait
+// ---------------------------------------------------------------------------
+
+/// Fulfillment racing `wait_take` is never lost: in the real build the
+/// timeout only bounds how long a *missed* wakeup could linger; here the
+/// wait blocks until notified, so this passes only if `fill`'s
+/// store-then-notify under one lock is airtight.
+#[test]
+fn ticket_fulfillment_racing_wait_is_never_lost() {
+    loom::model(|| {
+        let cell = FulfillCell::new();
+        let producer = {
+            let cell = Arc::clone(&cell);
+            loom::thread::spawn(move || cell.fill(7u32))
+        };
+        // Duration::ZERO is the harshest deadline the real path can
+        // pose; under loom it blocks, proving notify discipline alone.
+        assert_eq!(cell.wait_take(Duration::ZERO), Some(7));
+        producer.join().unwrap();
+    });
+}
+
+/// A waiter that raced ahead of the producer (checked the slot, found
+/// it empty, went to sleep) is still woken: the fill cannot slip into
+/// the check-then-sleep window because both happen under the slot lock.
+#[test]
+fn ticket_take_blocking_sees_a_concurrent_fill() {
+    loom::model(|| {
+        let cell = FulfillCell::new();
+        let consumer = {
+            let cell = Arc::clone(&cell);
+            loom::thread::spawn(move || cell.take_blocking())
+        };
+        cell.fill(11u32);
+        assert_eq!(consumer.join().unwrap(), 11);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// DispatchCore: leader election, coalescing, follower handoff
+// ---------------------------------------------------------------------------
+
+struct Req {
+    value: u32,
+    cell: Arc<FulfillCell<u32>>,
+}
+
+/// The driver loop `pruning::service::MaskDispatcher::drive` runs,
+/// reduced to the coordination skeleton: try-take, step, lead-or-wait.
+/// `full_window` plays the dispatcher's bucket-quantum role — a leader
+/// only forms once the queue holds that many requests, otherwise the
+/// policy naps (which under loom blocks until an `enqueue`/`finish`
+/// notification, modeling the window-not-yet-expired state).
+fn drive(core: &DispatchCore<Req>, cell: &Arc<FulfillCell<u32>>, full_window: usize) -> u32 {
+    loop {
+        if let Some(v) = cell.try_take() {
+            return v;
+        }
+        let step = core.step(
+            1, // max_in_flight: exercise the cap hand-off too
+            |r| Arc::ptr_eq(&r.cell, cell),
+            |queue| {
+                if queue.len() >= full_window {
+                    Decision::Take((0..queue.len()).collect(), ())
+                } else {
+                    Decision::Nap(Duration::from_millis(1))
+                }
+            },
+        );
+        match step {
+            Step::Lead(batch, ()) => {
+                // Fill before finish: a follower woken by `finish` that
+                // finds its request gone must find its cell full.
+                for r in &batch {
+                    r.cell.fill(r.value * 10);
+                }
+                core.finish();
+            }
+            Step::Gone => return cell.take_blocking(),
+        }
+    }
+}
+
+/// Two submitters, window of two: exactly one becomes leader for the
+/// coalesced batch and the other — whichever way the race lands — is
+/// woken and finds its cell filled. A napping driver that could miss
+/// the second `enqueue` or the leader's `finish` deadlocks this model.
+#[test]
+fn leader_coalesces_and_never_strands_the_follower() {
+    loom::model(|| {
+        let core: Arc<DispatchCore<Req>> = Arc::new(DispatchCore::new());
+        let follower = {
+            let core = Arc::clone(&core);
+            let cell = FulfillCell::new();
+            loom::thread::spawn(move || {
+                core.enqueue(Req { value: 1, cell: Arc::clone(&cell) });
+                drive(&core, &cell, 2)
+            })
+        };
+        let cell = FulfillCell::new();
+        core.enqueue(Req { value: 2, cell: Arc::clone(&cell) });
+        assert_eq!(drive(&core, &cell, 2), 20);
+        assert_eq!(follower.join().unwrap(), 10);
+    });
+}
+
+/// Window of one models the `MAX_NAP`-expired partial dispatch: each
+/// leader takes whatever is at the head of the queue — possibly the
+/// *other* thread's request. The handoff property: a submitter whose
+/// request was led away by someone else is never stranded (its cell is
+/// filled before the leader's `finish`), and the in-flight cap of 1
+/// means the second leader must be woken by the first one's `finish`.
+#[test]
+fn expired_window_handoff_never_strands_a_follower() {
+    loom::model(|| {
+        let core: Arc<DispatchCore<Req>> = Arc::new(DispatchCore::new());
+        let other = {
+            let core = Arc::clone(&core);
+            let cell = FulfillCell::new();
+            loom::thread::spawn(move || {
+                core.enqueue(Req { value: 3, cell: Arc::clone(&cell) });
+                drive(&core, &cell, 1)
+            })
+        };
+        let cell = FulfillCell::new();
+        core.enqueue(Req { value: 4, cell: Arc::clone(&cell) });
+        assert_eq!(drive(&core, &cell, 1), 40);
+        assert_eq!(other.join().unwrap(), 30);
+    });
+}
+
+/// `submit`'s never-queued fast path: two direct dispatches racing for
+/// a single in-flight slot. `begin_direct`'s wait blocks under loom, so
+/// this deadlocks unless `end_direct` reliably notifies.
+#[test]
+fn direct_slot_cap_is_deadlock_free() {
+    loom::model(|| {
+        let core: Arc<DispatchCore<()>> = Arc::new(DispatchCore::new());
+        let t = {
+            let core = Arc::clone(&core);
+            loom::thread::spawn(move || {
+                core.begin_direct(1);
+                core.end_direct(1);
+            })
+        };
+        core.begin_direct(1);
+        core.end_direct(1);
+        t.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BytePool: admit / evict / abort
+// ---------------------------------------------------------------------------
+
+/// Abort racing admission: `close` must wake a waiter blocked on budget
+/// headroom (the classic lost-close deadlock), and whatever order the
+/// race lands in, no reservation leaks — `used` balances to zero.
+#[test]
+fn pool_abort_during_admit_never_deadlocks_or_leaks() {
+    loom::model(|| {
+        let pool = BytePool::new(100);
+        let g0 = BytePool::acquire(&pool, 0, 80).expect("open pool admits ticket 0");
+        let waiter = {
+            let pool = Arc::clone(&pool);
+            loom::thread::spawn(move || BytePool::acquire(&pool, 1, 80).is_none())
+        };
+        // Ticket 1 cannot fit while g0 holds 80 of 100, so in some
+        // schedules it is already asleep when close() runs.
+        pool.close();
+        assert!(waiter.join().unwrap(), "close precedes any headroom");
+        drop(g0);
+        assert_eq!(pool.used(), 0, "abort path leaked a reservation");
+    });
+}
+
+/// Drop-during-wait: the reservation travels to a consumer thread and
+/// is dropped there (a panicking consumer's unwind runs exactly this
+/// drop). The release must wake the producer blocked on headroom.
+#[test]
+fn guard_drop_from_consumer_thread_releases_and_wakes() {
+    loom::model(|| {
+        let pool = BytePool::new(100);
+        let g0 = BytePool::acquire(&pool, 0, 80).expect("ticket 0 fits");
+        let consumer = loom::thread::spawn(move || drop(g0));
+        // Blocks until the consumer's drop frees headroom; the pool is
+        // never closed, so admission is the only way out.
+        let g1 = BytePool::acquire(&pool, 1, 80).expect("pool never closed");
+        drop(g1);
+        consumer.join().unwrap();
+        assert_eq!(pool.used(), 0);
+    });
+}
+
+/// In-order admission: ticket 1 must wait for ticket 0 even with ample
+/// budget, and the turn-advance notification is never lost.
+#[test]
+fn pool_tickets_admit_in_order() {
+    loom::model(|| {
+        let pool = BytePool::new(100);
+        let first = {
+            let pool = Arc::clone(&pool);
+            loom::thread::spawn(move || {
+                let g = BytePool::acquire(&pool, 0, 10).expect("ticket 0 admits");
+                drop(g);
+            })
+        };
+        let g1 = BytePool::acquire(&pool, 1, 10).expect("pool never closed");
+        assert!(pool.used() >= 10, "ticket 1 admitted only after ticket 0");
+        drop(g1);
+        first.join().unwrap();
+        assert_eq!(pool.used(), 0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Negative control: loom really does catch a lost wakeup here
+// ---------------------------------------------------------------------------
+
+/// `FulfillCell::fill` with the `notify_all` deleted — the exact bug
+/// class the facade exists to catch. In the schedule where the consumer
+/// checks the empty slot and sleeps before the producer's store, nobody
+/// ever wakes it: loom's deadlock detector panics, which is what this
+/// test asserts. If this model ever *passes*, the loom harness has
+/// stopped exploring the schedules the positive tests rely on.
+#[test]
+#[should_panic]
+fn dropping_the_notify_is_caught_as_a_lost_wakeup() {
+    loom::model(|| {
+        struct BrokenCell {
+            slot: Mutex<Option<u32>>,
+            ready: Condvar,
+        }
+        let cell = Arc::new(BrokenCell { slot: Mutex::new(None), ready: Condvar::new() });
+        let producer = {
+            let cell = Arc::clone(&cell);
+            loom::thread::spawn(move || {
+                *cell.slot.lock().unwrap() = Some(7);
+                // BUG under test: no cell.ready.notify_all().
+            })
+        };
+        let mut guard = cell.slot.lock().unwrap();
+        while guard.is_none() {
+            guard = cell.ready.wait(guard).unwrap();
+        }
+        assert_eq!(guard.take(), Some(7));
+        drop(guard);
+        producer.join().unwrap();
+    });
+}

@@ -1,0 +1,90 @@
+//! Non-loom regression tests for the `crate::sync` coordination cores,
+//! pinning the two timed behaviors the loom models deliberately cannot
+//! see (under loom every timed wait degrades to a blocking wait):
+//!
+//! * `FulfillCell::wait_take` against a real deadline — fulfillment
+//!   racing a zero/tiny timeout hands over the result, never a
+//!   spurious miss of a value that is already there.
+//! * The dispatcher's `MAX_NAP` re-nap loop — a sub-bucket request
+//!   whose coalescing window is several naps long re-naps through it
+//!   and dispatches at expiry, rather than hanging on a single
+//!   5 ms nap or firing early.
+
+use std::time::{Duration, Instant};
+
+use tsenor::masks::solver::{Method, SolveCfg};
+use tsenor::masks::NmPattern;
+use tsenor::pruning::{CpuOracle, MaskDispatcher, MaskOracle, ServiceCfg};
+use tsenor::sync::coord::{FulfillCell, MAX_NAP};
+use tsenor::util::rng::Rng;
+use tsenor::util::tensor::Mat;
+
+/// A value filled before the wait beats even a zero deadline: the wait
+/// checks the predicate before it ever sleeps.
+#[test]
+fn prefilled_cell_beats_a_zero_deadline() {
+    let cell = FulfillCell::new();
+    cell.fill(9u32);
+    assert_eq!(cell.wait_take(Duration::ZERO), Some(9));
+}
+
+/// Fulfillment racing a waiter that churns through zero/tiny deadlines:
+/// whichever side wins each round, the value is delivered — a timeout
+/// can delay the handover but never lose it.
+#[test]
+fn fulfillment_racing_tiny_timeouts_returns_the_value() {
+    for trial in 0..50u64 {
+        let cell = FulfillCell::new();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                if trial % 2 == 0 {
+                    std::thread::sleep(Duration::from_micros(trial * 10));
+                }
+                cell.fill(trial);
+            });
+            let give_up = Instant::now() + Duration::from_secs(30);
+            loop {
+                let deadline =
+                    if trial % 3 == 0 { Duration::ZERO } else { Duration::from_micros(50) };
+                if let Some(v) = cell.wait_take(deadline) {
+                    assert_eq!(v, trial);
+                    break;
+                }
+                assert!(Instant::now() < give_up, "fulfillment was lost (trial {trial})");
+            }
+        });
+    }
+}
+
+/// A 4-block request under a 16-block quantum must hold its coalescing
+/// window open across several `MAX_NAP` re-naps (30 ms window, 5 ms nap
+/// cap) and then dispatch as a window expiry — producing the same mask
+/// as a solo solve. A driver that gives up after one nap dispatches
+/// early (no expiry recorded); one that misses its own wakeup hangs.
+#[test]
+fn sub_bucket_request_renaps_through_the_window_then_dispatches() {
+    let window = Duration::from_millis(30);
+    assert!(window >= 4 * MAX_NAP, "the window must be several naps long");
+
+    let backend =
+        CpuOracle::new(Method::Tsenor, SolveCfg::default()).with_batch_quantum(16);
+    let svc = MaskDispatcher::new(&backend, ServiceCfg::default().window_ms(30));
+    let pattern = NmPattern::new(4, 8);
+    let mut rng = Rng::new(5);
+    let w = Mat::from_fn(16, 16, |_, _| rng.heavy_tail());
+
+    let t0 = Instant::now();
+    let mask = svc.submit(&w, pattern).wait().unwrap();
+    let elapsed = t0.elapsed();
+
+    let want =
+        CpuOracle::new(Method::Tsenor, SolveCfg::default()).mask(&w, pattern).unwrap();
+    assert_eq!(mask.data, want.data, "expiry dispatch must match the solo mask");
+    assert!(
+        elapsed >= Duration::from_millis(20),
+        "window must be honored across re-naps, returned after {elapsed:?}"
+    );
+    let stats = svc.dispatch_stats();
+    assert_eq!(stats.window_expiries, 1, "{stats:?}");
+    assert_eq!(stats.dispatches, 1, "{stats:?}");
+}
